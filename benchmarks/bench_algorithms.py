@@ -1,0 +1,169 @@
+"""Paper Tables 7-12 + Fig 10: in-house algorithms vs their baselines on a
+synthetic multi-type link-prediction task (Taobao is proprietary; relative
+lifts are the comparable quantity — DESIGN.md §8)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .common import emit
+
+
+def _auc(pos: np.ndarray, neg: np.ndarray) -> float:
+    """Rank-based ROC-AUC."""
+    scores = np.concatenate([pos, neg])
+    labels = np.concatenate([np.ones_like(pos), np.zeros_like(neg)])
+    order = np.argsort(scores)
+    ranks = np.empty_like(order, dtype=np.float64)
+    ranks[order] = np.arange(1, len(scores) + 1)
+    n_pos, n_neg = len(pos), len(neg)
+    return (ranks[labels == 1].sum() - n_pos * (n_pos + 1) / 2) / (n_pos * n_neg)
+
+
+def _f1(pos: np.ndarray, neg: np.ndarray) -> float:
+    thresh = np.median(np.concatenate([pos, neg]))
+    tp = (pos > thresh).sum()
+    fp = (neg > thresh).sum()
+    fn = (pos <= thresh).sum()
+    prec = tp / max(tp + fp, 1)
+    rec = tp / max(tp + fn, 1)
+    return 2 * prec * rec / max(prec + rec, 1e-9)
+
+
+def _eval_links(g, score_fn, seed=0, n=400, edge_type=None):
+    """Corrupted-destination protocol: score (src, dst) edges vs
+    (src, random) non-edges — the standard link-prediction eval (removes
+    hub-degree asymmetry that random-random pairs introduce)."""
+    rng = np.random.default_rng(seed)
+    src, dst = g.edge_list()
+    if edge_type is not None:
+        mask = np.where(g.edge_type == edge_type)[0]
+        idx = mask[rng.choice(len(mask), min(n, len(mask)), replace=False)]
+    else:
+        idx = rng.choice(g.m, n, replace=False)
+    pos = score_fn(src[idx], dst[idx])
+    neg = score_fn(src[idx],
+                   rng.integers(0, g.n, len(idx)).astype(np.int32))
+    return _auc(pos, neg), _f1(pos, neg)
+
+
+def run() -> None:
+    from repro.core import build_store, make_gnn, synthetic_ahg
+    from repro.core.gnn import GNNTrainer
+    from repro.core.models import (AHEP, GATNE, HEP, BayesianGNN,
+                                   HierarchicalGNN, MixtureGNN)
+
+    g = synthetic_ahg(4000, avg_degree=6, seed=11)
+    store = build_store(g, 2)
+
+    # ---- Table 7 / Fig 10: AHEP vs HEP ---------------------------------
+    for name, cls in (("hep", HEP), ("ahep", AHEP)):
+        m = cls(store)
+        t0 = time.perf_counter()
+        m.train(150, batch_size=128)
+        dt = (time.perf_counter() - t0) * 1e6 / 150
+        auc, f1 = _eval_links(g, m.link_scores if hasattr(m, "link_scores")
+                              else lambda s, d: (m.embed(s) * m.embed(d)).sum(-1))
+        emit(f"{name}_quality", dt,
+             f"auc={auc:.4f};f1={f1:.4f};mem_bytes={m.memory_bytes()}")
+
+    # ---- Table 8: GATNE vs single-embedding baseline --------------------
+    # paper protocol: metrics averaged over edge TYPES; GATNE scores each
+    # type with its type-specific embedding h_{v,c} (the multiplex win),
+    # the baseline has one embedding for all types
+    base = GNNTrainer(store, make_gnn("graphsage",
+                                      d_in=g.vertex_attr_table.shape[1],
+                                      d_hidden=32, d_out=32), lr=0.05)
+    base.train(80, batch_size=128)
+    gatne = GATNE(store)
+    gatne.train(150, batch_size=48)
+    aucs_g, f1s_g, aucs_b, f1s_b = [], [], [], []
+    for c in range(g.n_edge_types):
+        a, f = _eval_links(g, lambda s, d: gatne.link_scores(s, d, c),
+                           edge_type=c, n=250)
+        aucs_g.append(a)
+        f1s_g.append(f)
+        a, f = _eval_links(g, base.link_scores, edge_type=c, n=250)
+        aucs_b.append(a)
+        f1s_b.append(f)
+    auc_g, f1_g = np.mean(aucs_g), np.mean(f1s_g)
+    auc_b, f1_b = np.mean(aucs_b), np.mean(f1s_b)
+    emit("gatne_vs_graphsage", 0.0,
+         f"gatne_auc={auc_g:.4f};base_auc={auc_b:.4f};"
+         f"gatne_f1={f1_g:.4f};base_f1={f1_b:.4f};"
+         f"f1_lift={(f1_g-f1_b)/max(f1_b,1e-9)*100:.2f}%")
+
+    # ---- Table 9: Mixture GNN hit-recall vs single-sense ----------------
+    mix = MixtureGNN(store)
+    mix.train(150)
+    auc_m, f1_m = _eval_links(g, mix.link_scores)
+    emit("mixture_gnn", 0.0, f"auc={auc_m:.4f};f1={f1_m:.4f}")
+
+    # ---- Table 10: Hierarchical GNN vs GraphSAGE ------------------------
+    hier = HierarchicalGNN(store)
+    hier.train(15, batch_size=8)
+    auc_h, f1_h = _eval_links(g, hier.link_scores, n=120)
+    emit("hierarchical_vs_graphsage", 0.0,
+         f"hier_f1={f1_h:.4f};sage_f1={f1_b:.4f};"
+         f"lift={(f1_h-f1_b)/max(f1_b,1e-9)*100:.2f}%")
+
+    # ---- Table 11: Evolving GNN on dynamic snapshots ---------------------
+    from repro.core.models import EvolvingGNN
+    from repro.core.models.evolving import make_dynamic_snapshots
+    snaps = make_dynamic_snapshots(synthetic_ahg(1200, avg_degree=5, seed=13), 3)
+    ev = EvolvingGNN(snaps, n_parts=2)
+    ev.train()
+    # paper Table 11 measures normal-vs-burst CLASSIFICATION F1 on the next
+    # snapshot's links (not link existence); trained + evaluated
+    # class-balanced (bursts are the ~9% minority), so chance = 0.50
+    from repro.core.models.evolving import split_normal_burst
+    rng = np.random.default_rng(0)
+    normal, burst = split_normal_burst(snaps[-2], snaps[-1], 0.9)
+    src, dst = snaps[-1].edge_list()
+    bidx = np.where(burst)[0]
+    nidx = np.where(~burst)[0]
+    idx = np.concatenate([rng.choice(nidx, 200, replace=False),
+                          rng.choice(bidx, 200, replace=len(bidx) < 200)])
+    y = burst[idx].astype(int)
+    logits = ev.predict_links(src[idx], dst[idx])
+    pred = np.argmax(logits, axis=-1)
+    micro = (pred == y).mean()
+    f1s = []
+    for c in (0, 1):
+        tp = ((pred == c) & (y == c)).sum()
+        prec = tp / max((pred == c).sum(), 1)
+        rec = tp / max((y == c).sum(), 1)
+        f1s.append(2 * prec * rec / max(prec + rec, 1e-9))
+    emit("evolving_gnn", 0.0,
+         f"micro_f1={micro:.4f};macro_f1={np.mean(f1s):.4f};chance=0.5000")
+
+    # ---- Table 12: Bayesian correction on top of GraphSAGE --------------
+    # paper setup needs TWO information sources: prior = the whole graph
+    # ("knowledge"), task = the type-0 edges only ("behavior").  The
+    # correction is then evaluated on the task source.
+    bay = BayesianGNN(store)
+    bay.fit_prior()
+    rng = np.random.default_rng(3)
+    src_all, dst_all = g.edge_list()
+    t0_edges = np.where(g.edge_type == 0)[0]
+    idx = t0_edges[rng.integers(0, len(t0_edges), 1024)]
+    v1n = rng.integers(0, g.n, 1024)
+    v2n = rng.integers(0, g.n, 1024)
+    v1 = np.concatenate([src_all[idx], v1n]).astype(np.int32)
+    v2 = np.concatenate([dst_all[idx], v2n]).astype(np.int32)
+    diff = bay.prior_emb[v1n] - bay.prior_emb[v2n]
+    diff /= np.linalg.norm(diff, axis=-1, keepdims=True) + 1e-6
+    target = np.concatenate([np.zeros((1024, bay.cfg.d), np.float32),
+                             diff.astype(np.float32)])
+    bay.train(150, task_pairs=(v1, v2, target))
+    auc_c, f1_c = _eval_links(g, bay.link_scores, edge_type=0)
+    prior_scores = lambda s, d: (bay.prior_emb[s] * bay.prior_emb[d]).sum(-1)
+    auc_p, f1_p = _eval_links(g, prior_scores, edge_type=0)
+    emit("bayesian_vs_prior", 0.0,
+         f"corrected_auc={auc_c:.4f};prior_auc={auc_p:.4f};"
+         f"lift={(auc_c-auc_p)*100:.2f}pp")
+
+
+if __name__ == "__main__":
+    run()

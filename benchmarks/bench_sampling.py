@@ -1,0 +1,35 @@
+"""Paper Table 4: TRAVERSE / NEIGHBORHOOD / NEGATIVE latency, batch 512,
+cache rate ~20%, and its scaling with graph size (small vs large)."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import emit, timeit
+
+
+def run() -> None:
+    from repro.core.graph import synthetic_ahg
+    from repro.core.sampling import (NegativeSampler, NeighborhoodSampler,
+                                     TraverseSampler)
+    from repro.core.storage import build_store
+
+    for label, n in (("small", 30_000), ("large", 180_000)):
+        g = synthetic_ahg(n, avg_degree=8, seed=2)
+        store = build_store(g, 8, thresholds={1: 0.2, 2: 0.2})
+        trav = TraverseSampler(store, seed=0)
+        neigh = NeighborhoodSampler(store, seed=1)
+        neg = NegativeSampler(store, seed=2)
+        rng = np.random.default_rng(0)
+        seeds = rng.integers(0, g.n, 512).astype(np.int32)
+
+        emit(f"traverse_{label}", timeit(lambda: trav.sample(512)),
+             f"n={n};batch=512")
+        emit(f"neighborhood_{label}",
+             timeit(lambda: neigh.sample(seeds, [10, 5]), repeats=3),
+             f"n={n};fanouts=10x5;cache_rate={store.cache_plan.cache_rate:.3f}")
+        emit(f"negative_{label}", timeit(lambda: neg.sample(seeds, 5)),
+             f"n={n};q=5")
+
+
+if __name__ == "__main__":
+    run()

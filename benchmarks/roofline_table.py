@@ -1,0 +1,77 @@
+"""Render the §Roofline table from the dry-run result JSONs.
+
+    PYTHONPATH=src python -m benchmarks.roofline_table [--mesh single]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def load_all(tag: str = "") -> List[Dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        base = os.path.basename(path)[:-5]
+        parts = base.split("__")
+        if tag and (len(parts) < 4 or parts[3] != tag):
+            continue
+        if not tag and len(parts) > 3:
+            continue
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def fmt_table(rows: List[Dict], mesh: str) -> str:
+    rows = [r for r in rows if r["mesh"] == mesh]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    hdr = (f"| arch | shape | T_comp | T_mem | T_coll | bound | "
+           f"HLO TF/dev | GB/dev | useful | peak-mem GB/dev |")
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    for r in rows:
+        mem = r.get("memory", {}).get("peak_bytes", 0) / 1e9
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_comp']*1e3:.1f}ms "
+            f"| {r['t_mem']*1e3:.1f}ms | {r['t_coll']*1e3:.1f}ms "
+            f"| {r['dominant'][:4]} | {r['flops_per_dev']/1e12:.2f} "
+            f"| {r['bytes_per_dev']/1e9:.1f} | {r['useful_ratio']:.2f} "
+            f"| {mem:.1f} |")
+    return "\n".join(lines)
+
+
+def main(tag=None, mesh=None) -> None:
+    if tag is None and mesh is None:
+        ap = argparse.ArgumentParser()
+        ap.add_argument("--mesh", default="single")
+        ap.add_argument("--tag", default="")
+        args = ap.parse_args()
+        tag, mesh = args.tag, args.mesh
+    tag = tag or ""
+    mesh = mesh or "single"
+    rows = load_all(tag)
+    print(fmt_table(rows, mesh))
+    # summary: dominant-term histogram + worst useful ratios
+    rows_m = [r for r in rows if r["mesh"] == mesh]
+    from collections import Counter
+    print("\ndominant:", dict(Counter(r["dominant"] for r in rows_m)))
+    worst = sorted(rows_m, key=lambda r: r["useful_ratio"])[:5]
+    print("lowest useful-compute ratio:")
+    for r in worst:
+        print(f"  {r['arch']} {r['shape']}: {r['useful_ratio']:.3f} "
+              f"(dominant {r['dominant']})")
+    coll = sorted(rows_m, key=lambda r: -(r["t_coll"] /
+                                          max(r["t_comp"] + r["t_mem"], 1e-12)))[:5]
+    print("most collective-bound (T_coll / (T_comp+T_mem)):")
+    for r in coll:
+        ratio = r["t_coll"] / max(r["t_comp"] + r["t_mem"], 1e-12)
+        print(f"  {r['arch']} {r['shape']}: {ratio:.2f}")
+
+
+if __name__ == "__main__":
+    main()

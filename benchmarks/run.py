@@ -1,0 +1,30 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV,
+# then the dry-run roofline tables (baseline + optimized) from the cached
+# benchmarks/results/dryrun/*.json artifacts.
+import traceback
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from . import (bench_algorithms, bench_cache, bench_graph_build,
+                   bench_operators, bench_sampling)
+    for mod in (bench_graph_build, bench_cache, bench_sampling,
+                bench_operators, bench_algorithms):
+        try:
+            mod.run()
+        except Exception:
+            print(f"{mod.__name__},BENCH_FAILED,")
+            traceback.print_exc()
+    for tag, title in (("", "baseline"), ("opt", "optimized (§Perf policy)")):
+        try:
+            from . import roofline_table
+            print(f"\n== roofline table — {title} "
+                  f"(single-pod, s/step/device) ==")
+            roofline_table.main(tag=tag)
+        except Exception:
+            print(f"roofline_table[{tag or 'baseline'}],BENCH_FAILED,")
+            traceback.print_exc()
+
+
+if __name__ == '__main__':
+    main()

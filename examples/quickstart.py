@@ -1,0 +1,67 @@
+"""Quickstart — the AliGraph stack end-to-end in miniature.
+
+Walks the paper's three system layers (storage -> sampling -> operators) and
+one algorithm (GraphSAGE, Algorithm 1), on a synthetic attributed
+heterogeneous graph small enough to run in ~a minute on CPU:
+
+  1. build an AHG (2 vertex types, 4 edge types, power-law degrees),
+  2. partition it across 4 simulated workers + plan the importance cache
+     (Imp^(k) = D_i/D_o, paper Eq. 1 / Thm 2),
+  3. draw TRAVERSE / NEIGHBORHOOD / NEGATIVE samples,
+  4. train GraphSAGE with the unsupervised skip-gram loss,
+  5. score held-out links (AUC proxy).
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import build_store, make_gnn, synthetic_ahg
+from repro.core.gnn import GNNTrainer
+from repro.core.sampling import (NegativeSampler, NeighborhoodSampler,
+                                 TraverseSampler)
+
+
+def main():
+    # ----------------------------------------------------------- 1. graph
+    g = synthetic_ahg(20_000, avg_degree=8, seed=0)
+    print(f"[graph]   n={g.n:,} m={g.m:,} vertex types={g.n_vertex_types} "
+          f"edge types={g.n_edge_types} attr dim={g.vertex_attr_table.shape[1]}")
+
+    # ------------------------------------------- 2. storage layer (paper §3.2)
+    store = build_store(g, n_parts=4, cache_depth=2,
+                        thresholds={1: 0.2, 2: 0.2})
+    print(f"[storage] 4 partitions, separate attr tables, "
+          f"importance-cached vertices: {store.cache_plan.cache_rate:.1%} "
+          f"(tau=0.2 — the paper's Fig 8 knee)")
+
+    # ------------------------------------------- 3. sampling layer (paper §3.3)
+    trav = TraverseSampler(store, seed=0)
+    nbr = NeighborhoodSampler(store, seed=1)
+    neg = NegativeSampler(store, seed=2)
+    seeds = trav.sample(512, mode="vertex")
+    batch = nbr.sample(seeds, fanouts=(10, 5))
+    negs = neg.sample(seeds, 5)
+    print(f"[sampling] TRAVERSE 512 seeds; NEIGHBORHOOD hops "
+          f"{[h.shape for h in batch.neighbors]} "
+          f"(fill {batch.masks[0].mean():.2f}); NEGATIVE {negs.shape}")
+
+    # ------------------------------- 4. operators + algorithm (paper §3.4/§4.1)
+    spec = make_gnn("graphsage", d_in=g.vertex_attr_table.shape[1],
+                    d_hidden=64, d_out=64)
+    tr = GNNTrainer(store, spec, lr=0.05, seed=0)
+    losses = tr.train(60, batch_size=128)
+    print(f"[train]   60 steps: loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+
+    # ------------------------------------- 5. evaluate (corrupted-dst AUC)
+    src, dst = g.edge_list()
+    rng = np.random.default_rng(0)
+    idx = rng.choice(g.m, 500, replace=False)
+    pos = tr.link_scores(src[idx], dst[idx])
+    neg = tr.link_scores(src[idx], rng.integers(0, g.n, 500).astype(np.int32))
+    auc = (pos[:, None] > neg[None, :]).mean()
+    print(f"[eval]    link-prediction AUC (proxy) = {auc:.3f}  "
+          f"(random = 0.500)")
+
+
+if __name__ == "__main__":
+    main()

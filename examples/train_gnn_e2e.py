@@ -1,0 +1,143 @@
+"""End-to-end driver: train a ~100M-parameter AliGraph GNN for 300 steps.
+
+This is the full production path in one process:
+
+  host side   : AHG -> edge-cut partition -> DistributedGraphStore ->
+                TRAVERSE/NEIGHBORHOOD/NEGATIVE samplers -> deduped,
+                padded MinibatchPlans (paper Algorithm 1 SAMPLE)
+  device side : the same jit step the 512-chip dry-run lowers
+                (configs/aligraph_gnn.train_step) — a trainable
+                500k x 200 vertex-embedding table (100M params, the paper's
+                "separate attribute storage" as an embedding table) +
+                two GraphSAGE layers, PS-style sparse row updates
+  resilience  : CheckpointManager (atomic publish) + Supervisor with an
+                injected worker failure at step 150 — the run restarts from
+                the last checkpoint and finishes (fault-tolerance contract)
+
+Run:  PYTHONPATH=src python examples/train_gnn_e2e.py [--steps 300]
+"""
+import argparse
+import dataclasses
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import aligraph_gnn as G
+from repro.core import build_store, synthetic_ahg
+from repro.core.operators import build_plan, pad_plan
+from repro.core.sampling import (NegativeSampler, NeighborhoodSampler,
+                                 TraverseSampler)
+from repro.ft import FailureInjector, Supervisor
+
+
+def device_plan(cfg, nbr, seeds: np.ndarray):
+    """Host MinibatchPlan -> the static-shape device plan dict."""
+    n0, n1, n2 = cfg.level_sizes
+    plan = pad_plan(build_plan(nbr, seeds, cfg.fanouts), [n0, n1, n2])
+    return {
+        "lvl2": jnp.asarray(plan.levels[2]),
+        "child0": jnp.asarray(plan.child_idx[0]),
+        "child1": jnp.asarray(plan.child_idx[1]),
+        "mask0": jnp.asarray(plan.child_msk[0]),
+        "mask1": jnp.asarray(plan.child_msk[1]),
+        "self0": jnp.asarray(plan.self_idx[0]),
+        "self1": jnp.asarray(plan.self_idx[1]),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--n-vertices", type=int, default=500_000)
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_gnn_e2e")
+    args = ap.parse_args()
+
+    # --------------------------------------------------------------- host
+    t0 = time.time()
+    g = synthetic_ahg(args.n_vertices, avg_degree=8, seed=0)
+    store = build_store(g, n_parts=8)
+    print(f"[build] graph n={g.n:,} m={g.m:,} + 8-way store in "
+          f"{time.time()-t0:.1f}s (paper Fig 7: minutes at 483M vertices)")
+
+    cfg = dataclasses.replace(
+        G.CONFIG, n_vertices=g.n, global_batch=args.batch,
+        fanouts=(10, 5), n_negatives=5, update="sparse")
+    n_params = cfg.param_count()
+    print(f"[model] trainable params: {n_params/1e6:.1f}M "
+          f"(table {g.n:,} x {cfg.d_in} + 2 GraphSAGE layers)")
+
+    trav = TraverseSampler(store, seed=0)
+    nbr = NeighborhoodSampler(store, seed=1)
+    neg = NegativeSampler(store, seed=2)
+
+    # --------------------------------------------------------------- device
+    rng = np.random.default_rng(0)
+    params = {
+        # table seeded from the stored attributes (h^(0) <- x_v), then trained
+        "table": jnp.asarray(
+            np.tile(store.dense_features(), (1, cfg.d_in // 16 + 1))
+            [:, :cfg.d_in].astype(np.float32)),
+        "w1": jnp.asarray(rng.standard_normal(
+            (2 * cfg.d_in, cfg.d_hidden)).astype(np.float32)
+            / np.sqrt(2 * cfg.d_in)),
+        "b1": jnp.zeros((cfg.d_hidden,), jnp.float32),
+        "w2": jnp.asarray(rng.standard_normal(
+            (2 * cfg.d_hidden, cfg.d_out)).astype(np.float32)
+            / np.sqrt(2 * cfg.d_hidden)),
+        "b2": jnp.zeros((cfg.d_out,), jnp.float32),
+    }
+    step_jit = jax.jit(G.train_step(cfg, lr=0.05))
+
+    def make_batch_plan():
+        edges = trav.sample(args.batch, mode="edge")
+        src, dst = edges[:, 0], edges[:, 1]
+        negs = neg.sample(src, cfg.n_negatives, avoid=dst).reshape(-1)
+        seeds = np.concatenate([src, dst, negs]).astype(np.int32)
+        return device_plan(cfg, nbr, seeds)
+
+    # --------------------------------------------------- resilient train loop
+    ckpt = CheckpointManager(args.ckpt_dir, max_to_keep=2)
+    sup = Supervisor(ckpt, ckpt_every=100)
+    injector = FailureInjector(fail_at=(150,))
+
+    def step_fn(state, step):
+        plan = make_batch_plan()
+        new_state, loss = step_jit(state, plan)
+        return new_state, float(loss)
+
+    t0 = time.time()
+    result = sup.run(state=params, step_fn=step_fn, n_steps=args.steps,
+                     injector=injector)
+    dt = time.time() - t0
+    print(f"[train] {len(result.losses)} steps in {dt:.1f}s "
+          f"({dt/max(len(result.losses),1)*1e3:.0f} ms/step), "
+          f"restarts={result.restarts} (1 injected at step 150)")
+    print(f"[train] loss {result.losses[0]:.4f} -> {result.losses[-1]:.4f}")
+    params = result.final_state
+
+    # ----------------------------------------------------------------- eval
+    src_all, dst_all = g.edge_list()
+    idx = rng.choice(g.m, 512, replace=False)
+    fwd = jax.jit(lambda p, plan: G.forward(cfg, p, plan))
+
+    def embed(v):
+        plan = device_plan(cfg, nbr, np.asarray(v, np.int32).repeat(
+            (cfg.level_sizes[0] // len(v)) + 1)[: cfg.level_sizes[0]])
+        return np.asarray(fwd(params, plan))[: len(v)]
+
+    z_s = embed(src_all[idx])
+    z_d = embed(dst_all[idx])
+    z_r = embed(rng.integers(0, g.n, 512).astype(np.int32))
+    pos = (z_s * z_d).sum(-1)
+    rnd = (z_s * z_r).sum(-1)
+    auc = (pos[:, None] > rnd[None, :]).mean()
+    print(f"[eval]  link AUC (proxy) = {auc:.3f} (random = 0.500)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from .manager import CheckpointManager  # noqa: F401
+from .reshard import load_into_sharding  # noqa: F401

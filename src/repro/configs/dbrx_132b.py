@@ -1,0 +1,19 @@
+"""dbrx-132b [moe]: 40L d_model=6144 48H (GQA kv=8) d_ff=10752 vocab=100352,
+16 experts top-4 fine-grained [hf:databricks/dbrx-base]."""
+from repro.models import MoEConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="dbrx-132b", family="moe",
+    n_layers=40, d_model=6144, n_heads=48, n_kv_heads=8,
+    d_ff=10752, vocab_size=100352, head_dim=128,
+    rope_theta=500_000.0,
+    moe=MoEConfig(n_experts=16, top_k=4, d_expert=10752, capacity_factor=1.25),
+)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="dbrx-132b-smoke", family="moe",
+        n_layers=2, d_model=96, n_heads=6, n_kv_heads=1,
+        d_ff=0, vocab_size=512, head_dim=16,
+        moe=MoEConfig(n_experts=4, top_k=2, d_expert=128), remat="none")

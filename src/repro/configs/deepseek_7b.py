@@ -1,0 +1,17 @@
+"""deepseek-7b [dense]: 30L d_model=4096 32H (GQA kv=32, i.e. MHA) d_ff=11008
+vocab=102400 — llama-arch [arXiv:2401.02954; hf]."""
+from repro.models import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-7b", family="dense",
+    n_layers=30, d_model=4096, n_heads=32, n_kv_heads=32,
+    d_ff=11008, vocab_size=102400, head_dim=128,
+    rope_theta=10_000.0, tie_embeddings=False,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-7b-smoke", family="dense",
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=4,
+        d_ff=352, vocab_size=512, head_dim=32, remat="none")

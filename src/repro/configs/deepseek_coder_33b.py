@@ -1,0 +1,17 @@
+"""deepseek-coder-33b [dense]: 62L d_model=7168 56H (GQA kv=8) d_ff=19200
+vocab=32256 — llama-arch [arXiv:2401.14196; hf]."""
+from repro.models import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-coder-33b", family="dense",
+    n_layers=62, d_model=7168, n_heads=56, n_kv_heads=8,
+    d_ff=19200, vocab_size=32256, head_dim=128,
+    rope_theta=100_000.0, tie_embeddings=False,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-coder-33b-smoke", family="dense",
+        n_layers=2, d_model=128, n_heads=7, n_kv_heads=1,
+        d_ff=320, vocab_size=512, head_dim=16, remat="none")

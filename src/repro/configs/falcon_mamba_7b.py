@@ -1,0 +1,20 @@
+"""falcon-mamba-7b [ssm]: 64L d_model=4096 (attention-free) vocab=65024,
+ssm_state=16 — mamba1 arch [arXiv:2410.05355].  Runs long_500k."""
+from repro.models import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="falcon-mamba-7b", family="ssm",
+    n_layers=64, d_model=4096, n_heads=0, n_kv_heads=0,
+    d_ff=0, vocab_size=65024,
+    ssm=SSMConfig(state_dim=16, conv_kernel=4, expand=2, version=1, chunk=128),
+    tie_embeddings=True,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="falcon-mamba-7b-smoke", family="ssm",
+        n_layers=3, d_model=64, n_heads=0, n_kv_heads=0, d_ff=0,
+        vocab_size=512,
+        ssm=SSMConfig(state_dim=8, conv_kernel=4, expand=2, version=1, chunk=8),
+        tie_embeddings=True, remat="none")

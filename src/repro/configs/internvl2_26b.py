@@ -1,0 +1,23 @@
+"""internvl2-26b [vlm]: 48L d_model=6144 48H (GQA kv=8) d_ff=16384
+vocab=92553 — InternViT + InternLM2 [arXiv:2404.16821; hf].
+
+The InternViT frontend is a STUB per the assignment: input_specs() supplies
+precomputed patch embeddings [B, 256, d_vit]; the backbone projects and
+prepends them."""
+from repro.models import ModelConfig, VLMConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-26b", family="vlm",
+    n_layers=48, d_model=6144, n_heads=48, n_kv_heads=8,
+    d_ff=16384, vocab_size=92553, head_dim=128,
+    rope_theta=1_000_000.0,
+    vlm=VLMConfig(n_patches=256, d_vit=3200),   # InternViT-6B width
+)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="internvl2-26b-smoke", family="vlm",
+        n_layers=2, d_model=96, n_heads=6, n_kv_heads=1,
+        d_ff=256, vocab_size=512, head_dim=16,
+        vlm=VLMConfig(n_patches=8, d_vit=48), remat="none")

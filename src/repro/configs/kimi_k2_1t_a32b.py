@@ -1,0 +1,24 @@
+"""kimi-k2-1t-a32b [moe]: 61L d_model=7168 64H (GQA kv=8) d_ff=2048
+vocab=163840, MoE 384 experts top-8 — trillion-param MoE (paper-table)
+[arXiv:2501.kimi2].
+
+The assignment table specifies GQA kv=8 (not MLA); d_ff=2048 is the
+per-expert width.  Train cells pair with Adafactor + ZeRO-3 in the launcher
+(the memory_analysis section reports the state budget either way)."""
+from repro.models import MoEConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t-a32b", family="moe",
+    n_layers=61, d_model=7168, n_heads=64, n_kv_heads=8,
+    d_ff=2048, vocab_size=163840, head_dim=112,
+    rope_theta=50_000.0,
+    moe=MoEConfig(n_experts=384, top_k=8, d_expert=2048, capacity_factor=1.25),
+)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="kimi-k2-1t-a32b-smoke", family="moe",
+        n_layers=2, d_model=64, n_heads=8, n_kv_heads=1,
+        d_ff=0, vocab_size=512, head_dim=8,
+        moe=MoEConfig(n_experts=8, top_k=2, d_expert=32), remat="none")

@@ -1,0 +1,20 @@
+"""qwen2-0.5b [dense]: 24L d_model=896 14H (GQA kv=2) d_ff=4864 vocab=151936.
+
+GQA with QKV bias, tied embeddings [arXiv:2407.10671; hf].
+"""
+from repro.models import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-0.5b", family="dense",
+    n_layers=24, d_model=896, n_heads=14, n_kv_heads=2,
+    d_ff=4864, vocab_size=151936, head_dim=64,
+    qkv_bias=True, tie_embeddings=True, rope_theta=1_000_000.0,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-0.5b-smoke", family="dense",
+        n_layers=2, d_model=112, n_heads=7, n_kv_heads=1,
+        d_ff=224, vocab_size=512, head_dim=16,
+        qkv_bias=True, tie_embeddings=True, remat="none")

@@ -1,0 +1,25 @@
+"""whisper-large-v3 [audio]: 32L d_model=1280 20H (kv=20) d_ff=5120
+vocab=51866 — enc-dec; the conv frontend is a STUB (input_specs() provides
+precomputed frame embeddings) [arXiv:2212.04356].
+
+No long_500k (full attention, enc-dec); decode shapes use the decoder with a
+seq_len self-attention cache per the assignment's mechanical shape rules.
+"""
+from repro.models import EncDecConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-large-v3", family="encdec",
+    n_layers=32, d_model=1280, n_heads=20, n_kv_heads=20,
+    d_ff=5120, vocab_size=51866, head_dim=64,
+    act="gelu", tie_embeddings=True, norm_eps=1e-5,
+    encdec=EncDecConfig(n_enc_layers=32, enc_seq=1500),
+)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-large-v3-smoke", family="encdec",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=128, vocab_size=512, head_dim=16,
+        act="gelu", tie_embeddings=True,
+        encdec=EncDecConfig(n_enc_layers=2, enc_seq=32), remat="none")

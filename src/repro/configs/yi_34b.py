@@ -1,0 +1,21 @@
+"""yi-34b [dense]: 60L d_model=7168 56H (GQA kv=8) d_ff=20480 vocab=64000.
+
+llama-arch GQA [arXiv:2403.04652; hf].  56 heads do not divide a 16-way TP
+axis; canonicalize() pads q-heads 56->64 / kv 8->16 with zero heads (exact
+math, ~14% attention-FLOP overhead noted in EXPERIMENTS §Roofline).
+"""
+from repro.models import ModelConfig
+
+CONFIG = ModelConfig(
+    name="yi-34b", family="dense",
+    n_layers=60, d_model=7168, n_heads=56, n_kv_heads=8,
+    d_ff=20480, vocab_size=64000, head_dim=128,
+    rope_theta=5_000_000.0, tie_embeddings=False,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="yi-34b-smoke", family="dense",
+        n_layers=2, d_model=128, n_heads=7, n_kv_heads=1,   # keeps 7:1 GQA ratio
+        d_ff=352, vocab_size=512, head_dim=16, remat="none")

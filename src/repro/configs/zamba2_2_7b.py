@@ -1,0 +1,23 @@
+"""zamba2-2.7b [hybrid]: 54L d_model=2560 32H (GQA kv=32) d_ff=10240
+vocab=32000, ssm_state=64 — Mamba2 backbone + shared attention blocks
+[arXiv:2411.15242; hf].  Runs long_500k (sub-quadratic backbone)."""
+from repro.models import HybridConfig, ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-2.7b", family="hybrid",
+    n_layers=54, d_model=2560, n_heads=32, n_kv_heads=32,
+    d_ff=10240, vocab_size=32000, head_dim=80,
+    ssm=SSMConfig(state_dim=64, version=2, head_dim=64, expand=2, chunk=64),
+    hybrid=HybridConfig(attn_every=6, shared_lora_rank=64),
+    tie_embeddings=True,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-2.7b-smoke", family="hybrid",
+        n_layers=4, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=128, vocab_size=512, head_dim=16,
+        ssm=SSMConfig(state_dim=8, version=2, head_dim=16, expand=2, chunk=8),
+        hybrid=HybridConfig(attn_every=2, shared_lora_rank=4),
+        tie_embeddings=True, remat="none")

@@ -1,0 +1,7 @@
+# AliGraph core — the paper's contribution on JAX/TPU.
+# Layers (paper Fig 3): storage (graph/partition/storage/cache/embedding),
+# sampling (sampling), operator (operators), algorithm (gnn + models/).
+from . import cache, graph, operators, partition, sampling, storage  # noqa: F401
+from .gnn import GNNSpec, GNNTrainer, gnn_apply, init_gnn_params, make_gnn  # noqa: F401
+from .graph import AHG, synthetic_ahg  # noqa: F401
+from .storage import DistributedGraphStore, build_store  # noqa: F401

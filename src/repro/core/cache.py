@@ -1,0 +1,142 @@
+"""Caching — paper §3.2 "Caching Neighbors of Important Vertices" + LRU.
+
+Implements:
+  * ``importance``      — ``Imp^(k)(v) = D_i^(k)(v) / D_o^(k)(v)`` (Eq. 1).
+  * ``plan_cache``      — Algorithm 2 lines 5-9: pick vertices whose 1..k-hop
+                          out-neighborhoods are cached on every partition.
+  * ``LRUCache``        — the attribute-index cache used inside each worker.
+  * ``CachePolicy``     — importance / random / lru strategies for the Fig 9
+                          comparison benchmark.
+
+TPU adaptation (DESIGN.md §2): the same ``Imp`` statistic also drives the
+*device-side* hot-row replication plan of ``core.embedding`` — the host cache
+cuts sampler RPCs, the device cache cuts all-gather rows.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .graph import AHG, k_hop_degrees
+
+__all__ = ["importance", "plan_cache", "CachePlan", "LRUCache", "power_law_fit"]
+
+
+def importance(g: AHG, k: int = 1) -> np.ndarray:
+    """Paper Eq. (1): Imp^(k)(v) = D_i^(k)(v) / D_o^(k)(v)."""
+    d_i, d_o = k_hop_degrees(g, k)
+    return (d_i / np.maximum(d_o, 1.0)).astype(np.float64)
+
+
+@dataclasses.dataclass
+class CachePlan:
+    """Which vertices' 1..h-hop out-neighborhoods are replicated everywhere."""
+
+    cached_vertices: np.ndarray          # int32, sorted unique vertex ids
+    per_hop: Dict[int, np.ndarray]       # k -> vertices cached at depth k
+    thresholds: Dict[int, float]
+
+    @property
+    def cache_rate(self) -> float:
+        return self._rate
+
+    def set_rate(self, n: int) -> "CachePlan":
+        self._rate = len(self.cached_vertices) / max(n, 1)
+        return self
+
+
+def plan_cache(g: AHG, h: int = 2, thresholds: Optional[Dict[int, float]] = None) -> CachePlan:
+    """Algorithm 2 lines 5-9.
+
+    For each vertex v and each k ≤ h: cache the 1..k-hop out-neighbors of v
+    (on every partition where v occurs) iff Imp^(k)(v) ≥ τ_k.  Default τ_k =
+    0.2, the paper's recommended knee (Fig 8/9).
+    """
+    thresholds = dict(thresholds or {})
+    per_hop: Dict[int, np.ndarray] = {}
+    chosen: List[np.ndarray] = []
+    out_deg = g.out_degree()
+    for k in range(1, h + 1):
+        tau = thresholds.setdefault(k, 0.2)
+        imp = importance(g, k)
+        # a vertex with no out-neighbors has nothing to cache
+        sel = np.nonzero((imp >= tau) & (out_deg > 0))[0].astype(np.int32)
+        per_hop[k] = sel
+        chosen.append(sel)
+    cached = np.unique(np.concatenate(chosen)) if chosen else np.zeros(0, np.int32)
+    return CachePlan(cached_vertices=cached, per_hop=per_hop, thresholds=thresholds).set_rate(g.n)
+
+
+def power_law_fit(values: np.ndarray, *, xmin: float = 1.0) -> float:
+    """MLE power-law exponent of ``values`` (for validating Thm 1-2:
+    importance and k-hop degrees stay power-law)."""
+    v = np.asarray(values, np.float64)
+    v = v[v >= xmin]
+    if len(v) < 10:
+        return float("nan")
+    return 1.0 + len(v) / np.sum(np.log(v / xmin))
+
+
+class LRUCache:
+    """Least-recently-used cache for attribute-index rows (paper §3.2).
+
+    Pure-python OrderedDict LRU: this is host-side metadata caching, not a
+    device structure.  Tracks hit statistics for the Fig 9 benchmark.
+    """
+
+    def __init__(self, capacity: int):
+        if capacity <= 0:
+            raise ValueError("capacity must be positive")
+        self.capacity = capacity
+        self._d: "collections.OrderedDict[int, object]" = collections.OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def __contains__(self, key: int) -> bool:
+        return key in self._d
+
+    def get(self, key: int):
+        if key in self._d:
+            self._d.move_to_end(key)
+            self.hits += 1
+            return self._d[key]
+        self.misses += 1
+        return None
+
+    def put(self, key: int, value) -> None:
+        if key in self._d:
+            self._d.move_to_end(key)
+        self._d[key] = value
+        if len(self._d) > self.capacity:
+            self._d.popitem(last=False)
+
+    @property
+    def hit_rate(self) -> float:
+        tot = self.hits + self.misses
+        return self.hits / tot if tot else 0.0
+
+    def reset_stats(self) -> None:
+        self.hits = self.misses = 0
+
+
+def random_cache_plan(g: AHG, rate: float, *, seed: int = 0) -> CachePlan:
+    """Baseline for Fig 9: cache a random ``rate`` fraction of vertices."""
+    rng = np.random.default_rng(seed)
+    k = int(round(g.n * rate))
+    sel = np.sort(rng.choice(g.n, size=k, replace=False).astype(np.int32))
+    return CachePlan(cached_vertices=sel, per_hop={1: sel}, thresholds={}).set_rate(g.n)
+
+
+def importance_cache_plan_at_rate(g: AHG, rate: float, k: int = 1) -> CachePlan:
+    """Importance plan with the SAME cache budget as a baseline: take the
+    top-``rate`` fraction by Imp^(k). Used for like-for-like Fig 9 curves."""
+    imp = importance(g, k)
+    n_sel = int(round(g.n * rate))
+    sel = np.sort(np.argpartition(-imp, max(n_sel - 1, 0))[:n_sel].astype(np.int32))
+    return CachePlan(cached_vertices=sel, per_hop={k: sel}, thresholds={}).set_rate(g.n)

@@ -1,0 +1,237 @@
+"""GNN framework — paper §3.1 Algorithm 1 and §4.1 classic GNNs.
+
+``GNNSpec`` + ``gnn_apply`` implement Algorithm 1 over a layered
+``MinibatchPlan``: for k = 1..k_max,
+    S_v   = SAMPLE(Nb(v))                     (done host-side by the plan)
+    h'_v  = AGGREGATE(h_u^{k-1}, u in S_v)
+    h_v^k = COMBINE(h_v^{k-1}, h'_v)
+then l2-normalise.  The classic GNNs are instantiations:
+
+  * GraphSAGE — node-wise sampling, mean/max/gru AGGREGATE, concat COMBINE;
+  * GCN       — full/importance sampling, degree-normalised sum, add COMBINE;
+  * FastGCN   — layer-wise importance sampling (sampler variant);
+  * AS-GCN    — adaptive (learned-weight) sampling via the dynamic-weight
+                NeighborhoodSampler.
+
+Losses: unsupervised skip-gram-with-negatives over edges (the paper's default
+training signal for the system benchmarks) + supervised classification head.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import operators as ops
+from .operators import MinibatchPlan, build_plan
+from .sampling import NegativeSampler, NeighborhoodSampler, TraverseSampler
+from .storage import DistributedGraphStore
+
+Array = jax.Array
+
+__all__ = ["GNNSpec", "init_gnn_params", "gnn_apply", "GNNTrainer",
+           "plan_to_device", "unsup_loss", "make_gnn", "GNN_VARIANTS"]
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNSpec:
+    """Hyper-parameters of one Algorithm-1 instantiation."""
+
+    k_max: int = 2
+    dims: Tuple[int, ...] = (16, 64, 64)   # (d_in, d_1, ..., d_kmax)
+    fanouts: Tuple[int, ...] = (10, 5)
+    aggregator: str = "mean"
+    combiner: str = "concat"
+    normalize: bool = True
+    gcn_self_loop: bool = False            # GCN folds self into the mean
+    use_kernel: bool = False               # Pallas neighbor_agg fast path
+    name: str = "graphsage"
+
+    def __post_init__(self):
+        assert len(self.dims) == self.k_max + 1
+        assert len(self.fanouts) == self.k_max
+
+
+def init_gnn_params(spec: GNNSpec, seed: int = 0) -> Dict:
+    rng = np.random.default_rng(seed)
+    params: Dict[str, Dict] = {}
+    for k in range(1, spec.k_max + 1):
+        d_in, d_out = spec.dims[k - 1], spec.dims[k]
+        layer = {"comb": ops.combiner_param_init(spec.combiner, rng, d_in, d_out)}
+        agg_p = ops.aggregator_param_init(spec.aggregator, rng, d_in)
+        if agg_p is not None:
+            layer["agg"] = agg_p
+        params[f"layer_{k}"] = layer
+    return params
+
+
+def plan_to_device(plan: MinibatchPlan) -> Dict:
+    """Numpy plan -> jnp pytree consumed by ``gnn_apply`` (static shapes)."""
+    return {
+        "levels": [jnp.asarray(l) for l in plan.levels],
+        "child_idx": [jnp.asarray(c) for c in plan.child_idx],
+        "child_msk": [jnp.asarray(m) for m in plan.child_msk],
+        "self_idx": [jnp.asarray(s) for s in plan.self_idx],
+    }
+
+
+def gnn_apply(spec: GNNSpec, params: Dict, plan: Dict, features: Array) -> Array:
+    """Algorithm 1 over the layered plan; returns [B, dims[-1]] embeddings.
+
+    ``features`` is the [n, d_in] vertex-feature matrix (device-resident,
+    typically a view of the sharded embedding table).
+    """
+    k_max = len(plan["child_idx"])
+    # hop-0: raw features of the deepest level  (h_v^(0) <- x_v)
+    h = features[plan["levels"][k_max]]
+    for h_lvl in range(k_max - 1, -1, -1):
+        k = k_max - h_lvl                      # hop being produced
+        layer = params[f"layer_{k}"]
+        child = plan["child_idx"][h_lvl]       # [N_h, fanout]
+        msk = plan["child_msk"][h_lvl]
+        sidx = plan["self_idx"][h_lvl]
+        h_self = h[sidx]                       # h^{k-1} of the level's vertices
+        if spec.use_kernel:
+            from repro.kernels import ops as kops  # lazy: optional dependency
+            h_agg = kops.neighbor_aggregate(h, child, msk, reduction=spec.aggregator)
+        else:
+            neigh = h[child]                   # [N_h, fanout, D]
+            if spec.gcn_self_loop:
+                neigh = jnp.concatenate([neigh, h_self[:, None, :]], axis=1)
+                msk = jnp.concatenate([msk, jnp.ones_like(msk[:, :1])], axis=1)
+            h_agg = ops.aggregate(spec.aggregator, neigh, msk, layer.get("agg"))
+        h = ops.combine(spec.combiner, layer["comb"], h_self, h_agg,
+                        act=(k < k_max))      # final hop linear (see ops)
+        if spec.normalize:
+            h = h / jnp.maximum(jnp.linalg.norm(h, axis=-1, keepdims=True), 1e-9)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def unsup_loss(z_src: Array, z_dst: Array, z_neg: Array) -> Array:
+    """Skip-gram with negative sampling over embeddings (GraphSAGE unsup):
+    -log σ(z_u·z_v) - Σ log σ(-z_u·z_neg)."""
+    pos = jnp.einsum("bd,bd->b", z_src, z_dst)
+    neg = jnp.einsum("bd,bqd->bq", z_src, z_neg)
+    pos_l = jax.nn.log_sigmoid(pos)
+    neg_l = jax.nn.log_sigmoid(-neg).sum(-1)
+    return -(pos_l + neg_l).mean()
+
+
+def supervised_loss(logits: Array, labels: Array) -> Array:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+
+
+# ---------------------------------------------------------------------------
+# Classic-GNN factory (§4.1)
+# ---------------------------------------------------------------------------
+
+GNN_VARIANTS = {
+    # name           aggregator  combiner  self_loop  weighted-sampler
+    "graphsage":      ("mean",    "concat", False,     False),
+    "graphsage_max":  ("max",     "concat", False,     False),
+    "graphsage_gru":  ("gru",     "concat", False,     False),
+    "gcn":            ("mean",    "add",    True,      False),
+    "fastgcn":        ("mean",    "add",    True,      True),   # importance sampling
+    "asgcn":          ("attention", "concat", False,   True),   # adaptive sampling
+    "structure2vec":  ("sum",     "add",    False,     False),
+}
+
+
+def make_gnn(name: str, d_in: int, d_hidden: int = 64, d_out: int = 64,
+             k_max: int = 2, fanouts: Sequence[int] = (10, 5),
+             use_kernel: bool = False) -> GNNSpec:
+    agg, comb, self_loop, _ = GNN_VARIANTS[name]
+    dims = (d_in,) + (d_hidden,) * (k_max - 1) + (d_out,)
+    return GNNSpec(k_max=k_max, dims=dims, fanouts=tuple(fanouts),
+                   aggregator=agg, combiner=comb, gcn_self_loop=self_loop,
+                   use_kernel=use_kernel, name=name)
+
+
+def sampler_for(name: str, store: DistributedGraphStore, seed: int = 0
+                ) -> NeighborhoodSampler:
+    weighted = GNN_VARIANTS[name][3] if name in GNN_VARIANTS else False
+    return NeighborhoodSampler(store, weighted=weighted, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# Trainer (host loop; the device step lives in launch/train.py for the
+# distributed case — this is the single-host reference path used by tests,
+# benchmarks and examples)
+# ---------------------------------------------------------------------------
+
+class GNNTrainer:
+    """Single-host reference trainer: link-prediction with negatives."""
+
+    def __init__(self, store: DistributedGraphStore, spec: GNNSpec, *,
+                 n_negatives: int = 5, lr: float = 1e-2, seed: int = 0,
+                 pad_levels="auto"):
+        self.store = store
+        self.spec = spec
+        self.n_negatives = n_negatives
+        self.lr = lr
+        self.rng = np.random.default_rng(seed)
+        self.traverse = TraverseSampler(store, seed=seed)
+        self.neighborhood = sampler_for(spec.name, store, seed=seed + 1)
+        self.negative = NegativeSampler(store, seed=seed + 2)
+        self.params = init_gnn_params(spec, seed)
+        self.features = jnp.asarray(store.dense_features())
+        self.pad_levels = pad_levels
+        self._step = jax.jit(self._step_impl)
+
+    def _embed(self, params, plan):
+        return gnn_apply(self.spec, params, plan, self.features)
+
+    def _step_impl(self, params, plan_s, plan_d, plan_n):
+        def loss_fn(p):
+            z_src = self._embed(p, plan_s)
+            z_dst = self._embed(p, plan_d)
+            z_negf = self._embed(p, plan_n)
+            q = self.n_negatives
+            z_neg = z_negf.reshape(z_src.shape[0], q, -1)
+            return unsup_loss(z_src, z_dst, z_neg)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params = jax.tree.map(lambda p, g: p - self.lr * g, params, grads)
+        return params, loss
+
+    def _plans_for_batch(self, batch_size: int):
+        edges = self.traverse.sample(batch_size, mode="edge")
+        src, dst = edges[:, 0], edges[:, 1]
+        neg = self.negative.sample(src, self.n_negatives, avoid=dst).reshape(-1)
+        pads = self.pad_levels
+
+        def mk(seeds, scale=1):
+            plan = build_plan(self.neighborhood, seeds, self.spec.fanouts)
+            if pads == "auto":
+                plan = ops.pad_plan(plan, ops.auto_pad_sizes(plan))
+            elif pads is not None:
+                plan = ops.pad_plan(plan, [x * scale for x in pads])
+            return plan_to_device(plan)
+
+        return mk(src), mk(dst), mk(neg, scale=self.n_negatives)
+
+    def train(self, steps: int, batch_size: int = 64) -> List[float]:
+        losses = []
+        for _ in range(steps):
+            plan_s, plan_d, plan_n = self._plans_for_batch(batch_size)
+            self.params, loss = self._step(self.params, plan_s, plan_d, plan_n)
+            losses.append(float(loss))
+        return losses
+
+    def embed(self, vertices: np.ndarray) -> np.ndarray:
+        plan = plan_to_device(build_plan(self.neighborhood, vertices,
+                                         self.spec.fanouts))
+        return np.asarray(self._embed(self.params, plan))
+
+    def link_scores(self, src: np.ndarray, dst: np.ndarray) -> np.ndarray:
+        zs, zd = self.embed(src), self.embed(dst)
+        return (zs * zd).sum(-1)

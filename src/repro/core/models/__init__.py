@@ -1,0 +1,7 @@
+# In-house GNNs — paper §4.2, all plugins on the algorithm layer.
+from .ahep import AHEP, HEP  # noqa: F401
+from .gatne import GATNE  # noqa: F401
+from .mixture import MixtureGNN  # noqa: F401
+from .hierarchical import HierarchicalGNN  # noqa: F401
+from .evolving import EvolvingGNN  # noqa: F401
+from .bayesian import BayesianGNN  # noqa: F401

@@ -1,0 +1,165 @@
+"""GATNE — paper §4.2 / Eq. (3)-(4): General Attributed Multiplex
+HeTerogeneous Network Embedding.
+
+Per vertex v and edge type c the overall embedding is
+
+    h_{v,c} = b_v + alpha_c * M_c^T g_v a_c + beta_c * D^T x_v          (3)
+
+where b_v is the general (base) embedding, g_v = [g_{v,1} .. g_{v,t}] the
+meta-specific embeddings, a_c self-attention coefficients over the t
+meta-embeddings, M_c / D trainable transforms and x_v the attributes.
+Training: random-walk skip-gram with negative sampling (4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..sampling import NegativeSampler
+from ..storage import DistributedGraphStore
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class GATNEConfig:
+    d: int = 64           # embedding dim
+    s: int = 8            # meta-specific embedding dim (per edge type)
+    walk_len: int = 6
+    window: int = 2
+    n_negatives: int = 4
+    alpha: float = 1.0    # Eq. 3 alpha_c (scalar-shared; per-type learnable below)
+    beta: float = 0.5
+    lr: float = 2.5e-2
+
+
+class GATNE:
+    def __init__(self, store: DistributedGraphStore, cfg: GATNEConfig = GATNEConfig(),
+                 seed: int = 0):
+        self.store = store
+        self.cfg = cfg
+        g = store.graph
+        self.g = g
+        self.rng = np.random.default_rng(seed)
+        self.negative = NegativeSampler(store, seed=seed + 1)
+        r = np.random.default_rng(seed)
+        T = g.n_edge_types
+        d, s = cfg.d, cfg.s
+        d_attr = max(g.vertex_attr_table.shape[1], 1)
+
+        def nrm(*shape, scale=None):
+            scale = scale or 1.0 / np.sqrt(shape[-1])
+            return jnp.asarray(r.standard_normal(shape) * scale, jnp.float32)
+
+        self.params = {
+            "base": nrm(g.n, d),               # b_v
+            "meta": nrm(g.n, T, s),            # g_{v,t'}
+            "att_w": nrm(T, s, s),             # self-attention (per type c)
+            "att_v": nrm(T, s),
+            "M": nrm(T, s, d),                 # M_c
+            "D": nrm(d_attr, d),               # attribute transform
+            "alpha": jnp.ones((T,), jnp.float32) * cfg.alpha,
+            "beta": jnp.ones((T,), jnp.float32) * cfg.beta,
+            "ctx": nrm(g.n, d),                # skip-gram context table
+        }
+        self.features = jnp.asarray(store.dense_features())
+        self._step = jax.jit(self._step_impl)
+
+    # -- Eq. (3) ---------------------------------------------------------------
+    @staticmethod
+    def _overall(params, features, v: Array, c: Array) -> Array:
+        """h_{v,c} for vertex ids v [B] under edge types c [B]."""
+        g_v = params["meta"][v]                       # [B, T, s]
+        att_w = params["att_w"][c]                    # [B, s, s]
+        att_v = params["att_v"][c]                    # [B, s]
+        # self-attention over the T meta-embeddings (Lin et al. 2017 style)
+        scores = jnp.einsum("bts,bsk,bk->bt", g_v, att_w, att_v)
+        a_c = jax.nn.softmax(scores, axis=-1)         # [B, T]
+        g_sel = jnp.einsum("bt,bts->bs", a_c, g_v)    # U g_v a_c
+        spec = jnp.einsum("bs,bsd->bd", g_sel, params["M"][c])
+        attr = features[v] @ params["D"]
+        return (params["base"][v]
+                + params["alpha"][c][:, None] * spec
+                + params["beta"][c][:, None] * attr)
+
+    def embed(self, vertices: np.ndarray, edge_type: int = 0) -> np.ndarray:
+        v = jnp.asarray(vertices, jnp.int32)
+        c = jnp.full(v.shape, edge_type, jnp.int32)
+        return np.asarray(self._overall(self.params, self.features, v, c))
+
+    # -- random walks (host, through the storage layer) -------------------------
+    def _walks(self, starts: np.ndarray) -> np.ndarray:
+        walks = np.zeros((len(starts), self.cfg.walk_len), np.int32)
+        walks[:, 0] = starts
+        for i, v in enumerate(starts):
+            cur = int(v)
+            for t in range(1, self.cfg.walk_len):
+                shard = self.store.shards[self.store.shard_of(cur)]
+                nbrs = shard.neighbors(cur, self.store)
+                if len(nbrs) == 0:
+                    walks[i, t:] = cur
+                    break
+                cur = int(nbrs[self.rng.integers(0, len(nbrs))])
+                walks[i, t] = cur
+        return walks
+
+    def _pairs(self, walks: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """(center, context) pairs within the window (Eq. 4)."""
+        B, L = walks.shape
+        cs, ctx = [], []
+        for off in range(1, self.cfg.window + 1):
+            cs.append(walks[:, :-off].reshape(-1))
+            ctx.append(walks[:, off:].reshape(-1))
+            cs.append(walks[:, off:].reshape(-1))
+            ctx.append(walks[:, :-off].reshape(-1))
+        return np.concatenate(cs), np.concatenate(ctx)
+
+    # -- skip-gram step ----------------------------------------------------------
+    def _step_impl(self, params, centers, contexts, negs, etypes):
+        cfg = self.cfg
+
+        def loss_fn(p):
+            h = self._overall(p, self.features, centers, etypes)   # [B, d]
+            ctx = p["ctx"][contexts]                                # [B, d]
+            neg = p["ctx"][negs]                                    # [B, Q, d]
+            pos_l = jax.nn.log_sigmoid(jnp.einsum("bd,bd->b", h, ctx))
+            neg_l = jax.nn.log_sigmoid(-jnp.einsum("bd,bqd->bq", h, neg)).sum(-1)
+            return -(pos_l + neg_l).mean()
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        # word2vec-style scaling for the EMBEDDING tables: each row is
+        # touched ~once per batch, so its mean-loss gradient carries a 1/B
+        # factor that must be undone or rows move O(lr/B) and never train.
+        # Dense/shared params (att, M, D, alpha, beta) accumulate over the
+        # whole batch already — they keep the plain mean-gradient step.
+        b = centers.shape[0]
+        table_scale = {"base": b, "meta": b, "ctx": b}
+        params = jax.tree_util.tree_map_with_path(
+            lambda path, a, g: a - cfg.lr * table_scale.get(
+                path[0].key, 1.0) * g, params, grads)
+        return params, loss
+
+    def train(self, steps: int, batch_size: int = 64) -> List[float]:
+        losses = []
+        for _ in range(steps):
+            starts = self.rng.integers(0, self.g.n, size=batch_size).astype(np.int32)
+            centers, contexts = self._pairs(self._walks(starts))
+            # one edge type per pair (multiplex view of the walk)
+            etypes = self.rng.integers(0, self.g.n_edge_types,
+                                       size=len(centers)).astype(np.int32)
+            negs = self.negative.sample(centers, self.cfg.n_negatives)
+            self.params, loss = self._step(
+                self.params, jnp.asarray(centers), jnp.asarray(contexts),
+                jnp.asarray(negs), jnp.asarray(etypes))
+            losses.append(float(loss))
+        return losses
+
+    def link_scores(self, src: np.ndarray, dst: np.ndarray,
+                    edge_type: int = 0) -> np.ndarray:
+        zs = self.embed(src, edge_type)
+        zd = self.embed(dst, edge_type)
+        return (zs * zd).sum(-1)

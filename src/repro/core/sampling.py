@@ -1,0 +1,299 @@
+"""Sampling layer — paper §3.3.
+
+Three sampler classes, each a plugin:
+
+  * ``TraverseSampler``      — batch of seed vertices/edges from the
+                               partitioned subgraphs.
+  * ``NeighborhoodSampler``  — multi-hop aligned contexts (fan-out per hop),
+                               weighted or uniform, reading through the
+                               storage layer's local/cache/remote path.
+  * ``NegativeSampler``      — degree^alpha negative tables, local-first.
+
+Lock-free request-flow buckets (paper Fig 6): vertices of one batch are
+grouped by owning shard, each shard's group is processed as ONE vectorised
+pass ("bucket"), and results are stitched back in request order.  On a single
+host this is both the faithful analogue (no two writers share state) and the
+fast path (no per-vertex python loop for the common cached/local cases).
+
+Dynamic sampler weights (paper: "implement the update operation in a
+sampler's backward computation"): ``NeighborhoodSampler.update_weights``
+consumes per-edge gradients/scores from the training step; samplers keep
+alias tables rebuilt lazily.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .graph import AHG
+from .storage import DistributedGraphStore
+
+__all__ = [
+    "SampleBatch", "TraverseSampler", "NeighborhoodSampler", "NegativeSampler",
+    "SAMPLERS", "register_sampler",
+]
+
+
+@dataclasses.dataclass
+class SampleBatch:
+    """Aligned sampler output: the unit consumed by the operator layer.
+
+    ``neighbors[h]`` has shape [B * prod(fanouts[:h+1])] flattened, with
+    ``mask[h]`` marking real entries (padding uses vertex 0, mask 0) — the
+    "aligned sizes" the paper requires so AGGREGATE/COMBINE are dense ops.
+    """
+
+    seeds: np.ndarray                       # [B] int32
+    neighbors: List[np.ndarray]             # per hop, int32
+    masks: List[np.ndarray]                 # per hop, float32 0/1
+    fanouts: Tuple[int, ...]
+    negatives: Optional[np.ndarray] = None  # [B, Q] int32
+
+    def hop_shape(self, h: int) -> Tuple[int, ...]:
+        b = len(self.seeds)
+        f = 1
+        for x in self.fanouts[:h + 1]:
+            f *= x
+        return (b, f)
+
+
+class _AliasTable:
+    """O(1) weighted sampling (Walker alias method), rebuilt lazily when the
+    underlying weights change — the mechanism behind dynamic-weight samplers."""
+
+    def __init__(self, weights: np.ndarray):
+        self.rebuild(weights)
+
+    def rebuild(self, weights: np.ndarray) -> None:
+        w = np.asarray(weights, np.float64)
+        n = len(w)
+        self.n = n
+        if n == 0:
+            self.prob = np.zeros(0)
+            self.alias = np.zeros(0, np.int64)
+            return
+        s = w.sum()
+        p = (w / s * n) if s > 0 else np.ones(n)
+        prob = np.zeros(n)
+        alias = np.zeros(n, np.int64)
+        small = [i for i in range(n) if p[i] < 1.0]
+        large = [i for i in range(n) if p[i] >= 1.0]
+        p = p.copy()
+        while small and large:
+            s_i, l_i = small.pop(), large.pop()
+            prob[s_i] = p[s_i]
+            alias[s_i] = l_i
+            p[l_i] = p[l_i] - (1.0 - p[s_i])
+            (small if p[l_i] < 1.0 else large).append(l_i)
+        for i in large + small:
+            prob[i] = 1.0
+        self.prob, self.alias = prob, alias
+
+    def sample(self, rng: np.random.Generator, size: int) -> np.ndarray:
+        if self.n == 0:
+            return np.zeros(size, np.int64)
+        i = rng.integers(0, self.n, size=size)
+        accept = rng.random(size) < self.prob[i]
+        return np.where(accept, i, self.alias[i])
+
+
+# ---------------------------------------------------------------------------
+# TRAVERSE
+# ---------------------------------------------------------------------------
+
+class TraverseSampler:
+    """Seed batches from the partitioned subgraphs, optionally restricted to
+    an edge type; round-robins shards so every worker's data is visited."""
+
+    def __init__(self, store: DistributedGraphStore, *, seed: int = 0):
+        self.store = store
+        self.rng = np.random.default_rng(seed)
+        self._cursor = 0
+
+    def sample(self, batch_size: int, *, edge_type: Optional[int] = None,
+               mode: str = "vertex") -> np.ndarray:
+        """mode='vertex' → [B] vertex ids; mode='edge' → [B, 2] (src, dst)."""
+        g = self.store.graph
+        if mode == "vertex":
+            shard = self.store.shards[self._cursor % self.store.n_shards]
+            self._cursor += 1
+            pool = shard.owned_vertices
+            if len(pool) == 0:
+                pool = np.arange(g.n, dtype=np.int32)
+            return pool[self.rng.integers(0, len(pool), size=batch_size)].astype(np.int32)
+        src, dst = g.edge_list()
+        if edge_type is not None:
+            keep = g.edge_type == edge_type
+            src, dst = src[keep], dst[keep]
+        if len(src) == 0:
+            return np.zeros((batch_size, 2), np.int32)
+        idx = self.rng.integers(0, len(src), size=batch_size)
+        return np.stack([src[idx], dst[idx]], axis=1).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# NEIGHBORHOOD
+# ---------------------------------------------------------------------------
+
+class NeighborhoodSampler:
+    """Aligned multi-hop neighborhood contexts through the storage layer.
+
+    The per-batch flow is the request-flow-bucket pattern: group the frontier
+    by shard, one vectorised pass per shard bucket, stitch results in order.
+    Supports per-edge dynamic weights (updated from training) and per-type
+    restriction (used by AHEP's typed sampling).
+    """
+
+    def __init__(self, store: DistributedGraphStore, *, weighted: bool = False,
+                 seed: int = 0):
+        self.store = store
+        self.weighted = weighted
+        self.rng = np.random.default_rng(seed)
+        g = store.graph
+        # dynamic weights start at the graph's edge weights
+        self.edge_logits = g.edge_weight.astype(np.float64).copy()
+        self._dirty = True
+        self._row_cum: Optional[np.ndarray] = None
+
+    # -- dynamic-weight machinery (the sampler's "backward") ---------------
+    def update_weights(self, edge_ids: np.ndarray, grads: np.ndarray,
+                       lr: float = 0.1) -> None:
+        """Paper: "register a gradient function for the sampler". Positive
+        grad ⇒ sample this edge more. Exponentiated-gradient update keeps
+        weights positive; alias/cdf tables rebuilt lazily."""
+        np.multiply.at(self.edge_logits, edge_ids, np.exp(lr * np.clip(grads, -8, 8)))
+        self._dirty = True
+
+    def _ensure_tables(self) -> None:
+        if not self._dirty:
+            return
+        g = self.store.graph
+        w = np.clip(self.edge_logits, 1e-12, None)
+        # per-row cumulative weights for O(log d) weighted row sampling
+        cum = np.cumsum(w)
+        self._row_cum = np.concatenate([[0.0], cum])
+        self._dirty = False
+
+    # -- sampling -----------------------------------------------------------
+    def _sample_row(self, v: int, fanout: int, shard) -> Tuple[np.ndarray, np.ndarray]:
+        nbrs = shard.neighbors(int(v), self.store)
+        d = len(nbrs)
+        if d == 0:
+            return np.zeros(fanout, np.int32), np.zeros(fanout, np.float32)
+        if self.weighted:
+            g = self.store.graph
+            lo, hi = g.neighbor_slice(int(v))
+            w = self.edge_logits[lo:hi]
+            p = w / w.sum()
+            idx = self.rng.choice(d, size=fanout, replace=fanout > d, p=p)
+        else:
+            # with replacement iff fanout exceeds degree (GraphSAGE convention)
+            replace = fanout > d
+            idx = (self.rng.choice(d, size=fanout, replace=False) if not replace
+                   else self.rng.integers(0, d, size=fanout))
+        return nbrs[idx].astype(np.int32), np.ones(fanout, np.float32)
+
+    def sample(self, seeds: np.ndarray, fanouts: Sequence[int],
+               *, edge_type: Optional[int] = None,
+               via: Optional[np.ndarray] = None) -> SampleBatch:
+        """Multi-hop expansion, routed through the seed's owner shard.
+
+        Paper §3.3: a NEIGHBORHOOD request for a seed v is served by the
+        graph server owning v; hop-1 is read from local storage, deeper hops
+        from the local neighbor cache, and a remote call is made only on a
+        cache miss.  ``via`` overrides the routing shard per seed (used by
+        ``operators.build_plan`` to keep ownership through dedup).
+        """
+        self._ensure_tables()
+        seeds = np.asarray(seeds, np.int32)
+        if via is None:
+            via = self.store.partition.vertex_home[seeds]
+        frontier, fvia = seeds, np.asarray(via, np.int32)
+        hops: List[np.ndarray] = []
+        masks: List[np.ndarray] = []
+        for fanout in fanouts:
+            nxt = np.zeros((len(frontier), fanout), np.int32)
+            msk = np.zeros((len(frontier), fanout), np.float32)
+            # ---- request-flow buckets: one vectorised pass per routing
+            # shard; sequential within a bucket = lock-free by construction
+            for s in np.unique(fvia):
+                shard = self.store.shards[int(s)]
+                for i in np.nonzero(fvia == s)[0]:
+                    nxt[i], msk[i] = self._sample_row(frontier[i], fanout, shard)
+            hops.append(nxt.reshape(-1))
+            masks.append(msk.reshape(-1))
+            frontier = nxt.reshape(-1)
+            fvia = np.repeat(fvia, fanout)   # expansion stays on the seed's server
+        return SampleBatch(seeds=seeds, neighbors=hops, masks=masks,
+                           fanouts=tuple(fanouts))
+
+
+# ---------------------------------------------------------------------------
+# NEGATIVE
+# ---------------------------------------------------------------------------
+
+class NegativeSampler:
+    """Degree^alpha negative sampling (word2vec convention), local-first:
+    draws from the requesting shard's owned vertices, falling back to the
+    global table when the local pool is too small (paper: "negative sampling
+    from other graph server may be needed")."""
+
+    def __init__(self, store: DistributedGraphStore, *, alpha: float = 0.75,
+                 per_type: bool = False, seed: int = 0):
+        self.store = store
+        self.alpha = alpha
+        self.rng = np.random.default_rng(seed)
+        g = store.graph
+        deg = (g.in_degree() + 1.0) ** alpha
+        self._global = _AliasTable(deg)
+        self._local: Dict[int, _AliasTable] = {}
+        self._local_pool: Dict[int, np.ndarray] = {}
+        for s, shard in enumerate(store.shards):
+            pool = shard.owned_vertices
+            self._local_pool[s] = pool
+            if len(pool) >= 32:
+                self._local[s] = _AliasTable(deg[pool])
+        self._type_tables: Dict[int, Tuple[np.ndarray, _AliasTable]] = {}
+        if per_type:
+            for t in range(g.n_vertex_types):
+                pool = np.nonzero(g.vertex_type == t)[0].astype(np.int32)
+                if len(pool):
+                    self._type_tables[t] = (pool, _AliasTable(deg[pool]))
+
+    def sample(self, seeds: np.ndarray, n_neg: int, *,
+               shard_id: Optional[int] = None,
+               vertex_type: Optional[int] = None,
+               avoid: Optional[np.ndarray] = None) -> np.ndarray:
+        b = len(seeds)
+        if vertex_type is not None and vertex_type in self._type_tables:
+            pool, table = self._type_tables[vertex_type]
+            idx = table.sample(self.rng, b * n_neg)
+            out = pool[idx].reshape(b, n_neg)
+        elif shard_id is not None and shard_id in self._local:
+            pool = self._local_pool[shard_id]
+            idx = self._local[shard_id].sample(self.rng, b * n_neg)
+            out = pool[idx].reshape(b, n_neg)
+        else:
+            out = self._global.sample(self.rng, b * n_neg).reshape(b, n_neg)
+        if avoid is not None:
+            # resample collisions once (cheap, keeps the hot path vectorised)
+            bad = out == np.asarray(avoid).reshape(b, 1)
+            if bad.any():
+                repl = self._global.sample(self.rng, int(bad.sum()))
+                out = out.copy()
+                out[bad] = repl
+        return out.astype(np.int32)
+
+
+SAMPLERS = {
+    "traverse": TraverseSampler,
+    "neighborhood": NeighborhoodSampler,
+    "negative": NegativeSampler,
+}
+
+
+def register_sampler(name: str, cls) -> None:
+    """Plugin hook (paper: 'we treat all samplers as plugins')."""
+    SAMPLERS[name] = cls

@@ -1,0 +1,2 @@
+from .pipeline import (GraphBatchPipeline, SyntheticTokenPipeline,  # noqa: F401
+                       PrefetchIterator)

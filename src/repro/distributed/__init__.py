@@ -1,0 +1,4 @@
+from .sharding import (batch_pspec, mesh_axis_sizes, shard_batch,  # noqa: F401
+                       with_zero, ShardingPlan, make_plan)
+from .compression import (compress_int8, decompress_int8,  # noqa: F401
+                          compressed_allreduce, ErrorFeedback)

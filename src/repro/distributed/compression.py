@@ -1,0 +1,90 @@
+"""Gradient compression: int8 quantised all-reduce with error feedback.
+
+Cross-pod (DCN) gradient traffic is the scaling bottleneck past one pod
+(DESIGN.md §5).  ``compressed_allreduce`` quantises each gradient leaf to
+int8 with a per-block fp32 scale, psums the int32-accumulated values over
+the (slow) axis, and dequantises; the quantisation residual is carried in an
+``ErrorFeedback`` buffer and added back next step (EF-SGD), which keeps
+convergence within noise of fp32 all-reduce while cutting DCN bytes 4x.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+BLOCK = 256
+
+
+def _pad_to_block(x: Array) -> Tuple[Array, int]:
+    flat = x.reshape(-1)
+    pad = (-len(flat)) % BLOCK
+    return jnp.pad(flat, (0, pad)), pad
+
+
+def compress_int8(x: Array) -> Tuple[Array, Array]:
+    """x -> (int8 values, per-block fp32 scales)."""
+    flat, _ = _pad_to_block(x.astype(jnp.float32))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0
+    q = jnp.clip(jnp.round(blocks / jnp.maximum(scale, 1e-12)), -127, 127)
+    return q.astype(jnp.int8), scale[:, 0]
+
+
+def decompress_int8(q: Array, scale: Array, shape, dtype) -> Array:
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+@dataclasses.dataclass
+class ErrorFeedback:
+    """Residual buffers, one per gradient leaf (same shapes)."""
+
+    buffers: PyTree
+
+    @staticmethod
+    def init(grads_like: PyTree) -> "ErrorFeedback":
+        return ErrorFeedback(jax.tree.map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads_like))
+
+
+def compressed_allreduce(grads: PyTree, ef: Optional[ErrorFeedback],
+                         axis_name: Optional[str]) -> Tuple[PyTree, ErrorFeedback]:
+    """Quantise(+EF) -> psum(int32) -> dequantise -> mean.
+
+    Must run inside shard_map/pmap scope providing ``axis_name``; with
+    axis_name=None it degrades to a local quantisation round-trip (used by
+    the unit tests to bound the quantisation error).
+    """
+    if ef is None:
+        ef = ErrorFeedback.init(grads)
+
+    def one(g, buf):
+        target = g.astype(jnp.float32) + buf
+        q, scale = compress_int8(target)
+        restored = decompress_int8(q, scale, g.shape, jnp.float32)
+        new_buf = target - restored            # EF residual
+        if axis_name is not None:
+            summed = jax.lax.psum(q.astype(jnp.int32), axis_name)
+            scale_sum = jax.lax.psum(scale, axis_name)  # conservative shared scale
+            n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+            avg = decompress_int8(
+                (summed / n).astype(jnp.int8), scale_sum / n, g.shape, jnp.float32)
+            out = avg.astype(g.dtype)
+        else:
+            out = restored.astype(g.dtype)
+        return out, new_buf
+
+    out = jax.tree.map(one, grads, ef.buffers)
+    grads_new = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    bufs = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return grads_new, ErrorFeedback(bufs)

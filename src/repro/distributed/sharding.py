@@ -1,0 +1,172 @@
+"""Sharding plans: mesh introspection, batch specs, ZeRO-1/3 extensions.
+
+The model gives every param a PartitionSpec through its logical axes
+(models/layers.pspec_tree).  This module layers the *distributed-training*
+decisions on top:
+
+  * ZeRO-1: optimizer state additionally sharded over the data axes — each
+    replica keeps 1/DP of m/v (+gather-free because AdamW is elementwise).
+  * ZeRO-3 ("fsdp"): params themselves take the extra data-axis sharding on
+    their largest replicated dim (XLA inserts the all-gathers just-in-time,
+    reduce-scatters the grads — the GSPMD way to FSDP).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+
+def mesh_axis_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_pspec(mesh: Mesh, extra_dims: int = 1) -> P:
+    return P(batch_axes(mesh), *([None] * extra_dims))
+
+
+def shard_batch(mesh: Mesh, batch: PyTree) -> PyTree:
+    def put(x):
+        spec = P(batch_axes(mesh), *([None] * (x.ndim - 1))) if x.ndim else P()
+        return jax.device_put(x, NamedSharding(mesh, spec))
+    return jax.tree.map(put, batch)
+
+
+def _add_fsdp_axis(spec: P, shape: Tuple[int, ...], axes: Tuple[str, ...],
+                   sizes: Dict[str, int]) -> P:
+    """Shard the largest still-replicated, divisible dim over ``axes``."""
+    used = set()
+    for e in spec:
+        if e is None:
+            continue
+        used.update(e if isinstance(e, tuple) else (e,))
+    axes = tuple(a for a in axes if a not in used)
+    if not axes:
+        return spec
+    want = int(np.prod([sizes[a] for a in axes]))
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    best, best_dim = -1, -1
+    for i, (dim, cur) in enumerate(zip(shape, entries)):
+        if cur is None and dim % want == 0 and dim > best:
+            best, best_dim = dim, i
+    if best_dim < 0:
+        return spec
+    entries[best_dim] = axes if len(axes) > 1 else axes[0]
+    return P(*entries)
+
+
+def with_zero(pspecs: PyTree, shapes: PyTree, mesh: Mesh, *, level: int,
+              axes: Optional[Tuple[str, ...]] = None) -> PyTree:
+    """level 0: unchanged; 1/3: add data-axis sharding (see module doc).
+
+    ``axes`` overrides the sharding axes (flat-FSDP passes ALL mesh axes)."""
+    if level == 0:
+        return pspecs
+    axes = batch_axes(mesh) if axes is None else axes
+    sizes = mesh_axis_sizes(mesh)
+    return jax.tree.map(
+        lambda spec, sh: _add_fsdp_axis(spec, tuple(sh), axes, sizes),
+        pspecs, shapes, is_leaf=lambda x: isinstance(x, P))
+
+
+# Flat-FSDP rules: NO tensor-parallel param dims — every former "model"-axis
+# logical dim replicates at the TP level, then ZeRO-3 shards the params over
+# the WHOLE mesh (pod x data x model) and DP runs over all axes too.  For a
+# <=13B dense model this trades the per-block activation all-reduce
+# (2(g-1)/g * B*S*D each) for one param all-gather per layer per pass —
+# ~16x less link traffic at deepseek-7b scale (§Perf cell A).
+FSDP_RULES: Dict[str, Any] = {
+    "heads": None, "kv_heads": None, "mlp": None, "vocab": None,
+    "inner": None, "embed_rows": None,
+    # experts stay on "model": EP all-to-all is still the right call for MoE
+}
+
+
+def dp_axes(mesh: Mesh, parallel: str = "tp") -> Tuple[str, ...]:
+    """Axes the batch (and ZeRO) shard over for a parallelism mode."""
+    if parallel == "fsdp":
+        return tuple(a for a in ("pod", "data", "model")
+                     if a in mesh.axis_names)
+    return batch_axes(mesh)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPlan:
+    """Everything the launcher needs to pin one train/serve step."""
+
+    mesh: Mesh
+    param_pspecs: PyTree
+    opt_pspecs: PyTree          # None until an optimizer is bound
+    batch_axes: Tuple[str, ...]
+    model_axis: Optional[str]
+    zero: int = 1
+
+    def named(self, pspec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, pspec)
+
+    def params_sharding(self) -> PyTree:
+        return jax.tree.map(self.named, self.param_pspecs,
+                            is_leaf=lambda x: isinstance(x, P))
+
+
+def make_plan(model, mesh: Mesh, *, zero: int = 1, rules=None,
+              parallel: str = "tp") -> ShardingPlan:
+    """Resolve the model's logical axes against this mesh (+ ZeRO).
+
+    parallel="tp" (baseline): model dims on the "model" axis, DP over
+    (pod, data).  parallel="fsdp": no TP — DP + ZeRO over ALL axes."""
+    sizes = mesh_axis_sizes(mesh)
+    if parallel == "fsdp":
+        rules = {**FSDP_RULES, **(rules or {})}
+    pspecs = model.pspecs(sizes, rules)
+    shapes = jax.tree.map(lambda d: d.shape, model.param_defs(),
+                          is_leaf=lambda x: hasattr(x, "axes"))
+    axes = dp_axes(mesh, parallel)
+    if zero >= 3:
+        pspecs = with_zero(pspecs, shapes, mesh, level=3, axes=axes)
+    return ShardingPlan(
+        mesh=mesh, param_pspecs=pspecs, opt_pspecs=None,
+        batch_axes=axes,
+        model_axis=("model" if "model" in sizes and parallel != "fsdp"
+                    else None), zero=zero)
+
+
+def opt_state_pspecs(plan: ShardingPlan, opt_state, params_pspecs) -> Any:
+    """Optimizer-state specs: mirror params (+ZeRO-1 data sharding).
+
+    Works for AdamWState / AdafactorState namedtuples by substituting the
+    param-shaped members; scalar counters are replicated.
+    """
+    import jax.numpy as jnp
+
+    def mirror(state_leaf_tree):
+        specs = params_pspecs
+        if plan.zero >= 1:
+            shapes = jax.tree.map(lambda x: tuple(x.shape), state_leaf_tree)
+            specs = with_zero(specs, shapes, plan.mesh, level=1,
+                              axes=plan.batch_axes)
+        return specs
+
+    from repro.optim.optimizers import AdafactorState, AdamWState
+    if isinstance(opt_state, AdamWState):
+        return AdamWState(count=P(), m=mirror(opt_state.m), v=mirror(opt_state.v))
+    if isinstance(opt_state, AdafactorState):
+        # factored stats have reduced rank: derive per-leaf from shapes
+        def reduced_spec(spec: P, shape) -> P:
+            entries = (list(spec) + [None] * 8)[: len(shape)]
+            return P(*entries)
+        vr = jax.tree.map(lambda s, leaf: reduced_spec(s, leaf.shape),
+                          params_pspecs, opt_state.vr,
+                          is_leaf=lambda x: isinstance(x, P))
+        vc = jax.tree.map(lambda leaf: P(), opt_state.vc)
+        return AdafactorState(count=P(), vr=vr, vc=vc)
+    return jax.tree.map(lambda _: P(), opt_state)

@@ -1,0 +1,1 @@
+from .supervisor import FailureInjector, Supervisor, TrainResult  # noqa: F401

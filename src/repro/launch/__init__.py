@@ -1,0 +1,3 @@
+# Launchers: mesh construction, multi-pod dry-run, train/serve drivers,
+# roofline analysis.  dryrun.py must be started as a fresh process (it sets
+# XLA_FLAGS before importing jax).

@@ -1,0 +1,149 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_DRYRUN_XLA_FLAGS")
+                           or "--xla_force_host_platform_device_count=512")
+"""Per-op roofline diagnostics for one dry-run cell (§Perf loop tooling).
+
+Prints, for the compiled HLO of a cell:
+  * bytes/flops by op kind (trip-count-weighted, per device),
+  * the top-N individual ops by bytes (with shapes) — names the tensors the
+    dominant roofline term is made of,
+  * the top-N collectives by link bytes.
+
+Usage:
+  python -m repro.launch.diag --arch deepseek-7b --shape train_4k \
+      --mesh single --parallel fsdp [--top 25]
+"""
+import argparse
+import re
+from collections import defaultdict
+
+from repro.launch import hlo_cost as H
+
+
+def per_op_table(text: str, pod_size: int, top: int = 25):
+    comps = H.parse_computations(text)
+    entry_names = [n for n in comps
+                   if re.search(rf"ENTRY %?{re.escape(n)}\b", text)]
+    entry = entry_names[0] if entry_names else max(
+        comps, key=lambda n: len(comps[n].ops))
+
+    # per-op accumulation with while-trip multipliers
+    rows = []            # (bytes, flops, kind, name, shape_str, mult)
+    coll_rows = []
+
+    def walk(name: str, mult: float, depth: int, seen):
+        comp = comps.get(name)
+        if comp is None or depth > 12 or name in seen:
+            return
+        for op in comp.ops:
+            kind = op.kind
+            if kind in H._FREE_OPS:
+                continue
+            if kind == "while":
+                mb = re.search(r"body=%?([\w.\-]+)", op.attrs)
+                mt = H._KNOWN_TRIPS.search(op.attrs)
+                if mt:
+                    trips = int(mt.group(1))
+                else:
+                    mc = re.search(r"condition=%?([\w.\-]+)", op.attrs)
+                    trips = (H._trip_count(comps[mc.group(1)])
+                             if mc and mc.group(1) in comps else 1)
+                if mb:
+                    walk(mb.group(1), mult * trips, depth + 1, seen)
+                continue
+            if kind in ("fusion", "call", "conditional", "custom-call"):
+                m0 = H._CALL_ATTR.search(op.attrs)
+                callee0 = (m0.group(1).split(",")[0].strip().lstrip("%")
+                           if m0 else None)
+                obytes = op.out_bytes + H._effective_operand_bytes(
+                    comps, comp, op, callee0)
+                rows.append((obytes * mult, 0.0, kind, op.name,
+                             _shape_of(op), mult))
+                # flops inside
+                if m0:
+                    for callee in re.split(r",\s*", m0.group(1)):
+                        walk(callee.lstrip("%"), mult, depth + 1, seen)
+                continue
+            base = kind.replace("-start", "")
+            if base in H.COLLECTIVE_OPS:
+                ici, dcn, g = H._collective_link_bytes(op, pod_size)
+                coll_rows.append(((ici + dcn) * mult, base, op.name,
+                                  _shape_of(op), g, mult))
+                continue
+            if kind in ("dynamic-slice", "slice", "gather"):
+                obytes = 2 * op.out_bytes
+            elif kind in ("dynamic-update-slice", "scatter"):
+                upd = (comp.shapes.get(op.operands[1], (0, []))[0]
+                       if len(op.operands) > 1 else op.out_bytes)
+                obytes = 3 * upd
+            else:
+                obytes = op.out_bytes + sum(
+                    comp.shapes.get(o, (0, []))[0] for o in op.operands)
+            flops = H._dot_flops(op, comp) if kind in ("dot", "convolution") else 0
+            rows.append((obytes * mult, flops * mult, kind, op.name,
+                         _shape_of(op), mult))
+
+    def _shape_of(op):
+        return ",".join(f"{dt}[{'x'.join(map(str, dims))}]"
+                        for dt, dims in op.out_shapes[:3])
+
+    walk(entry, 1.0, 0, set())
+    return rows, coll_rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", choices=("single", "multi"), default="single")
+    ap.add_argument("--parallel", choices=("tp", "fsdp"), default="tp")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--optimizer")
+    ap.add_argument("--zero", type=int)
+    ap.add_argument("--rules")
+    ap.add_argument("--top", type=int, default=25)
+    args = ap.parse_args()
+
+    import jax
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import build_gnn_step, build_step
+
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    if args.arch == "aligraph-gnn":
+        from repro.configs.aligraph_gnn import CONFIG as GNN_CONFIG
+        built = build_gnn_step(GNN_CONFIG, mesh,
+                               table_rules=(args.rules or "rows"))
+    else:
+        from repro.configs import get_config
+        built = build_step(get_config(args.arch), mesh, args.shape,
+                           optimizer=args.optimizer, zero=args.zero,
+                           parallel=args.parallel,
+                           microbatches=args.microbatches)
+    compiled = built.fn.lower(*built.args).compile()
+    text = compiled.as_text()
+    pod = 256 if mesh.devices.size > 256 else mesh.devices.size
+
+    rows, coll_rows = per_op_table(text, pod, args.top)
+
+    by_kind_b = defaultdict(float)
+    by_kind_f = defaultdict(float)
+    for b, f, kind, *_ in rows:
+        by_kind_b[kind] += b
+        by_kind_f[kind] += f
+    print("== bytes by op kind (GB/dev) ==")
+    for k, v in sorted(by_kind_b.items(), key=lambda kv: -kv[1])[:12]:
+        print(f"  {k:<24} {v/1e9:10.2f} GB   {by_kind_f[k]/1e12:8.2f} TF")
+    print(f"  {'TOTAL':<24} {sum(by_kind_b.values())/1e9:10.2f} GB   "
+          f"{sum(by_kind_f.values())/1e12:8.2f} TF")
+
+    print(f"\n== top {args.top} ops by bytes ==")
+    for b, f, kind, name, shape, mult in sorted(rows, key=lambda r: -r[0])[:args.top]:
+        print(f"  {b/1e9:9.2f} GB  x{mult:<6.0f} {kind:<16} {shape:<36} {name[:48]}")
+
+    print(f"\n== top {args.top} collectives by link bytes ==")
+    for b, base, name, shape, g, mult in sorted(coll_rows, key=lambda r: -r[0])[:args.top]:
+        print(f"  {b/1e9:9.2f} GB  x{mult:<6.0f} {base:<20} g={g:<4} {shape:<32} {name[:44]}")
+
+
+if __name__ == "__main__":
+    main()

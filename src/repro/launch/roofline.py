@@ -1,0 +1,218 @@
+"""Roofline analysis from compiled dry-run artifacts (DESIGN.md §7).
+
+Terms (seconds, per step, per chip):
+    T_comp = flops_per_device / PEAK_FLOPS
+    T_mem  = bytes_per_device / HBM_BW
+    T_coll = sum over collectives of link-bytes / ICI_BW  (ring model)
+
+``compiled.cost_analysis()`` is PER-DEVICE on GSPMD-partitioned modules
+(calibrated: an 8-way batch-sharded matmul reports 1/8 of the single-device
+flops).  Collective bytes are parsed from the optimized HLO text; each op's
+ring cost over a group of size g:
+
+    all-reduce      2(g-1)/g * bytes        (output bytes printed)
+    all-gather      (g-1)/g  * bytes_out
+    reduce-scatter  (g-1)    * bytes_out    (input = g * out)
+    all-to-all      (g-1)/g  * bytes
+    collective-permute      bytes
+
+DCN vs ICI: collectives whose group spans pods (group size divisible by the
+full single-pod device count in the multi-pod mesh) are charged at DCN_BW.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from collections import defaultdict
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+# TPU v5e per chip (assignment constants)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link
+DCN_BW = 6.25e9              # bytes/s per chip (50 Gbit/s NIC-equivalent share)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\()?([a-z0-9_\[\]\(\), ]*?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    op: str
+    count: int = 0
+    bytes_out: int = 0
+    link_bytes: float = 0.0
+    dcn_bytes: float = 0.0
+
+
+def parse_collectives(hlo_text: str, *, pod_size: int = 256
+                      ) -> Dict[str, CollectiveStats]:
+    """Sum per-op collective cost over the optimized HLO."""
+    out: Dict[str, CollectiveStats] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        type_str, op = m.group(1), m.group(2)
+        if "-done" in line.split("=")[1][:40]:
+            continue
+        bytes_out = _shape_bytes(type_str)
+        g = 1
+        gm = _GROUPS_IOTA_RE.search(line)
+        if gm:
+            g = int(gm.group(2))
+        else:
+            gl = _GROUPS_LIST_RE.search(line)
+            if gl:
+                g = len(gl.group(1).split(","))
+        if g <= 1:
+            continue
+        if op == "all-reduce":
+            link = 2 * (g - 1) / g * bytes_out
+        elif op == "all-gather":
+            link = (g - 1) / g * bytes_out
+        elif op == "reduce-scatter":
+            link = (g - 1) * bytes_out
+        elif op == "all-to-all":
+            link = (g - 1) / g * bytes_out
+        else:  # collective-permute
+            link = bytes_out
+        stat = out.setdefault(op, CollectiveStats(op=op))
+        stat.count += 1
+        stat.bytes_out += bytes_out
+        # spans pods? (multi-pod meshes put pods in the slow-link dimension)
+        if g > pod_size:
+            stat.dcn_bytes += link
+        else:
+            stat.link_bytes += link
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    flops_per_dev: float
+    bytes_per_dev: float
+    coll_link_bytes: float
+    coll_dcn_bytes: float
+    t_comp: float
+    t_mem: float
+    t_coll: float
+    dominant: str
+    model_flops: float
+    useful_ratio: float
+    memory: Dict[str, float]
+    collectives: Dict[str, Dict[str, float]]
+    meta: Dict[str, Any]
+
+    def to_json(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+def model_flops_for(meta: Dict[str, Any]) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE) per the assignment.
+
+    For decode cells D = global_batch tokens (one step); for train/prefill
+    D = global_batch * seq tokens.  GNN: 6 * dense-layer params * vertices
+    embedded (the table rows are touched sparsely, not N*D)."""
+    if meta.get("shape") == "train_gnn":
+        # 2-hop GraphSAGE: layer l computes for every level-l vertex
+        from repro.configs.aligraph_gnn import CONFIG as G
+        n0, n1, _ = G.level_sizes
+        w1 = 2 * G.d_in * G.d_hidden
+        w2 = 2 * G.d_hidden * G.d_out
+        return 6.0 * (n1 * w1 + n0 * w2)
+    n_active = meta.get("active_params") or meta.get("params") or 0
+    if meta["kind"] == "train":
+        tokens = meta["global_batch"] * max(meta["seq"], 1)
+    elif meta["kind"] == "prefill":
+        tokens = meta["global_batch"] * meta["seq"]
+    else:
+        tokens = meta["global_batch"]
+    mult = 6.0 if meta["kind"] == "train" else 2.0
+    return mult * n_active * tokens
+
+
+def analyze(compiled, lowered_text: Optional[str], meta: Dict[str, Any],
+            mesh_name: str, n_devices: int) -> Roofline:
+    from repro.launch import hlo_cost
+
+    ca = compiled.cost_analysis() or {}
+    text = compiled.as_text()
+    pod = 256 if n_devices > 256 else n_devices
+    # trip-count-aware analysis (XLA's cost_analysis counts scan bodies once;
+    # hlo_cost multiplies through while loops — see hlo_cost.py)
+    totals = hlo_cost.analyze_text(text, pod_size=pod)
+    flops = totals.flops
+    bytes_acc = totals.bytes
+    link = totals.coll_ici
+    dcn = totals.coll_dcn
+    colls = {op: CollectiveStats(op=op, count=int(d.get("count", 0)),
+                                 bytes_out=int(d.get("bytes_out", 0)),
+                                 link_bytes=float(d.get("link_bytes", 0)))
+             for op, d in totals.coll_by_op.items()}
+    # per-device link bytes: HLO shapes are already per-shard post-SPMD
+    t_comp = flops / PEAK_FLOPS
+    t_mem = bytes_acc / HBM_BW
+    t_coll = link / ICI_BW + dcn / DCN_BW
+    dominant = max((("compute", t_comp), ("memory", t_mem),
+                    ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    mf = model_flops_for(meta)
+    useful = (mf / n_devices) / flops if flops else 0.0
+    try:
+        ma = compiled.memory_analysis()
+        memory = dict(
+            argument_bytes=float(ma.argument_size_in_bytes),
+            output_bytes=float(ma.output_size_in_bytes),
+            temp_bytes=float(ma.temp_size_in_bytes),
+            alias_bytes=float(ma.alias_size_in_bytes),
+            peak_bytes=float(ma.argument_size_in_bytes
+                             + ma.output_size_in_bytes
+                             + ma.temp_size_in_bytes
+                             - ma.alias_size_in_bytes),
+        )
+    except Exception:
+        memory = {}
+    return Roofline(
+        arch=meta["arch"], shape=meta["shape"], mesh=mesh_name,
+        n_devices=n_devices, flops_per_dev=flops, bytes_per_dev=bytes_acc,
+        coll_link_bytes=link, coll_dcn_bytes=dcn,
+        t_comp=t_comp, t_mem=t_mem, t_coll=t_coll, dominant=dominant,
+        model_flops=mf, useful_ratio=useful, memory=memory,
+        collectives={k: dict(count=v.count, bytes_out=v.bytes_out,
+                             link_bytes=v.link_bytes, dcn_bytes=v.dcn_bytes)
+                     for k, v in colls.items()},
+        meta={**{k: v for k, v in meta.items() if k != "mesh_axes"},
+              "xla_flops_per_dev_raw": float(ca.get("flops", 0.0)),
+              "dot_flops_per_dev": float(totals.flops_by_kind.get("dot", 0.0))},
+    )

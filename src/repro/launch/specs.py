@@ -1,0 +1,129 @@
+"""Input/cache specs per (arch x shape x mesh) — the dry-run's contract.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, no device allocation) for every model input of a cell, plus the
+matching NamedShardings.  Cache sharding is divisibility-driven: batch over
+(pod,data) when it divides, KV seq over the axes left over (so a batch-1
+500k cache still shards 512 ways).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+SHAPES: Dict[str, Dict[str, Any]] = {
+    "train_4k":    dict(kind="train",   seq=4_096,   global_batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32_768,  global_batch=32),
+    "decode_32k":  dict(kind="decode",  seq=32_768,  global_batch=128),
+    "long_500k":   dict(kind="decode",  seq=524_288, global_batch=1),
+}
+
+# long_500k needs a sub-quadratic backbone: SSM/hybrid only (DESIGN.md §4).
+LONG_OK_FAMILIES = ("ssm", "hybrid")
+
+
+def applicable(family: str, shape: str) -> bool:
+    if shape == "long_500k":
+        return family in LONG_OK_FAMILIES
+    return True
+
+
+def _axes_prod(sizes: Dict[str, int], axes: Tuple[str, ...]) -> int:
+    out = 1
+    for a in axes:
+        out *= sizes[a]
+    return out
+
+
+def choose_batch_axes(sizes: Dict[str, int], batch: int) -> Tuple[str, ...]:
+    for cand in (("pod", "data"), ("data",), ()):
+        if all(a in sizes for a in cand) and cand and batch % _axes_prod(sizes, cand) == 0:
+            return cand
+    return ()
+
+
+def choose_seq_axes(sizes: Dict[str, int], seq: int,
+                    used: Tuple[str, ...]) -> Tuple[str, ...]:
+    free = tuple(a for a in ("pod", "data", "model") if a in sizes and a not in used)
+    # largest divisible suffix-combination, preferring model first (ICI-near)
+    for cand in (free, free[1:], free[-1:] if free else ()):
+        if cand and seq % _axes_prod(sizes, cand) == 0:
+            return cand
+    return ()
+
+
+def kv_cache_pspec(sizes: Dict[str, int], batch: int, seq: int):
+    """[L, B, S, KV, hd] cache spec (decode/prefill)."""
+    from jax.sharding import PartitionSpec as P
+    b_axes = choose_batch_axes(sizes, batch)
+    s_axes = choose_seq_axes(sizes, seq, used=b_axes)
+    return P(None,
+             b_axes if b_axes else None,
+             s_axes if s_axes else None,
+             None, None)
+
+
+def state_cache_pspec(sizes: Dict[str, int], axes_names: Tuple[str, ...],
+                      shape: Tuple[int, ...]):
+    """SSM state spec from logical names (layers/batch/inner/...)."""
+    from jax.sharding import PartitionSpec as P
+    entries = []
+    used: set = set()
+    for name, dim in zip(axes_names, shape):
+        if name == "batch":
+            b_axes = choose_batch_axes(sizes, dim)
+            b_axes = tuple(a for a in b_axes if a not in used)
+            if b_axes and dim % _axes_prod(sizes, b_axes) == 0:
+                entries.append(b_axes)
+                used.update(b_axes)
+            else:
+                entries.append(None)
+        elif name == "inner" and "model" in sizes and "model" not in used \
+                and dim % sizes["model"] == 0:
+            entries.append("model")
+            used.add("model")
+        else:
+            entries.append(None)
+    return P(*entries)
+
+
+def cache_pspecs(model, sizes: Dict[str, int], batch: int, seq: int):
+    """PartitionSpec tree matching model.cache_defs(batch, seq)."""
+    import jax
+
+    defs = model.cache_defs(batch, seq)
+
+    def resolve(d):
+        if "seq" in d.axes:                   # KV-style cache
+            seq_dim = d.shape[list(d.axes).index("seq")]
+            return kv_cache_pspec(sizes, batch, seq_dim)
+        return state_cache_pspec(sizes, d.axes, d.shape)
+
+    return jax.tree.map(resolve, defs, is_leaf=lambda x: hasattr(x, "axes"))
+
+
+def batch_specs(model, sizes: Dict[str, int], kind: str, batch: int, seq: int,
+                dp: Optional[Tuple[str, ...]] = None):
+    """(ShapeDtypeStruct dict, PartitionSpec dict) for the step input.
+
+    ``dp`` overrides the batch axes (flat-FSDP: all mesh axes), falling back
+    to the divisible default when the override does not divide."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    b_axes = choose_batch_axes(sizes, batch)
+    if dp is not None and batch % _axes_prod(sizes, dp) == 0:
+        b_axes = dp
+    bspec = b_axes if b_axes else None
+    structs, specs = {}, {}
+    if kind in ("train", "prefill"):
+        for name, (shape, dtype) in model.train_batch_shapes(batch, seq).items():
+            structs[name] = jax.ShapeDtypeStruct(shape, dtype)
+            specs[name] = P(bspec, *([None] * (len(shape) - 1)))
+    else:  # decode
+        for name, (shape, dtype) in model.decode_batch_shapes(batch).items():
+            structs[name] = jax.ShapeDtypeStruct(shape, dtype)
+            specs[name] = P(bspec, *([None] * (len(shape) - 1))) if shape else P()
+    return structs, specs

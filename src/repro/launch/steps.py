@@ -1,0 +1,226 @@
+"""Step builders: the jit-able train / prefill / decode functions with their
+in/out shardings — shared by dryrun.py (lower+compile) and train.py/serve.py
+(actual execution on small meshes).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import (ShardingPlan, batch_axes, dp_axes,
+                                        make_plan, mesh_axis_sizes,
+                                        opt_state_pspecs)
+from repro.launch import specs as S
+from repro.models import ShardCtx, get_model
+from repro.optim import clip_by_global_norm, make_optimizer, warmup_cosine
+
+PyTree = Any
+
+
+def pick_policy(cfg) -> Dict[str, Any]:
+    """Default optimizer/ZeRO policy by model size (overridable via CLI)."""
+    n = cfg.param_count()
+    if n >= 40e9:
+        return dict(optimizer="adafactor", zero=3)
+    if n >= 3e9:
+        return dict(optimizer="adamw", zero=3)
+    return dict(optimizer="adamw", zero=1)
+
+
+@dataclasses.dataclass
+class BuiltStep:
+    fn: Any                    # jitted function
+    args: Tuple                # abstract (or concrete) example args
+    mesh: Any
+    meta: Dict[str, Any]
+
+
+def build_ctx(mesh, parallel: str = "tp") -> ShardCtx:
+    sizes = mesh_axis_sizes(mesh)
+    return ShardCtx(mesh=mesh, batch_axes=dp_axes(mesh, parallel),
+                    model_axis=("model" if "model" in sizes
+                                and parallel != "fsdp" else None))
+
+
+def build_step(arch_cfg, mesh, shape_name: str, *, optimizer: str = None,
+               zero: int = None, rules=None, param_dtype=jnp.bfloat16,
+               peak_lr: float = 3e-4, donate: bool = True,
+               kv_dtype=jnp.bfloat16, parallel: str = "tp",
+               microbatches: int = 1) -> BuiltStep:
+    """Lower-ready step for one (arch x shape) cell on ``mesh``."""
+    shape = S.SHAPES[shape_name]
+    kind = shape["kind"]
+    seq, gbatch = shape["seq"], shape["global_batch"]
+    sizes = mesh_axis_sizes(mesh)
+    ctx = build_ctx(mesh, parallel)
+    cfg = arch_cfg.canonicalize(tp=(1 if parallel == "fsdp"
+                                    else sizes.get("model", 1)))
+    model = get_model(cfg, ctx)
+    plan = make_plan(model, mesh, zero=(pick_policy(cfg)["zero"]
+                                        if zero is None else zero),
+                     rules=rules, parallel=parallel)
+
+    def named(pspecs):
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    params_abs = model.abstract(param_dtype)
+    param_sh = named(plan.param_pspecs)
+    batch_abs, batch_pspecs = S.batch_specs(
+        model, sizes, kind, gbatch, seq,
+        dp=plan.batch_axes if parallel == "fsdp" else None)
+    batch_sh = {k: NamedSharding(mesh, v) for k, v in batch_pspecs.items()}
+
+    meta = dict(arch=cfg.name, shape=shape_name, kind=kind, seq=seq,
+                global_batch=gbatch, mesh_axes=sizes, parallel=parallel,
+                microbatches=microbatches,
+                params=cfg.param_count() if hasattr(cfg, "param_count") else 0,
+                active_params=(cfg.active_param_count()
+                               if hasattr(cfg, "active_param_count") else 0))
+
+    if kind == "train":
+        policy = pick_policy(cfg)
+        opt = make_optimizer(optimizer or policy["optimizer"])
+        meta["optimizer"] = optimizer or policy["optimizer"]
+        meta["zero"] = plan.zero
+        opt_abs = jax.eval_shape(opt.init, params_abs)
+        opt_specs = opt_state_pspecs(plan, opt_abs, plan.param_pspecs)
+        opt_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), opt_specs,
+                              is_leaf=lambda x: isinstance(x, P))
+        n_micro = microbatches
+        dp_size = 1
+        for a in plan.batch_axes:
+            dp_size *= sizes[a]
+        if n_micro > 1:
+            assert gbatch % n_micro == 0 and (gbatch // n_micro) % dp_size == 0, \
+                f"microbatches={n_micro} must keep {gbatch}/{n_micro} divisible by DP {dp_size}"
+
+        def split_micro(batch):
+            """[G, ...] -> [M, G/M, ...] with the DP sharding kept on dim 1."""
+            def f(x):
+                y = x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:])
+                spec = P(None, plan.batch_axes, *([None] * (y.ndim - 2)))
+                return jax.lax.with_sharding_constraint(
+                    y, NamedSharding(mesh, spec))
+            return jax.tree.map(f, batch)
+
+        def train_step(params, opt_state, batch, step):
+            lr = warmup_cosine(step, peak_lr=peak_lr, warmup=2000, total=200_000)
+            if n_micro > 1:
+                # gradient accumulation: activation peak drops ~n_micro x,
+                # grads accumulate in f32 at param sharding
+                def micro(gacc, mb):
+                    loss, grads = jax.value_and_grad(model.loss)(params, mb)
+                    gacc = jax.tree.map(
+                        lambda a, g: a + g.astype(jnp.float32), gacc, grads)
+                    return gacc, loss
+                g0 = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                grads, losses = jax.lax.scan(micro, g0, split_micro(batch))
+                grads = jax.tree.map(lambda g: g / n_micro, grads)
+                loss = losses.mean()
+            else:
+                loss, grads = jax.value_and_grad(model.loss)(params, batch)
+            grads, gnorm = clip_by_global_norm(grads, 1.0)
+            params, opt_state = opt.update(grads, opt_state, params, lr)
+            return params, opt_state, {"loss": loss, "gnorm": gnorm}
+
+        fn = jax.jit(
+            train_step,
+            in_shardings=(param_sh, opt_sh, batch_sh, None),
+            out_shardings=(param_sh, opt_sh, None),
+            donate_argnums=(0, 1) if donate else ())
+        args = (params_abs, opt_abs, batch_abs,
+                jax.ShapeDtypeStruct((), jnp.int32))
+        return BuiltStep(fn=fn, args=args, mesh=mesh, meta=meta)
+
+    if kind == "prefill":
+        cache_specs = S.cache_pspecs(model, sizes, gbatch, seq)
+        cache_sh = named(cache_specs)
+
+        def prefill_step(params, batch):
+            return model.prefill(params, batch)
+
+        fn = jax.jit(prefill_step, in_shardings=(param_sh, batch_sh),
+                     out_shardings=(None, cache_sh))
+        return BuiltStep(fn=fn, args=(params_abs, batch_abs), mesh=mesh,
+                         meta=meta)
+
+    # decode
+    from repro.models.layers import abstract_tree
+    cache_defs = model.cache_defs(gbatch, seq)
+    cache_abs = jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(
+            d.shape, kv_dtype if "seq" in d.axes else jnp.float32),
+        cache_defs, is_leaf=lambda x: hasattr(x, "axes"))
+    cache_specs = S.cache_pspecs(model, sizes, gbatch, seq)
+    cache_sh = named(cache_specs)
+
+    def decode_step(params, cache, batch):
+        return model.decode(params, cache, batch)
+
+    fn = jax.jit(decode_step,
+                 in_shardings=(param_sh, cache_sh, batch_sh),
+                 out_shardings=(None, cache_sh),
+                 donate_argnums=(1,) if donate else ())
+    return BuiltStep(fn=fn, args=(params_abs, cache_abs, batch_abs),
+                     mesh=mesh, meta=meta)
+
+
+# ---------------------------------------------------------------------------
+# aligraph-gnn cell (the paper's own workload)
+# ---------------------------------------------------------------------------
+
+def build_gnn_step(gnn_cfg, mesh, *, lr: float = 0.05,
+                   table_rules: str = "rows") -> BuiltStep:
+    """GraphSAGE step over the sharded vertex table.
+
+    table_rules: "rows"  — table rows over model axis (baseline; gathers
+                            become collectives — the paper-relevant cell);
+                 "dim"   — embedding dim over model (gathers local, matmuls
+                            sharded; §Perf alternative);
+                 "data_rows" — rows over (pod,data) (ZeRO-flavoured);
+                 "all_rows"  — rows over EVERY mesh axis (256/512-way; the
+                            only layout whose optimizer state fits v5e HBM
+                            at 493M vertices — §Perf cell C iteration 1).
+    """
+    import jax
+    from repro.configs import aligraph_gnn as G
+
+    sizes = mesh_axis_sizes(mesh)
+    b_axes = batch_axes(mesh)
+    all_axes = tuple(a for a in ("pod", "data", "model") if a in sizes)
+
+    table_spec = {"rows": P("model", None), "dim": P(None, "model"),
+                  "data_rows": P(b_axes if b_axes else None, None),
+                  "all_rows": P(all_axes, None)}[table_rules]
+    param_pspecs = {"table": table_spec, "w1": P(None, None), "b1": P(None),
+                    "w2": P(None, None), "b2": P(None)}
+    if gnn_cfg.hot_rows:
+        param_pspecs["hot"] = P(None, None)       # replicated read-cache
+    params_abs = {k: jax.ShapeDtypeStruct(shape, dtype)
+                  for k, (shape, dtype) in G.param_shapes(gnn_cfg).items()}
+    plan_abs = {k: jax.ShapeDtypeStruct(shape, dtype)
+                for k, (shape, dtype) in G.plan_shapes(gnn_cfg).items()}
+    plan_pspecs = {k: P(b_axes if b_axes else None,
+                        *([None] * (len(shape) - 1)))
+                   for k, (shape, _) in G.plan_shapes(gnn_cfg).items()}
+
+    named = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
+                                   is_leaf=lambda x: isinstance(x, P))
+    step = G.train_step(gnn_cfg, lr=lr)
+    fn = jax.jit(step, in_shardings=(named(param_pspecs), named(plan_pspecs)),
+                 out_shardings=(named(param_pspecs), None),
+                 donate_argnums=(0,))
+    meta = dict(arch=gnn_cfg.name, shape="train_gnn", kind="train",
+                seq=0, global_batch=gnn_cfg.global_batch, mesh_axes=sizes,
+                params=gnn_cfg.param_count(), active_params=gnn_cfg.param_count(),
+                table_rules=table_rules, update=gnn_cfg.update,
+                hot_rows=gnn_cfg.hot_rows)
+    return BuiltStep(fn=fn, args=(params_abs, plan_abs), mesh=mesh, meta=meta)

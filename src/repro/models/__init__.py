@@ -1,0 +1,5 @@
+# LM model zoo for the assigned architectures (DESIGN.md §4).
+from .api import Model, get_model  # noqa: F401
+from .config import (EncDecConfig, HybridConfig, MoEConfig, ModelConfig,  # noqa: F401
+                     SSMConfig, VLMConfig)
+from .moe import ShardCtx  # noqa: F401

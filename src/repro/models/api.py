@@ -1,0 +1,131 @@
+"""Unified model API: one entry point per family for the launcher/tests.
+
+``get_model(cfg)`` returns a ``Model`` whose members close over the config:
+  * param_defs() / init(key,dtype) / abstract(dtype) / pspecs(mesh_sizes)
+  * loss(params, batch)                      — train objective
+  * prefill(params, batch) -> (logits, cache)
+  * decode(params, cache, batch) -> (logits, cache)
+  * cache_defs(batch, seq)
+  * input_shapes(shape_kind, batch, seq)     — names + shapes of batch entries
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import ssm_lm, transformer, whisper
+from .config import ModelConfig
+from .moe import ShardCtx
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    ctx: ShardCtx
+
+    # ---------------------------------------------------------------- params
+    def param_defs(self):
+        f = self.cfg.family
+        if f in ("dense", "moe", "vlm"):
+            return transformer.param_defs(self.cfg)
+        if f == "ssm":
+            return ssm_lm.ssm_param_defs(self.cfg)
+        if f == "hybrid":
+            return ssm_lm.hybrid_param_defs(self.cfg)
+        if f == "encdec":
+            return whisper.whisper_param_defs(self.cfg)
+        raise ValueError(f)
+
+    def init(self, key, dtype=jnp.float32):
+        return L.init_tree(self.param_defs(), key, dtype)
+
+    def abstract(self, dtype=jnp.bfloat16):
+        return L.abstract_tree(self.param_defs(), dtype)
+
+    def pspecs(self, mesh_axis_sizes: Dict[str, int], rules=None):
+        return L.pspec_tree(self.param_defs(), mesh_axis_sizes, rules)
+
+    # ---------------------------------------------------------------- steps
+    def loss(self, params, batch) -> Array:
+        f = self.cfg.family
+        if f in ("dense", "moe", "vlm"):
+            return transformer.loss_fn(self.cfg, self.ctx, params, batch)
+        if f == "ssm":
+            return ssm_lm.ssm_loss_fn(self.cfg, self.ctx, params, batch)
+        if f == "hybrid":
+            return ssm_lm.hybrid_loss_fn(self.cfg, self.ctx, params, batch)
+        if f == "encdec":
+            return whisper.whisper_loss_fn(self.cfg, self.ctx, params, batch)
+        raise ValueError(f)
+
+    def prefill(self, params, batch):
+        f = self.cfg.family
+        if f in ("dense", "moe", "vlm"):
+            return transformer.prefill_fn(self.cfg, self.ctx, params, batch)
+        if f == "ssm":
+            return ssm_lm.ssm_prefill_fn(self.cfg, self.ctx, params, batch)
+        if f == "hybrid":
+            return ssm_lm.hybrid_prefill_fn(self.cfg, self.ctx, params, batch)
+        if f == "encdec":
+            return whisper.whisper_prefill_fn(self.cfg, self.ctx, params, batch)
+        raise ValueError(f)
+
+    def decode(self, params, cache, batch):
+        f = self.cfg.family
+        if f in ("dense", "moe", "vlm"):
+            return transformer.decode_fn(self.cfg, self.ctx, params, cache, batch)
+        if f == "ssm":
+            return ssm_lm.ssm_decode_fn(self.cfg, self.ctx, params, cache, batch)
+        if f == "hybrid":
+            return ssm_lm.hybrid_decode_fn(self.cfg, self.ctx, params, cache, batch)
+        if f == "encdec":
+            return whisper.whisper_decode_fn(self.cfg, self.ctx, params, cache, batch)
+        raise ValueError(f)
+
+    def cache_defs(self, batch: int, seq: int):
+        f = self.cfg.family
+        if f in ("dense", "moe", "vlm"):
+            return transformer.cache_defs(self.cfg, batch, seq)
+        if f == "ssm":
+            return ssm_lm.ssm_cache_defs(self.cfg, batch, seq)
+        if f == "hybrid":
+            return ssm_lm.hybrid_cache_defs(self.cfg, batch, seq)
+        if f == "encdec":
+            return whisper.whisper_cache_defs(self.cfg, batch, seq)
+        raise ValueError(f)
+
+    # ------------------------------------------------------------- batches
+    def train_batch_shapes(self, batch: int, seq: int) -> Dict[str, Tuple]:
+        """name -> (shape, dtype) of the training batch (the frontend stubs
+        appear here: frames for audio, patches for vlm)."""
+        cfg = self.cfg
+        out: Dict[str, Tuple] = {}
+        if cfg.family == "encdec":
+            out["frames"] = ((batch, cfg.encdec.enc_seq, cfg.d_model), jnp.bfloat16)
+            out["tokens"] = ((batch, seq), jnp.int32)
+            out["labels"] = ((batch, seq), jnp.int32)
+        elif cfg.family == "vlm":
+            p = cfg.vlm.n_patches
+            out["patches"] = ((batch, p, cfg.vlm.d_vit), jnp.bfloat16)
+            out["tokens"] = ((batch, seq - p), jnp.int32)
+            out["labels"] = ((batch, seq - p), jnp.int32)
+        else:
+            out["tokens"] = ((batch, seq), jnp.int32)
+            out["labels"] = ((batch, seq), jnp.int32)
+        return out
+
+    def decode_batch_shapes(self, batch: int) -> Dict[str, Tuple]:
+        return {"token": ((batch, 1), jnp.int32), "pos": ((), jnp.int32)}
+
+
+def get_model(cfg: ModelConfig, ctx: Optional[ShardCtx] = None) -> Model:
+    if not cfg.vocab_padded:
+        cfg = cfg.canonicalize(tp=ctx.tp if ctx else 1)
+    return Model(cfg=cfg, ctx=ctx or ShardCtx())

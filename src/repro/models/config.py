@@ -1,0 +1,165 @@
+"""Model configuration for the assigned-architecture zoo.
+
+One ``ModelConfig`` covers all five families (dense / moe / ssm / hybrid /
+encdec / vlm).  ``canonicalize(tp)`` resolves hardware-dependent padding
+(vocab to 256, attention heads to the TP degree) once at launch time so the
+arch configs in ``repro/configs`` stay the exact published numbers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+def round_up(x: int, to: int) -> int:
+    return ((x + to - 1) // to) * to
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_expert: int                 # per-expert FFN hidden size
+    capacity_factor: float = 1.25
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    state_dim: int = 16
+    conv_kernel: int = 4
+    expand: int = 2               # d_inner = expand * d_model
+    dt_rank: int = 0              # 0 -> ceil(d_model / 16)  (mamba1)
+    version: int = 1              # 1 = mamba, 2 = mamba2 (SSD)
+    head_dim: int = 64            # mamba2 head dim
+    chunk: int = 64               # scan chunk length (memory/parallelism knob)
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridConfig:
+    attn_every: int = 6           # shared attention block applied every N layers
+    shared_lora_rank: int = 16    # per-site LoRA on the shared block (Zamba2)
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecConfig:
+    n_enc_layers: int = 32
+    enc_seq: int = 1500           # whisper: 30s of audio frames after conv stub
+
+
+@dataclasses.dataclass(frozen=True)
+class VLMConfig:
+    n_patches: int = 256          # visual tokens prepended (frontend is a stub)
+    d_vit: int = 1024             # stub patch-embedding dim (projected to d_model)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                   # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int                  # 0 for attention-free (ssm)
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0             # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+    act: str = "swiglu"           # swiglu | gelu
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    hybrid: Optional[HybridConfig] = None
+    encdec: Optional[EncDecConfig] = None
+    vlm: Optional[VLMConfig] = None
+    # --- resolved at canonicalize() ---
+    vocab_padded: int = 0
+    n_heads_padded: int = 0
+    n_kv_padded: int = 0
+    # training / lowering knobs (overridable from launch)
+    remat: str = "full"           # none | full | dots
+    scan_layers: bool = True
+
+    # -------------------------------------------------------------- derived
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // max(self.n_heads, 1))
+
+    def canonicalize(self, tp: int = 1) -> "ModelConfig":
+        """Resolve padded sizes for a given tensor-parallel degree."""
+        vocab_padded = round_up(self.vocab_size, 256)
+        if self.n_heads > 0:
+            hp = round_up(self.n_heads, tp) if self.n_heads % tp else self.n_heads
+            # keep kv shardable too (GQA kv heads are few -> pad to tp when
+            # needed so the decode KV cache shards over the model axis)
+            kvp = (round_up(self.n_kv_heads, tp)
+                   if self.n_kv_heads % tp else self.n_kv_heads)
+        else:
+            hp = kvp = 0
+        return dataclasses.replace(self, vocab_padded=vocab_padded,
+                                   n_heads_padded=hp, n_kv_padded=kvp)
+
+    def head_to_kv(self) -> np.ndarray:
+        """Map (padded) q head -> (padded) kv head; padded heads point at
+        padded kv slots whose params are zero, so they contribute nothing."""
+        assert self.n_heads_padded, "canonicalize() first"
+        group = self.n_heads // self.n_kv_heads
+        m = np.zeros(self.n_heads_padded, np.int32)
+        m[: self.n_heads] = np.arange(self.n_heads) // group
+        if self.n_heads_padded > self.n_heads:
+            m[self.n_heads:] = self.n_kv_padded - 1
+        return m
+
+    def param_count(self) -> int:
+        """Exact dense parameter count (unpadded, for MODEL_FLOPS)."""
+        d, L, V = self.d_model, self.n_layers, self.vocab_size
+        total = V * d * (1 if self.tie_embeddings else 2)
+        if self.family in ("dense", "moe", "vlm"):
+            attn = d * self.n_heads * self.hd * 2 + d * self.n_kv_heads * self.hd * 2
+            if self.moe:
+                ff = self.moe.n_experts * 3 * d * self.moe.d_expert + d * self.moe.n_experts
+            else:
+                ff = 3 * d * self.d_ff if self.act == "swiglu" else 2 * d * self.d_ff
+            total += L * (attn + ff + 2 * d)
+            if self.vlm:
+                total += self.vlm.d_vit * d
+        elif self.family == "ssm":
+            s = self.ssm
+            d_in = s.expand * d
+            dt_rank = s.dt_rank or -(-d // 16)
+            per = (d * 2 * d_in + d_in * s.conv_kernel
+                   + d_in * (dt_rank + 2 * s.state_dim) + dt_rank * d_in
+                   + d_in * s.state_dim + d_in + d_in * d + d)
+            total += L * per
+        elif self.family == "hybrid":
+            s = self.ssm
+            d_in = s.expand * d
+            n_h = d_in // s.head_dim
+            per = (d * 2 * d_in + d_in * s.conv_kernel + d_in * d
+                   + n_h * (1 + s.state_dim) * 0 + d_in * 2 * s.state_dim  # B,C proj
+                   + n_h * 2 + d)
+            total += L * per
+            # one shared attention block
+            total += (d * self.n_heads * self.hd * 2
+                      + d * self.n_kv_heads * self.hd * 2 + 3 * d * self.d_ff)
+        elif self.family == "encdec":
+            e = self.encdec
+            attn = d * self.n_heads * self.hd * 2 + d * self.n_kv_heads * self.hd * 2
+            ff = 2 * d * self.d_ff
+            total += e.n_enc_layers * (attn + ff + 2 * d)      # encoder
+            total += L * (2 * attn + ff + 3 * d)               # decoder (+cross)
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Active params per token (= param_count for non-MoE)."""
+        if not self.moe:
+            return self.param_count()
+        d, L = self.d_model, self.n_layers
+        total = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        attn = d * self.n_heads * self.hd * 2 + d * self.n_kv_heads * self.hd * 2
+        ff_active = self.moe.top_k * 3 * d * self.moe.d_expert + d * self.moe.n_experts
+        total += L * (attn + ff_active + 2 * d)
+        return int(total)

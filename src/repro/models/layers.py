@@ -1,0 +1,393 @@
+"""Functional layer library: ParamDef trees, sharding rules, attention, MLP.
+
+Every model is a dict tree of ``ParamDef``s (shape + logical axis names).
+``init_tree`` materialises arrays, ``abstract_tree`` gives ShapeDtypeStructs
+(the dry-run path — no allocation), ``pspec_tree`` resolves logical axes to
+mesh axes through a rule table with divisibility checks (a dim that does not
+divide its mesh axis is replicated instead — e.g. 56 heads on a 16-way model
+axis fall back to padded heads chosen in ``ModelConfig.canonicalize``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from .config import ModelConfig
+
+Array = jax.Array
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# ParamDef machinery
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]        # logical axis names
+    init: str = "normal"                   # normal | zeros | ones
+    scale: float = -1.0                    # -1 -> 1/sqrt(fan_in)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def init_tree(defs: PyTree, key: jax.Array, dtype=jnp.float32) -> PyTree:
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, d in zip(keys, leaves):
+        if d.init == "zeros":
+            out.append(jnp.zeros(d.shape, dtype))
+        elif d.init == "ones":
+            out.append(jnp.ones(d.shape, dtype))
+        else:
+            fan_in = d.shape[0] if len(d.shape) else 1
+            scale = d.scale if d.scale > 0 else 1.0 / np.sqrt(max(fan_in, 1))
+            out.append((jax.random.normal(k, d.shape) * scale).astype(dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_tree(defs: PyTree, dtype=jnp.bfloat16) -> PyTree:
+    return jax.tree.map(lambda d: jax.ShapeDtypeStruct(d.shape, dtype), defs,
+                        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+# Default logical-axis -> mesh-axis rules.  "fsdp" entries are appended by
+# the ZeRO-3 option in distributed/sharding.py.
+DEFAULT_RULES: Dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "model",
+    "inner": "model",          # mamba d_inner / ssm heads
+    "embed": None,             # model dim of params: replicated (TP keeps it)
+    "embed_rows": "model",     # input-embedding table: dim-sharded
+    "layers": None,
+    "seq": None,
+    "head_dim": None,
+    "state": None,
+    "dt": None,
+    "conv": None,
+    "enc_seq": None,
+    "patches": None,
+    "vit": None,
+}
+
+
+def pspec_tree(defs: PyTree, mesh_axis_sizes: Dict[str, int],
+               rules: Optional[Dict[str, Any]] = None) -> PyTree:
+    """Resolve logical axes to PartitionSpecs with divisibility fallback."""
+    rules = {**DEFAULT_RULES, **(rules or {})}
+
+    def resolve(d: ParamDef) -> P:
+        spec = []
+        used = set()
+        for dim, ax in zip(d.shape, d.axes):
+            mesh_ax = rules.get(ax) if ax else None
+            if mesh_ax is None:
+                spec.append(None)
+                continue
+            axes_tuple = (mesh_ax,) if isinstance(mesh_ax, str) else tuple(mesh_ax)
+            axes_tuple = tuple(a for a in axes_tuple if a in mesh_axis_sizes
+                               and a not in used)
+            size = int(np.prod([mesh_axis_sizes[a] for a in axes_tuple])) if axes_tuple else 1
+            if axes_tuple and dim % size == 0:
+                spec.append(axes_tuple[0] if len(axes_tuple) == 1 else axes_tuple)
+                used.update(axes_tuple)
+            else:
+                spec.append(None)   # not divisible -> replicate this dim
+        return P(*spec)
+
+    return jax.tree.map(resolve, defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def logical_axes_tree(defs: PyTree) -> PyTree:
+    return jax.tree.map(lambda d: d.axes, defs,
+                        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+# ---------------------------------------------------------------------------
+# Norms / rotary
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: Array, w: Array, eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w.astype(x.dtype)
+
+
+def layernorm(x: Array, w: Array, b: Array, eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+    out = ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+    return out * w.astype(x.dtype) + b.astype(x.dtype)
+
+
+def rope(x: Array, positions: Array, theta: float) -> Array:
+    """x [..., S, H, hd]; positions [..., S] (broadcastable)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs      # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :]                            # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, blockwise-causal for memory, KV cache for decode)
+# ---------------------------------------------------------------------------
+
+def attn_param_defs(cfg: ModelConfig, *, cross: bool = False) -> Dict[str, ParamDef]:
+    d, hp, kvp, hd = cfg.d_model, cfg.n_heads_padded, cfg.n_kv_padded, cfg.hd
+    defs = {
+        "wq": ParamDef((d, hp, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamDef((d, kvp, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamDef((d, kvp, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamDef((hp, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = ParamDef((hp, hd), ("heads", "head_dim"), init="zeros")
+        defs["bk"] = ParamDef((kvp, hd), ("kv_heads", "head_dim"), init="zeros")
+        defs["bv"] = ParamDef((kvp, hd), ("kv_heads", "head_dim"), init="zeros")
+    return defs
+
+
+def _qkv(p, cfg: ModelConfig, x: Array, positions: Optional[Array],
+         use_rope: bool) -> Tuple[Array, Array, Array]:
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _expand_kv(cfg: ModelConfig, k: Array) -> Array:
+    """[B,S,KV,hd] -> [B,S,H,hd] through the (padding-aware) head map."""
+    m = jnp.asarray(cfg.head_to_kv())
+    return k[:, :, m, :]
+
+
+def blockwise_attention(q: Array, k: Array, v: Array, *, causal: bool,
+                        q_chunk: int = 1024, kv_chunk: int = 1024,
+                        q_offset: int = 0) -> Array:
+    """Memory-bounded attention: lax.scan over KV chunks with online softmax.
+
+    q [B,Sq,H,hd], k/v [B,Skv,H,hd] (kv already expanded to H heads).
+    The [Sq, Skv] score matrix never materialises beyond one
+    (q_chunk, kv_chunk) tile per head — the jnp analogue of flash attention,
+    chosen so 32k-seq prefill fits HBM (DESIGN.md §5).
+    """
+    b, sq_real, h, hd = q.shape
+    skv_real = k.shape[1]
+    q_chunk = min(q_chunk, sq_real)
+    kv_chunk = min(kv_chunk, skv_real)
+    # pad to chunk multiples; padded kv columns are masked out below
+    qpad = (-sq_real) % q_chunk
+    kpad = (-skv_real) % kv_chunk
+    if qpad:
+        q = jnp.pad(q, ((0, 0), (0, qpad), (0, 0), (0, 0)))
+    if kpad:
+        k = jnp.pad(k, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+    sq, skv = sq_real + qpad, skv_real + kpad
+    nq, nk = sq // q_chunk, skv // kv_chunk
+
+    # fold the 1/sqrt(hd) into q (a [B,S,H,hd] op) instead of scaling every
+    # [qc, kc] score tile — one whole tile-sized multiply less per tile (A3)
+    q = q * jnp.asarray(1.0 / np.sqrt(hd), q.dtype)   # keep q's dtype (bf16)
+    qr = q.reshape(b, nq, q_chunk, h, hd)
+    kr = k.reshape(b, nk, kv_chunk, h, hd)
+    vr = v.reshape(b, nk, kv_chunk, h, hd)
+
+    def kv_block(qb, kb, vb, state, qi, ki, *, need_mask):
+        """One (q_chunk, kv_chunk) tile of online softmax.  Masks are built
+        from iotas ONLY where a tile can touch invalid columns — the causal
+        diagonal and the kv-padding edge — interior tiles skip the select."""
+        m_prev, l_prev, acc = state
+        # preferred_element_type: one f32 product, no bf16->f32 convert pass
+        s = jnp.einsum("bqhk,bvhk->bhqv", qb, kb,
+                       preferred_element_type=jnp.float32)
+        if need_mask:
+            qpos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+            kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+            valid = kpos[None, :] < skv_real
+            if causal:
+                valid = valid & (qpos[:, None] >= kpos[None, :])
+            s = jnp.where(valid[None, None], s, -1e30)
+        m_new = jnp.maximum(m_prev, s.max(-1))           # [B,H,qc]
+        alpha = jnp.exp(m_prev - m_new)
+        pexp = jnp.exp(s - m_new[..., None]).astype(qb.dtype)
+        l_new = l_prev * alpha + pexp.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhqv,bvhk->bhqk", pexp, vb,
+            preferred_element_type=jnp.float32)
+        return m_new, l_new, acc
+
+    def run_q_block(qi, n_kv, diag_needs_mask):
+        """Scan kv tiles 0..n_kv-1 for query tile qi.  The tile body is
+        rematted so the backward recomputes s/pexp per tile instead of
+        stacking [n_kv, B, H, qc, kc] residuals (flash-attention backward)."""
+        qb = qr[:, qi]
+
+        def interior(state, ki):
+            kb, vb = kr[:, ki], vr[:, ki]
+            return kv_block(qb, kb, vb, state, qi, ki, need_mask=False), None
+
+        def edge(state, ki):
+            kb, vb = kr[:, ki], vr[:, ki]
+            return kv_block(qb, kb, vb, state, qi, ki, need_mask=True), None
+
+        init = (jnp.full((b, h, q_chunk), -1e30, jnp.float32),
+                jnp.zeros((b, h, q_chunk), jnp.float32),
+                jnp.zeros((b, h, q_chunk, hd), jnp.float32))
+        state = init
+        if n_kv > 1:
+            state, _ = jax.lax.scan(jax.checkpoint(interior), state,
+                                    jnp.arange(n_kv - 1))
+        # last tile: causal diagonal and/or kv-padding edge
+        if diag_needs_mask:
+            state, _ = jax.checkpoint(edge)(state, jnp.int32(n_kv - 1))
+        else:
+            state, _ = jax.checkpoint(interior)(state, jnp.int32(n_kv - 1))
+        m, l, acc = state
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out.astype(q.dtype)                       # [B,H,qc,hd]
+
+    if causal and nq > 1:
+        # static python loop over query tiles: tile qi attends to tiles
+        # 0..qi only — the sub-diagonal half of the (nq, nk) grid is never
+        # computed (vs masking it out post-hoc: 2x fewer tiles at nq=nk)
+        assert nq == nk or skv == sq, "causal path expects square layout"
+        outs = [run_q_block(qi, qi + 1,
+                            diag_needs_mask=True)
+                for qi in range(nq)]
+        out = jnp.concatenate(outs, axis=2)              # [B,H,sq,hd]
+    else:
+        edge_mask = causal or kpad > 0
+        outs = [run_q_block(qi, nk, diag_needs_mask=edge_mask)
+                for qi in range(nq)]
+        out = jnp.concatenate(outs, axis=2)
+    return out.transpose(0, 2, 1, 3)[:, :sq_real]        # [B,S,H,hd]
+
+
+def attention(p, cfg: ModelConfig, x: Array, *, positions: Array,
+              causal: bool = True, use_rope: bool = True,
+              kv_override: Optional[Tuple[Array, Array]] = None,
+              return_kv: bool = False):
+    """Full-sequence attention (train / prefill / encoder / cross)."""
+    q, k, v = _qkv(p, cfg, x, positions, use_rope)
+    if kv_override is not None:
+        k, v = kv_override
+    kx = _expand_kv(cfg, k)
+    vx = _expand_kv(cfg, v)
+    out = blockwise_attention(q, kx, vx, causal=causal)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return (y, (k, v)) if return_kv else y
+
+
+def decode_attention(p, cfg: ModelConfig, x: Array, cache_k: Array,
+                     cache_v: Array, pos: Array):
+    """One-token decode against a [B, S, KV, hd] cache (+write-back).
+
+    ``pos`` is a scalar int32 — the index of the new token.  The cache's KV
+    heads are padded/shardable; scores over cached positions > pos are masked.
+    """
+    b = x.shape[0]
+    q, k, v = _qkv(p, cfg, x, pos[None].astype(jnp.int32)[None, :], True)
+    cache_k = jax.lax.dynamic_update_slice(
+        cache_k, k.astype(cache_k.dtype), (0, pos.astype(jnp.int32), 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(
+        cache_v, v.astype(cache_v.dtype), (0, pos.astype(jnp.int32), 0, 0))
+    kx = _expand_kv(cfg, cache_k.astype(q.dtype))        # [B,S,H,hd]
+    vx = _expand_kv(cfg, cache_v.astype(q.dtype))
+    s = jnp.einsum("bshk,bthk->bhst", q, kx).astype(jnp.float32)  # s_q=1
+    s = s / np.sqrt(cfg.hd)
+    t = jnp.arange(kx.shape[1])
+    s = jnp.where((t <= pos)[None, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhst,bthk->bshk", w, vx)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_param_defs(cfg: ModelConfig, d_ff: Optional[int] = None) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    if cfg.act == "swiglu":
+        return {
+            "wi": ParamDef((d, f), ("embed", "mlp")),
+            "wg": ParamDef((d, f), ("embed", "mlp")),
+            "wo": ParamDef((f, d), ("mlp", "embed")),
+        }
+    return {
+        "wi": ParamDef((d, f), ("embed", "mlp")),
+        "bi": ParamDef((f,), ("mlp",), init="zeros"),
+        "wo": ParamDef((f, d), ("mlp", "embed")),
+        "bo": ParamDef((d,), ("embed",), init="zeros"),
+    }
+
+
+def mlp(p, cfg: ModelConfig, x: Array) -> Array:
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])
+        return h @ p["wo"]
+    h = jax.nn.gelu(x @ p["wi"] + p["bi"])
+    return h @ p["wo"] + p["bo"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head / loss
+# ---------------------------------------------------------------------------
+
+def embed_param_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d, v = cfg.d_model, cfg.vocab_padded
+    defs = {"tok": ParamDef((v, d), ("vocab", "embed") if cfg.tie_embeddings
+                            else (None, "embed_rows"), scale=0.02)}
+    if not cfg.tie_embeddings:
+        defs["head"] = ParamDef((d, v), ("embed", "vocab"), scale=0.02)
+    return defs
+
+
+def embed_tokens(p, cfg: ModelConfig, tokens: Array) -> Array:
+    return p["tok"][tokens]
+
+
+def lm_logits(p, cfg: ModelConfig, x: Array) -> Array:
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", x, p["tok"])
+    return jnp.einsum("bsd,dv->bsv", x, p["head"])
+
+
+def cross_entropy(logits: Array, labels: Array, *, vocab_real: int) -> Array:
+    """Vocab-shard-friendly CE: logsumexp + iota-masked gold logit.
+
+    Padded vocab slots are masked to -inf so padding never leaks into loss.
+    """
+    v = logits.shape[-1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (v,), 0)
+    logits = jnp.where(iota < vocab_real, logits, -1e30).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.sum(jnp.where(iota == labels[..., None], logits, 0.0), axis=-1)
+    return (lse - gold).mean()

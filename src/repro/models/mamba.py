@@ -1,0 +1,413 @@
+"""Mamba (selective SSM) blocks — mamba1 (falcon-mamba) and mamba2 (zamba2).
+
+Train/prefill uses a **chunked parallel scan**: the sequence is cut into
+``cfg.ssm.chunk``-length chunks; within a chunk an associative scan runs in
+parallel, between chunks a lax.scan carries the [B, inner, N] state.  The
+per-position [B, chunk, inner, N] tensor is the only large intermediate, and
+``inner`` shards over the ``model`` axis (elementwise in the scan), so the
+working set stays ~chunk/seq of the naive formulation — the TPU adaptation
+of the CUDA selective-scan kernel (DESIGN.md §2: rethought for HBM/VMEM
+rather than ported).
+
+Decode carries {conv_state [B, K-1, inner], ssm_state [B, inner, N]} —
+constant-size state is exactly why the SSM archs run the 500k cell.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import ParamDef
+
+Array = jax.Array
+
+
+def _dt_rank(cfg: ModelConfig) -> int:
+    return cfg.ssm.dt_rank or -(-cfg.d_model // 16)
+
+
+def d_inner(cfg: ModelConfig) -> int:
+    return cfg.ssm.expand * cfg.d_model
+
+
+# ---------------------------------------------------------------------------
+# mamba1 block (falcon-mamba)
+# ---------------------------------------------------------------------------
+
+def mamba1_param_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d, di, n = cfg.d_model, d_inner(cfg), cfg.ssm.state_dim
+    r, k = _dt_rank(cfg), cfg.ssm.conv_kernel
+    return {
+        "in_proj": ParamDef((d, 2 * di), ("embed", "inner")),
+        "conv_w": ParamDef((k, di), ("conv", "inner")),
+        "conv_b": ParamDef((di,), ("inner",), init="zeros"),
+        "x_proj": ParamDef((di, r + 2 * n), ("inner", None)),
+        "dt_proj": ParamDef((r, di), ("dt", "inner")),
+        "dt_bias": ParamDef((di,), ("inner",), init="zeros"),
+        "A_log": ParamDef((di, n), ("inner", "state"), init="zeros"),
+        "D": ParamDef((di,), ("inner",), init="ones"),
+        "out_proj": ParamDef((di, d), ("inner", "embed")),
+    }
+
+
+def _causal_conv(x: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv along S.  x [B,S,C], w [K,C]."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    return out + b
+
+
+def _selective_scan(chunk_inputs, make_ab, emit, state_shape, chunk: int,
+                    seq: int):
+    """Generic chunked selective scan.
+
+    The [B, S, inner, N] discretised tensors NEVER materialise for the full
+    sequence: per chunk, ``make_ab(sliced_inputs) -> (a_c, bx_c)`` builds the
+    [B, chunk, ...] decay/increment, an associative scan runs inside the
+    chunk, ``emit(h_states, sliced_inputs) -> y_c`` contracts the state away
+    again, and only y_c [B, chunk, inner-ish] + the [B, ...state] carry leave
+    the chunk.  Working set = chunk/seq of the naive formulation.
+
+    chunk_inputs: tuple of [B, S, ...] arrays (small: dt/x/B/C projections).
+    Returns (ys [B, S, ...], final_state).
+
+    Non-divisible S is zero-padded: dt=0 gives decay exp(0)=1 and increment
+    0, so padded positions pass the state through untouched and the final
+    carry stays exact; padded outputs are sliced off.
+    """
+    chunk = min(chunk, seq)
+    pad = (-seq) % chunk
+    if pad:
+        chunk_inputs = tuple(
+            jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+            for t in chunk_inputs)
+    padded_seq = seq + pad
+    nc = padded_seq // chunk
+
+    def to_chunks(t):
+        return jnp.moveaxis(
+            t.reshape((t.shape[0], nc, chunk) + t.shape[2:]), 1, 0)
+
+    xs = tuple(to_chunks(t) for t in chunk_inputs)
+
+    def combine(l, r):
+        al, bl = l
+        ar_, br_ = r
+        return al * ar_, bl * ar_ + br_
+
+    def chunk_step(h0, sliced):
+        a_c, bx_c = make_ab(*sliced)           # [B, chunk, ...]
+        aa, bb = jax.lax.associative_scan(combine, (a_c, bx_c), axis=1)
+        hs = aa * h0[:, None] + bb             # prefix-applied carry
+        return hs[:, -1], emit(hs, *sliced)
+
+    b_ = chunk_inputs[0].shape[0]
+    h0 = jnp.zeros((b_,) + state_shape, jnp.float32)
+    h_final, ys = jax.lax.scan(chunk_step, h0, xs)
+    ys = jnp.moveaxis(ys, 0, 1)                # [B, nc, chunk, ...]
+    ys = ys.reshape((b_, padded_seq) + ys.shape[3:])
+    return ys[:, :seq], h_final
+
+
+def mamba1_forward(p, cfg: ModelConfig, x: Array, *, return_state: bool = False,
+                   scan_mode: str = "assoc"):
+    """x [B,S,D] -> [B,S,D] (train/prefill path).
+
+    scan_mode="assoc" (default): chunked associative scan.  A sequential
+    per-timestep scan ("seq") was hypothesised to cut HBM traffic ~50x
+    (carry = the [B,di,N] state only) but REFUTED by measurement
+    (EXPERIMENTS.md §Perf): GSPMD lowered one 524 KB all-reduce INTO every
+    timestep (262k collectives/step) and per-trip buffer churn blew the
+    memory term up 20x.  mamba1's per-(channel,state) decay admits no SSD
+    factorisation (DESIGN.md §9); the real fix on TPU is a Pallas
+    sequential-in-SRAM kernel (the CUDA selective-scan analogue).
+
+    With ``return_state``, also returns (conv_state [B,K-1,di],
+    ssm_state [B,di,N]) — the exact decode-continuation carry.
+    """
+    s_cfg = cfg.ssm
+    n = s_cfg.state_dim
+    r = _dt_rank(cfg)
+    k = s_cfg.conv_kernel
+    xz = x @ p["in_proj"]
+    xraw, z = jnp.split(xz, 2, axis=-1)                      # [B,S,di]
+    xin = jax.nn.silu(_causal_conv(xraw, p["conv_w"], p["conv_b"]))
+    proj = xin @ p["x_proj"]                                  # [B,S,r+2n]
+    dt = jax.nn.softplus(proj[..., :r] @ p["dt_proj"] + p["dt_bias"])
+    b_ssm = proj[..., r:r + n]                                # [B,S,n]
+    c_ssm = proj[..., r + n:]
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))              # [di,n]
+    di = xin.shape[-1]
+
+    if scan_mode == "seq":
+        def step(h, inp):
+            dt_t, x_t, b_t, c_t = inp                         # [B,di]/[B,n]
+            abar = jnp.exp(dt_t[..., None].astype(jnp.float32) * a)
+            h = abar * h + ((dt_t * x_t)[..., None]
+                            * b_t[:, None, :]).astype(jnp.float32)
+            y_t = jnp.einsum("bdn,bn->bd", h.astype(x.dtype), c_t)
+            return h, y_t
+
+        h0 = jnp.zeros((xin.shape[0], di, n), jnp.float32)
+        h_last, ys = jax.lax.scan(
+            step, h0, (jnp.moveaxis(dt, 1, 0), jnp.moveaxis(xin, 1, 0),
+                       jnp.moveaxis(b_ssm, 1, 0), jnp.moveaxis(c_ssm, 1, 0)))
+        y = jnp.moveaxis(ys, 0, 1)                            # [B,S,di]
+    else:
+        def make_ab(dt_c, x_c, b_c, c_c):
+            abar = jnp.exp(dt_c[..., None].astype(jnp.float32) * a)
+            bx = ((dt_c * x_c)[..., None] * b_c[..., None, :]).astype(jnp.float32)
+            return abar, bx
+
+        def emit(hs, dt_c, x_c, b_c, c_c):
+            return jnp.einsum("bcdn,bcn->bcd", hs.astype(x.dtype), c_c)
+
+        y, h_last = _selective_scan((dt, xin, b_ssm, c_ssm), make_ab, emit,
+                                    (di, n), s_cfg.chunk, xin.shape[1])
+    y = y + xin * p["D"]
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    if return_state:
+        return out, (xraw[:, -(k - 1):], h_last)
+    return out
+
+
+def mamba1_decode(p, cfg: ModelConfig, x: Array, conv_state: Array,
+                  ssm_state: Array) -> Tuple[Array, Array, Array]:
+    """One token.  x [B,1,D]; conv_state [B,K-1,di]; ssm_state [B,di,N]."""
+    s_cfg = cfg.ssm
+    n, r = s_cfg.state_dim, _dt_rank(cfg)
+    xz = x[:, 0] @ p["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)                        # [B,di]
+    window = jnp.concatenate([conv_state.astype(x.dtype), xin[:, None]], axis=1)
+    conv_state = window[:, 1:].astype(conv_state.dtype)
+    xin = jax.nn.silu(jnp.einsum("bkd,kd->bd", window, p["conv_w"]) + p["conv_b"])
+    xin = xin.astype(x.dtype)
+    proj = xin @ p["x_proj"]
+    dt = jax.nn.softplus(proj[..., :r] @ p["dt_proj"] + p["dt_bias"])
+    b_ssm, c_ssm = proj[..., r:r + n], proj[..., r + n:]
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    abar = jnp.exp(dt[..., None].astype(jnp.float32) * a)     # [B,di,n]
+    bx = (dt * xin)[..., None] * b_ssm[:, None, :]
+    ssm_state = abar * ssm_state + bx.astype(jnp.float32)
+    y = jnp.einsum("bdn,bn->bd", ssm_state.astype(x.dtype), c_ssm)
+    y = y + xin * p["D"]
+    y = (y * jax.nn.silu(z)) @ p["out_proj"]
+    return y[:, None], conv_state, ssm_state
+
+
+def mamba1_state_defs(cfg: ModelConfig, batch: int) -> Dict[str, ParamDef]:
+    di, n, k = d_inner(cfg), cfg.ssm.state_dim, cfg.ssm.conv_kernel
+    return {
+        "conv": ParamDef((cfg.n_layers, batch, k - 1, di),
+                         ("layers", "batch", None, "inner"), init="zeros"),
+        "ssm": ParamDef((cfg.n_layers, batch, di, n),
+                        ("layers", "batch", "inner", "state"), init="zeros"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# mamba2 block (zamba2 backbone) — scalar-decay-per-head SSD recurrence
+# ---------------------------------------------------------------------------
+
+def n_ssd_heads(cfg: ModelConfig) -> int:
+    return d_inner(cfg) // cfg.ssm.head_dim
+
+
+def _ssd_scan(dt: Array, xh: Array, b_ssm: Array, c_ssm: Array, a: Array,
+              chunk: int, *, acc_dtype=jnp.float32,
+              score_dtype: Optional[Any] = None):
+    """Mamba-2 SSD block decomposition (§Perf cell-B optimization).
+
+    Because the decay is SCALAR PER HEAD (``a[h]``), the per-position
+    discretised state tensor [B,S,h,hd,n] never needs to materialise:
+
+      intra-chunk   Y_int[i] = sum_{j<=i} exp(cum_i - cum_j) (C_i.B_j) dt_j x_j
+                    -> two [c,c]-shaped matmuls per (chunk, head)
+      chunk states  S_k = sum_j exp(cum_last - cum_j) dt_j (B_j (x) x_j)
+                    -> one [n, hd] matmul per (chunk, head)
+      inter-chunk   h_k = exp(sum_k) h_{k-1} + S_k   (tiny lax.scan carry)
+      cross term    Y_crs[i] = exp(cum_i) C_i . h_{k-1}
+
+    Working set per layer ~ B*S*h*c floats (the [c,c] score blocks) instead
+    of B*S*h*hd*n — a hd*n/c = 64*64/64 = 64x cut for zamba2.  All exps are
+    of non-positive numbers (dt>=0, a<0), so everything is <=1 and stable.
+
+    dt [B,S,h] (already softplus'ed), xh [B,S,h,hd], b/c_ssm [B,S,n], a [h].
+    Returns (y [B,S,h,hd], h_final [B,h,hd,n] f32).
+    """
+    bsz, seq, nh, hd = xh.shape
+    n = b_ssm.shape[-1]
+    c = min(chunk, seq)
+    pad = (-seq) % c
+    if pad:  # dt=0 on padded tail: decay exp(0*a)=1, increment 0 — exact
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        b_ssm = jnp.pad(b_ssm, ((0, 0), (0, pad), (0, 0)))
+        c_ssm = jnp.pad(c_ssm, ((0, 0), (0, pad), (0, 0)))
+    nc = (seq + pad) // c
+
+    def chunked(t):
+        return t.reshape((bsz, nc, c) + t.shape[2:])
+
+    # head-major layouts ([B,K,h,c,...]) so every big einsum below is a
+    # batched matmul with NO transposes of the GB-scale operands
+    dt_c = jnp.moveaxis(chunked(dt), -1, 2).astype(acc_dtype)   # [B,K,h,c]
+    xh_c = jnp.moveaxis(chunked(xh), 3, 2)                      # [B,K,h,c,hd]
+    b_c = chunked(b_ssm)                                        # [B,K,c,n]
+    cc_ = chunked(c_ssm)                                        # [B,K,c,n]
+
+    # dtype of the [B,K,h,c,c] blocks — the traffic-dominant tensors.
+    # exp(seg) is in (0, 1] and feeds a bf16 matmul anyway, so bf16 here
+    # halves the dominant HBM term at negligible precision cost (B2).
+    sd = score_dtype or xh.dtype
+    dta = dt_c * a[:, None]                                  # [B,K,h,c] <= 0
+    cum = jnp.cumsum(dta, axis=3)                            # inclusive
+    # segment decay L[i,j] = exp(cum_i - cum_j) for i >= j else 0
+    seg = cum[..., :, None] - cum[..., None, :]              # [B,K,h,c,c]
+    mask = jnp.tril(jnp.ones((c, c), bool))
+    ldec = jnp.where(mask, jnp.exp(seg), 0.0).astype(sd)
+    # scores[i,j] = (C_i . B_j) * L[i,j] * dt_j   — [c,c] per (chunk, head)
+    cb = jnp.einsum("bkin,bkjn->bkij", cc_.astype(sd), b_c.astype(sd))
+    scores = cb[:, :, None] * ldec * dt_c.astype(sd)[..., None, :]
+    y_intra = jnp.einsum("bkhij,bkhjd->bkhid",
+                         scores.astype(xh.dtype), xh_c)
+
+    # per-chunk input states: S_k = sum_j exp(cum_last - cum_j) dt_j B_j x_j
+    dec_to_end = jnp.exp(cum[..., -1:] - cum) * dt_c         # [B,K,h,j]
+    s_k = jnp.einsum("bkjn,bkhjd->bkhdn", b_c.astype(acc_dtype),
+                     dec_to_end[..., None] * xh_c.astype(acc_dtype))
+    chunk_decay = jnp.exp(cum[..., -1])                      # [B,K,h]
+
+    def inter(h0, inputs):
+        s_blk, dec = inputs                                  # [B,h,hd,n],[B,h]
+        h_prev = h0
+        h_new = dec[..., None, None] * h0 + s_blk
+        return h_new, h_prev
+
+    h_fin, h_prevs = jax.lax.scan(
+        inter, jnp.zeros((bsz, nh, hd, n), acc_dtype),
+        (jnp.moveaxis(s_k, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                    # [B,K,h,hd,n]
+
+    # cross-chunk contribution: Y_crs[i] = exp(cum_i) * (C_i . h_{k-1})
+    y_cross = jnp.einsum("bkin,bkhdn->bkhid", cc_.astype(acc_dtype),
+                         h_prevs) * jnp.exp(cum)[..., None]
+    y = (y_intra.astype(acc_dtype) + y_cross).astype(xh.dtype)
+    y = jnp.moveaxis(y, 2, 3).reshape(bsz, seq + pad, nh, hd)[:, :seq]
+    return y, h_fin
+
+
+def mamba2_param_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d, di, n = cfg.d_model, d_inner(cfg), cfg.ssm.state_dim
+    h = n_ssd_heads(cfg)
+    k = cfg.ssm.conv_kernel
+    return {
+        # packed projection: [x, z] + [B, C] + dt
+        "in_proj": ParamDef((d, 2 * di + 2 * n + h), ("embed", "inner")),
+        "conv_w": ParamDef((k, di), ("conv", "inner")),
+        "conv_b": ParamDef((di,), ("inner",), init="zeros"),
+        "A_log": ParamDef((h,), ("inner",), init="zeros"),
+        "dt_bias": ParamDef((h,), ("inner",), init="zeros"),
+        "D": ParamDef((h,), ("inner",), init="ones"),
+        "norm_w": ParamDef((di,), ("inner",), init="ones"),
+        "out_proj": ParamDef((di, d), ("inner", "embed")),
+    }
+
+
+def _split_m2(p, cfg: ModelConfig, proj: Array):
+    di, n = d_inner(cfg), cfg.ssm.state_dim
+    h = n_ssd_heads(cfg)
+    xin = proj[..., :di]
+    z = proj[..., di:2 * di]
+    b_ssm = proj[..., 2 * di:2 * di + n]
+    c_ssm = proj[..., 2 * di + n:2 * di + 2 * n]
+    dt = jax.nn.softplus(proj[..., 2 * di + 2 * n:] + p["dt_bias"])  # [.., h]
+    return xin, z, b_ssm, c_ssm, dt
+
+
+def _gated_norm(y: Array, z: Array, w: Array, eps: float) -> Array:
+    yf = (y * jax.nn.silu(z)).astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(var + eps)).astype(y.dtype) * w
+
+
+def mamba2_forward(p, cfg: ModelConfig, x: Array, *, return_state: bool = False,
+                   use_ssd: bool = True):
+    """use_ssd=True (default): SSD block-matrix path — identical math to the
+    associative-scan path (kept as the test oracle, use_ssd=False) but
+    ~hd*n/c x less HBM traffic (§Perf cell-B iteration 1)."""
+    s_cfg = cfg.ssm
+    hd = s_cfg.head_dim
+    nh = n_ssd_heads(cfg)
+    k = s_cfg.conv_kernel
+    proj = x @ p["in_proj"]
+    xraw, z, b_ssm, c_ssm, dt = _split_m2(p, cfg, proj)
+    xin = jax.nn.silu(_causal_conv(xraw, p["conv_w"], p["conv_b"]))
+    bsz, s = x.shape[0], x.shape[1]
+    xh = xin.reshape(bsz, s, nh, hd)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))              # [h]
+
+    if use_ssd:
+        y, h_last = _ssd_scan(dt, xh, b_ssm, c_ssm, a, s_cfg.chunk)
+    else:
+        def make_ab(dt_c, xh_c, b_c, c_c):
+            abar = jnp.exp(dt_c.astype(jnp.float32) * a)      # [B,c,h]
+            bx = ((dt_c[..., None] * xh_c)[..., None]
+                  * b_c[:, :, None, None, :]).astype(jnp.float32)
+            return abar[..., None, None], bx
+
+        def emit(hs, dt_c, xh_c, b_c, c_c):
+            return jnp.einsum("bchdn,bcn->bchd", hs.astype(x.dtype), c_c)
+
+        y, h_last = _selective_scan((dt, xh, b_ssm, c_ssm), make_ab, emit,
+                                    (nh, hd, s_cfg.state_dim), s_cfg.chunk, s)
+    y = y + xh * p["D"][:, None]
+    y = y.reshape(bsz, s, nh * hd)
+    y = _gated_norm(y, z, p["norm_w"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    if return_state:
+        return out, (xraw[:, -(k - 1):], h_last)
+    return out
+
+
+def mamba2_decode(p, cfg: ModelConfig, x: Array, conv_state: Array,
+                  ssm_state: Array) -> Tuple[Array, Array, Array]:
+    """x [B,1,D]; conv_state [B,K-1,di]; ssm_state [B,h,hd,N]."""
+    s_cfg = cfg.ssm
+    hd, nh = s_cfg.head_dim, n_ssd_heads(cfg)
+    proj = x[:, 0] @ p["in_proj"]
+    xin, z, b_ssm, c_ssm, dt = _split_m2(p, cfg, proj)
+    window = jnp.concatenate([conv_state.astype(x.dtype), xin[:, None]], axis=1)
+    conv_state = window[:, 1:].astype(conv_state.dtype)
+    xin = jax.nn.silu(jnp.einsum("bkd,kd->bd", window, p["conv_w"]) + p["conv_b"])
+    xin = xin.astype(x.dtype)
+    xh = xin.reshape(-1, nh, hd)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    abar = jnp.exp(dt.astype(jnp.float32) * a)                # [B,h]
+    bx = (dt[..., None] * xh)[..., None] * b_ssm[:, None, None, :]
+    ssm_state = abar[..., None, None] * ssm_state + bx.astype(jnp.float32)
+    y = jnp.einsum("bhdn,bn->bhd", ssm_state.astype(x.dtype), c_ssm)
+    y = y + xh * p["D"][:, None]
+    y = y.reshape(x.shape[0], nh * hd)
+    y = _gated_norm(y, z, p["norm_w"], cfg.norm_eps)
+    return (y @ p["out_proj"])[:, None], conv_state, ssm_state
+
+
+def mamba2_state_defs(cfg: ModelConfig, batch: int, n_layers: int
+                      ) -> Dict[str, ParamDef]:
+    di, n, k = d_inner(cfg), cfg.ssm.state_dim, cfg.ssm.conv_kernel
+    nh, hd = n_ssd_heads(cfg), cfg.ssm.head_dim
+    return {
+        "conv": ParamDef((n_layers, batch, k - 1, di),
+                         ("layers", "batch", None, "inner"), init="zeros"),
+        "ssm": ParamDef((n_layers, batch, nh, hd, n),
+                        ("layers", "batch", "inner", "head_dim", "state"),
+                        init="zeros"),
+    }

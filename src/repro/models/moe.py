@@ -1,0 +1,151 @@
+"""Mixture-of-Experts block with expert parallelism over the ``model`` axis.
+
+Baseline schedule (paper-era Megatron-style, the §Perf starting point):
+activations are replicated across the EP axis, every shard routes all of its
+tokens, computes only its *local* experts at fixed capacity, and a single
+``psum`` over the EP axis merges expert outputs — the same collective volume
+as a dense TP FFN (one all-reduce of [T, D] per block).  The dispatch is
+sort-free: a cumsum-over-one-hot ranks tokens within each local expert, so
+no [T, E] one-hot matmul and no argsort materialise.
+
+``shard_map`` keeps the collective schedule explicit (DESIGN.md §3); on a
+single device (smoke tests) the same local function runs with E_local = E
+and no psum.
+
+Hot-expert statistics (router histogram) feed the paper's importance-caching
+analogue for MoE (DESIGN.md §4): frequently-hit experts are candidates for
+replication, which §Perf explores.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from .config import ModelConfig
+from .layers import ParamDef
+
+Array = jax.Array
+
+
+def moe_param_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    m = cfg.moe
+    d, e, f = cfg.d_model, m.n_experts, m.d_expert
+    return {
+        "router": ParamDef((d, e), ("embed", None), scale=0.02),
+        "wi": ParamDef((e, d, f), ("experts", "embed", None)),
+        "wg": ParamDef((e, d, f), ("experts", "embed", None)),
+        "wo": ParamDef((e, f, d), ("experts", None, "embed")),
+    }
+
+
+def _capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    m = cfg.moe
+    c = int(np.ceil(m.top_k * n_tokens / m.n_experts * m.capacity_factor))
+    return max(8, ((c + 7) // 8) * 8)   # 8-aligned for TPU sublanes
+
+
+def _moe_local(p, cfg: ModelConfig, x: Array, *, ep_axis: Optional[str],
+               ep_size: int) -> Tuple[Array, Array]:
+    """Per-shard MoE: route all local tokens, compute local experts, psum.
+
+    x: [B_local, S, D].  Returns (out, load_balance_loss).
+    """
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    e = m.n_experts
+    e_local = e // ep_size
+    cap = _capacity(cfg, t)
+    tokens = x.reshape(t, d)
+
+    logits = (tokens @ p["router"]).astype(jnp.float32)          # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, m.top_k)                     # [T, k]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch-style): E * sum_e f_e * p_e
+    me = probs.mean(0)
+    ce = jnp.zeros(e, jnp.float32).at[idx.reshape(-1)].add(1.0) / (t * m.top_k)
+    lb_loss = e * jnp.sum(me * ce)
+
+    e_start = (jax.lax.axis_index(ep_axis) * e_local) if ep_axis else 0
+
+    flat_e = idx.reshape(-1)                                      # [T*k]
+    flat_g = gate.reshape(-1)
+    tok_id = jnp.repeat(jnp.arange(t), m.top_k)
+    local_e = flat_e - e_start
+    belongs = (local_e >= 0) & (local_e < e_local)
+    # rank within local expert via cumsum over one-hot [T*k, E_local]
+    onehot = (local_e[:, None] == jnp.arange(e_local)[None, :]) & belongs[:, None]
+    pos = (jnp.cumsum(onehot.astype(jnp.int32), axis=0) - 1)
+    pos = jnp.sum(jnp.where(onehot, pos, 0), axis=-1)             # [T*k]
+    keep = belongs & (pos < cap)
+    slot = jnp.where(keep, local_e * cap + pos, e_local * cap)    # drop slot
+
+    buf = jnp.zeros((e_local * cap + 1, d), x.dtype)
+    buf = buf.at[slot].add(tokens[tok_id] * keep[:, None].astype(x.dtype))
+    h = buf[:-1].reshape(e_local, cap, d)
+
+    # inside shard_map the expert dim of p["wi"/"wg"/"wo"] is already local
+    act = jax.nn.silu(jnp.einsum("ecd,edf->ecf", h, p["wg"]))
+    act = act * jnp.einsum("ecd,edf->ecf", h, p["wi"])
+    out_e = jnp.einsum("ecf,efd->ecd", act, p["wo"]).reshape(e_local * cap, d)
+    out_e = jnp.concatenate([out_e, jnp.zeros((1, d), x.dtype)], axis=0)
+
+    # combine: loop over the k routing choices so no [T*k, D] materialises
+    def body(j, acc):
+        sl = jax.lax.dynamic_slice_in_dim(slot.reshape(t, m.top_k), j, 1, 1)[:, 0]
+        g = jax.lax.dynamic_slice_in_dim(flat_g.reshape(t, m.top_k), j, 1, 1)[:, 0]
+        k = jax.lax.dynamic_slice_in_dim(keep.reshape(t, m.top_k), j, 1, 1)[:, 0]
+        contrib = out_e[sl] * (g * k)[:, None].astype(x.dtype)
+        return acc + contrib
+
+    out = jax.lax.fori_loop(0, m.top_k, body, jnp.zeros((t, d), x.dtype))
+    if ep_axis is not None:
+        out = jax.lax.psum(out, ep_axis)
+    return out.reshape(b, s, d), lb_loss
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Distribution context handed to model apply functions."""
+
+    mesh: Any = None                       # jax.sharding.Mesh or None
+    batch_axes: Tuple[str, ...] = ()       # e.g. ("pod", "data")
+    model_axis: Optional[str] = None       # TP / EP axis name
+    moe_mode: str = "replicated_psum"      # baseline | (perf) "all_to_all"
+
+    @property
+    def tp(self) -> int:
+        if self.mesh is None or self.model_axis is None:
+            return 1
+        return self.mesh.shape[self.model_axis]
+
+
+def apply_moe(p, cfg: ModelConfig, x: Array, ctx: ShardCtx) -> Tuple[Array, Array]:
+    """Dispatch to the sharded or single-device MoE path."""
+    m = cfg.moe
+    ep = ctx.tp
+    if ctx.mesh is not None and ep > 1 and m.n_experts % ep == 0:
+        from jax.experimental.shard_map import shard_map
+        bspec = P(ctx.batch_axes if ctx.batch_axes else None, None, None)
+        pspec = {
+            "router": P(None, None),
+            "wi": P(ctx.model_axis, None, None),
+            "wg": P(ctx.model_axis, None, None),
+            "wo": P(ctx.model_axis, None, None),
+        }
+        fn = functools.partial(_moe_local, cfg=cfg, ep_axis=ctx.model_axis,
+                               ep_size=ep)
+        return shard_map(
+            lambda p_, x_: fn(p_, x=x_),
+            mesh=ctx.mesh, in_specs=(pspec, bspec),
+            out_specs=(bspec, P()), check_rep=False,
+        )(p, x)
+    return _moe_local(p, cfg, x, ep_axis=None, ep_size=1)

@@ -1,0 +1,279 @@
+"""Full SSM language models: falcon-mamba (pure mamba1) and zamba2 (hybrid).
+
+zamba2: mamba2 backbone with ONE shared GQA attention block applied every
+``hybrid.attn_every`` layers; each application site gets its own low-rank
+(LoRA) delta on the shared q/o projections (Zamba2's parameter-efficient
+shared-block reuse).  The layer stack is scanned as super-blocks of
+``attn_every`` mamba layers + one shared-attention site.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from . import layers as L
+from . import mamba as M
+from .config import ModelConfig
+from .layers import ParamDef
+from .moe import ShardCtx
+from .transformer import _remat, _stack, _wsc, _act_spec
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# falcon-mamba: pure mamba1 stack
+# ---------------------------------------------------------------------------
+
+def ssm_param_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    layer = {
+        "ln": ParamDef((cfg.d_model,), ("embed",), init="ones"),
+        "mamba": M.mamba1_param_defs(cfg),
+    }
+    return {
+        "embed": L.embed_param_defs(cfg),
+        "layers": _stack(layer, cfg.n_layers),
+        "ln_f": ParamDef((cfg.d_model,), ("embed",), init="ones"),
+    }
+
+
+def ssm_loss_fn(cfg: ModelConfig, ctx: ShardCtx, params, batch) -> Array:
+    x = L.embed_tokens(params["embed"], cfg, batch["tokens"])
+    x = _wsc(x, ctx, _act_spec(ctx))
+
+    def body(lp, h):
+        y = M.mamba1_forward(lp["mamba"], cfg, L.rmsnorm(h, lp["ln"], cfg.norm_eps))
+        return _wsc(h + y, ctx, _act_spec(ctx))
+
+    body = _remat(body, cfg.remat)
+    x, _ = jax.lax.scan(lambda c, lp: (body(lp, c), None), x, params["layers"])
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits = L.lm_logits(params["embed"], cfg, x)
+    return L.cross_entropy(logits, batch["labels"], vocab_real=cfg.vocab_size)
+
+
+def ssm_cache_defs(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, ParamDef]:
+    # constant-size state: no KV growth — the reason this family runs 500k
+    return M.mamba1_state_defs(cfg, batch)
+
+
+def ssm_prefill_fn(cfg: ModelConfig, ctx: ShardCtx, params, batch):
+    """Prefill = forward + exact final (conv, ssm) states per layer."""
+    x = L.embed_tokens(params["embed"], cfg, batch["tokens"])
+    x = _wsc(x, ctx, _act_spec(ctx))
+
+    def body(lp, h):
+        y, (conv_s, ssm_s) = M.mamba1_forward(
+            lp["mamba"], cfg, L.rmsnorm(h, lp["ln"], cfg.norm_eps),
+            return_state=True)
+        return _wsc(h + y, ctx, _act_spec(ctx)), (conv_s, ssm_s)
+
+    body = _remat(body, cfg.remat)
+    x, (convs, ssms) = jax.lax.scan(lambda c, lp: body(lp, c), x,
+                                    params["layers"])
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits = L.lm_logits(params["embed"], cfg, x[:, -1:])
+    return logits, {"conv": convs, "ssm": ssms}
+
+
+def ssm_decode_fn(cfg: ModelConfig, ctx: ShardCtx, params, cache, batch):
+    x = L.embed_tokens(params["embed"], cfg, batch["token"])
+
+    def scan_fn(h, layer):
+        lp, conv, ssm = layer
+        y, conv, ssm = M.mamba1_decode(
+            lp["mamba"], cfg, L.rmsnorm(h, lp["ln"], cfg.norm_eps), conv, ssm)
+        return h + y, (conv, ssm)
+
+    x, (convs, ssms) = jax.lax.scan(
+        scan_fn, x, (params["layers"], cache["conv"], cache["ssm"]))
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits = L.lm_logits(params["embed"], cfg, x)
+    return logits, {"conv": convs, "ssm": ssms}
+
+
+# ---------------------------------------------------------------------------
+# zamba2 hybrid: mamba2 backbone + shared attention block
+# ---------------------------------------------------------------------------
+
+def _n_sites(cfg: ModelConfig) -> int:
+    return cfg.n_layers // cfg.hybrid.attn_every
+
+
+def hybrid_param_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    every = cfg.hybrid.attn_every
+    n_sites = _n_sites(cfg)
+    assert cfg.n_layers % every == 0, "n_layers must divide into super-blocks"
+    r = cfg.hybrid.shared_lora_rank
+    d, hp, hd = cfg.d_model, cfg.n_heads_padded, cfg.hd
+    mamba_layer = {
+        "ln": ParamDef((cfg.d_model,), ("embed",), init="ones"),
+        "mamba": M.mamba2_param_defs(cfg),
+    }
+    site = {   # per-site LoRA deltas on the shared attention q / o
+        "ln": ParamDef((d,), ("embed",), init="ones"),
+        "lora_qa": ParamDef((d, r), ("embed", None)),
+        "lora_qb": ParamDef((r, hp * hd), (None, "heads"), init="zeros"),
+        "lora_oa": ParamDef((hp * hd, r), ("heads", None)),
+        "lora_ob": ParamDef((r, d), (None, "embed"), init="zeros"),
+    }
+    return {
+        "embed": L.embed_param_defs(cfg),
+        # stacked [n_sites, every, ...] for the super-block double scan
+        "blocks": _stack(_stack(mamba_layer, every), n_sites),
+        "sites": _stack(site, n_sites),
+        "shared_attn": L.attn_param_defs(cfg),
+        "shared_mlp": L.mlp_param_defs(cfg),
+        "ln_f": ParamDef((cfg.d_model,), ("embed",), init="ones"),
+    }
+
+
+def _shared_attn_site(cfg: ModelConfig, ctx: ShardCtx, shared_attn, shared_mlp,
+                      site, x: Array, positions, *, decode=None):
+    """Shared GQA block + per-site LoRA.  decode=(ck, cv, pos) for 1-token."""
+    d, hp, hd = cfg.d_model, cfg.n_heads_padded, cfg.hd
+    h_in = L.rmsnorm(x, site["ln"], cfg.norm_eps)
+    # LoRA deltas folded into q/o projections for this site
+    dq = (site["lora_qa"] @ site["lora_qb"]).reshape(d, hp, hd)
+    do = (site["lora_oa"] @ site["lora_ob"]).reshape(hp, hd, d)
+    p_eff = dict(shared_attn)
+    p_eff["wq"] = shared_attn["wq"] + dq
+    p_eff["wo"] = shared_attn["wo"] + do
+    if decode is None:
+        a = L.attention(p_eff, cfg, h_in, positions=positions, causal=True)
+        x = x + a
+        x = x + L.mlp(shared_mlp, cfg, L.rmsnorm(x, site["ln"], cfg.norm_eps))
+        return x
+    ck, cv, pos = decode
+    a, ck, cv = L.decode_attention(p_eff, cfg, h_in, ck, cv, pos)
+    x = x + a
+    x = x + L.mlp(shared_mlp, cfg, L.rmsnorm(x, site["ln"], cfg.norm_eps))
+    return x, ck, cv
+
+
+def hybrid_loss_fn(cfg: ModelConfig, ctx: ShardCtx, params, batch) -> Array:
+    x = L.embed_tokens(params["embed"], cfg, batch["tokens"])
+    x = _wsc(x, ctx, _act_spec(ctx))
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def mamba_body(lp, h):
+        y = M.mamba2_forward(lp["mamba"], cfg, L.rmsnorm(h, lp["ln"], cfg.norm_eps))
+        return _wsc(h + y, ctx, _act_spec(ctx))
+
+    mamba_body = _remat(mamba_body, cfg.remat)
+
+    def super_block(h, blk):
+        block_params, site_params = blk
+        h, _ = jax.lax.scan(lambda c, lp: (mamba_body(lp, c), None),
+                            h, block_params)
+        h = _shared_attn_site(cfg, ctx, params["shared_attn"],
+                              params["shared_mlp"], site_params, h, positions)
+        return _wsc(h, ctx, _act_spec(ctx)), None
+
+    x, _ = jax.lax.scan(super_block, x, (params["blocks"], params["sites"]))
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits = L.lm_logits(params["embed"], cfg, x)
+    return L.cross_entropy(logits, batch["labels"], vocab_real=cfg.vocab_size)
+
+
+def hybrid_cache_defs(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, Any]:
+    n_sites = _n_sites(cfg)
+    kv = {"k": ParamDef((n_sites, batch, seq, cfg.n_kv_padded, cfg.hd),
+                        ("layers", "batch", "seq", "kv_heads", "head_dim"),
+                        init="zeros"),
+          "v": ParamDef((n_sites, batch, seq, cfg.n_kv_padded, cfg.hd),
+                        ("layers", "batch", "seq", "kv_heads", "head_dim"),
+                        init="zeros")}
+    state = M.mamba2_state_defs(cfg, batch, cfg.n_layers)
+    return {"kv": kv, "state": state}
+
+
+def hybrid_prefill_fn(cfg: ModelConfig, ctx: ShardCtx, params, batch):
+    """Prompt forward emitting mamba2 final states + shared-attn site KV."""
+    x = L.embed_tokens(params["embed"], cfg, batch["tokens"])
+    x = _wsc(x, ctx, _act_spec(ctx))
+    positions = jnp.arange(x.shape[1])[None, :]
+    d, hp, hd = cfg.d_model, cfg.n_heads_padded, cfg.hd
+
+    def mamba_body(lp, h):
+        y, (conv_s, ssm_s) = M.mamba2_forward(
+            lp["mamba"], cfg, L.rmsnorm(h, lp["ln"], cfg.norm_eps),
+            return_state=True)
+        return _wsc(h + y, ctx, _act_spec(ctx)), (conv_s, ssm_s)
+
+    mamba_body = _remat(mamba_body, cfg.remat)
+
+    def super_block(h, blk):
+        block_params, site_params = blk
+        h, states = jax.lax.scan(lambda c, lp: mamba_body(lp, c),
+                                 h, block_params)
+        # shared attention with per-site LoRA, returning this site's KV
+        h_in = L.rmsnorm(h, site_params["ln"], cfg.norm_eps)
+        dq = (site_params["lora_qa"] @ site_params["lora_qb"]).reshape(d, hp, hd)
+        do = (site_params["lora_oa"] @ site_params["lora_ob"]).reshape(hp, hd, d)
+        p_eff = dict(params["shared_attn"])
+        p_eff["wq"] = params["shared_attn"]["wq"] + dq
+        p_eff["wo"] = params["shared_attn"]["wo"] + do
+        a, kv = L.attention(p_eff, cfg, h_in, positions=positions,
+                            causal=True, return_kv=True)
+        h = h + a
+        h = h + L.mlp(params["shared_mlp"], cfg,
+                      L.rmsnorm(h, site_params["ln"], cfg.norm_eps))
+        return _wsc(h, ctx, _act_spec(ctx)), (states, kv)
+
+    x, ((convs, ssms), (ks, vs)) = jax.lax.scan(
+        super_block, x, (params["blocks"], params["sites"]))
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits = L.lm_logits(params["embed"], cfg, x[:, -1:])
+    every = cfg.hybrid.attn_every
+    cache = {
+        "kv": {"k": ks.astype(jnp.bfloat16), "v": vs.astype(jnp.bfloat16)},
+        "state": {
+            "conv": convs.reshape((cfg.n_layers,) + convs.shape[2:]),
+            "ssm": ssms.reshape((cfg.n_layers,) + ssms.shape[2:]),
+        },
+    }
+    return logits, cache
+
+
+def hybrid_decode_fn(cfg: ModelConfig, ctx: ShardCtx, params, cache, batch):
+    x = L.embed_tokens(params["embed"], cfg, batch["token"])
+    pos = batch["pos"]
+    every = cfg.hybrid.attn_every
+    n_sites = _n_sites(cfg)
+    conv = cache["state"]["conv"].reshape((n_sites, every) + cache["state"]["conv"].shape[1:])
+    ssm = cache["state"]["ssm"].reshape((n_sites, every) + cache["state"]["ssm"].shape[1:])
+
+    def super_block(h, blk):
+        block_params, site_params, conv_b, ssm_b, ck, cv = blk
+
+        def mamba_step(c, layer):
+            lp, cs, ss = layer
+            y, cs, ss = M.mamba2_decode(
+                lp["mamba"], cfg, L.rmsnorm(c, lp["ln"], cfg.norm_eps), cs, ss)
+            return c + y, (cs, ss)
+
+        h, (conv_b, ssm_b) = jax.lax.scan(mamba_step, h,
+                                          (block_params, conv_b, ssm_b))
+        h, ck, cv = _shared_attn_site(cfg, ctx, params["shared_attn"],
+                                      params["shared_mlp"], site_params, h,
+                                      None, decode=(ck, cv, pos))
+        return h, (conv_b, ssm_b, ck, cv)
+
+    x, (convs, ssms, ks, vs) = jax.lax.scan(
+        super_block, x,
+        (params["blocks"], params["sites"], conv, ssm,
+         cache["kv"]["k"], cache["kv"]["v"]))
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits = L.lm_logits(params["embed"], cfg, x)
+    new_cache = {
+        "kv": {"k": ks, "v": vs},
+        "state": {"conv": convs.reshape(cache["state"]["conv"].shape),
+                  "ssm": ssms.reshape(cache["state"]["ssm"].shape)},
+    }
+    return logits, new_cache

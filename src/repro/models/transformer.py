@@ -1,0 +1,204 @@
+"""Decoder-only transformer: dense / MoE / VLM families.
+
+Layer stack is scanned (params stacked on a leading "layers" dim) with a
+configurable remat policy — essential to keep 60-layer HLO compact for the
+512-device dry-run.  Sharding is GSPMD: params carry logical axes
+(layers.py), activations are pinned at block boundaries with
+``with_sharding_constraint`` through the ShardCtx.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from . import layers as L
+from .config import ModelConfig
+from .layers import ParamDef
+from .moe import ShardCtx, apply_moe, moe_param_defs
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Param defs
+# ---------------------------------------------------------------------------
+
+def _stack(defs: Dict, n: int) -> Dict:
+    """Add a leading 'layers' dim to every ParamDef (scan-over-layers)."""
+    return jax.tree.map(
+        lambda d: ParamDef((n,) + d.shape, ("layers",) + d.axes, d.init, d.scale),
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def layer_param_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    defs = {
+        "ln1": ParamDef((cfg.d_model,), ("embed",), init="ones"),
+        "ln2": ParamDef((cfg.d_model,), ("embed",), init="ones"),
+        "attn": L.attn_param_defs(cfg),
+    }
+    defs["ffn"] = moe_param_defs(cfg) if cfg.moe else L.mlp_param_defs(cfg)
+    return defs
+
+
+def param_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    defs: Dict[str, Any] = {
+        "embed": L.embed_param_defs(cfg),
+        "layers": _stack(layer_param_defs(cfg), cfg.n_layers),
+        "ln_f": ParamDef((cfg.d_model,), ("embed",), init="ones"),
+    }
+    if cfg.vlm:
+        defs["vit_proj"] = ParamDef((cfg.vlm.d_vit, cfg.d_model), ("vit", "embed"))
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _wsc(x: Array, ctx: ShardCtx, spec: P) -> Array:
+    if ctx.mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(ctx.mesh, spec))
+
+
+def _act_spec(ctx: ShardCtx) -> P:
+    return P(ctx.batch_axes if ctx.batch_axes else None, None, None)
+
+
+def _layer(cfg: ModelConfig, ctx: ShardCtx, p, x: Array, positions: Array
+           ) -> Tuple[Array, Array]:
+    """One block; returns (x, moe_aux_loss)."""
+    h = L.attention(p["attn"], cfg, L.rmsnorm(x, p["ln1"], cfg.norm_eps),
+                    positions=positions, causal=True)
+    x = _wsc(x + h, ctx, _act_spec(ctx))
+    y = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if cfg.moe:
+        h, aux = apply_moe(p["ffn"], cfg, y, ctx)
+    else:
+        h, aux = L.mlp(p["ffn"], cfg, y), jnp.zeros((), jnp.float32)
+    x = _wsc(x + h, ctx, _act_spec(ctx))
+    return x, aux
+
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return jax.checkpoint(fn)     # "full"
+
+
+def _run_layers(cfg: ModelConfig, ctx: ShardCtx, params, x: Array,
+                positions: Array) -> Tuple[Array, Array]:
+    body = _remat(functools.partial(_layer, cfg, ctx), cfg.remat)
+    if cfg.scan_layers:
+        def scan_fn(carry, lp):
+            h, aux = body(lp, carry, positions)
+            return h, aux
+        x, auxs = jax.lax.scan(scan_fn, x, params["layers"])
+        return x, auxs.sum()
+    aux_total = jnp.zeros((), jnp.float32)
+    for i in range(cfg.n_layers):
+        lp = jax.tree.map(lambda a: a[i], params["layers"])
+        x, aux = body(lp, x, positions)
+        aux_total += aux
+    return x, aux_total
+
+
+def _embed_inputs(cfg: ModelConfig, params, batch: Dict[str, Array]) -> Array:
+    x = L.embed_tokens(params["embed"], cfg, batch["tokens"])
+    if cfg.vlm:
+        patches = batch["patches"].astype(x.dtype) @ params["vit_proj"].astype(x.dtype)
+        x = jnp.concatenate([patches, x], axis=1)
+    return x
+
+
+def loss_fn(cfg: ModelConfig, ctx: ShardCtx, params, batch: Dict[str, Array]
+            ) -> Array:
+    """Next-token CE (+ MoE load-balance aux)."""
+    x = _embed_inputs(cfg, params, batch)
+    x = _wsc(x, ctx, _act_spec(ctx))
+    positions = jnp.arange(x.shape[1])[None, :]
+    x, aux = _run_layers(cfg, ctx, params, x, positions)
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits = L.lm_logits(params["embed"], cfg, x)
+    if ctx.mesh is not None:
+        logits = _wsc(logits, ctx, P(ctx.batch_axes, None, ctx.model_axis))
+    labels = batch["labels"]
+    if cfg.vlm:   # patch positions carry no labels
+        logits = logits[:, -labels.shape[1]:]
+    ce = L.cross_entropy(logits, labels, vocab_real=cfg.vocab_size)
+    return ce + 0.01 * aux
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode with per-layer KV caches (scanned)
+# ---------------------------------------------------------------------------
+
+def cache_defs(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, ParamDef]:
+    shape = (cfg.n_layers, batch, seq, cfg.n_kv_padded, cfg.hd)
+    axes = ("layers", "batch", "seq", "kv_heads", "head_dim")
+    return {"k": ParamDef(shape, axes, init="zeros"),
+            "v": ParamDef(shape, axes, init="zeros")}
+
+
+def prefill_fn(cfg: ModelConfig, ctx: ShardCtx, params, batch: Dict[str, Array]
+               ) -> Tuple[Array, Dict[str, Array]]:
+    """Forward over the prompt, emitting last-position logits + KV caches."""
+    x = _embed_inputs(cfg, params, batch)
+    x = _wsc(x, ctx, _act_spec(ctx))
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def body(lp, h):
+        a, kv = L.attention(lp["attn"], cfg,
+                            L.rmsnorm(h, lp["ln1"], cfg.norm_eps),
+                            positions=positions, causal=True, return_kv=True)
+        h = _wsc(h + a, ctx, _act_spec(ctx))
+        y = L.rmsnorm(h, lp["ln2"], cfg.norm_eps)
+        if cfg.moe:
+            f, _ = apply_moe(lp["ffn"], cfg, y, ctx)
+        else:
+            f = L.mlp(lp["ffn"], cfg, y)
+        return _wsc(h + f, ctx, _act_spec(ctx)), kv
+
+    body = _remat(body, cfg.remat)
+
+    def scan_fn(carry, lp):
+        h, kv = body(lp, carry)
+        return h, kv
+
+    x, (ks, vs) = jax.lax.scan(scan_fn, x, params["layers"])
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits = L.lm_logits(params["embed"], cfg, x[:, -1:])
+    return logits, {"k": ks.astype(jnp.bfloat16), "v": vs.astype(jnp.bfloat16)}
+
+
+def decode_fn(cfg: ModelConfig, ctx: ShardCtx, params, cache: Dict[str, Array],
+              batch: Dict[str, Array]) -> Tuple[Array, Dict[str, Array]]:
+    """One decode step: batch = {"token": [B,1] int32, "pos": [] int32}."""
+    x = L.embed_tokens(params["embed"], cfg, batch["token"])     # [B,1,D]
+    pos = batch["pos"]
+
+    def scan_fn(h, layer):
+        lp, ck, cv = layer
+        a, ck, cv = L.decode_attention(
+            lp["attn"], cfg, L.rmsnorm(h, lp["ln1"], cfg.norm_eps), ck, cv, pos)
+        h = h + a
+        y = L.rmsnorm(h, lp["ln2"], cfg.norm_eps)
+        if cfg.moe:
+            f, _ = apply_moe(lp["ffn"], cfg, y, ctx)
+        else:
+            f = L.mlp(lp["ffn"], cfg, y)
+        return h + f, (ck, cv)
+
+    x, (ks, vs) = jax.lax.scan(scan_fn, x, (params["layers"], cache["k"], cache["v"]))
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits = L.lm_logits(params["embed"], cfg, x)
+    return logits, {"k": ks, "v": vs}

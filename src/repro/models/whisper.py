@@ -1,0 +1,214 @@
+"""Whisper-style encoder-decoder (audio backbone; conv frontend is a STUB —
+``input_specs()`` supplies precomputed frame embeddings per the assignment).
+
+Encoder: bidirectional MHA + GELU MLP over [B, enc_seq, D] frames with
+learned positions.  Decoder: causal self-attention + cross-attention to the
+encoder output + GELU MLP; tied embedding/head.  LayerNorm throughout
+(matching the published architecture), no RoPE — learned positions.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers as L
+from .config import ModelConfig
+from .layers import ParamDef
+from .moe import ShardCtx
+from .transformer import _remat, _stack, _wsc, _act_spec
+
+Array = jax.Array
+
+MAX_DEC_POS = 768  # learned decoder positions table (paper: 448; padded pow2-ish)
+
+
+def _ln_defs(d: int) -> Dict[str, ParamDef]:
+    return {"w": ParamDef((d,), ("embed",), init="ones"),
+            "b": ParamDef((d,), ("embed",), init="zeros")}
+
+
+def _enc_layer_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    return {
+        "ln1": _ln_defs(cfg.d_model),
+        "ln2": _ln_defs(cfg.d_model),
+        "attn": L.attn_param_defs(cfg),
+        "mlp": L.mlp_param_defs(cfg),
+    }
+
+
+def _dec_layer_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    return {
+        "ln1": _ln_defs(cfg.d_model),
+        "ln2": _ln_defs(cfg.d_model),
+        "ln3": _ln_defs(cfg.d_model),
+        "self_attn": L.attn_param_defs(cfg),
+        "cross_attn": L.attn_param_defs(cfg),
+        "mlp": L.mlp_param_defs(cfg),
+    }
+
+
+def whisper_param_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    e = cfg.encdec
+    return {
+        "embed": L.embed_param_defs(cfg),                 # tied decoder vocab
+        "enc_pos": ParamDef((e.enc_seq, cfg.d_model), ("enc_seq", "embed"),
+                            scale=0.02),
+        "dec_pos": ParamDef((MAX_DEC_POS, cfg.d_model), ("seq", "embed"),
+                            scale=0.02),
+        "enc_layers": _stack(_enc_layer_defs(cfg), e.n_enc_layers),
+        "dec_layers": _stack(_dec_layer_defs(cfg), cfg.n_layers),
+        "ln_enc": _ln_defs(cfg.d_model),
+        "ln_f": _ln_defs(cfg.d_model),
+    }
+
+
+def _ln(x, p, eps):
+    return L.layernorm(x, p["w"], p["b"], eps)
+
+
+def encode(cfg: ModelConfig, ctx: ShardCtx, params, frames: Array) -> Array:
+    """frames [B, enc_seq, D] (stub embeddings) -> encoder states."""
+    x = frames.astype(params["enc_pos"].dtype) + params["enc_pos"]
+    x = _wsc(x, ctx, _act_spec(ctx))
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def body(lp, h):
+        a = L.attention(lp["attn"], cfg, _ln(h, lp["ln1"], cfg.norm_eps),
+                        positions=positions, causal=False, use_rope=False)
+        h = _wsc(h + a, ctx, _act_spec(ctx))
+        m = L.mlp(lp["mlp"], cfg, _ln(h, lp["ln2"], cfg.norm_eps))
+        return _wsc(h + m, ctx, _act_spec(ctx))
+
+    body = _remat(body, cfg.remat)
+    x, _ = jax.lax.scan(lambda c, lp: (body(lp, c), None), x,
+                        params["enc_layers"])
+    return _ln(x, params["ln_enc"], cfg.norm_eps)
+
+
+def _dec_positions(seq: int) -> Array:
+    # decoder position table is finite; long shapes wrap (stub semantics)
+    return jnp.arange(seq)[None, :] % MAX_DEC_POS
+
+
+def _embed_dec(cfg: ModelConfig, params, tokens: Array) -> Array:
+    x = L.embed_tokens(params["embed"], cfg, tokens)
+    pos = params["dec_pos"][_dec_positions(tokens.shape[1])[0]]
+    return x + pos.astype(x.dtype)[None]
+
+
+def whisper_loss_fn(cfg: ModelConfig, ctx: ShardCtx, params, batch) -> Array:
+    enc = encode(cfg, ctx, params, batch["frames"])
+    x = _embed_dec(cfg, params, batch["tokens"])
+    x = _wsc(x, ctx, _act_spec(ctx))
+    positions = jnp.arange(x.shape[1])[None, :]
+    enc_positions = jnp.arange(enc.shape[1])[None, :]
+
+    def body(lp, h):
+        a = L.attention(lp["self_attn"], cfg, _ln(h, lp["ln1"], cfg.norm_eps),
+                        positions=positions, causal=True, use_rope=False)
+        h = h + a
+        q_in = _ln(h, lp["ln2"], cfg.norm_eps)
+        # cross-attention: kv from encoder states
+        kv_k = jnp.einsum("bsd,dhk->bshk", enc, lp["cross_attn"]["wk"])
+        kv_v = jnp.einsum("bsd,dhk->bshk", enc, lp["cross_attn"]["wv"])
+        if cfg.qkv_bias:
+            kv_k, kv_v = kv_k + lp["cross_attn"]["bk"], kv_v + lp["cross_attn"]["bv"]
+        c = L.attention(lp["cross_attn"], cfg, q_in, positions=positions,
+                        causal=False, use_rope=False, kv_override=(kv_k, kv_v))
+        h = _wsc(h + c, ctx, _act_spec(ctx))
+        m = L.mlp(lp["mlp"], cfg, _ln(h, lp["ln3"], cfg.norm_eps))
+        return _wsc(h + m, ctx, _act_spec(ctx))
+
+    body = _remat(body, cfg.remat)
+    x, _ = jax.lax.scan(lambda c, lp: (body(lp, c), None), x,
+                        params["dec_layers"])
+    x = _ln(x, params["ln_f"], cfg.norm_eps)
+    logits = L.lm_logits(params["embed"], cfg, x)
+    return L.cross_entropy(logits, batch["labels"], vocab_real=cfg.vocab_size)
+
+
+# ---------------------------------------------------------------- serving
+def whisper_cache_defs(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, Any]:
+    e = cfg.encdec
+    kvshape = (cfg.n_layers, batch, seq, cfg.n_kv_padded, cfg.hd)
+    crossshape = (cfg.n_layers, batch, e.enc_seq, cfg.n_kv_padded, cfg.hd)
+    axes = ("layers", "batch", "seq", "kv_heads", "head_dim")
+    return {
+        "self_k": ParamDef(kvshape, axes, init="zeros"),
+        "self_v": ParamDef(kvshape, axes, init="zeros"),
+        "cross_k": ParamDef(crossshape, axes, init="zeros"),
+        "cross_v": ParamDef(crossshape, axes, init="zeros"),
+    }
+
+
+def whisper_prefill_fn(cfg: ModelConfig, ctx: ShardCtx, params, batch):
+    """Encode + precompute cross KV; decoder self-cache from the prompt."""
+    enc = encode(cfg, ctx, params, batch["frames"])
+    x = _embed_dec(cfg, params, batch["tokens"])
+    positions = jnp.arange(x.shape[1])[None, :]
+    enc_pos = jnp.arange(enc.shape[1])[None, :]
+
+    def body(lp, h):
+        a, self_kv = L.attention(lp["self_attn"], cfg,
+                                 _ln(h, lp["ln1"], cfg.norm_eps),
+                                 positions=positions, causal=True,
+                                 use_rope=False, return_kv=True)
+        h = h + a
+        q_in = _ln(h, lp["ln2"], cfg.norm_eps)
+        kv_k = jnp.einsum("bsd,dhk->bshk", enc, lp["cross_attn"]["wk"])
+        kv_v = jnp.einsum("bsd,dhk->bshk", enc, lp["cross_attn"]["wv"])
+        if cfg.qkv_bias:
+            kv_k, kv_v = kv_k + lp["cross_attn"]["bk"], kv_v + lp["cross_attn"]["bv"]
+        c = L.attention(lp["cross_attn"], cfg, q_in, positions=positions,
+                        causal=False, use_rope=False, kv_override=(kv_k, kv_v))
+        h = h + c
+        m = L.mlp(lp["mlp"], cfg, _ln(h, lp["ln3"], cfg.norm_eps))
+        return h + m, (self_kv[0], self_kv[1], kv_k, kv_v)
+
+    body = _remat(body, cfg.remat)
+    x, (sk, sv, ck, cv) = jax.lax.scan(lambda c, lp: body(lp, c), x,
+                                       params["dec_layers"])
+    x = _ln(x, params["ln_f"], cfg.norm_eps)
+    logits = L.lm_logits(params["embed"], cfg, x[:, -1:])
+    cache = {"self_k": sk.astype(jnp.bfloat16), "self_v": sv.astype(jnp.bfloat16),
+             "cross_k": ck.astype(jnp.bfloat16), "cross_v": cv.astype(jnp.bfloat16)}
+    return logits, cache
+
+
+def whisper_decode_fn(cfg: ModelConfig, ctx: ShardCtx, params, cache, batch):
+    x = L.embed_tokens(params["embed"], cfg, batch["token"])
+    pos = batch["pos"]
+    x = x + params["dec_pos"][pos % MAX_DEC_POS].astype(x.dtype)[None, None]
+
+    def scan_fn(h, layer):
+        lp, sk, sv, ck, cv = layer
+        a, sk, sv = L.decode_attention(lp["self_attn"], cfg,
+                                       _ln(h, lp["ln1"], cfg.norm_eps),
+                                       sk, sv, pos)
+        h = h + a
+        # cross attention against the fixed cross KV (no causal mask)
+        q_in = _ln(h, lp["ln2"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", q_in, lp["cross_attn"]["wq"])
+        if cfg.qkv_bias:
+            q = q + lp["cross_attn"]["bq"]
+        m = jnp.asarray(cfg.head_to_kv())
+        kx, vx = ck.astype(q.dtype)[:, :, m, :], cv.astype(q.dtype)[:, :, m, :]
+        s = jnp.einsum("bshk,bthk->bhst", q, kx).astype(jnp.float32)
+        s = s / np.sqrt(cfg.hd)
+        w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+        o = jnp.einsum("bhst,bthk->bshk", w, vx)
+        h = h + jnp.einsum("bshk,hkd->bsd", o, lp["cross_attn"]["wo"])
+        h = h + L.mlp(lp["mlp"], cfg, _ln(h, lp["ln3"], cfg.norm_eps))
+        return h, (sk, sv)
+
+    x, (sks, svs) = jax.lax.scan(
+        scan_fn, x, (params["dec_layers"], cache["self_k"], cache["self_v"],
+                     cache["cross_k"], cache["cross_v"]))
+    x = _ln(x, params["ln_f"], cfg.norm_eps)
+    logits = L.lm_logits(params["embed"], cfg, x)
+    return logits, {"self_k": sks, "self_v": svs,
+                    "cross_k": cache["cross_k"], "cross_v": cache["cross_v"]}

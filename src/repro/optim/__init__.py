@@ -1,0 +1,3 @@
+from .optimizers import (AdamWState, adafactor_init, adafactor_update,  # noqa: F401
+                         adamw_init, adamw_update, clip_by_global_norm,
+                         make_optimizer, warmup_cosine)

@@ -1,0 +1,164 @@
+"""Optimizers: AdamW (configurable state dtype) and Adafactor (factored
+second moment — the memory-viable choice for the 1T-param cells).
+
+Functional style: ``init(params) -> state``, ``update(grads, state, params,
+lr) -> (params, state)``; states are pytrees mirroring params so the same
+sharding rules (and ZeRO extensions in distributed/sharding.py) apply.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+PyTree = Any
+
+
+class AdamWState(NamedTuple):
+    count: Array
+    m: PyTree
+    v: PyTree
+
+
+def adamw_init(params: PyTree, state_dtype=jnp.float32) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+    return AdamWState(count=jnp.zeros((), jnp.int32),
+                      m=jax.tree.map(zeros, params),
+                      v=jax.tree.map(zeros, params))
+
+
+def adamw_update(grads: PyTree, state: AdamWState, params: PyTree, lr: Array,
+                 *, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1
+                 ) -> Tuple[PyTree, AdamWState]:
+    count = state.count + 1
+    cf = count.astype(jnp.float32)
+    bc1 = 1 - b1 ** cf
+    bc2 = 1 - b2 ** cf
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+        step = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+        p_new = p.astype(jnp.float32) - lr * (step + weight_decay * p.astype(jnp.float32))
+        return p_new.astype(p.dtype), m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    params_new = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    m_new = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    v_new = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return params_new, AdamWState(count=count, m=m_new, v=v_new)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern): factored v for >=2D params
+# ---------------------------------------------------------------------------
+
+class AdafactorState(NamedTuple):
+    count: Array
+    vr: PyTree      # row stats (or full v for <2D)
+    vc: PyTree      # col stats (or a scalar placeholder)
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2
+
+
+def adafactor_init(params: PyTree) -> AdafactorState:
+    def vr_init(p):
+        return (jnp.zeros(p.shape[:-1], jnp.float32) if _factored(p)
+                else jnp.zeros(p.shape, jnp.float32))
+
+    def vc_init(p):
+        return (jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                if _factored(p) else jnp.zeros((), jnp.float32))
+
+    return AdafactorState(count=jnp.zeros((), jnp.int32),
+                          vr=jax.tree.map(vr_init, params),
+                          vc=jax.tree.map(vc_init, params))
+
+
+def adafactor_update(grads: PyTree, state: AdafactorState, params: PyTree,
+                     lr: Array, *, decay=0.8, eps=1e-30, clip=1.0,
+                     weight_decay=0.0) -> Tuple[PyTree, AdafactorState]:
+    count = state.count + 1
+    beta = 1.0 - count.astype(jnp.float32) ** (-decay)
+
+    def upd(p, g, vr, vc):
+        g = g.astype(jnp.float32)
+        g2 = g * g + eps
+        if _factored(p):
+            vr_new = beta * vr + (1 - beta) * g2.mean(-1)
+            vc_new = beta * vc + (1 - beta) * g2.mean(-2)
+            denom = (vr_new[..., None] * vc_new[..., None, :]
+                     / jnp.maximum(vr_new.mean(-1)[..., None, None], eps))
+            step = g * jax.lax.rsqrt(denom + eps)
+        else:
+            vr_new = beta * vr + (1 - beta) * g2
+            vc_new = vc
+            step = g * jax.lax.rsqrt(vr_new + eps)
+        # update clipping (RMS <= clip)
+        rms = jnp.sqrt(jnp.mean(step * step) + eps)
+        step = step / jnp.maximum(1.0, rms / clip)
+        p_new = p.astype(jnp.float32) - lr * (step + weight_decay * p.astype(jnp.float32))
+        return p_new.astype(p.dtype), vr_new, vc_new
+
+    out = jax.tree.map(upd, params, grads, state.vr, state.vc)
+    pick = lambda i: jax.tree.map(lambda t: t[i], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+    return pick(0), AdafactorState(count=count, vr=pick(1), vc=pick(2))
+
+
+# ---------------------------------------------------------------------------
+# Common utilities
+# ---------------------------------------------------------------------------
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> Tuple[PyTree, Array]:
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(grads))
+    norm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), norm
+
+
+def warmup_cosine(step: Array, *, peak_lr: float, warmup: int, total: int,
+                  floor: float = 0.1) -> Array:
+    s = step.astype(jnp.float32)
+    warm = s / max(warmup, 1)
+    prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(np.pi * prog))
+    return peak_lr * jnp.where(s < warmup, warm, cos)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    """Bundled init/update so train_step code is optimizer-agnostic."""
+    name: str
+    init: Callable[[PyTree], Any]
+    update: Callable[..., Tuple[PyTree, Any]]
+
+
+def make_optimizer(name: str = "adamw", *, state_dtype=jnp.float32,
+                   **kwargs) -> Optimizer:
+    if name == "adamw":
+        return Optimizer(
+            "adamw",
+            functools.partial(adamw_init, state_dtype=state_dtype),
+            functools.partial(adamw_update, **kwargs))
+    if name == "adafactor":
+        return Optimizer("adafactor", adafactor_init,
+                         functools.partial(adafactor_update, **kwargs))
+    if name == "sgd":
+        return Optimizer(
+            "sgd", lambda p: jnp.zeros((), jnp.int32),
+            lambda g, s, p, lr, **kw: (
+                jax.tree.map(lambda a, b: (a.astype(jnp.float32)
+                                           - lr * b.astype(jnp.float32)
+                                           ).astype(a.dtype), p, g), s + 1))
+    raise KeyError(name)

@@ -1,0 +1,17 @@
+import numpy as np
+import pytest
+
+# NOTE: no XLA_FLAGS here — smoke tests and benches must see 1 device
+# (the 512-device forcing lives ONLY in launch/dryrun.py).
+
+
+@pytest.fixture(scope="session")
+def small_graph():
+    from repro.core.graph import synthetic_ahg
+    return synthetic_ahg(1500, avg_degree=6, seed=7)
+
+
+@pytest.fixture(scope="session")
+def small_store(small_graph):
+    from repro.core.storage import build_store
+    return build_store(small_graph, 3, partition_method="edge_cut")

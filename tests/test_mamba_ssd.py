@@ -1,0 +1,108 @@
+"""SSD block-matrix scan (§Perf cell B) vs the associative-scan oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.zamba2_2_7b import smoke_config
+from repro.models import mamba as M
+from repro.models.layers import init_tree
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = smoke_config()
+    p = init_tree(M.mamba2_param_defs(cfg), jax.random.PRNGKey(0), jnp.float32)
+    return cfg, p
+
+
+@pytest.mark.parametrize("bsz,seq", [(2, 17), (1, 8), (3, 64), (2, 1), (1, 100)])
+def test_ssd_matches_oracle(setup, bsz, seq):
+    cfg, p = setup
+    x = jax.random.normal(jax.random.PRNGKey(bsz * 100 + seq),
+                          (bsz, seq, cfg.d_model), jnp.float32)
+    y_ssd, (cv1, h1) = M.mamba2_forward(p, cfg, x, return_state=True,
+                                        use_ssd=True)
+    y_ref, (cv2, h2) = M.mamba2_forward(p, cfg, x, return_state=True,
+                                        use_ssd=False)
+    np.testing.assert_allclose(np.asarray(y_ssd), np.asarray(y_ref),
+                               atol=5e-5, rtol=5e-5)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                               atol=5e-5, rtol=5e-5)
+    np.testing.assert_allclose(np.asarray(cv1), np.asarray(cv2), atol=0)
+
+
+def test_ssd_gradients_match(setup):
+    cfg, p = setup
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, 24, cfg.d_model),
+                          jnp.float32)
+
+    def loss(p, use_ssd):
+        return (M.mamba2_forward(p, cfg, x, use_ssd=use_ssd) ** 2).mean()
+
+    g1 = jax.grad(lambda p: loss(p, True))(p)
+    g2 = jax.grad(lambda p: loss(p, False))(p)
+    for k in g1:
+        np.testing.assert_allclose(np.asarray(g1[k]), np.asarray(g2[k]),
+                                   atol=1e-4, rtol=1e-3, err_msg=k)
+
+
+def test_ssd_bf16_close(setup):
+    """bf16 training dtype: the score blocks go bf16 (B2) — stays close."""
+    cfg, p = setup
+    pb = jax.tree.map(lambda a: a.astype(jnp.bfloat16), p)
+    x = jax.random.normal(jax.random.PRNGKey(9), (2, 40, cfg.d_model),
+                          jnp.bfloat16)
+    y = M.mamba2_forward(pb, cfg, x, use_ssd=True).astype(jnp.float32)
+    y_ref = M.mamba2_forward(
+        jax.tree.map(lambda a: a.astype(jnp.float32), pb), cfg,
+        x.astype(jnp.float32), use_ssd=False)
+    assert jnp.isfinite(y).all()
+    rel = float(jnp.abs(y - y_ref).max() / (jnp.abs(y_ref).max() + 1e-9))
+    assert rel < 0.05, rel
+
+
+def test_ssd_decode_consistency(setup):
+    """prefill(x) final state == feeding tokens one-by-one through decode."""
+    cfg, p = setup
+    bsz, seq = 2, 11
+    x = jax.random.normal(jax.random.PRNGKey(3), (bsz, seq, cfg.d_model),
+                          jnp.float32)
+    _, (_, h_prefill) = M.mamba2_forward(p, cfg, x, return_state=True)
+    k = cfg.ssm.conv_kernel
+    di = M.d_inner(cfg)
+    conv = jnp.zeros((bsz, k - 1, di), jnp.float32)
+    ssm = jnp.zeros((bsz, M.n_ssd_heads(cfg), cfg.ssm.head_dim,
+                     cfg.ssm.state_dim), jnp.float32)
+    for t in range(seq):
+        _, conv, ssm = M.mamba2_decode(p, cfg, x[:, t:t + 1], conv, ssm)
+    np.testing.assert_allclose(np.asarray(ssm), np.asarray(h_prefill),
+                               atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# property test: SSD == oracle on arbitrary (B, S) incl. ragged chunking
+# ---------------------------------------------------------------------------
+from hypothesis import given, settings, strategies as st
+
+
+@settings(max_examples=12, deadline=None)
+@given(bsz=st.integers(1, 3), seq=st.integers(1, 70),
+       seed=st.integers(0, 2**16))
+def test_ssd_property(setup_module_scope, bsz, seq, seed):
+    cfg, p = setup_module_scope
+    x = jax.random.normal(jax.random.PRNGKey(seed),
+                          (bsz, seq, cfg.d_model), jnp.float32)
+    y1, (_, h1) = M.mamba2_forward(p, cfg, x, return_state=True, use_ssd=True)
+    y2, (_, h2) = M.mamba2_forward(p, cfg, x, return_state=True, use_ssd=False)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                               atol=1e-4, rtol=1e-4)
+
+
+@pytest.fixture(scope="module")
+def setup_module_scope():
+    cfg = smoke_config()
+    p = init_tree(M.mamba2_param_defs(cfg), jax.random.PRNGKey(0), jnp.float32)
+    return cfg, p

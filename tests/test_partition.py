@@ -1,0 +1,68 @@
+"""Partition invariants (paper §3.2) — property-based."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import from_edges, synthetic_ahg
+from repro.core.partition import PARTITIONERS, partition_graph
+
+
+@st.composite
+def graphs(draw):
+    n = draw(st.integers(4, 60))
+    m = draw(st.integers(1, 200))
+    rng = np.random.default_rng(draw(st.integers(0, 2**31)))
+    src = rng.integers(0, n, m).astype(np.int32)
+    dst = rng.integers(0, n, m).astype(np.int32)
+    return from_edges(n, src, dst)
+
+
+@pytest.mark.parametrize("method", sorted(PARTITIONERS))
+@settings(max_examples=15, deadline=None)
+@given(g=graphs(), n_parts=st.integers(1, 7))
+def test_every_edge_assigned_exactly_once(method, g, n_parts):
+    p = partition_graph(g, n_parts, method)
+    assert p.edge_assign.shape == (g.m,)
+    assert (p.edge_assign >= 0).all() and (p.edge_assign < n_parts).all()
+    assert p.vertex_home.shape == (g.n,)
+    assert (p.vertex_home >= 0).all() and (p.vertex_home < n_parts).all()
+
+
+@pytest.mark.parametrize("method", sorted(PARTITIONERS))
+def test_subgraphs_reassemble(method, small_graph):
+    g = small_graph
+    p = partition_graph(g, 4, method)
+    # union of per-worker edge sets == original edge multiset
+    src, dst = g.edge_list()
+    seen = np.zeros(g.m, bool)
+    for w in range(4):
+        sel = p.edge_assign == w
+        seen |= sel
+    assert seen.all()
+
+
+def test_min_cut_methods_beat_random(small_graph):
+    """metis-like growing should cut fewer edges than hashing."""
+    g = small_graph
+    cut_metis = partition_graph(g, 4, "metis").edge_cut_fraction(g)
+    cut_hash = partition_graph(g, 4, "edge_cut").edge_cut_fraction(g)
+    assert cut_metis < cut_hash
+
+
+def test_balance(small_graph):
+    for method in PARTITIONERS:
+        p = partition_graph(small_graph, 4, method)
+        assert p.balance(small_graph) < 4.0, method
+
+
+def test_plugin_registration(small_graph):
+    from repro.core.partition import register_partitioner, Partition
+
+    def silly(g, n_parts, seed):
+        home = np.zeros(g.n, np.int32)
+        return Partition(n_parts, np.zeros(g.m, np.int32), home, "silly")
+
+    register_partitioner("silly", silly)
+    p = partition_graph(small_graph, 2, "silly")
+    assert p.method == "silly"
+    del PARTITIONERS["silly"]

@@ -1,0 +1,99 @@
+"""Storage layer: separate attribute storage, LRU, importance caching."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cache import (LRUCache, importance, plan_cache, power_law_fit,
+                              importance_cache_plan_at_rate, random_cache_plan)
+from repro.core.graph import from_edges, synthetic_ahg
+from repro.core.storage import build_store
+
+
+def test_separate_storage_dedups(small_graph):
+    g = small_graph
+    # attribute table far smaller than n (paper: heavy overlap)
+    assert g.vertex_attr_table.shape[0] < g.n / 4
+    # and resolves losslessly through the index
+    direct = g.vertex_attr_table[g.vertex_attr_index]
+    assert direct.shape == (g.n, g.vertex_attr_table.shape[1])
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_attr_roundtrip(seed):
+    """Property: dedup index reconstructs the original attribute rows."""
+    rng = np.random.default_rng(seed)
+    n, m = 30, 60
+    attrs = rng.integers(0, 3, (n, 4)).astype(np.float32)   # few uniques
+    g = from_edges(n, rng.integers(0, n, m), rng.integers(0, n, m),
+                   vertex_attrs=attrs)
+    np.testing.assert_array_equal(g.vertex_attrs(np.arange(n)), attrs)
+
+
+def test_importance_eq1(small_graph):
+    """Imp^(1) = D_i / max(D_o, 1) exactly (Eq. 1)."""
+    g = small_graph
+    imp = importance(g, 1)
+    d_i, d_o = g.in_degree(), g.out_degree()
+    np.testing.assert_allclose(imp, d_i / np.maximum(d_o, 1.0))
+
+
+def test_importance_power_law(small_graph):
+    """Thm 2: Imp is power-law distributed -> tail exponent fit is finite."""
+    alpha = power_law_fit(importance(small_graph, 1), xmin=1.0)
+    assert 1.2 < alpha < 5.0
+
+
+def test_cache_rate_monotone_in_threshold(small_graph):
+    rates = []
+    for tau in (0.05, 0.2, 0.5, 2.0):
+        plan = plan_cache(small_graph, h=1, thresholds={1: tau})
+        rates.append(plan.cache_rate)
+    assert all(a >= b for a, b in zip(rates, rates[1:]))
+
+
+def test_cache_cuts_remote_reads(small_graph):
+    """The paper's Fig 9 effect: importance cache removes remote traffic."""
+    from repro.core.sampling import NeighborhoodSampler
+    g = small_graph
+    cached = build_store(g, 3, thresholds={1: 0.2, 2: 0.2})
+    uncached = build_store(g, 3, thresholds={1: 1e18, 2: 1e18})
+    rng = np.random.default_rng(0)
+    seeds = rng.integers(0, g.n, 64).astype(np.int32)
+    for store in (cached, uncached):
+        s = NeighborhoodSampler(store, seed=1)
+        s.sample(seeds, [5, 5])
+    rc = cached.stats().remote_fraction
+    ru = uncached.stats().remote_fraction
+    assert rc < ru
+
+
+def test_importance_beats_random_at_same_budget(small_graph):
+    """Same cache budget: importance-selected vertices catch more accesses."""
+    from repro.core.sampling import NeighborhoodSampler
+    from repro.core.storage import DistributedGraphStore
+    from repro.core.partition import partition_graph
+    g = small_graph
+    part = partition_graph(g, 3, "edge_cut")
+    rate = 0.15
+    hits = {}
+    for name, plan in (("imp", importance_cache_plan_at_rate(g, rate)),
+                       ("rand", random_cache_plan(g, rate, seed=3))):
+        store = DistributedGraphStore(g, part, plan)
+        s = NeighborhoodSampler(store, seed=5)
+        seeds = np.random.default_rng(11).integers(0, g.n, 128).astype(np.int32)
+        s.sample(seeds, [5, 5])
+        st_ = store.stats()
+        hits[name] = st_.cache_reads / max(st_.cache_reads + st_.remote_reads, 1)
+    assert hits["imp"] > hits["rand"]
+
+
+def test_lru():
+    c = LRUCache(2)
+    c.put(1, "a")
+    c.put(2, "b")
+    assert c.get(1) == "a"
+    c.put(3, "c")            # evicts 2 (LRU)
+    assert c.get(2) is None
+    assert c.get(1) == "a" and c.get(3) == "c"
+    assert 0 < c.hit_rate < 1

@@ -1,0 +1,91 @@
+"""End-to-end behaviour tests for the AliGraph system (paper Fig 3 stack):
+storage -> sampling -> operators -> algorithm, plus the LM train/serve
+drivers built on the same substrates."""
+import numpy as np
+import pytest
+
+from repro.core import build_store, make_gnn, synthetic_ahg
+from repro.core.gnn import GNNTrainer
+
+
+def test_full_stack_train_and_embed():
+    """Build graph -> partition -> cache -> sample -> train -> embed."""
+    g = synthetic_ahg(2000, avg_degree=6, seed=0)
+    store = build_store(g, 4, partition_method="metis")
+    spec = make_gnn("graphsage", d_in=g.vertex_attr_table.shape[1],
+                    d_hidden=32, d_out=32)
+    tr = GNNTrainer(store, spec, lr=0.05, seed=0)
+    losses = tr.train(12, batch_size=32)
+    assert losses[-1] < losses[0]
+    z = tr.embed(np.arange(16, dtype=np.int32))
+    assert z.shape == (16, 32)
+    assert np.isfinite(z).all()
+    # embeddings l2-normalised per Algorithm 1 line 7
+    np.testing.assert_allclose(np.linalg.norm(z, axis=1), 1.0, atol=1e-3)
+
+
+def test_sampling_through_pipeline_prefetch():
+    """GraphBatchPipeline overlaps sampling with training."""
+    from repro.data import GraphBatchPipeline
+    g = synthetic_ahg(800, avg_degree=5, seed=1)
+    store = build_store(g, 2)
+    spec = make_gnn("graphsage", d_in=g.vertex_attr_table.shape[1],
+                    d_hidden=16, d_out=16, fanouts=(4, 3))
+    tr = GNNTrainer(store, spec, lr=0.05, seed=0)
+    pipe = GraphBatchPipeline(tr, batch_size=16).iterator(depth=2)
+    for _ in range(3):
+        plan_s, plan_d, plan_n = next(pipe)
+        tr.params, loss = tr._step(tr.params, plan_s, plan_d, plan_n)
+        assert np.isfinite(float(loss))
+    pipe.close()
+
+
+def test_lm_train_loop_with_restart(tmp_path):
+    """LM smoke train via the production driver, surviving a failure."""
+    from repro.launch.train import train_loop
+    r = train_loop("qwen2-0.5b", smoke=True, steps=12, batch=2, seq=16,
+                   ckpt_dir=str(tmp_path), ckpt_every=4, fail_at=(7,))
+    assert r.restarts == 1
+    assert r.final_step == 12
+    # 12 steps is far too few for a reliable loss-decrease check (that is
+    # examples/lm_train_smoke.py's job at 400 steps) — this test guards the
+    # failure/restart machinery
+    assert all(np.isfinite(r.losses))
+    assert len(r.losses) == 12
+
+
+def test_serve_continuous_batching():
+    from repro.launch.serve import Request, Server
+    rng = np.random.default_rng(0)
+    server = Server("qwen2-0.5b", smoke=True, slots=2, max_seq=32)
+    reqs = [Request(rid=i, prompt=rng.integers(1, 100, 4).astype(np.int32),
+                    max_new=4) for i in range(3)]
+    done = server.run(reqs)
+    assert all(r.done for r in done)
+    assert all(len(r.out) >= 4 for r in done)
+
+
+def test_gnn_arch_smoke_step():
+    """aligraph-gnn config: device step over the sharded table (tiny)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.aligraph_gnn import (param_shapes, plan_shapes,
+                                            smoke_config, train_step)
+    cfg = smoke_config()
+    rng = np.random.default_rng(0)
+    params = {k: jnp.asarray(rng.standard_normal(shape) * 0.1, dtype)
+              for k, (shape, dtype) in param_shapes(cfg).items()}
+    n0, n1, n2 = cfg.level_sizes
+    plan = {}
+    for k, (shape, dtype) in plan_shapes(cfg).items():
+        if dtype == "int32":
+            hi = cfg.n_vertices if k.startswith("lvl") else (
+                n1 if k.endswith("0") else n2)
+            plan[k] = jnp.asarray(rng.integers(0, hi, shape), jnp.int32)
+        else:
+            plan[k] = jnp.ones(shape, jnp.float32)
+    step = jax.jit(train_step(cfg))
+    params2, loss = step(params, plan)
+    assert np.isfinite(float(loss))
+    _, l2 = step(params2, plan)
+    assert float(l2) < float(loss)      # SGD on same batch reduces loss
