@@ -5,6 +5,11 @@ Fig 9: importance caching saves 40-50% vs random / 50-60% vs LRU at equal
 budget.  Cost model: local/cached reads are RAM-speed, remote reads pay the
 measured cross-shard path; we report both the remote-read fraction and the
 simulated wall time (remote = 50us RPC, the paper-era intra-DC latency).
+
+The access pattern is the production one: each round is a GQL query
+``G(store).V(ids=seeds).sample(10).sample(5)`` — i.e. the deduped
+MinibatchPlan build that training/serving actually run, whose storage reads
+walk the local/cache/remote path and bump the per-shard counters.
 """
 from __future__ import annotations
 
@@ -17,11 +22,11 @@ LOCAL_US = 0.5
 
 
 def run() -> None:
-    from repro.core.cache import (importance_cache_plan_at_rate, plan_cache,
-                                  random_cache_plan)
+    from repro.api import G
+    from repro.core.cache import (LRUCache, importance_cache_plan_at_rate,
+                                  plan_cache, random_cache_plan)
     from repro.core.graph import synthetic_ahg
     from repro.core.partition import partition_graph
-    from repro.core.sampling import NeighborhoodSampler
     from repro.core.storage import DistributedGraphStore
 
     g = synthetic_ahg(50_000, avg_degree=8, seed=1)
@@ -42,11 +47,25 @@ def run() -> None:
     rounds = [rng.integers(0, g.n, 512).astype(np.int32)
               for _ in range(n_rounds)]
 
+    def run_rounds(store):
+        """One GQL plan-build per round; returns the per-round stream of
+        adjacency-row READS the build performed (per unique vertex of each
+        expanded level — the deepest level is gathered as features only,
+        never row-read), so the LRU replay below pays for exactly the same
+        accesses the importance/random stores were charged for."""
+        ex = G(store).V(ids=rounds[0]).sample(10).sample(5).executor(seed=2)
+        streams = []
+        for seeds in rounds:
+            mb = (G(store).V(ids=seeds).sample(10).sample(5)
+                  .values(executor=ex, pad=None))
+            plan = mb.plans["seeds"]
+            streams.append(np.concatenate(
+                [np.unique(seeds)] + plan.levels[1:-1]))
+        return streams
+
     def cost_of(plan, name):
         store = DistributedGraphStore(g, part, plan)
-        s = NeighborhoodSampler(store, seed=2)
-        for seeds in rounds:
-            s.sample(seeds, [10, 5])
+        run_rounds(store)
         st = store.stats()
         us = (st.local_reads + st.cache_reads) * LOCAL_US \
             + st.remote_reads * REMOTE_US
@@ -57,17 +76,14 @@ def run() -> None:
     for rate in (0.1, 0.2, 0.3):
         c_imp = cost_of(importance_cache_plan_at_rate(g, rate), f"cache_imp_{rate}")
         c_rnd = cost_of(random_cache_plan(g, rate, seed=5), f"cache_rand_{rate}")
-        # LRU at equal budget over the SAME rounds: warm on round 0, count
-        # misses (= remote fetch + replacement) from round 1 on
-        from repro.core.cache import LRUCache
+        # LRU at equal budget over the SAME query stream: warm on round 0,
+        # count misses (= remote fetch + replacement) from round 1 on
         store = DistributedGraphStore(
             g, part, random_cache_plan(g, 0.0001, seed=1))
-        s = NeighborhoodSampler(store, seed=2)
+        streams = run_rounds(store)
         lru = LRUCache(int(g.n * rate))
         remote = total = 0
-        for i, seeds in enumerate(rounds):
-            batch = s.sample(seeds, [10, 5])
-            stream = np.concatenate([batch.neighbors[0], batch.neighbors[1]])
+        for i, stream in enumerate(streams):
             for v in stream:
                 if lru.get(int(v)) is None:
                     lru.put(int(v), True)

@@ -10,10 +10,9 @@ from .common import emit, timeit
 
 
 def run() -> None:
-    from repro.core.gnn import GNNSpec, gnn_apply, init_gnn_params, plan_to_device
+    from repro.api import G
+    from repro.core.gnn import GNNSpec, gnn_apply, init_gnn_params
     from repro.core.graph import synthetic_ahg
-    from repro.core.operators import build_plan
-    from repro.core.sampling import NeighborhoodSampler
     from repro.core.storage import build_store
 
     g = synthetic_ahg(60_000, avg_degree=8, seed=3)
@@ -22,12 +21,15 @@ def run() -> None:
     spec = GNNSpec(k_max=2, dims=(d_in, 64, 64), fanouts=(10, 5))
     params = init_gnn_params(spec, 0)
     feats = jnp.asarray(store.dense_features())
-    sampler = NeighborhoodSampler(store, seed=0)
     seeds = np.random.default_rng(0).integers(0, g.n, 512).astype(np.int32)
 
-    plan_d = build_plan(sampler, seeds, spec.fanouts, dedup=True)
-    plan_n = build_plan(sampler, seeds, spec.fanouts, dedup=False)
-    dd, nn = plan_to_device(plan_d), plan_to_device(plan_n)
+    # one GQL query compiled twice: with and without the paper's h^(k)
+    # materialisation (dedup) — the Table 5 comparison
+    query = G(store).V(ids=seeds).sample(10).sample(5)
+    mb_d = query.values(seed=0, dedup=True, pad=None)
+    mb_n = query.values(seed=0, dedup=False, pad=None)
+    plan_d, plan_n = mb_d.plans["seeds"], mb_n.plans["seeds"]
+    dd, nn = mb_d.device["seeds"], mb_n.device["seeds"]
 
     f_d = jax.jit(lambda p, pl: gnn_apply(spec, p, pl, feats))
     us_d = timeit(lambda: jax.block_until_ready(f_d(params, dd)))

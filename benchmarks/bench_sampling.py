@@ -1,34 +1,76 @@
 """Paper Table 4: TRAVERSE / NEIGHBORHOOD / NEGATIVE latency, batch 512,
-cache rate ~20%, and its scaling with graph size (small vs large)."""
+cache rate ~20%, and its scaling with graph size (small vs large).
+
+Sampling is driven through the GQL query surface (``repro.api.G``) — the
+same path trainers/serving use.  The NEIGHBORHOOD rows additionally compare
+the per-vertex Python inner loop against the vectorised bucket-level gather
+(uniform case) and record the before/after into ``BENCH_sampling.json``.
+"""
 from __future__ import annotations
+
+import json
+import os
 
 import numpy as np
 
 from .common import emit, timeit
 
+_BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
+                           "BENCH_sampling.json")
+
 
 def run() -> None:
+    from repro.api import G
     from repro.core.graph import synthetic_ahg
-    from repro.core.sampling import (NegativeSampler, NeighborhoodSampler,
-                                     TraverseSampler)
+    from repro.core.sampling import NeighborhoodSampler
     from repro.core.storage import build_store
 
+    vec_record = {}
     for label, n in (("small", 30_000), ("large", 180_000)):
         g = synthetic_ahg(n, avg_degree=8, seed=2)
         store = build_store(g, 8, thresholds={1: 0.2, 2: 0.2})
-        trav = TraverseSampler(store, seed=0)
-        neigh = NeighborhoodSampler(store, seed=1)
-        neg = NegativeSampler(store, seed=2)
         rng = np.random.default_rng(0)
         seeds = rng.integers(0, g.n, 512).astype(np.int32)
+        cache_rate = store.cache_plan.cache_rate
 
-        emit(f"traverse_{label}", timeit(lambda: trav.sample(512)),
-             f"n={n};batch=512")
-        emit(f"neighborhood_{label}",
-             timeit(lambda: neigh.sample(seeds, [10, 5]), repeats=3),
-             f"n={n};fanouts=10x5;cache_rate={store.cache_plan.cache_rate:.3f}")
-        emit(f"negative_{label}", timeit(lambda: neg.sample(seeds, 5)),
+        # TRAVERSE: a batch-only query (no hops -> no plan building)
+        q_trav = G(store).V().batch(512)
+        ex = q_trav.executor(seed=0)
+        emit(f"traverse_{label}",
+             timeit(lambda: q_trav.values(executor=ex)),
+             f"n={n};batch=512;via=GQL")
+
+        # NEIGHBORHOOD: per-row Python loop (legacy) vs vectorised buckets
+        loop = NeighborhoodSampler(store, seed=1, vectorized=False)
+        vec = NeighborhoodSampler(store, seed=1, vectorized=True)
+        us_loop = timeit(lambda: loop.sample(seeds, [10, 5]), repeats=3)
+        us_vec = timeit(lambda: vec.sample(seeds, [10, 5]), repeats=3)
+        emit(f"neighborhood_{label}_loop", us_loop,
+             f"n={n};fanouts=10x5;cache_rate={cache_rate:.3f}")
+        emit(f"neighborhood_{label}_vectorized", us_vec,
+             f"n={n};fanouts=10x5;cache_rate={cache_rate:.3f};"
+             f"speedup={us_loop / max(us_vec, 1e-9):.2f}x")
+        vec_record[label] = {
+            "n": n, "batch": 512, "fanouts": [10, 5],
+            "loop_us": round(us_loop, 1), "vectorized_us": round(us_vec, 1),
+            "speedup": round(us_loop / max(us_vec, 1e-9), 2),
+        }
+
+        # NEGATIVE + the full pipeline as one query (TRAVERSE ids ->
+        # NEIGHBORHOOD hops -> NEGATIVE table), dedup plan included
+        q_full = G(store).V(ids=seeds).sample(10).sample(5).negative(5)
+        ex_full = q_full.executor(seed=2)
+        emit(f"negative_{label}",
+             timeit(lambda: ex_full.negative.sample(seeds, 5)),
              f"n={n};q=5")
+        emit(f"query_pipeline_{label}",
+             timeit(lambda: q_full.values(executor=ex_full, pad=None),
+                    repeats=3),
+             f"n={n};V(ids).sample(10).sample(5).negative(5);dedup=True")
+
+    with open(_BENCH_JSON, "w") as f:
+        json.dump({"neighborhood_vectorization": vec_record}, f, indent=2)
+        f.write("\n")
 
 
 if __name__ == "__main__":

@@ -1,24 +1,29 @@
 """Quickstart — the AliGraph stack end-to-end in miniature.
 
-Walks the paper's three system layers (storage -> sampling -> operators) and
-one algorithm (GraphSAGE, Algorithm 1), on a synthetic attributed
-heterogeneous graph small enough to run in ~a minute on CPU:
+Walks the paper's three system layers (storage -> sampling -> operators)
+through **GQL**, the Gremlin-style query surface (`repro.api.G`) that
+compiles declarative chains into the storage/sampling/operator pipeline,
+then trains one algorithm (GraphSAGE, Algorithm 1) on a synthetic
+attributed heterogeneous graph small enough to run in ~a minute on CPU:
 
   1. build an AHG (2 vertex types, 4 edge types, power-law degrees),
   2. partition it across 4 simulated workers + plan the importance cache
      (Imp^(k) = D_i/D_o, paper Eq. 1 / Thm 2),
-  3. draw TRAVERSE / NEIGHBORHOOD / NEGATIVE samples,
-  4. train GraphSAGE with the unsupervised skip-gram loss,
+  3. express TRAVERSE / NEIGHBORHOOD / NEGATIVE sampling as ONE query:
+         G(store).V().batch(512).sample(10).sample(5).negative(5)
+     — the chain compiles to a validated TraversalPlan, runs through the
+     registered samplers, and returns deduped + padded MinibatchPlans,
+  4. train GraphSAGE with the unsupervised skip-gram loss (the trainer
+     iterates the same query as a prefetched Dataset),
   5. score held-out links (AUC proxy).
 
-Run:  PYTHONPATH=src python examples/quickstart.py
+Run:  python examples/quickstart.py        (PYTHONPATH=src if not installed)
 """
 import numpy as np
 
+from repro.api import G
 from repro.core import build_store, make_gnn, synthetic_ahg
 from repro.core.gnn import GNNTrainer
-from repro.core.sampling import (NegativeSampler, NeighborhoodSampler,
-                                 TraverseSampler)
 
 
 def main():
@@ -34,21 +39,40 @@ def main():
           f"importance-cached vertices: {store.cache_plan.cache_rate:.1%} "
           f"(tau=0.2 — the paper's Fig 8 knee)")
 
-    # ------------------------------------------- 3. sampling layer (paper §3.3)
-    trav = TraverseSampler(store, seed=0)
-    nbr = NeighborhoodSampler(store, seed=1)
-    neg = NegativeSampler(store, seed=2)
-    seeds = trav.sample(512, mode="vertex")
-    batch = nbr.sample(seeds, fanouts=(10, 5))
-    negs = neg.sample(seeds, 5)
-    print(f"[sampling] TRAVERSE 512 seeds; NEIGHBORHOOD hops "
-          f"{[h.shape for h in batch.neighbors]} "
-          f"(fill {batch.masks[0].mean():.2f}); NEGATIVE {negs.shape}")
+    # -------------------------------------- 3. sampling layer via GQL (§3.3)
+    # One chain = TRAVERSE (V().batch) -> NEIGHBORHOOD (.sample per hop) ->
+    # NEGATIVE (.negative); .values() compiles it to a validated
+    # TraversalPlan and executes against the registered samplers.
+    mb = (G(store, vertex_types={"user": 1, "item": 0})
+          .V().batch(512)
+          .sample(10).sample(5)
+          .negative(5)
+          .values(seed=0))
+    plan = mb.plans["seeds"]
+    print(f"[GQL]     G(store).V().batch(512).sample(10).sample(5).negative(5)"
+          f"\n          -> seeds {mb.roles['seeds'].shape}, negatives "
+          f"{mb.negatives.shape}, dedup plan levels "
+          f"{[len(l) for l in plan.levels]} "
+          f"(vs naive {512 * (1 + 10 + 50)} vertex computations)")
+
+    # typed sub-queries work the same way: seed only "user" vertices and
+    # follow only type-0 edges out of them
+    edges = (G(store, vertex_types={"user": 1, "item": 0})
+             .V(vtype="user").batch(64).out_edges(etype=0)
+             .values(seed=0))
+    srctype = g.vertex_type[edges.edges[:, 0]]
+    print(f"[GQL]     .V(vtype='user').out_edges(etype=0) -> {edges.edges.shape} "
+          f"edges, all src type user: {bool((srctype == 1).all())}")
 
     # ------------------------------- 4. operators + algorithm (paper §3.4/§4.1)
+    # GNNTrainer drives the SAME query surface internally:
+    # G(store).E().batch(b).sample(10).sample(5).negative(5) iterated as a
+    # Dataset with double-buffered prefetch (host sampling overlaps the
+    # jitted device step).
     spec = make_gnn("graphsage", d_in=g.vertex_attr_table.shape[1],
                     d_hidden=64, d_out=64)
     tr = GNNTrainer(store, spec, lr=0.05, seed=0)
+    print(f"[train]   query: {tr.train_query(128).compile()}")
     losses = tr.train(60, batch_size=128)
     print(f"[train]   60 steps: loss {losses[0]:.3f} -> {losses[-1]:.3f}")
 

@@ -19,9 +19,9 @@ import time
 import jax
 import numpy as np
 
+from repro.api import G
 from repro.core import build_store, make_gnn, synthetic_ahg
-from repro.core.gnn import GNNTrainer, gnn_apply, plan_to_device
-from repro.core.operators import build_plan, pad_plan
+from repro.core.gnn import GNNTrainer, gnn_apply
 
 BATCH = 128
 N_REQ = 60
@@ -40,12 +40,15 @@ def main():
     print(f"[model] trained GraphSAGE {spec.dims}, importance-cache rate "
           f"{store.cache_plan.cache_rate:.1%}")
 
-    params, features, nbr = tr.params, tr.features, tr.neighborhood
+    params, features = tr.params, tr.features
     serve = jax.jit(lambda pl: gnn_apply(spec, params, pl, features))
 
     def request(vids: np.ndarray) -> np.ndarray:
-        plan = pad_plan(build_plan(nbr, vids, spec.fanouts), PAD_LEVELS)
-        return serve(plan_to_device(plan))
+        """A serving request is one GQL query: pin the requested ids, expand
+        the 2-hop neighborhood, pad to the static jit shape buckets."""
+        mb = (G(store).V(ids=vids).sample(8).sample(4)
+              .values(executor=tr.executor, pad=PAD_LEVELS))
+        return serve(mb.device["seeds"])
 
     _ = request(np.zeros(BATCH, np.int32)).block_until_ready()   # warmup
 

@@ -25,19 +25,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import G as gql
 from repro.checkpoint import CheckpointManager
 from repro.configs import aligraph_gnn as G
 from repro.core import build_store, synthetic_ahg
-from repro.core.operators import build_plan, pad_plan
-from repro.core.sampling import (NegativeSampler, NeighborhoodSampler,
-                                 TraverseSampler)
 from repro.ft import FailureInjector, Supervisor
 
 
-def device_plan(cfg, nbr, seeds: np.ndarray):
-    """Host MinibatchPlan -> the static-shape device plan dict."""
-    n0, n1, n2 = cfg.level_sizes
-    plan = pad_plan(build_plan(nbr, seeds, cfg.fanouts), [n0, n1, n2])
+def to_device_plan(plan):
+    """Host MinibatchPlan (from a GQL query) -> the config's device dict."""
     return {
         "lvl2": jnp.asarray(plan.levels[2]),
         "child0": jnp.asarray(plan.child_idx[0]),
@@ -71,9 +67,12 @@ def main():
     print(f"[model] trainable params: {n_params/1e6:.1f}M "
           f"(table {g.n:,} x {cfg.d_in} + 2 GraphSAGE layers)")
 
-    trav = TraverseSampler(store, seed=0)
-    nbr = NeighborhoodSampler(store, seed=1)
-    neg = NegativeSampler(store, seed=2)
+    # GQL: one edge-source query produces the joint src‖dst‖neg plan the
+    # device step consumes; the executor holds persistent sampler state
+    train_q = (gql(store).E().batch(args.batch)
+               .sample(cfg.fanouts[0]).sample(cfg.fanouts[1])
+               .negative(cfg.n_negatives).joint())
+    qexec = train_q.executor(seed=0)
 
     # --------------------------------------------------------------- device
     rng = np.random.default_rng(0)
@@ -94,11 +93,8 @@ def main():
     step_jit = jax.jit(G.train_step(cfg, lr=0.05))
 
     def make_batch_plan():
-        edges = trav.sample(args.batch, mode="edge")
-        src, dst = edges[:, 0], edges[:, 1]
-        negs = neg.sample(src, cfg.n_negatives, avoid=dst).reshape(-1)
-        seeds = np.concatenate([src, dst, negs]).astype(np.int32)
-        return device_plan(cfg, nbr, seeds)
+        mb = train_q.values(executor=qexec, pad=list(cfg.level_sizes))
+        return to_device_plan(mb.plans["joint"])
 
     # --------------------------------------------------- resilient train loop
     ckpt = CheckpointManager(args.ckpt_dir, max_to_keep=2)
@@ -126,9 +122,12 @@ def main():
     fwd = jax.jit(lambda p, plan: G.forward(cfg, p, plan))
 
     def embed(v):
-        plan = device_plan(cfg, nbr, np.asarray(v, np.int32).repeat(
-            (cfg.level_sizes[0] // len(v)) + 1)[: cfg.level_sizes[0]])
-        return np.asarray(fwd(params, plan))[: len(v)]
+        ids = np.asarray(v, np.int32).repeat(
+            (cfg.level_sizes[0] // len(v)) + 1)[: cfg.level_sizes[0]]
+        mb = (gql(store).V(ids=ids)
+              .sample(cfg.fanouts[0]).sample(cfg.fanouts[1])
+              .values(executor=qexec, pad=list(cfg.level_sizes)))
+        return np.asarray(fwd(params, to_device_plan(mb.plans["seeds"])))[: len(v)]
 
     z_s = embed(src_all[idx])
     z_d = embed(dst_all[idx])

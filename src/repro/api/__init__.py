@@ -1,0 +1,17 @@
+"""repro.api — GQL, the declarative query surface over the AliGraph stack.
+
+``G(store)`` opens a Gremlin-style chain that compiles to the storage →
+sampling → operator pipeline; see :mod:`repro.api.query` for the DSL and
+:mod:`repro.api.dataset` for epoch/prefetch iteration.  This package is the
+single front-end future scenario work (metapath queries, streaming updates,
+serving) extends.
+"""
+from .dataset import Dataset  # noqa: F401
+from .engine import Minibatch, QueryExecutor, execute  # noqa: F401
+from .plan import QueryValidationError, TraversalPlan  # noqa: F401
+from .query import G, Query  # noqa: F401
+
+__all__ = [
+    "G", "Query", "TraversalPlan", "QueryValidationError",
+    "QueryExecutor", "Minibatch", "execute", "Dataset",
+]

@@ -1,0 +1,130 @@
+"""GQL datasets — iterable minibatch streams with epoch + prefetch semantics.
+
+A :class:`Dataset` is a compiled query iterated ``steps_per_epoch`` times
+per epoch.  Two execution modes:
+
+  * **unbound** (default): every epoch gets a fresh, deterministically
+    seeded :class:`QueryExecutor` (``seed + 7919 * epoch``) — iterating the
+    dataset twice replays the exact same batches, epoch by epoch.
+  * **bound** (``executor=...``): batches continue the given executor's RNG
+    state — the training-loop semantics where every call sees fresh data.
+
+Prefetch is a double buffer by default (``prefetch=2``): a producer thread
+runs the host-side storage→sampling→plan pipeline for batch ``i+1`` while
+the consumer's jitted device step chews on batch ``i`` — the paper §3.1
+pipelined runtime on one host.  ``prefetch=0`` degrades to synchronous
+iteration; the batch stream is identical either way (single ordered
+producer).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Iterator, Optional, Sequence, Union
+
+import numpy as np
+
+from .engine import Minibatch, QueryExecutor, execute
+from .plan import QueryValidationError, TraversalPlan
+
+__all__ = ["Dataset"]
+
+_EPOCH_SEED_STRIDE = 7919     # keeps per-epoch sampler seeds well separated
+_SENTINEL = object()
+
+
+class Dataset:
+    """Iterable of :class:`Minibatch` over a compiled query."""
+
+    def __init__(self, store, plan: TraversalPlan, *,
+                 steps_per_epoch: Optional[int] = None, epochs: int = 1,
+                 seed: int = 0, prefetch: int = 2,
+                 pad: Union[str, None, Sequence[int]] = "auto",
+                 dedup: bool = True,
+                 executor: Optional[QueryExecutor] = None):
+        self.store = store
+        self.plan = plan
+        self.epochs = int(epochs)
+        self.seed = int(seed)
+        self.prefetch = int(prefetch)
+        self.pad = pad
+        self.dedup = dedup
+        self.executor = executor
+        if plan.chunked:
+            # explicit ids + batch: sequential fixed-size chunks over the ids
+            n_chunks = -(-len(plan.ids) // plan.batch_size)
+            if steps_per_epoch is not None and steps_per_epoch != n_chunks:
+                raise QueryValidationError(
+                    f"chunked query covers its ids in {n_chunks} steps; "
+                    f"omit steps_per_epoch (got {steps_per_epoch})")
+            self.steps_per_epoch = n_chunks
+        else:
+            if steps_per_epoch is None:
+                raise QueryValidationError(
+                    "dataset(steps_per_epoch=...) is required unless the "
+                    "query fixes V(ids=...).batch(n) chunks")
+            self.steps_per_epoch = int(steps_per_epoch)
+
+    def __len__(self) -> int:
+        return self.steps_per_epoch * self.epochs
+
+    # -- producers ---------------------------------------------------------
+    def _epoch_executor(self, epoch: int) -> QueryExecutor:
+        if self.executor is not None:
+            return self.executor
+        return QueryExecutor.for_plan(
+            self.store, self.plan, seed=self.seed + _EPOCH_SEED_STRIDE * epoch)
+
+    def _step_plan(self, step: int) -> TraversalPlan:
+        if not self.plan.chunked:
+            return self.plan
+        b = self.plan.batch_size
+        chunk = self.plan.ids[step * b:(step + 1) * b]
+        return dataclasses.replace(self.plan, ids=chunk, batch_size=None)
+
+    def _iter_sync(self) -> Iterator[Minibatch]:
+        for epoch in range(self.epochs):
+            ex = self._epoch_executor(epoch)
+            for step in range(self.steps_per_epoch):
+                yield execute(self._step_plan(step), ex,
+                              dedup=self.dedup, pad=self.pad)
+
+    # -- double-buffered prefetch -----------------------------------------
+    def __iter__(self) -> Iterator[Minibatch]:
+        if self.prefetch <= 0:
+            yield from self._iter_sync()
+            return
+        q: "queue.Queue" = queue.Queue(maxsize=self.prefetch)
+        stop = threading.Event()
+
+        def put_or_stop(item) -> bool:
+            while not stop.is_set():
+                try:
+                    q.put(item, timeout=0.1)
+                    return True
+                except queue.Full:
+                    continue
+            return False                 # consumer abandoned iteration
+
+        def feed():
+            try:
+                for mb in self._iter_sync():
+                    if not put_or_stop(mb):
+                        return
+                put_or_stop(_SENTINEL)
+            except BaseException as e:   # surface producer errors to consumer
+                put_or_stop(e)
+
+        t = threading.Thread(target=feed, daemon=True)
+        t.start()
+        try:
+            while True:
+                item = q.get()
+                if item is _SENTINEL:
+                    break
+                if isinstance(item, BaseException):
+                    raise item
+                yield item
+        finally:
+            stop.set()

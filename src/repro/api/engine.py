@@ -1,0 +1,210 @@
+"""GQL execution — compiled TraversalPlans run against the sampler layer.
+
+The executor owns one instance of each registered sampler (resolved through
+``core.sampling.SAMPLERS``, so plugin samplers slot in transparently) and
+turns a :class:`TraversalPlan` into a :class:`Minibatch`: seed arrays per
+role, deduped :class:`MinibatchPlan`\\ s via ``operators.build_plan``, and
+ready-to-jit device pytrees.
+
+Seeding convention (shared with the legacy ``GNNTrainer`` hand-wired path,
+which is what makes query→plan compilation *byte-identical* to the old
+code under a fixed seed): traverse = ``seed``, neighborhood = ``seed+1``,
+negative = ``seed+2``, and plans are built in src → dst → neg order.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.core import operators as ops
+from repro.core.operators import MinibatchPlan, build_plan, plan_to_device
+from repro.core.sampling import SAMPLERS
+
+from .plan import QueryValidationError, TraversalPlan
+
+__all__ = ["QueryExecutor", "Minibatch", "execute"]
+
+PadSpec = Union[str, None, Sequence[int]]
+
+
+@dataclasses.dataclass
+class Minibatch:
+    """One executed query: the unit a training/serving step consumes.
+
+    ``roles`` maps role name → seed vertex ids.  Vertex queries produce
+    ``{"seeds"}`` (+``"neg"`` with a .negative step); edge queries produce
+    ``{"src", "dst"}`` (+``"neg"``), or ``{"joint"}`` when the query was
+    compiled with .joint().  ``plans``/``device`` hold the per-role
+    MinibatchPlan and its jnp pytree (empty when the query has no .sample
+    hops — a pure TRAVERSE/NEGATIVE query).
+    """
+
+    roles: Dict[str, np.ndarray]
+    plans: Dict[str, MinibatchPlan]
+    device: Dict[str, Dict]
+    edges: Optional[np.ndarray] = None          # [B, 2] for edge queries
+    negatives: Optional[np.ndarray] = None      # [B, Q]
+
+    def __getitem__(self, role: str) -> Dict:
+        return self.device[role]
+
+
+class QueryExecutor:
+    """Holds the sampler triple a query (or a stream of queries) runs on.
+
+    Reusing one executor across calls continues the samplers' RNG state —
+    the semantics of a training loop drawing fresh batches.  Fresh executors
+    (``QueryExecutor.for_plan`` / ``Query.values(seed=...)``) give the
+    reproducible one-shot semantics.
+    """
+
+    def __init__(self, store, *, strategy: str = "uniform",
+                 neg_alpha: float = 0.75, seed: int = 0,
+                 per_type_negatives: bool = False):
+        self.store = store
+        self.strategy = strategy
+        self.neg_alpha = neg_alpha
+        self.seed = seed
+        self.traverse = SAMPLERS["traverse"](store, seed=seed)
+        self.neighborhood = SAMPLERS["neighborhood"](
+            store, weighted=(strategy == "edge_weight"), seed=seed + 1)
+        self.negative = SAMPLERS["negative"](
+            store, alpha=neg_alpha, per_type=per_type_negatives, seed=seed + 2)
+        # typed-filter pools are deterministic per store: compute once per
+        # (vtype)/(etype, vtype) key, not O(n)/O(m) per minibatch
+        self._vertex_pools: Dict = {}
+        self._edge_pools: Dict = {}
+
+    @classmethod
+    def for_plan(cls, store, plan: TraversalPlan, *, seed: int = 0
+                 ) -> "QueryExecutor":
+        return cls(store, strategy=plan.strategy, neg_alpha=plan.neg_alpha,
+                   seed=seed)
+
+    def check_compatible(self, plan: TraversalPlan) -> None:
+        if plan.fanouts and plan.strategy != self.strategy:
+            raise QueryValidationError(
+                f"query strategy {plan.strategy!r} does not match this "
+                f"executor's sampler ({self.strategy!r})")
+        if plan.n_negatives and plan.neg_alpha != self.neg_alpha:
+            raise QueryValidationError(
+                f"query negative alpha {plan.neg_alpha} does not match this "
+                f"executor's table ({self.neg_alpha})")
+
+
+# ---------------------------------------------------------------------------
+# Seed-stage helpers
+# ---------------------------------------------------------------------------
+
+def _typed_vertex_batch(ex: QueryExecutor, batch: int, vtype: int) -> np.ndarray:
+    g = ex.store.graph
+    pool = ex._vertex_pools.get(vtype)
+    if pool is None:
+        pool = np.nonzero(g.vertex_type == vtype)[0].astype(np.int32)
+        ex._vertex_pools[vtype] = pool
+    if len(pool) == 0:
+        raise QueryValidationError(f"no vertices of vtype={vtype}")
+    return pool[ex.traverse.rng.integers(0, len(pool), size=batch)]
+
+
+def _filtered_edge_batch(ex: QueryExecutor, batch: int,
+                         etype: Optional[int], vtype: Optional[int]
+                         ) -> np.ndarray:
+    """Edge TRAVERSE with a source-vertex-type filter (the .V().out_edges()
+    form); the plain .E() form goes through the sampler directly."""
+    g = ex.store.graph
+    pools = ex._edge_pools.get((etype, vtype))
+    if pools is None:
+        src, dst = g.edge_list()
+        keep = np.ones(g.m, bool)
+        if etype is not None:
+            keep &= g.edge_type == etype
+        if vtype is not None:
+            keep &= g.vertex_type[src] == vtype
+        pools = (src[keep], dst[keep])
+        ex._edge_pools[(etype, vtype)] = pools
+    src, dst = pools
+    if len(src) == 0:
+        raise QueryValidationError(
+            f"no edges match etype={etype}, src vtype={vtype}")
+    idx = ex.traverse.rng.integers(0, len(src), size=batch)
+    return np.stack([src[idx], dst[idx]], axis=1).astype(np.int32)
+
+
+def _pad_for_role(pad: PadSpec, role: str, n_negatives: int
+                  ) -> Union[str, None, List[int]]:
+    if pad is None or pad == "auto":
+        return pad
+    scale = n_negatives if role == "neg" else 1
+    return [int(x) * scale for x in pad]
+
+
+# ---------------------------------------------------------------------------
+# Execution
+# ---------------------------------------------------------------------------
+
+def execute(plan: TraversalPlan, executor: QueryExecutor, *,
+            dedup: bool = True, pad: PadSpec = "auto",
+            to_device: bool = True) -> Minibatch:
+    """Run one compiled query: TRAVERSE → NEGATIVE → per-role build_plan."""
+    executor.check_compatible(plan)
+    if plan.chunked:
+        raise QueryValidationError(
+            "V(ids=...).batch(n) is a chunked query — iterate it with "
+            ".dataset(), or drop .batch() for a single pass")
+
+    roles: Dict[str, np.ndarray] = {}
+    edges = negatives = None
+    if plan.source == "vertex":
+        if plan.ids is not None:
+            seeds = plan.ids
+        elif plan.vtype is not None:
+            seeds = _typed_vertex_batch(executor, plan.batch_size, plan.vtype)
+        else:
+            seeds = executor.traverse.sample(plan.batch_size, mode="vertex")
+        if plan.n_negatives:
+            negatives = executor.negative.sample(seeds, plan.n_negatives)
+            roles["seeds"] = seeds
+            roles["neg"] = negatives.reshape(-1)
+        else:
+            roles["seeds"] = seeds
+    else:
+        if plan.vtype is not None:
+            edges = _filtered_edge_batch(executor, plan.batch_size,
+                                         plan.etype, plan.vtype)
+        else:
+            edges = executor.traverse.sample(plan.batch_size, mode="edge",
+                                             edge_type=plan.etype)
+        src, dst = edges[:, 0], edges[:, 1]
+        if plan.n_negatives:
+            # negatives avoid the observed positive (skip-gram convention)
+            negatives = executor.negative.sample(src, plan.n_negatives,
+                                                 avoid=dst)
+        if plan.joint:
+            parts = [src, dst]
+            if negatives is not None:
+                parts.append(negatives.reshape(-1))
+            roles["joint"] = np.concatenate(parts).astype(np.int32)
+        else:
+            roles["src"], roles["dst"] = src, dst
+            if negatives is not None:
+                roles["neg"] = negatives.reshape(-1)
+
+    plans: Dict[str, MinibatchPlan] = {}
+    device: Dict[str, Dict] = {}
+    if plan.fanouts:
+        for role, seeds in roles.items():
+            p = build_plan(executor.neighborhood, seeds, plan.fanouts,
+                           dedup=dedup)
+            rp = _pad_for_role(pad, role, plan.n_negatives)
+            if rp == "auto":
+                p = ops.pad_plan(p, ops.auto_pad_sizes(p))
+            elif rp is not None:
+                p = ops.pad_plan(p, rp)
+            plans[role] = p
+            if to_device:
+                device[role] = plan_to_device(p)
+    return Minibatch(roles=roles, plans=plans, device=device,
+                     edges=edges, negatives=negatives)

@@ -1,0 +1,241 @@
+"""GQL logical plans — the validated middle layer of the query pipeline.
+
+A chained :class:`repro.api.query.Query` is a list of AST step nodes; this
+module checks the chain against the bound store's schema (type ranges,
+step ordering, strategy consistency) and lowers it to a single immutable
+:class:`TraversalPlan` — the unit the executor runs.  Keeping the plan
+separate from the fluent builder mirrors the paper's Fig 5 split between
+the declarative front-end and the storage/sampling back-end: everything
+after this point is plain data, inspectable and replayable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+__all__ = [
+    "QueryValidationError", "TraversalPlan", "compile_steps",
+    "SourceV", "SourceE", "Batch", "OutEdges", "Sample", "Negative", "Joint",
+    "STRATEGIES",
+]
+
+STRATEGIES = ("uniform", "edge_weight")
+
+
+class QueryValidationError(ValueError):
+    """A query chain that cannot compile to a valid TraversalPlan."""
+
+
+# ---------------------------------------------------------------------------
+# AST nodes (one dataclass per chain step)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SourceV:
+    vtype: Optional[Union[int, str]] = None
+    ids: Optional[Tuple[int, ...]] = None      # kept hashable; ndarray in plan
+
+
+@dataclasses.dataclass(frozen=True)
+class SourceE:
+    etype: Optional[Union[int, str]] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Batch:
+    size: int
+
+
+@dataclasses.dataclass(frozen=True)
+class OutEdges:
+    etype: Optional[Union[int, str]] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Sample:
+    fanout: int
+    strategy: Optional[str] = None             # None = inherit query default
+
+
+@dataclasses.dataclass(frozen=True)
+class Negative:
+    n: int
+    alpha: float = 0.75
+
+
+@dataclasses.dataclass(frozen=True)
+class Joint:
+    pass
+
+
+# ---------------------------------------------------------------------------
+# The validated logical plan
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TraversalPlan:
+    """What one compiled query means, independent of any RNG state.
+
+    ``source`` is "vertex" or "edge"; ``ids`` (explicit seed vertices)
+    and ``batch_size`` (TRAVERSE draw) configure the seed stage; both set
+    means *chunked* iteration (Dataset-only).  ``fanouts``/``strategy``
+    configure the NEIGHBORHOOD stage, ``n_negatives``/``neg_alpha`` the
+    NEGATIVE stage, and ``joint`` collapses src‖dst‖neg into one shared
+    MinibatchPlan (the e2e training layout).
+    """
+
+    source: str                                # "vertex" | "edge"
+    vtype: Optional[int] = None
+    etype: Optional[int] = None
+    ids: Optional[np.ndarray] = None
+    batch_size: Optional[int] = None
+    fanouts: Tuple[int, ...] = ()
+    strategy: str = "uniform"
+    n_negatives: int = 0
+    neg_alpha: float = 0.75
+    joint: bool = False
+
+    @property
+    def chunked(self) -> bool:
+        """Explicit ids + a batch size = iterate ids in fixed-size chunks."""
+        return self.ids is not None and self.batch_size is not None
+
+
+def _resolve_type(value, names: Optional[Dict[str, int]], n_types: int,
+                  kind: str) -> int:
+    map_arg = "vertex_types" if kind == "vtype" else "edge_types"
+    if isinstance(value, str):
+        if not names or value not in names:
+            known = sorted(names) if names else []
+            raise QueryValidationError(
+                f"unknown {kind} name {value!r}; bind names via "
+                f"G(store, {map_arg}={{name: id}}) (known: {known})")
+        value = names[value]
+    if not isinstance(value, (int, np.integer)) or isinstance(value, bool):
+        raise QueryValidationError(f"{kind} must be an int or bound name, "
+                                   f"got {value!r}")
+    if not 0 <= int(value) < n_types:
+        raise QueryValidationError(
+            f"{kind}={int(value)} out of range [0, {n_types})")
+    return int(value)
+
+
+def _check_count(value, what: str) -> int:
+    if not isinstance(value, (int, np.integer)) or isinstance(value, bool):
+        raise QueryValidationError(f"{what} must be an int, got {value!r}")
+    if int(value) < 1:
+        raise QueryValidationError(f"{what} must be >= 1, got {int(value)}")
+    return int(value)
+
+
+def compile_steps(store, steps: Sequence, *,
+                  vertex_types: Optional[Dict[str, int]] = None,
+                  edge_types: Optional[Dict[str, int]] = None
+                  ) -> TraversalPlan:
+    """Validate a step chain against ``store`` and lower it to a plan."""
+    g = store.graph
+    if not steps:
+        raise QueryValidationError("empty query: start with .V() or .E()")
+    if not isinstance(steps[0], (SourceV, SourceE)):
+        raise QueryValidationError(
+            f"query must start with .V() or .E(), got .{type(steps[0]).__name__}")
+
+    source = "vertex"
+    vtype: Optional[int] = None
+    etype: Optional[int] = None
+    ids: Optional[np.ndarray] = None
+    batch_size: Optional[int] = None
+    fanouts: list = []
+    strategies: set = set()
+    n_negatives = 0
+    neg_alpha = 0.75
+    joint = False
+
+    head = steps[0]
+    if isinstance(head, SourceV):
+        if head.vtype is not None:
+            vtype = _resolve_type(head.vtype, vertex_types,
+                                  g.n_vertex_types, "vtype")
+        if head.ids is not None:
+            ids = np.asarray(head.ids, np.int32)
+            if ids.ndim != 1:
+                raise QueryValidationError("V(ids=...) must be a 1-D id array")
+            if len(ids) and (ids.min() < 0 or ids.max() >= g.n):
+                raise QueryValidationError(
+                    f"V(ids=...) out of range [0, {g.n})")
+            if vtype is not None:
+                raise QueryValidationError(
+                    "V(vtype=..., ids=...) is ambiguous: explicit ids already "
+                    "fix the seed set")
+    else:
+        source = "edge"
+        if head.etype is not None:
+            etype = _resolve_type(head.etype, edge_types, g.n_edge_types,
+                                  "etype")
+
+    for step in steps[1:]:
+        if isinstance(step, (SourceV, SourceE)):
+            raise QueryValidationError("only one source step (.V/.E) allowed")
+        elif isinstance(step, Batch):
+            if batch_size is not None:
+                raise QueryValidationError("duplicate .batch() step")
+            if fanouts or n_negatives:
+                raise QueryValidationError(
+                    ".batch() must come before .sample()/.negative()")
+            batch_size = _check_count(step.size, "batch size")
+        elif isinstance(step, OutEdges):
+            if source == "edge":
+                raise QueryValidationError(
+                    ".out_edges() requires a vertex source (.V())")
+            if fanouts or n_negatives:
+                raise QueryValidationError(
+                    ".out_edges() must come before .sample()/.negative()")
+            if ids is not None:
+                raise QueryValidationError(
+                    ".out_edges() after V(ids=...) is not supported; "
+                    "use .E() or drop the explicit ids")
+            source = "edge"
+            if step.etype is not None:
+                etype = _resolve_type(step.etype, edge_types,
+                                      g.n_edge_types, "etype")
+        elif isinstance(step, Sample):
+            fanouts.append(_check_count(step.fanout, "sample fanout"))
+            if step.strategy is not None:
+                if step.strategy not in STRATEGIES:
+                    raise QueryValidationError(
+                        f"unknown sample strategy {step.strategy!r} "
+                        f"(known: {STRATEGIES})")
+                strategies.add(step.strategy)
+        elif isinstance(step, Negative):
+            if n_negatives:
+                raise QueryValidationError("duplicate .negative() step")
+            n_negatives = _check_count(step.n, "negative count")
+            if not (isinstance(step.alpha, (int, float))
+                    and float(step.alpha) > 0):
+                raise QueryValidationError(
+                    f"negative alpha must be > 0, got {step.alpha!r}")
+            neg_alpha = float(step.alpha)
+        elif isinstance(step, Joint):
+            joint = True
+        else:
+            raise QueryValidationError(f"unknown query step {step!r}")
+
+    if len(strategies) > 1:
+        raise QueryValidationError(
+            f"conflicting sample strategies {sorted(strategies)}: all hops of "
+            "a query share one NEIGHBORHOOD sampler")
+    if joint and source != "edge":
+        raise QueryValidationError(
+            ".joint() requires an edge-source query (it concatenates "
+            "src‖dst‖neg into one plan)")
+    if ids is None and batch_size is None:
+        raise QueryValidationError(
+            "query needs .batch(n) or explicit V(ids=...) seeds")
+
+    return TraversalPlan(
+        source=source, vtype=vtype, etype=etype, ids=ids,
+        batch_size=batch_size, fanouts=tuple(fanouts),
+        strategy=(strategies.pop() if strategies else "uniform"),
+        n_negatives=n_negatives, neg_alpha=neg_alpha, joint=joint)

@@ -1,0 +1,136 @@
+"""GQL — a Gremlin-style graph query/sampling DSL (paper §3, Fig 5).
+
+One chainable surface unifies the storage → sampling → operator pipeline
+that consumers used to hand-wire from ``TraverseSampler`` +
+``NeighborhoodSampler`` + ``NegativeSampler`` + ``build_plan`` + ``pad_plan``:
+
+    from repro.api import G
+
+    mb = (G(store, vertex_types={"user": 1, "item": 0})
+          .V(vtype="user").batch(64)
+          .out_edges(etype=0)
+          .sample(10, strategy="edge_weight").sample(5)
+          .negative(5, alpha=0.75)
+          .values())
+
+    mb.device["src"]      # jit-ready MinibatchPlan pytree per role
+
+Each chain method appends an AST node and returns a NEW query (queries are
+immutable and reusable).  Terminals:
+
+  * ``.compile()``  → validated :class:`TraversalPlan` (inspectable data)
+  * ``.values()``   → one executed :class:`Minibatch`
+  * ``.dataset()``  → :class:`Dataset` with seedable epochs and
+    double-buffered prefetch
+
+Compilation targets the *existing* machinery — the ``SAMPLERS`` registry
+(plugins work), ``operators.build_plan`` dedup, auto-padding — so a query
+is byte-identical to the hand-wired legacy path under a fixed seed.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from . import plan as _plan
+from .dataset import Dataset
+from .engine import Minibatch, QueryExecutor, execute
+from .plan import QueryValidationError, TraversalPlan, compile_steps
+
+__all__ = ["G", "Query"]
+
+PadSpec = Union[str, None, Sequence[int]]
+
+
+class Query:
+    """An immutable chain of GQL steps bound to a store."""
+
+    def __init__(self, store, steps: Tuple = (), *,
+                 vertex_types: Optional[Dict[str, int]] = None,
+                 edge_types: Optional[Dict[str, int]] = None):
+        self.store = store
+        self.steps = tuple(steps)
+        self.vertex_types = vertex_types
+        self.edge_types = edge_types
+
+    def _with(self, step) -> "Query":
+        return Query(self.store, self.steps + (step,),
+                     vertex_types=self.vertex_types,
+                     edge_types=self.edge_types)
+
+    # -- chain steps -------------------------------------------------------
+    def V(self, vtype: Optional[Union[int, str]] = None,
+          ids: Optional[np.ndarray] = None) -> "Query":
+        """Vertex source: TRAVERSE a batch (optionally typed), or pin
+        explicit seed ``ids``."""
+        return self._with(_plan.SourceV(
+            vtype=vtype, ids=None if ids is None else np.asarray(ids)))
+
+    def E(self, etype: Optional[Union[int, str]] = None) -> "Query":
+        """Edge source: TRAVERSE a batch of (src, dst) pairs."""
+        return self._with(_plan.SourceE(etype=etype))
+
+    def batch(self, size: int) -> "Query":
+        """Seed batch size for the TRAVERSE stage."""
+        return self._with(_plan.Batch(size=size))
+
+    def out_edges(self, etype: Optional[Union[int, str]] = None) -> "Query":
+        """Convert a vertex source to its outgoing edges (Gremlin ``outE``):
+        seeds become (src, dst) pairs whose src respects the .V() filter."""
+        return self._with(_plan.OutEdges(etype=etype))
+
+    def sample(self, fanout: int, strategy: Optional[str] = None) -> "Query":
+        """Append one NEIGHBORHOOD hop; ``strategy`` is "uniform" (default)
+        or "edge_weight" (the dynamic-weight sampler)."""
+        return self._with(_plan.Sample(fanout=fanout, strategy=strategy))
+
+    def negative(self, n: int, alpha: float = 0.75) -> "Query":
+        """Attach degree^alpha NEGATIVE sampling (avoiding the positive dst
+        on edge queries)."""
+        return self._with(_plan.Negative(n=n, alpha=alpha))
+
+    def joint(self) -> "Query":
+        """Collapse src‖dst‖neg into ONE shared MinibatchPlan (the layout
+        the e2e device step consumes)."""
+        return self._with(_plan.Joint())
+
+    # -- terminals ---------------------------------------------------------
+    def compile(self) -> TraversalPlan:
+        """Validate the chain and lower it to a :class:`TraversalPlan`."""
+        return compile_steps(self.store, self.steps,
+                             vertex_types=self.vertex_types,
+                             edge_types=self.edge_types)
+
+    def executor(self, *, seed: int = 0) -> QueryExecutor:
+        """A fresh executor matching this query's sampler configuration."""
+        return QueryExecutor.for_plan(self.store, self.compile(), seed=seed)
+
+    def values(self, *, seed: int = 0,
+               executor: Optional[QueryExecutor] = None,
+               pad: PadSpec = "auto", dedup: bool = True) -> Minibatch:
+        """Execute once.  ``executor`` continues existing sampler state;
+        otherwise a fresh one is seeded with ``seed``."""
+        tplan = self.compile()
+        ex = executor or QueryExecutor.for_plan(self.store, tplan, seed=seed)
+        return execute(tplan, ex, dedup=dedup, pad=pad)
+
+    def dataset(self, steps_per_epoch: Optional[int] = None, *,
+                epochs: int = 1, seed: int = 0, prefetch: int = 2,
+                pad: PadSpec = "auto", dedup: bool = True,
+                executor: Optional[QueryExecutor] = None) -> Dataset:
+        """A minibatch stream (see :class:`repro.api.dataset.Dataset`)."""
+        return Dataset(self.store, self.compile(),
+                       steps_per_epoch=steps_per_epoch, epochs=epochs,
+                       seed=seed, prefetch=prefetch, pad=pad, dedup=dedup,
+                       executor=executor)
+
+
+def G(store, *, vertex_types: Optional[Dict[str, int]] = None,
+      edge_types: Optional[Dict[str, int]] = None) -> Query:
+    """Open a query over a :class:`DistributedGraphStore` (Gremlin's ``g``).
+
+    ``vertex_types``/``edge_types`` optionally bind schema names (e.g.
+    ``{"user": 1, "item": 0}``) so filters can use strings instead of ids.
+    """
+    return Query(store, (), vertex_types=vertex_types, edge_types=edge_types)

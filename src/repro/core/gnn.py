@@ -27,7 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import operators as ops
-from .operators import MinibatchPlan, build_plan
+from .operators import MinibatchPlan, build_plan, plan_to_device  # noqa: F401 (re-export)
 from .sampling import NegativeSampler, NeighborhoodSampler, TraverseSampler
 from .storage import DistributedGraphStore
 
@@ -67,16 +67,6 @@ def init_gnn_params(spec: GNNSpec, seed: int = 0) -> Dict:
             layer["agg"] = agg_p
         params[f"layer_{k}"] = layer
     return params
-
-
-def plan_to_device(plan: MinibatchPlan) -> Dict:
-    """Numpy plan -> jnp pytree consumed by ``gnn_apply`` (static shapes)."""
-    return {
-        "levels": [jnp.asarray(l) for l in plan.levels],
-        "child_idx": [jnp.asarray(c) for c in plan.child_idx],
-        "child_msk": [jnp.asarray(m) for m in plan.child_msk],
-        "self_idx": [jnp.asarray(s) for s in plan.self_idx],
-    }
 
 
 def gnn_apply(spec: GNNSpec, params: Dict, plan: Dict, features: Array) -> Array:
@@ -169,19 +159,34 @@ def sampler_for(name: str, store: DistributedGraphStore, seed: int = 0
 # ---------------------------------------------------------------------------
 
 class GNNTrainer:
-    """Single-host reference trainer: link-prediction with negatives."""
+    """Single-host reference trainer: link-prediction with negatives.
+
+    Batches flow through the GQL surface (``repro.api``): the trainer owns
+    one :class:`QueryExecutor` (persistent sampler state across ``train`` /
+    ``embed`` calls) and its train query is
+
+        G(store).E().batch(b).sample(*fanouts).negative(q)
+
+    iterated as a Dataset whose double-buffered prefetch overlaps host-side
+    sampling with the jitted device step (paper §3.1).
+    """
 
     def __init__(self, store: DistributedGraphStore, spec: GNNSpec, *,
                  n_negatives: int = 5, lr: float = 1e-2, seed: int = 0,
                  pad_levels="auto"):
+        from repro.api import QueryExecutor  # late: api builds on this module's layer
         self.store = store
         self.spec = spec
         self.n_negatives = n_negatives
         self.lr = lr
         self.rng = np.random.default_rng(seed)
-        self.traverse = TraverseSampler(store, seed=seed)
-        self.neighborhood = sampler_for(spec.name, store, seed=seed + 1)
-        self.negative = NegativeSampler(store, seed=seed + 2)
+        weighted = GNN_VARIANTS[spec.name][3] if spec.name in GNN_VARIANTS else False
+        self._strategy = "edge_weight" if weighted else "uniform"
+        self.executor = QueryExecutor(store, strategy=self._strategy, seed=seed)
+        # legacy attribute shims — out-of-tree callers reached the samplers here
+        self.traverse = self.executor.traverse
+        self.neighborhood = self.executor.neighborhood
+        self.negative = self.executor.negative
         self.params = init_gnn_params(spec, seed)
         self.features = jnp.asarray(store.dense_features())
         self.pad_levels = pad_levels
@@ -203,34 +208,58 @@ class GNNTrainer:
         params = jax.tree.map(lambda p, g: p - self.lr * g, params, grads)
         return params, loss
 
+    # -- GQL queries --------------------------------------------------------
+    def train_query(self, batch_size: int):
+        """The trainer's minibatch as a GQL query (reusable/inspectable)."""
+        from repro.api import G
+        q = G(self.store).E().batch(batch_size)
+        for i, f in enumerate(self.spec.fanouts):
+            q = q.sample(f, strategy=self._strategy if i == 0 else None)
+        return q.negative(self.n_negatives)
+
+    def _embed_query(self, vertices: np.ndarray, chunk: Optional[int] = None):
+        from repro.api import G
+        q = G(self.store).V(ids=np.asarray(vertices, np.int32))
+        if chunk is not None:
+            q = q.batch(chunk)
+        for i, f in enumerate(self.spec.fanouts):
+            q = q.sample(f, strategy=self._strategy if i == 0 else None)
+        return q
+
     def _plans_for_batch(self, batch_size: int):
-        edges = self.traverse.sample(batch_size, mode="edge")
-        src, dst = edges[:, 0], edges[:, 1]
-        neg = self.negative.sample(src, self.n_negatives, avoid=dst).reshape(-1)
-        pads = self.pad_levels
-
-        def mk(seeds, scale=1):
-            plan = build_plan(self.neighborhood, seeds, self.spec.fanouts)
-            if pads == "auto":
-                plan = ops.pad_plan(plan, ops.auto_pad_sizes(plan))
-            elif pads is not None:
-                plan = ops.pad_plan(plan, [x * scale for x in pads])
-            return plan_to_device(plan)
-
-        return mk(src), mk(dst), mk(neg, scale=self.n_negatives)
+        """Deprecated shim (pre-GQL surface) — kept for out-of-tree callers
+        and ``data.GraphBatchPipeline``; equivalent to one ``train_query``
+        batch on the trainer's executor."""
+        mb = self.train_query(batch_size).values(executor=self.executor,
+                                                 pad=self.pad_levels)
+        return mb.device["src"], mb.device["dst"], mb.device["neg"]
 
     def train(self, steps: int, batch_size: int = 64) -> List[float]:
+        ds = self.train_query(batch_size).dataset(
+            steps_per_epoch=steps, executor=self.executor,
+            pad=self.pad_levels)
         losses = []
-        for _ in range(steps):
-            plan_s, plan_d, plan_n = self._plans_for_batch(batch_size)
-            self.params, loss = self._step(self.params, plan_s, plan_d, plan_n)
+        for mb in ds:
+            self.params, loss = self._step(
+                self.params, mb.device["src"], mb.device["dst"],
+                mb.device["neg"])
             losses.append(float(loss))
         return losses
 
     def embed(self, vertices: np.ndarray) -> np.ndarray:
-        plan = plan_to_device(build_plan(self.neighborhood, vertices,
-                                         self.spec.fanouts))
-        return np.asarray(self._embed(self.params, plan))
+        mb = self._embed_query(vertices).values(executor=self.executor,
+                                                pad=None)
+        return np.asarray(self._embed(self.params, mb.device["seeds"]))
+
+    def embed_many(self, vertices: np.ndarray, *, chunk: int = 256
+                   ) -> np.ndarray:
+        """Embed a large id set in fixed chunks, prefetching the host-side
+        sampling of chunk i+1 while the device embeds chunk i."""
+        ds = self._embed_query(vertices, chunk=chunk).dataset(
+            executor=self.executor, pad=None)
+        return np.concatenate([
+            np.asarray(self._embed(self.params, mb.device["seeds"]))
+            for mb in ds], axis=0)
 
     def link_scores(self, src: np.ndarray, dst: np.ndarray) -> np.ndarray:
         zs, zd = self.embed(src), self.embed(dst)

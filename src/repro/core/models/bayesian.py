@@ -61,11 +61,10 @@ class BayesianGNN:
                         d_hidden=self.cfg.d, d_out=self.cfg.d, fanouts=(5, 5))
         tr = GNNTrainer(self.store, spec, lr=5e-2, seed=self.seed)
         tr.train(self.cfg.prior_steps, batch_size=32)
+        # full-graph embedding through the GQL chunked-dataset path: host
+        # sampling of chunk i+1 overlaps the device forward of chunk i
         ids = np.arange(self.g.n, dtype=np.int32)
-        out = np.zeros((self.g.n, self.cfg.d), np.float32)
-        for i in range(0, self.g.n, 256):
-            out[i:i + 256] = tr.embed(ids[i:i + 256])
-        self.prior_emb = out
+        self.prior_emb = tr.embed_many(ids, chunk=256)
 
     # -- stage 2: pairwise Bayesian correction ----------------------------------
     @staticmethod

@@ -88,11 +88,8 @@ class EvolvingGNN:
                         d_hidden=self.cfg.d, d_out=self.cfg.d, fanouts=(5, 5))
         tr = GNNTrainer(store, spec, lr=5e-2, seed=self.seed + t)
         tr.train(self.cfg.sage_steps_per_snapshot, batch_size=32)
-        ids = np.arange(g.n, dtype=np.int32)
-        out = np.zeros((g.n, self.cfg.d), np.float32)
-        for i in range(0, g.n, 256):
-            out[i:i + 256] = tr.embed(ids[i:i + 256])
-        return out
+        # GQL chunked full-graph embedding (prefetch overlaps host/device)
+        return tr.embed_many(np.arange(g.n, dtype=np.int32), chunk=256)
 
     # -- VAE + GRU step ------------------------------------------------------------
     def _gru(self, p, h: Array, x: Array) -> Array:

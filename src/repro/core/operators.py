@@ -25,7 +25,7 @@ from .sampling import NeighborhoodSampler, SampleBatch
 
 __all__ = [
     "AGGREGATORS", "COMBINERS", "register_aggregator", "register_combiner",
-    "MinibatchPlan", "build_plan", "aggregate", "combine",
+    "MinibatchPlan", "build_plan", "aggregate", "combine", "plan_to_device",
 ]
 
 Array = jax.Array
@@ -277,6 +277,16 @@ def pad_plan(plan: MinibatchPlan, pad_to: Sequence[int]) -> MinibatchPlan:
     levels, child_idx, child_msk, self_idx = _pad_plan(
         plan.levels, plan.child_idx, plan.child_msk, plan.self_idx, pad_to)
     return MinibatchPlan(levels, child_idx, child_msk, self_idx, plan.dedup)
+
+
+def plan_to_device(plan: MinibatchPlan) -> Dict:
+    """Numpy plan -> jnp pytree consumed by ``gnn_apply`` (static shapes)."""
+    return {
+        "levels": [jnp.asarray(l) for l in plan.levels],
+        "child_idx": [jnp.asarray(c) for c in plan.child_idx],
+        "child_msk": [jnp.asarray(m) for m in plan.child_msk],
+        "self_idx": [jnp.asarray(s) for s in plan.self_idx],
+    }
 
 
 def _pad_plan(levels, child_idx, child_msk, self_idx, pad_to):

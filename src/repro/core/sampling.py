@@ -147,15 +147,21 @@ class NeighborhoodSampler:
     """
 
     def __init__(self, store: DistributedGraphStore, *, weighted: bool = False,
-                 seed: int = 0):
+                 seed: int = 0, vectorized: bool = True):
         self.store = store
         self.weighted = weighted
+        self.vectorized = vectorized
         self.rng = np.random.default_rng(seed)
         g = store.graph
         # dynamic weights start at the graph's edge weights
         self.edge_logits = g.edge_weight.astype(np.float64).copy()
         self._dirty = True
         self._row_cum: Optional[np.ndarray] = None
+        # cached-vertex membership mask for the vectorised read accounting
+        self._cached_mask = np.zeros(g.n, bool)
+        plan = getattr(store, "cache_plan", None)
+        cached = plan.cached_vertices if plan is not None else ()
+        self._cached_mask[np.asarray(cached, np.int64)] = True
 
     # -- dynamic-weight machinery (the sampler's "backward") ---------------
     def update_weights(self, edge_ids: np.ndarray, grads: np.ndarray,
@@ -195,6 +201,50 @@ class NeighborhoodSampler:
                    else self.rng.integers(0, d, size=fanout))
         return nbrs[idx].astype(np.int32), np.ones(fanout, np.float32)
 
+    def _sample_bucket(self, vs: np.ndarray, fanout: int, shard
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+        """One vectorised pass over a whole request-flow bucket (uniform case).
+
+        Replaces the per-vertex Python loop: degrees are gathered straight
+        from the CSR (the cached/remote paths return the same rows — the
+        replicated cache is a copy of the owner's row), reads are accounted
+        per row exactly as the scalar path does, and row sampling is done in
+        two vectorised groups: with replacement where fanout > degree, and
+        argsort-of-random-keys per distinct degree otherwise.
+        """
+        g = self.store.graph
+        vs64 = vs.astype(np.int64)
+        lo = g.indptr[vs64]
+        deg = g.indptr[vs64 + 1] - lo
+        # read accounting: one read per row, classified local/cache/remote
+        owned = shard.owned_mask[vs64]
+        cached = ~owned & self._cached_mask[vs64]
+        n_local = int(owned.sum())
+        n_cache = int(cached.sum())
+        shard.stats.local_reads += n_local
+        shard.stats.cache_reads += n_cache
+        shard.stats.remote_reads += len(vs) - n_local - n_cache
+        out = np.zeros((len(vs), fanout), np.int32)
+        mask = np.zeros((len(vs), fanout), np.float32)
+        nz = deg > 0
+        if not nz.any():
+            return out, mask
+        mask[nz] = 1.0
+        # with replacement iff fanout exceeds degree (GraphSAGE convention)
+        repl = np.nonzero(nz & (deg < fanout))[0]
+        if len(repl):
+            idx = (self.rng.random((len(repl), fanout))
+                   * deg[repl][:, None]).astype(np.int64)
+            out[repl] = g.indices[lo[repl][:, None] + idx]
+        worepl = np.nonzero(nz & (deg >= fanout))[0]
+        if len(worepl):
+            for d in np.unique(deg[worepl]):
+                rows = worepl[deg[worepl] == d]
+                keys = self.rng.random((len(rows), int(d)))
+                sel = np.argsort(keys, axis=1)[:, :fanout]
+                out[rows] = g.indices[lo[rows][:, None] + sel]
+        return out, mask
+
     def sample(self, seeds: np.ndarray, fanouts: Sequence[int],
                *, edge_type: Optional[int] = None,
                via: Optional[np.ndarray] = None) -> SampleBatch:
@@ -220,8 +270,16 @@ class NeighborhoodSampler:
             # shard; sequential within a bucket = lock-free by construction
             for s in np.unique(fvia):
                 shard = self.store.shards[int(s)]
-                for i in np.nonzero(fvia == s)[0]:
-                    nxt[i], msk[i] = self._sample_row(frontier[i], fanout, shard)
+                rows = np.nonzero(fvia == s)[0]
+                if self.vectorized and not self.weighted:
+                    nxt[rows], msk[rows] = self._sample_bucket(
+                        frontier[rows], fanout, shard)
+                else:
+                    # weighted sampling keeps the per-row path (per-edge
+                    # dynamic weights are row-local distributions)
+                    for i in rows:
+                        nxt[i], msk[i] = self._sample_row(
+                            frontier[i], fanout, shard)
             hops.append(nxt.reshape(-1))
             masks.append(msk.reshape(-1))
             frontier = nxt.reshape(-1)
@@ -269,21 +327,28 @@ class NegativeSampler:
         b = len(seeds)
         if vertex_type is not None and vertex_type in self._type_tables:
             pool, table = self._type_tables[vertex_type]
-            idx = table.sample(self.rng, b * n_neg)
-            out = pool[idx].reshape(b, n_neg)
         elif shard_id is not None and shard_id in self._local:
-            pool = self._local_pool[shard_id]
-            idx = self._local[shard_id].sample(self.rng, b * n_neg)
-            out = pool[idx].reshape(b, n_neg)
+            pool, table = self._local_pool[shard_id], self._local[shard_id]
         else:
-            out = self._global.sample(self.rng, b * n_neg).reshape(b, n_neg)
+            pool, table = None, self._global
+
+        def draw(size: int) -> np.ndarray:
+            idx = table.sample(self.rng, size)
+            return idx if pool is None else pool[idx]
+
+        out = draw(b * n_neg).reshape(b, n_neg)
         if avoid is not None:
-            # resample collisions once (cheap, keeps the hot path vectorised)
-            bad = out == np.asarray(avoid).reshape(b, 1)
-            if bad.any():
-                repl = self._global.sample(self.rng, int(bad.sum()))
-                out = out.copy()
-                out[bad] = repl
+            # resample collisions from the SAME pool (a typed/local query must
+            # not leak global vertices), re-checking each redraw; bounded so a
+            # degenerate pool (every candidate == avoid) cannot spin forever
+            out = out.copy()
+            av = np.asarray(avoid).reshape(b, 1)
+            for _ in range(8):
+                bad = out == av
+                n_bad = int(bad.sum())
+                if not n_bad:
+                    break
+                out[bad] = draw(n_bad)
         return out.astype(np.int32)
 
 

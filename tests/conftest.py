@@ -1,8 +1,80 @@
+import functools
+import inspect
+import sys
+import types
+
 import numpy as np
 import pytest
 
 # NOTE: no XLA_FLAGS here — smoke tests and benches must see 1 device
 # (the 512-device forcing lives ONLY in launch/dryrun.py).
+
+
+# ---------------------------------------------------------------------------
+# Optional-dependency shim: `hypothesis` (see requirements-dev.txt).
+#
+# Several test modules use @given/@settings property tests.  When hypothesis
+# is not installed, importing them used to abort the WHOLE collection.  This
+# shim registers a minimal, deterministic stand-in in sys.modules so those
+# modules import and their property tests run a fixed number of seeded
+# examples.  Only the strategy surface this suite uses is implemented
+# (integers, composite); install real hypothesis for proper shrinking.
+# ---------------------------------------------------------------------------
+
+def _install_hypothesis_shim() -> None:
+    class _Strategy:
+        def __init__(self, draw_fn):
+            self._draw = draw_fn
+
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    def composite(fn):
+        def builder(*args, **kwargs):
+            def gen(rng):
+                return fn(lambda strat: strat._draw(rng), *args, **kwargs)
+            return _Strategy(gen)
+        return builder
+
+    def settings(max_examples=10, deadline=None, **_kw):
+        def deco(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_shim_max_examples", 10)
+                rng = np.random.default_rng(0)
+                for _ in range(n):
+                    drawn = {k: s._draw(rng) for k, s in strategies.items()}
+                    fn(*args, **kwargs, **drawn)
+            # strip the @given-supplied params from the visible signature so
+            # pytest does not treat them as fixtures
+            sig = inspect.signature(fn)
+            wrapper.__signature__ = sig.replace(parameters=[
+                p for name, p in sig.parameters.items() if name not in strategies])
+            del wrapper.__wrapped__  # pytest introspects the original otherwise
+            return wrapper
+        return deco
+
+    mod = types.ModuleType("hypothesis")
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers = integers
+    st.composite = composite
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = st
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st
+
+
+try:  # pragma: no cover - trivially environment-dependent
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    _install_hypothesis_shim()
 
 
 @pytest.fixture(scope="session")

@@ -1,0 +1,192 @@
+"""GQL query surface: compilation, validation, equivalence, datasets."""
+import numpy as np
+import pytest
+
+from repro.api import G, QueryValidationError
+from repro.core.operators import build_plan
+from repro.core.sampling import (NegativeSampler, NeighborhoodSampler,
+                                 TraverseSampler)
+
+FAN = (4, 3)
+
+
+def _assert_plans_byte_identical(a, b):
+    assert a.dedup == b.dedup
+    for fa, fb in zip(a.levels, b.levels):
+        assert fa.dtype == fb.dtype and fa.tobytes() == fb.tobytes()
+    for name in ("child_idx", "child_msk", "self_idx"):
+        for fa, fb in zip(getattr(a, name), getattr(b, name)):
+            assert fa.dtype == fb.dtype and fa.shape == fb.shape
+            assert fa.tobytes() == fb.tobytes()
+
+
+def test_query_compiles_to_legacy_plans_byte_identical(small_store):
+    """The acceptance bar: the DSL compiles to byte-identical MinibatchPlans
+    versus the hand-wired legacy path under a fixed seed."""
+    seed = 0
+    # ---- legacy hand-wired path (the old GNNTrainer._plans_for_batch) ----
+    trav = TraverseSampler(small_store, seed=seed)
+    nbr = NeighborhoodSampler(small_store, seed=seed + 1)
+    neg = NegativeSampler(small_store, seed=seed + 2)
+    edges = trav.sample(16, mode="edge")
+    src, dst = edges[:, 0], edges[:, 1]
+    negs = neg.sample(src, 3, avoid=dst).reshape(-1)
+    legacy = {}
+    for role, seeds in (("src", src), ("dst", dst), ("neg", negs)):
+        legacy[role] = build_plan(nbr, seeds, FAN)
+
+    # ---- GQL ----
+    mb = (G(small_store).E().batch(16).sample(4).sample(3).negative(3)
+          .values(seed=seed, pad=None))
+    assert set(mb.roles) == {"src", "dst", "neg"}
+    np.testing.assert_array_equal(mb.edges[:, 0], src)
+    np.testing.assert_array_equal(mb.edges[:, 1], dst)
+    np.testing.assert_array_equal(mb.negatives.reshape(-1), negs)
+    for role in ("src", "dst", "neg"):
+        _assert_plans_byte_identical(legacy[role], mb.plans[role])
+
+
+def test_query_vertex_source_plan_equivalence(small_store):
+    seed = 11
+    nbr = NeighborhoodSampler(small_store, seed=seed + 1)
+    ids = np.arange(20, dtype=np.int32)
+    legacy = build_plan(nbr, ids, FAN)
+    mb = G(small_store).V(ids=ids).sample(4).sample(3).values(seed=seed,
+                                                              pad=None)
+    _assert_plans_byte_identical(legacy, mb.plans["seeds"])
+
+
+def test_query_validation_errors(small_store):
+    q = G(small_store)
+    cases = [
+        lambda: q.compile(),                                   # no source
+        lambda: q.batch(4).compile(),                          # batch first
+        lambda: q.V().batch(0).compile(),                      # bad batch
+        lambda: q.V().batch(4).batch(8).compile(),             # dup batch
+        lambda: q.V().compile(),                               # no batch/ids
+        lambda: q.V().batch(4).sample(0).compile(),            # bad fanout
+        lambda: q.V().batch(4).sample(2.5).compile(),          # non-int fanout
+        lambda: q.V().batch(4).sample(2, strategy="zipf").compile(),
+        lambda: q.V().batch(4).sample(2, strategy="uniform")
+                 .sample(2, strategy="edge_weight").compile(), # mixed strat
+        lambda: q.E(etype=99).batch(4).compile(),              # bad etype
+        lambda: q.V(vtype=77).batch(4).compile(),              # bad vtype
+        lambda: q.V(vtype="user").batch(4).compile(),          # unbound name
+        lambda: q.E().batch(4).out_edges().compile(),          # outE on E
+        lambda: q.V().batch(4).negative(2).negative(2).compile(),
+        lambda: q.V().batch(4).negative(0).compile(),          # bad q
+        lambda: q.V().batch(4).joint().compile(),              # joint on V
+        lambda: q.V().batch(4).sample(2).batch(8).compile(),   # batch late
+        lambda: q.V(ids=np.arange(4), vtype=0).compile(),      # ids + vtype
+        lambda: q.V().batch(4).E().compile(),                  # two sources
+    ]
+    for i, bad in enumerate(cases):
+        with pytest.raises(QueryValidationError):
+            bad()
+            pytest.fail(f"case {i} did not raise")
+
+
+def test_named_types_resolve(small_store):
+    g = small_store.graph
+    mb = (G(small_store, vertex_types={"user": 1})
+          .V(vtype="user").batch(32).values(seed=0))
+    assert (g.vertex_type[mb.roles["seeds"]] == 1).all()
+    mb = (G(small_store, edge_types={"click": 0})
+          .E(etype="click").batch(16).values(seed=0))
+    src, dst = mb.edges[:, 0], mb.edges[:, 1]
+    # every drawn edge really is a type-0 edge
+    all_src, all_dst = g.edge_list()
+    et0 = {(int(s), int(d)) for s, d in
+           zip(all_src[g.edge_type == 0], all_dst[g.edge_type == 0])}
+    assert all((int(s), int(d)) in et0 for s, d in zip(src, dst))
+
+
+def test_out_edges_respects_filters(small_store):
+    g = small_store.graph
+    mb = (G(small_store, vertex_types={"user": 1})
+          .V(vtype="user").batch(32).out_edges(etype=2).values(seed=3))
+    src = mb.edges[:, 0]
+    assert (g.vertex_type[src] == 1).all()
+
+
+def test_joint_plan_concatenates_roles(small_store):
+    mb = (G(small_store).E().batch(8).sample(3).negative(2).joint()
+          .values(seed=1, pad=None))
+    assert set(mb.roles) == {"joint"}
+    seeds = mb.roles["joint"]
+    assert len(seeds) == 8 + 8 + 16          # src + dst + negs
+    np.testing.assert_array_equal(seeds[:8], mb.edges[:, 0])
+    np.testing.assert_array_equal(seeds[8:16], mb.edges[:, 1])
+    np.testing.assert_array_equal(seeds[16:], mb.negatives.reshape(-1))
+    assert len(mb.plans["joint"].levels[0]) == 32
+
+
+def test_explicit_pad_and_auto_pad(small_store):
+    mb = (G(small_store).E().batch(8).sample(3).negative(2)
+          .values(seed=1, pad=[8, 64]))
+    assert [len(l) for l in mb.plans["src"].levels] == [8, 64]
+    # the neg role's pad targets scale by n_negatives (legacy convention)
+    assert [len(l) for l in mb.plans["neg"].levels] == [16, 128]
+    mb = G(small_store).V().batch(8).sample(3).values(seed=1, pad="auto")
+    for lv in mb.plans["seeds"].levels[1:]:
+        assert (len(lv) & (len(lv) - 1)) == 0      # pow2 buckets
+
+
+def test_dataset_epochs_deterministic(small_store):
+    q = G(small_store).E().batch(8).sample(3).negative(2)
+    run1 = list(q.dataset(3, epochs=2, seed=42))
+    run2 = list(q.dataset(3, epochs=2, seed=42))
+    assert len(run1) == len(run2) == 6
+    for a, b in zip(run1, run2):
+        for role in a.roles:
+            np.testing.assert_array_equal(a.roles[role], b.roles[role])
+            _assert_plans_byte_identical(a.plans[role], b.plans[role])
+    # different seed -> different stream
+    run3 = list(q.dataset(3, epochs=2, seed=43))
+    assert any((a.roles["src"] != b.roles["src"]).any()
+               for a, b in zip(run1, run3))
+    # epochs differ from each other (fresh per-epoch executor seed)
+    assert (run1[0].roles["src"] != run1[3].roles["src"]).any()
+
+
+def test_dataset_prefetch_matches_sync(small_store):
+    q = G(small_store).V().batch(16).sample(4)
+    pre = list(q.dataset(4, seed=7, prefetch=2))
+    syn = list(q.dataset(4, seed=7, prefetch=0))
+    for a, b in zip(pre, syn):
+        np.testing.assert_array_equal(a.roles["seeds"], b.roles["seeds"])
+        _assert_plans_byte_identical(a.plans["seeds"], b.plans["seeds"])
+
+
+def test_dataset_chunked_ids_cover_all(small_store):
+    ids = np.arange(100, dtype=np.int32)
+    ds = G(small_store).V(ids=ids).batch(32).sample(3).dataset(pad=None)
+    chunks = [mb.roles["seeds"] for mb in ds]
+    assert [len(c) for c in chunks] == [32, 32, 32, 4]
+    np.testing.assert_array_equal(np.concatenate(chunks), ids)
+    # a chunked query cannot run as a single .values() pass
+    with pytest.raises(QueryValidationError):
+        G(small_store).V(ids=ids).batch(32).sample(3).values()
+
+
+def test_executor_strategy_mismatch_rejected(small_store):
+    ex = G(small_store).V().batch(8).sample(2).executor(seed=0)
+    q = G(small_store).V().batch(8).sample(2, strategy="edge_weight")
+    with pytest.raises(QueryValidationError):
+        q.values(executor=ex)
+
+
+def test_trainer_through_gql_losses_decrease(small_store):
+    """GNNTrainer now drives the GQL Dataset path end-to-end."""
+    from repro.core.gnn import GNNTrainer, make_gnn
+    g = small_store.graph
+    spec = make_gnn("graphsage", d_in=g.vertex_attr_table.shape[1],
+                    d_hidden=16, d_out=16, fanouts=(4, 3))
+    tr = GNNTrainer(small_store, spec, lr=0.05, seed=0)
+    losses = tr.train(16, batch_size=32)
+    assert all(np.isfinite(losses))
+    assert losses[-1] < losses[0]
+    z = tr.embed(np.arange(12, dtype=np.int32))
+    assert z.shape == (12, 16) and np.isfinite(z).all()
+    z_many = tr.embed_many(np.arange(50, dtype=np.int32), chunk=16)
+    assert z_many.shape == (50, 16) and np.isfinite(z_many).all()

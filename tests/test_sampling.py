@@ -59,6 +59,73 @@ def test_negative_avoids(small_store):
     assert not (out == avoid[:, None]).any()
 
 
+def test_negative_avoid_stays_in_typed_pool(small_store):
+    """Collision redraws come from the ACTIVE pool, not the global table."""
+    g = small_store.graph
+    neg = NegativeSampler(small_store, per_type=True, seed=0)
+    t = 1
+    pool = set(np.nonzero(g.vertex_type == t)[0].tolist())
+    seeds = np.arange(64, dtype=np.int32)
+    avoid = np.array(sorted(pool)[:64], np.int32)   # force in-pool collisions
+    out = neg.sample(seeds, 8, vertex_type=t, avoid=avoid)
+    assert not (out == avoid[:, None]).any()
+    assert all(int(v) in pool for v in out.reshape(-1))
+
+
+def test_negative_avoid_stays_in_shard_pool(small_store):
+    neg = NegativeSampler(small_store, seed=0)
+    sid = next(s for s in neg._local)               # a shard with a table
+    pool = set(neg._local_pool[sid].tolist())
+    seeds = np.arange(32, dtype=np.int32)
+    avoid = np.array(sorted(pool)[:32], np.int32)
+    out = neg.sample(seeds, 8, shard_id=sid, avoid=avoid)
+    assert not (out == avoid[:, None]).any()
+    assert all(int(v) in pool for v in out.reshape(-1))
+
+
+def test_vectorized_bucket_matches_loop_accounting(small_store):
+    """The vectorised uniform pass reads the same rows (and classifies them
+    the same way) as the per-vertex loop it replaces."""
+    rng = np.random.default_rng(4)
+    seeds = rng.integers(0, small_store.graph.n, 64).astype(np.int32)
+
+    def counts(vectorized):
+        # single hop: both paths read exactly the seed rows, so the
+        # local/cache/remote classification must match element-for-element
+        # (deeper hops diverge because the two paths draw different rows)
+        small_store.reset_stats()
+        s = NeighborhoodSampler(small_store, seed=9, vectorized=vectorized)
+        s.sample(seeds, [5])
+        st_ = small_store.stats()
+        return st_.local_reads, st_.cache_reads, st_.remote_reads
+
+    assert counts(False) == counts(True)
+    assert sum(counts(True)) == len(seeds)
+
+
+def test_vectorized_bucket_membership(small_store):
+    """Vectorised draws still come from the true neighbor sets."""
+    g = small_store.graph
+    s = NeighborhoodSampler(small_store, seed=3, vectorized=True)
+    seeds = np.arange(32, dtype=np.int32)
+    batch = s.sample(seeds, [6])
+    nbrs = batch.neighbors[0].reshape(32, 6)
+    mask = batch.masks[0].reshape(32, 6)
+    from collections import Counter
+    for i, v in enumerate(seeds):
+        row = g.neighbors(int(v)).tolist()          # multiset (multi-edges)
+        true_nb = set(row)
+        for j in range(6):
+            if mask[i, j] > 0:
+                assert int(nbrs[i, j]) in true_nb
+        # without-replacement when degree allows it: each neighbor drawn at
+        # most as often as it appears in the adjacency row
+        if len(row) >= 6:
+            row_counts = Counter(row)
+            for val, cnt in Counter(nbrs[i].tolist()).items():
+                assert cnt <= row_counts[val]
+
+
 def test_negative_degree_bias(small_store):
     """deg^0.75 sampling: high-in-degree vertices drawn more often."""
     g = small_store.graph
