@@ -1,0 +1,93 @@
+"""Walk-generation throughput: host-loop GATNE path vs vectorised WalkSampler.
+
+The legacy GATNE ``_walks`` advanced every walker with a per-vertex Python
+loop through ``shard.neighbors`` (one storage call + one RNG call per step
+per walker).  The ``WalkSampler`` behind the GQL ``.walk()`` step advances
+ALL walkers one step per vectorised pass.  This benchmark re-implements the
+deleted host loop as the baseline, measures both on the same store, and
+records walks/second before/after into ``BENCH_walks.json`` (the ISSUE-2
+acceptance bar is a >= 5x speedup).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from .common import emit, timeit
+
+_BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
+                           "BENCH_walks.json")
+
+WALK_LEN = 6
+BATCH = 512
+
+
+def _host_loop_walks(store, starts: np.ndarray, length: int,
+                     rng: np.random.Generator) -> np.ndarray:
+    """The deleted GATNE._walks, verbatim: per-walker storage-layer loop."""
+    walks = np.zeros((len(starts), length), np.int32)
+    walks[:, 0] = starts
+    for i, v in enumerate(starts):
+        cur = int(v)
+        for t in range(1, length):
+            shard = store.shards[store.shard_of(cur)]
+            nbrs = shard.neighbors(cur, store)
+            if len(nbrs) == 0:
+                walks[i, t:] = cur
+                break
+            cur = int(nbrs[rng.integers(0, len(nbrs))])
+            walks[i, t] = cur
+    return walks
+
+
+def run() -> None:
+    from repro.api import G
+    from repro.core.graph import synthetic_ahg
+    from repro.core.sampling import WalkSampler
+    from repro.core.storage import build_store
+
+    record = {}
+    for label, n in (("small", 30_000), ("large", 180_000)):
+        g = synthetic_ahg(n, avg_degree=8, seed=2)
+        store = build_store(g, 8, thresholds={1: 0.2, 2: 0.2})
+        rng = np.random.default_rng(0)
+        starts = rng.integers(0, g.n, BATCH).astype(np.int32)
+
+        loop_rng = np.random.default_rng(1)
+        us_loop = timeit(
+            lambda: _host_loop_walks(store, starts, WALK_LEN, loop_rng),
+            repeats=3)
+        ws = WalkSampler(store, seed=1)
+        us_vec = timeit(lambda: ws.walk(starts, WALK_LEN), repeats=3)
+
+        # the same walk through the full GQL surface (compile + execute)
+        q = G(store).V(ids=starts).walk(WALK_LEN)
+        ex = q.executor(seed=1)
+        us_gql = timeit(lambda: q.values(executor=ex), repeats=3)
+
+        speedup = us_loop / max(us_vec, 1e-9)
+        emit(f"walks_{label}_host_loop", us_loop,
+             f"n={n};batch={BATCH};len={WALK_LEN}")
+        emit(f"walks_{label}_vectorized", us_vec,
+             f"n={n};batch={BATCH};len={WALK_LEN};speedup={speedup:.2f}x")
+        emit(f"walks_{label}_gql_query", us_gql,
+             f"n={n};batch={BATCH};len={WALK_LEN};via=G.V(ids).walk()")
+        record[label] = {
+            "n": n, "batch": BATCH, "walk_len": WALK_LEN,
+            "host_loop_us": round(us_loop, 1),
+            "vectorized_us": round(us_vec, 1),
+            "gql_query_us": round(us_gql, 1),
+            "host_loop_walks_per_s": round(BATCH / (us_loop * 1e-6), 1),
+            "vectorized_walks_per_s": round(BATCH / (us_vec * 1e-6), 1),
+            "speedup": round(speedup, 2),
+        }
+
+    with open(_BENCH_JSON, "w") as f:
+        json.dump({"walk_generation": record}, f, indent=2)
+        f.write("\n")
+
+
+if __name__ == "__main__":
+    run()

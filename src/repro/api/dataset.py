@@ -15,6 +15,12 @@ the consumer's jitted device step chews on batch ``i`` — the paper §3.1
 pipelined runtime on one host.  ``prefetch=0`` degrades to synchronous
 iteration; the batch stream is identical either way (single ordered
 producer).
+
+Walk queries (``.walk(L).pairs(w).negative(q)``) iterate exactly the same
+way: every batch is a padded skip-gram pair minibatch with static shapes
+(the pair count is a pure function of batch size, walk length and window),
+so a training loop can jit one step and stream epochs — GATNE's training
+path.
 """
 from __future__ import annotations
 

@@ -20,7 +20,7 @@ import numpy as np
 
 from repro.core import operators as ops
 from repro.core.operators import MinibatchPlan, build_plan, plan_to_device
-from repro.core.sampling import SAMPLERS
+from repro.core.sampling import SAMPLERS, skipgram_pairs
 
 from .plan import QueryValidationError, TraversalPlan
 
@@ -36,9 +36,12 @@ class Minibatch:
     ``roles`` maps role name → seed vertex ids.  Vertex queries produce
     ``{"seeds"}`` (+``"neg"`` with a .negative step); edge queries produce
     ``{"src", "dst"}`` (+``"neg"``), or ``{"joint"}`` when the query was
-    compiled with .joint().  ``plans``/``device`` hold the per-role
-    MinibatchPlan and its jnp pytree (empty when the query has no .sample
-    hops — a pure TRAVERSE/NEGATIVE query).
+    compiled with .joint().  Walk queries with .pairs() produce
+    ``{"center", "context"}`` (+``"neg"``) — the padded skip-gram batch —
+    with the raw walk matrix in ``walks`` and ``pair_mask`` marking pairs
+    whose walker had not frozen at a dead end.  ``plans``/``device`` hold
+    the per-role MinibatchPlan and its jnp pytree (empty when the query has
+    no .sample/.out_vertices hops — a pure TRAVERSE/NEGATIVE/walk query).
     """
 
     roles: Dict[str, np.ndarray]
@@ -46,6 +49,8 @@ class Minibatch:
     device: Dict[str, Dict]
     edges: Optional[np.ndarray] = None          # [B, 2] for edge queries
     negatives: Optional[np.ndarray] = None      # [B, Q]
+    walks: Optional[np.ndarray] = None          # [B, L] for walk queries
+    pair_mask: Optional[np.ndarray] = None      # [P] float32, with .pairs()
 
     def __getitem__(self, role: str) -> Dict:
         return self.device[role]
@@ -62,7 +67,8 @@ class QueryExecutor:
 
     def __init__(self, store, *, strategy: str = "uniform",
                  neg_alpha: float = 0.75, seed: int = 0,
-                 per_type_negatives: bool = False):
+                 per_type_negatives: bool = False,
+                 importance: Optional[np.ndarray] = None):
         self.store = store
         self.strategy = strategy
         self.neg_alpha = neg_alpha
@@ -72,22 +78,34 @@ class QueryExecutor:
             store, weighted=(strategy == "edge_weight"), seed=seed + 1)
         self.negative = SAMPLERS["negative"](
             store, alpha=neg_alpha, per_type=per_type_negatives, seed=seed + 2)
+        # typed traversal samplers (metapath = seed+3, walk = seed+4);
+        # ``importance`` backs the "importance" hop strategy (AHEP)
+        self.importance = importance
+        self.metapath = SAMPLERS["metapath"](store, seed=seed + 3,
+                                             importance=importance)
+        self.walk = SAMPLERS["walk"](store, seed=seed + 4)
         # typed-filter pools are deterministic per store: compute once per
         # (vtype)/(etype, vtype) key, not O(n)/O(m) per minibatch
         self._vertex_pools: Dict = {}
         self._edge_pools: Dict = {}
 
     @classmethod
-    def for_plan(cls, store, plan: TraversalPlan, *, seed: int = 0
-                 ) -> "QueryExecutor":
+    def for_plan(cls, store, plan: TraversalPlan, *, seed: int = 0,
+                 importance: Optional[np.ndarray] = None) -> "QueryExecutor":
         return cls(store, strategy=plan.strategy, neg_alpha=plan.neg_alpha,
-                   seed=seed)
+                   seed=seed, importance=importance)
 
     def check_compatible(self, plan: TraversalPlan) -> None:
         if plan.fanouts and plan.strategy != self.strategy:
             raise QueryValidationError(
                 f"query strategy {plan.strategy!r} does not match this "
                 f"executor's sampler ({self.strategy!r})")
+        if (plan.fanouts and plan.strategy == "importance"
+                and self.importance is None):
+            raise QueryValidationError(
+                "importance strategy needs per-vertex weights: build the "
+                "executor with QueryExecutor(store, strategy='importance', "
+                "importance=weights)")
         if plan.n_negatives and plan.neg_alpha != self.neg_alpha:
             raise QueryValidationError(
                 f"query negative alpha {plan.neg_alpha} does not match this "
@@ -135,6 +153,11 @@ def _filtered_edge_batch(ex: QueryExecutor, batch: int,
 
 def _pad_for_role(pad: PadSpec, role: str, n_negatives: int
                   ) -> Union[str, None, List[int]]:
+    """Explicit pad targets are per-SEED-role buckets: the "neg" role scales
+    by n_negatives (its seed level is B*Q).  The "joint" role does NOT scale
+    — callers of .joint() queries pass raw level sizes (the device-step
+    static shapes, e.g. ``configs.aligraph_gnn.level_sizes``, are already
+    sized for the concatenated src‖dst‖neg seed level)."""
     if pad is None or pad == "auto":
         return pad
     scale = n_negatives if role == "neg" else 1
@@ -156,7 +179,7 @@ def execute(plan: TraversalPlan, executor: QueryExecutor, *,
             ".dataset(), or drop .batch() for a single pass")
 
     roles: Dict[str, np.ndarray] = {}
-    edges = negatives = None
+    edges = negatives = walks = pair_mask = None
     if plan.source == "vertex":
         if plan.ids is not None:
             seeds = plan.ids
@@ -164,7 +187,30 @@ def execute(plan: TraversalPlan, executor: QueryExecutor, *,
             seeds = _typed_vertex_batch(executor, plan.batch_size, plan.vtype)
         else:
             seeds = executor.traverse.sample(plan.batch_size, mode="vertex")
-        if plan.n_negatives:
+        if plan.walk_len:
+            walks, lengths = executor.walk.walk(seeds, plan.walk_len,
+                                                etype=plan.walk_etype,
+                                                return_lengths=True)
+            if plan.window:
+                # pair_mask: 0 only for pairs touching dead-end padding
+                # (cycle revisits stay valid)
+                centers, contexts, pair_mask = skipgram_pairs(
+                    walks, plan.window, lengths)
+                roles["center"] = centers
+                roles["context"] = contexts
+                if plan.n_negatives:
+                    # negatives avoid the observed context (skip-gram
+                    # convention, same as the edge-query dst avoidance)
+                    negatives = executor.negative.sample(
+                        centers, plan.n_negatives, avoid=contexts)
+                    roles["neg"] = negatives.reshape(-1)
+            else:
+                roles["seeds"] = seeds
+                if plan.n_negatives:
+                    negatives = executor.negative.sample(seeds,
+                                                         plan.n_negatives)
+                    roles["neg"] = negatives.reshape(-1)
+        elif plan.n_negatives:
             negatives = executor.negative.sample(seeds, plan.n_negatives)
             roles["seeds"] = seeds
             roles["neg"] = negatives.reshape(-1)
@@ -194,10 +240,14 @@ def execute(plan: TraversalPlan, executor: QueryExecutor, *,
 
     plans: Dict[str, MinibatchPlan] = {}
     device: Dict[str, Dict] = {}
-    if plan.fanouts:
+    if plan.hops:
+        # all-plain hops keep the legacy NeighborhoodSampler path (byte-
+        # identical under a fixed seed); any type constraint, in-direction
+        # or importance strategy routes through the metapath sampler
+        sampler = executor.metapath if plan.typed else executor.neighborhood
+        hops_arg = plan.hops if plan.typed else plan.fanouts
         for role, seeds in roles.items():
-            p = build_plan(executor.neighborhood, seeds, plan.fanouts,
-                           dedup=dedup)
+            p = build_plan(sampler, seeds, hops_arg, dedup=dedup)
             rp = _pad_for_role(pad, role, plan.n_negatives)
             if rp == "auto":
                 p = ops.pad_plan(p, ops.auto_pad_sizes(p))
@@ -207,4 +257,5 @@ def execute(plan: TraversalPlan, executor: QueryExecutor, *,
             if to_device:
                 device[role] = plan_to_device(p)
     return Minibatch(roles=roles, plans=plans, device=device,
-                     edges=edges, negatives=negatives)
+                     edges=edges, negatives=negatives,
+                     walks=walks, pair_mask=pair_mask)

@@ -15,13 +15,15 @@ from typing import Dict, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from repro.core.sampling import HopSpec
+
 __all__ = [
-    "QueryValidationError", "TraversalPlan", "compile_steps",
-    "SourceV", "SourceE", "Batch", "OutEdges", "Sample", "Negative", "Joint",
-    "STRATEGIES",
+    "QueryValidationError", "TraversalPlan", "compile_steps", "HopSpec",
+    "SourceV", "SourceE", "Batch", "OutEdges", "Sample", "HopV", "Walk",
+    "Pairs", "Negative", "Joint", "STRATEGIES",
 ]
 
-STRATEGIES = ("uniform", "edge_weight")
+STRATEGIES = ("uniform", "edge_weight", "importance")
 
 
 class QueryValidationError(ValueError):
@@ -60,6 +62,28 @@ class Sample:
 
 
 @dataclasses.dataclass(frozen=True)
+class HopV:
+    """A typed metapath hop (.out_vertices / .in_vertices)."""
+
+    direction: str                             # "out" | "in"
+    vtype: Optional[Union[int, str]] = None
+    etype: Optional[Union[int, str]] = None
+    fanout: int = 10
+    strategy: Optional[str] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Walk:
+    length: int
+    etype: Optional[Union[int, str]] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Pairs:
+    window: int
+
+
+@dataclasses.dataclass(frozen=True)
 class Negative:
     n: int
     alpha: float = 0.75
@@ -80,10 +104,14 @@ class TraversalPlan:
 
     ``source`` is "vertex" or "edge"; ``ids`` (explicit seed vertices)
     and ``batch_size`` (TRAVERSE draw) configure the seed stage; both set
-    means *chunked* iteration (Dataset-only).  ``fanouts``/``strategy``
-    configure the NEIGHBORHOOD stage, ``n_negatives``/``neg_alpha`` the
-    NEGATIVE stage, and ``joint`` collapses src‖dst‖neg into one shared
-    MinibatchPlan (the e2e training layout).
+    means *chunked* iteration (Dataset-only).  ``hops``/``strategy``
+    configure the NEIGHBORHOOD/metapath stage (each hop a typed
+    :class:`HopSpec`; all-plain hops take the legacy byte-identical
+    ``NeighborhoodSampler`` path), ``walk_len``/``walk_etype``/``window``
+    the random-walk stage (.walk/.pairs — mutually exclusive with hops),
+    ``n_negatives``/``neg_alpha`` the NEGATIVE stage, and ``joint``
+    collapses src‖dst‖neg into one shared MinibatchPlan (the e2e training
+    layout).
     """
 
     source: str                                # "vertex" | "edge"
@@ -91,11 +119,24 @@ class TraversalPlan:
     etype: Optional[int] = None
     ids: Optional[np.ndarray] = None
     batch_size: Optional[int] = None
-    fanouts: Tuple[int, ...] = ()
+    hops: Tuple[HopSpec, ...] = ()
     strategy: str = "uniform"
+    walk_len: Optional[int] = None
+    walk_etype: Optional[int] = None
+    window: int = 0
     n_negatives: int = 0
     neg_alpha: float = 0.75
     joint: bool = False
+
+    @property
+    def fanouts(self) -> Tuple[int, ...]:
+        return tuple(h.fanout for h in self.hops)
+
+    @property
+    def typed(self) -> bool:
+        """True when any hop needs the metapath sampler (type constraints,
+        in-direction, or importance strategy)."""
+        return any(not h.plain for h in self.hops)
 
     @property
     def chunked(self) -> bool:
@@ -147,8 +188,11 @@ def compile_steps(store, steps: Sequence, *,
     etype: Optional[int] = None
     ids: Optional[np.ndarray] = None
     batch_size: Optional[int] = None
-    fanouts: list = []
+    hops: list = []                 # (direction, vtype, etype, fanout)
     strategies: set = set()
+    walk_len: Optional[int] = None
+    walk_etype: Optional[int] = None
+    window = 0
     n_negatives = 0
     neg_alpha = 0.75
     joint = False
@@ -181,17 +225,18 @@ def compile_steps(store, steps: Sequence, *,
         elif isinstance(step, Batch):
             if batch_size is not None:
                 raise QueryValidationError("duplicate .batch() step")
-            if fanouts or n_negatives:
+            if hops or n_negatives or walk_len is not None:
                 raise QueryValidationError(
-                    ".batch() must come before .sample()/.negative()")
+                    ".batch() must come before .sample()/.walk()/.negative()")
             batch_size = _check_count(step.size, "batch size")
         elif isinstance(step, OutEdges):
             if source == "edge":
                 raise QueryValidationError(
                     ".out_edges() requires a vertex source (.V())")
-            if fanouts or n_negatives:
+            if hops or n_negatives or walk_len is not None:
                 raise QueryValidationError(
-                    ".out_edges() must come before .sample()/.negative()")
+                    ".out_edges() must come before .sample()/.walk()/"
+                    ".negative()")
             if ids is not None:
                 raise QueryValidationError(
                     ".out_edges() after V(ids=...) is not supported; "
@@ -200,14 +245,59 @@ def compile_steps(store, steps: Sequence, *,
             if step.etype is not None:
                 etype = _resolve_type(step.etype, edge_types,
                                       g.n_edge_types, "etype")
-        elif isinstance(step, Sample):
-            fanouts.append(_check_count(step.fanout, "sample fanout"))
+        elif isinstance(step, (Sample, HopV)):
+            if walk_len is not None:
+                raise QueryValidationError(
+                    "cannot mix neighborhood hops (.sample/.out_vertices/"
+                    ".in_vertices) with .walk() in one query")
+            if isinstance(step, Sample):
+                direction, h_vtype, h_etype = "out", None, None
+            else:
+                direction = step.direction
+                h_vtype = (None if step.vtype is None else _resolve_type(
+                    step.vtype, vertex_types, g.n_vertex_types, "vtype"))
+                h_etype = (None if step.etype is None else _resolve_type(
+                    step.etype, edge_types, g.n_edge_types, "etype"))
+            hops.append((direction, h_vtype, h_etype,
+                         _check_count(step.fanout, "hop fanout")))
             if step.strategy is not None:
                 if step.strategy not in STRATEGIES:
                     raise QueryValidationError(
                         f"unknown sample strategy {step.strategy!r} "
                         f"(known: {STRATEGIES})")
                 strategies.add(step.strategy)
+        elif isinstance(step, Walk):
+            if source == "edge":
+                raise QueryValidationError(
+                    ".walk() requires a vertex source (.V())")
+            if walk_len is not None:
+                raise QueryValidationError("duplicate .walk() step")
+            if hops:
+                raise QueryValidationError(
+                    "cannot mix neighborhood hops (.sample/.out_vertices/"
+                    ".in_vertices) with .walk() in one query")
+            if n_negatives:
+                raise QueryValidationError(
+                    ".walk() must come before .negative() (negatives are "
+                    "drawn per walk center)")
+            walk_len = _check_count(step.length, "walk length")
+            if walk_len < 2:
+                raise QueryValidationError(
+                    f"walk length must be >= 2 (got {walk_len}): a walk "
+                    "needs at least one step beyond its start")
+            if step.etype is not None:
+                walk_etype = _resolve_type(step.etype, edge_types,
+                                           g.n_edge_types, "etype")
+        elif isinstance(step, Pairs):
+            if walk_len is None:
+                raise QueryValidationError(
+                    ".pairs() requires a preceding .walk() step")
+            if window:
+                raise QueryValidationError("duplicate .pairs() step")
+            window = _check_count(step.window, "pairs window")
+            if window >= walk_len:
+                raise QueryValidationError(
+                    f"pairs window {window} must be < walk length {walk_len}")
         elif isinstance(step, Negative):
             if n_negatives:
                 raise QueryValidationError("duplicate .negative() step")
@@ -226,6 +316,14 @@ def compile_steps(store, steps: Sequence, *,
         raise QueryValidationError(
             f"conflicting sample strategies {sorted(strategies)}: all hops of "
             "a query share one NEIGHBORHOOD sampler")
+    strategy = strategies.pop() if strategies else "uniform"
+    if strategy == "edge_weight" and any(
+            d != "out" or vt is not None or et is not None
+            for d, vt, et, _ in hops):
+        raise QueryValidationError(
+            "edge_weight strategy supports only plain .sample() hops "
+            "(per-edge dynamic weights are not defined on typed metapath "
+            "traversals)")
     if joint and source != "edge":
         raise QueryValidationError(
             ".joint() requires an edge-source query (it concatenates "
@@ -234,8 +332,15 @@ def compile_steps(store, steps: Sequence, *,
         raise QueryValidationError(
             "query needs .batch(n) or explicit V(ids=...) seeds")
 
+    # the resolved query strategy applies to every hop (one shared sampler);
+    # "importance" rides in the HopSpec so the metapath sampler sees it
+    hop_strategy = "importance" if strategy == "importance" else None
+    hop_specs = tuple(
+        HopSpec(fanout=f, direction=d, vtype=vt, etype=et,
+                strategy=hop_strategy)
+        for d, vt, et, f in hops)
     return TraversalPlan(
         source=source, vtype=vtype, etype=etype, ids=ids,
-        batch_size=batch_size, fanouts=tuple(fanouts),
-        strategy=(strategies.pop() if strategies else "uniform"),
+        batch_size=batch_size, hops=hop_specs, strategy=strategy,
+        walk_len=walk_len, walk_etype=walk_etype, window=window,
         n_negatives=n_negatives, neg_alpha=neg_alpha, joint=joint)

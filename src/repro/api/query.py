@@ -15,6 +15,14 @@ that consumers used to hand-wire from ``TraverseSampler`` +
 
     mb.device["src"]      # jit-ready MinibatchPlan pytree per role
 
+Typed metapath traversals and random walks are first-class steps:
+
+    (G(store, vertex_types={"user": 1, "item": 0})
+     .V(vtype="user").batch(64)
+     .out_vertices("item", 10).in_vertices("user", 5, etype=0))
+
+    G(store).V().batch(64).walk(6).pairs(2).negative(4)   # GATNE pipeline
+
 Each chain method appends an AST node and returns a NEW query (queries are
 immutable and reusable).  Terminals:
 
@@ -81,9 +89,44 @@ class Query:
         return self._with(_plan.OutEdges(etype=etype))
 
     def sample(self, fanout: int, strategy: Optional[str] = None) -> "Query":
-        """Append one NEIGHBORHOOD hop; ``strategy`` is "uniform" (default)
-        or "edge_weight" (the dynamic-weight sampler)."""
+        """Append one NEIGHBORHOOD hop; ``strategy`` is "uniform" (default),
+        "edge_weight" (the dynamic-weight sampler) or "importance"
+        (per-vertex importance weights, without replacement)."""
         return self._with(_plan.Sample(fanout=fanout, strategy=strategy))
+
+    def out_vertices(self, vtype: Optional[Union[int, str]] = None,
+                     fanout: int = 10, *,
+                     etype: Optional[Union[int, str]] = None,
+                     strategy: Optional[str] = None) -> "Query":
+        """Typed metapath hop along OUT-edges (Gremlin ``out``): expand the
+        frontier to ``fanout`` out-neighbors, keeping only destinations of
+        ``vtype`` reached over ``etype`` edges (``None`` = unrestricted)."""
+        return self._with(_plan.HopV(direction="out", vtype=vtype,
+                                     etype=etype, fanout=fanout,
+                                     strategy=strategy))
+
+    def in_vertices(self, vtype: Optional[Union[int, str]] = None,
+                    fanout: int = 10, *,
+                    etype: Optional[Union[int, str]] = None,
+                    strategy: Optional[str] = None) -> "Query":
+        """Typed metapath hop along IN-edges (Gremlin ``in``): like
+        :meth:`out_vertices` but traversing the in-adjacency."""
+        return self._with(_plan.HopV(direction="in", vtype=vtype,
+                                     etype=etype, fanout=fanout,
+                                     strategy=strategy))
+
+    def walk(self, length: int,
+             etype: Optional[Union[int, str]] = None) -> "Query":
+        """Random-walk step: each seed starts a ``length``-vertex uniform
+        walk (optionally restricted to ``etype`` edges); walkers freeze at
+        dead ends.  Mutually exclusive with .sample/.out_vertices hops."""
+        return self._with(_plan.Walk(length=length, etype=etype))
+
+    def pairs(self, window: int) -> "Query":
+        """Skip-gram pair extraction over a preceding .walk(): the executed
+        minibatch carries (center, context) roles — every pair of walk
+        positions within ``window`` of each other, both directions."""
+        return self._with(_plan.Pairs(window=window))
 
     def negative(self, n: int, alpha: float = 0.75) -> "Query":
         """Attach degree^alpha NEGATIVE sampling (avoiding the positive dst
@@ -108,12 +151,15 @@ class Query:
 
     def values(self, *, seed: int = 0,
                executor: Optional[QueryExecutor] = None,
-               pad: PadSpec = "auto", dedup: bool = True) -> Minibatch:
+               pad: PadSpec = "auto", dedup: bool = True,
+               to_device: bool = True) -> Minibatch:
         """Execute once.  ``executor`` continues existing sampler state;
-        otherwise a fresh one is seeded with ``seed``."""
+        otherwise a fresh one is seeded with ``seed``.  ``to_device=False``
+        skips the jnp transfer for host-only consumers (``mb.device`` is
+        then empty; the numpy ``mb.plans`` are still built)."""
         tplan = self.compile()
         ex = executor or QueryExecutor.for_plan(self.store, tplan, seed=seed)
-        return execute(tplan, ex, dedup=dedup, pad=pad)
+        return execute(tplan, ex, dedup=dedup, pad=pad, to_device=to_device)
 
     def dataset(self, steps_per_epoch: Optional[int] = None, *,
                 epochs: int = 1, seed: int = 0, prefetch: int = 2,

@@ -165,10 +165,13 @@ class GNNTrainer:
     one :class:`QueryExecutor` (persistent sampler state across ``train`` /
     ``embed`` calls) and its train query is
 
-        G(store).E().batch(b).sample(*fanouts).negative(q)
+        G(store).E().batch(b).sample(*fanouts).negative(q).joint()
 
     iterated as a Dataset whose double-buffered prefetch overlaps host-side
-    sampling with the jitted device step (paper §3.1).
+    sampling with the jitted device step (paper §3.1).  ``.joint()`` collapses
+    src‖dst‖neg into ONE shared MinibatchPlan, so every unique vertex of the
+    whole minibatch is embedded exactly once per step (the e2e device-step
+    layout) instead of once per role across three separate plans.
     """
 
     def __init__(self, store: DistributedGraphStore, spec: GNNSpec, *,
@@ -190,18 +193,22 @@ class GNNTrainer:
         self.params = init_gnn_params(spec, seed)
         self.features = jnp.asarray(store.dense_features())
         self.pad_levels = pad_levels
-        self._step = jax.jit(self._step_impl)
+        # batch size is static: the role slicing below needs the REAL batch,
+        # not the (possibly padded) seed-level length
+        self._step = jax.jit(self._step_impl, static_argnums=2)
 
     def _embed(self, params, plan):
         return gnn_apply(self.spec, params, plan, self.features)
 
-    def _step_impl(self, params, plan_s, plan_d, plan_n):
+    def _step_impl(self, params, plan_joint, b):
         def loss_fn(p):
-            z_src = self._embed(p, plan_s)
-            z_dst = self._embed(p, plan_d)
-            z_negf = self._embed(p, plan_n)
+            # one shared plan: embed src‖dst‖neg levels once, slice per role
+            # (rows past b*(2+q) are seed-level padding and never enter the
+            # loss, unlike the legacy per-role path which trained on them)
+            z = self._embed(p, plan_joint)
             q = self.n_negatives
-            z_neg = z_negf.reshape(z_src.shape[0], q, -1)
+            z_src, z_dst = z[:b], z[b:2 * b]
+            z_neg = z[2 * b:(2 + q) * b].reshape(b, q, -1)
             return unsup_loss(z_src, z_dst, z_neg)
 
         loss, grads = jax.value_and_grad(loss_fn)(params)
@@ -209,13 +216,15 @@ class GNNTrainer:
         return params, loss
 
     # -- GQL queries --------------------------------------------------------
-    def train_query(self, batch_size: int):
-        """The trainer's minibatch as a GQL query (reusable/inspectable)."""
+    def train_query(self, batch_size: int, joint: bool = True):
+        """The trainer's minibatch as a GQL query (reusable/inspectable).
+        ``joint=False`` gives the legacy three-plan (src/dst/neg) layout."""
         from repro.api import G
         q = G(self.store).E().batch(batch_size)
         for i, f in enumerate(self.spec.fanouts):
             q = q.sample(f, strategy=self._strategy if i == 0 else None)
-        return q.negative(self.n_negatives)
+        q = q.negative(self.n_negatives)
+        return q.joint() if joint else q
 
     def _embed_query(self, vertices: np.ndarray, chunk: Optional[int] = None):
         from repro.api import G
@@ -227,22 +236,32 @@ class GNNTrainer:
         return q
 
     def _plans_for_batch(self, batch_size: int):
-        """Deprecated shim (pre-GQL surface) — kept for out-of-tree callers
-        and ``data.GraphBatchPipeline``; equivalent to one ``train_query``
-        batch on the trainer's executor."""
-        mb = self.train_query(batch_size).values(executor=self.executor,
-                                                 pad=self.pad_levels)
+        """Deprecated shim (pre-GQL surface) — kept only for out-of-tree
+        callers; equivalent to one legacy three-plan ``train_query`` batch
+        on the trainer's executor.  NOTE: its (src, dst, neg) output no
+        longer matches ``self._step``, which now consumes one .joint() plan
+        plus a static batch size (``data.GraphBatchPipeline`` produces
+        that layout)."""
+        mb = self.train_query(batch_size, joint=False).values(
+            executor=self.executor, pad=self.pad_levels)
         return mb.device["src"], mb.device["dst"], mb.device["neg"]
+
+    def _joint_pad(self):
+        """``pad_levels`` is a per-seed-role bucket list (the pre-joint
+        convention); the joint plan's seed level holds B*(2+q) vertices, so
+        explicit targets scale by (2 + n_negatives) for the shared plan."""
+        if self.pad_levels is None or self.pad_levels == "auto":
+            return self.pad_levels
+        return [int(x) * (2 + self.n_negatives) for x in self.pad_levels]
 
     def train(self, steps: int, batch_size: int = 64) -> List[float]:
         ds = self.train_query(batch_size).dataset(
             steps_per_epoch=steps, executor=self.executor,
-            pad=self.pad_levels)
+            pad=self._joint_pad())
         losses = []
         for mb in ds:
-            self.params, loss = self._step(
-                self.params, mb.device["src"], mb.device["dst"],
-                mb.device["neg"])
+            self.params, loss = self._step(self.params, mb.device["joint"],
+                                           batch_size)
             losses.append(float(loss))
         return losses
 

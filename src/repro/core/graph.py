@@ -48,6 +48,7 @@ class AHG:
     directed: bool = True
     _in_indptr: Optional[np.ndarray] = None
     _in_indices: Optional[np.ndarray] = None
+    _in_order: Optional[np.ndarray] = None
 
     # ------------------------------------------------------------------ basic
     @property
@@ -86,7 +87,15 @@ class AHG:
             in_indptr = np.zeros(n + 1, dtype=np.int64)
             np.cumsum(counts, out=in_indptr[1:])
             self._in_indptr, self._in_indices = in_indptr, in_indices
+            self._in_order = order
         return self._in_indptr, self._in_indices
+
+    def in_edge_order(self) -> np.ndarray:
+        """[m] permutation: the out-edge id stored at each in-adjacency
+        position (lets callers carry per-edge data, e.g. edge types, onto
+        the in-adjacency without re-sorting)."""
+        self.in_adjacency()
+        return self._in_order
 
     def in_degree(self) -> np.ndarray:
         in_indptr, _ = self.in_adjacency()

@@ -9,17 +9,22 @@ where b_v is the general (base) embedding, g_v = [g_{v,1} .. g_{v,t}] the
 meta-specific embeddings, a_c self-attention coefficients over the t
 meta-embeddings, M_c / D trainable transforms and x_v the attributes.
 Training: random-walk skip-gram with negative sampling (4).
+
+Walk generation rides the GQL surface: the train minibatch is the query
+``G(store).V().batch(b).walk(L).pairs(w).negative(q)`` — vectorised
+``WalkSampler`` walks + skip-gram pair extraction + degree^alpha negatives,
+no per-vertex storage-layer loop (see ``benchmarks/bench_walks.py`` for the
+before/after).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Tuple
+from typing import List
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..sampling import NegativeSampler
 from ..storage import DistributedGraphStore
 
 Array = jax.Array
@@ -40,12 +45,14 @@ class GATNEConfig:
 class GATNE:
     def __init__(self, store: DistributedGraphStore, cfg: GATNEConfig = GATNEConfig(),
                  seed: int = 0):
+        from repro.api import QueryExecutor  # late: api builds on this layer
         self.store = store
         self.cfg = cfg
         g = store.graph
         self.g = g
         self.rng = np.random.default_rng(seed)
-        self.negative = NegativeSampler(store, seed=seed + 1)
+        # persistent sampler state for the walk/pair/negative train query
+        self.executor = QueryExecutor(store, seed=seed + 1)
         r = np.random.default_rng(seed)
         T = g.n_edge_types
         d, s = cfg.d, cfg.s
@@ -91,32 +98,15 @@ class GATNE:
         c = jnp.full(v.shape, edge_type, jnp.int32)
         return np.asarray(self._overall(self.params, self.features, v, c))
 
-    # -- random walks (host, through the storage layer) -------------------------
-    def _walks(self, starts: np.ndarray) -> np.ndarray:
-        walks = np.zeros((len(starts), self.cfg.walk_len), np.int32)
-        walks[:, 0] = starts
-        for i, v in enumerate(starts):
-            cur = int(v)
-            for t in range(1, self.cfg.walk_len):
-                shard = self.store.shards[self.store.shard_of(cur)]
-                nbrs = shard.neighbors(cur, self.store)
-                if len(nbrs) == 0:
-                    walks[i, t:] = cur
-                    break
-                cur = int(nbrs[self.rng.integers(0, len(nbrs))])
-                walks[i, t] = cur
-        return walks
-
-    def _pairs(self, walks: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
-        """(center, context) pairs within the window (Eq. 4)."""
-        B, L = walks.shape
-        cs, ctx = [], []
-        for off in range(1, self.cfg.window + 1):
-            cs.append(walks[:, :-off].reshape(-1))
-            ctx.append(walks[:, off:].reshape(-1))
-            cs.append(walks[:, off:].reshape(-1))
-            ctx.append(walks[:, :-off].reshape(-1))
-        return np.concatenate(cs), np.concatenate(ctx)
+    # -- the train minibatch as a GQL query ------------------------------------
+    def train_query(self, batch_size: int):
+        """``V().batch(b).walk(L).pairs(w).negative(q)`` — the whole walk →
+        skip-gram-pair → negative pipeline as one compiled traversal."""
+        from repro.api import G
+        return (G(self.store).V().batch(batch_size)
+                .walk(self.cfg.walk_len)
+                .pairs(self.cfg.window)
+                .negative(self.cfg.n_negatives))
 
     # -- skip-gram step ----------------------------------------------------------
     def _step_impl(self, params, centers, contexts, negs, etypes):
@@ -144,17 +134,20 @@ class GATNE:
         return params, loss
 
     def train(self, steps: int, batch_size: int = 64) -> List[float]:
+        ds = self.train_query(batch_size).dataset(
+            steps_per_epoch=steps, executor=self.executor, pad=None)
         losses = []
-        for _ in range(steps):
-            starts = self.rng.integers(0, self.g.n, size=batch_size).astype(np.int32)
-            centers, contexts = self._pairs(self._walks(starts))
+        for mb in ds:
+            # mb.pair_mask is intentionally NOT applied: the legacy host loop
+            # trained on dead-end padding pairs too, and this path preserves
+            # its distribution; mask-aware consumers can weight by it
+            centers, contexts = mb.roles["center"], mb.roles["context"]
             # one edge type per pair (multiplex view of the walk)
             etypes = self.rng.integers(0, self.g.n_edge_types,
                                        size=len(centers)).astype(np.int32)
-            negs = self.negative.sample(centers, self.cfg.n_negatives)
             self.params, loss = self._step(
                 self.params, jnp.asarray(centers), jnp.asarray(contexts),
-                jnp.asarray(negs), jnp.asarray(etypes))
+                jnp.asarray(mb.negatives), jnp.asarray(etypes))
             losses.append(float(loss))
         return losses
 

@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .sampling import NeighborhoodSampler, SampleBatch
+from .sampling import HopSpec, NeighborhoodSampler, SampleBatch
 
 __all__ = [
     "AGGREGATORS", "COMBINERS", "register_aggregator", "register_combiner",
@@ -215,7 +215,7 @@ class MinibatchPlan:
 
 
 def build_plan(sampler: NeighborhoodSampler, seeds: np.ndarray,
-               fanouts: Sequence[int], *, dedup: bool = True,
+               fanouts: Sequence, *, dedup: bool = True,
                pad_levels_to: Optional[Sequence[int]] = None) -> MinibatchPlan:
     """Sample hop-by-hop, unique-ifying each frontier when ``dedup``.
 
@@ -223,6 +223,10 @@ def build_plan(sampler: NeighborhoodSampler, seeds: np.ndarray,
     paper's "share the set of sampled neighbors ... in the mini-batch"), so
     the dedup and naive plans compute identical math; only the amount of
     recomputation differs.
+
+    ``fanouts`` entries are plain ints (uniform out-hops, any sampler) or
+    :class:`repro.core.sampling.HopSpec` (typed metapath hops — requires a
+    sampler that understands them, e.g. ``MetapathSampler``).
     """
     seeds = np.asarray(seeds, np.int32)
     levels: List[np.ndarray] = [seeds]
@@ -232,10 +236,11 @@ def build_plan(sampler: NeighborhoodSampler, seeds: np.ndarray,
     # routing shard of each level-h vertex = owner of the seed that reached it
     # (paper: the seed's graph server performs the whole multi-hop expansion)
     via = sampler.store.partition.vertex_home[seeds].astype(np.int32)
-    for h, fanout in enumerate(fanouts):
+    for h, hop in enumerate(fanouts):
+        fanout = hop.fanout if isinstance(hop, HopSpec) else int(hop)
         cur = levels[h]
         uniq, first, inv = np.unique(cur, return_index=True, return_inverse=True)
-        batch = sampler.sample(uniq, [fanout], via=via[first])
+        batch = sampler.sample(uniq, [hop], via=via[first])
         nbrs = batch.neighbors[0].reshape(len(uniq), fanout)
         msk = batch.masks[0].reshape(len(uniq), fanout)
         # expand the shared neighborhoods back to this level's occurrences

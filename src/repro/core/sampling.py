@@ -31,7 +31,8 @@ from .graph import AHG
 from .storage import DistributedGraphStore
 
 __all__ = [
-    "SampleBatch", "TraverseSampler", "NeighborhoodSampler", "NegativeSampler",
+    "SampleBatch", "HopSpec", "TraverseSampler", "NeighborhoodSampler",
+    "MetapathSampler", "WalkSampler", "NegativeSampler", "skipgram_pairs",
     "SAMPLERS", "register_sampler",
 ]
 
@@ -57,6 +58,68 @@ class SampleBatch:
         for x in self.fanouts[:h + 1]:
             f *= x
         return (b, f)
+
+
+@dataclasses.dataclass(frozen=True)
+class HopSpec:
+    """One typed traversal hop of a metapath (the sampler-layer unit the GQL
+    ``.out_vertices()/.in_vertices()`` steps compile to).
+
+    ``direction`` is "out" (follow out-edges) or "in" (follow in-edges);
+    ``vtype``/``etype`` restrict the destination vertex type / the traversed
+    edge type (``None`` = unrestricted).  ``strategy`` is ``None`` (uniform,
+    GraphSAGE replacement convention) or ``"importance"`` (per-vertex
+    importance-weighted sampling *without* replacement, padded when the typed
+    degree is below the fanout — AHEP's variance-minimising draw).
+    """
+
+    fanout: int
+    direction: str = "out"
+    vtype: Optional[int] = None
+    etype: Optional[int] = None
+    strategy: Optional[str] = None
+
+    @property
+    def plain(self) -> bool:
+        """True when the hop is exactly a legacy uniform .sample() hop."""
+        return (self.direction == "out" and self.vtype is None
+                and self.etype is None and self.strategy is None)
+
+
+def filtered_adjacency(g: AHG, direction: str = "out",
+                       vtype: Optional[int] = None,
+                       etype: Optional[int] = None
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+    """CSR (indptr, indices) over all n rows keeping only edges that match a
+    hop's type constraints — the precomputation that turns typed metapath
+    hops into plain bucket-level gathers.
+
+    ``direction="in"`` builds the filter over the in-adjacency (edge types are
+    carried through the same stable argsort that builds it).
+    """
+    if direction == "out":
+        indptr, indices = g.indptr, g.indices
+    elif direction == "in":
+        indptr, indices = g.in_adjacency()
+    else:
+        raise ValueError(f"direction must be 'out' or 'in', got {direction!r}")
+    if vtype is None and etype is None:
+        return indptr, indices
+    keep = np.ones(len(indices), bool)
+    if etype is not None:
+        if direction == "out":
+            et = g.edge_type
+        else:
+            # in-edge at position p holds out-edge in_edge_order()[p]
+            et = g.edge_type[g.in_edge_order()]
+        keep &= et == etype
+    if vtype is not None:
+        keep &= g.vertex_type[indices] == vtype
+    row = np.repeat(np.arange(g.n, dtype=np.int64), np.diff(indptr))
+    row_f = row[keep]
+    new_indptr = np.zeros(g.n + 1, np.int64)
+    np.cumsum(np.bincount(row_f, minlength=g.n), out=new_indptr[1:])
+    return new_indptr, indices[keep]
 
 
 class _AliasTable:
@@ -158,10 +221,7 @@ class NeighborhoodSampler:
         self._dirty = True
         self._row_cum: Optional[np.ndarray] = None
         # cached-vertex membership mask for the vectorised read accounting
-        self._cached_mask = np.zeros(g.n, bool)
-        plan = getattr(store, "cache_plan", None)
-        cached = plan.cached_vertices if plan is not None else ()
-        self._cached_mask[np.asarray(cached, np.int64)] = True
+        self._cached_mask = _cached_vertex_mask(store)
 
     # -- dynamic-weight machinery (the sampler's "backward") ---------------
     def update_weights(self, edge_ids: np.ndarray, grads: np.ndarray,
@@ -205,45 +265,15 @@ class NeighborhoodSampler:
                        ) -> Tuple[np.ndarray, np.ndarray]:
         """One vectorised pass over a whole request-flow bucket (uniform case).
 
-        Replaces the per-vertex Python loop: degrees are gathered straight
-        from the CSR (the cached/remote paths return the same rows — the
-        replicated cache is a copy of the owner's row), reads are accounted
-        per row exactly as the scalar path does, and row sampling is done in
-        two vectorised groups: with replacement where fanout > degree, and
-        argsort-of-random-keys per distinct degree otherwise.
+        Replaces the per-vertex Python loop: reads are accounted per row
+        exactly as the scalar path does (the cached/remote paths return the
+        same rows — the replicated cache is a copy of the owner's row), then
+        the gather itself is the shared ``_uniform_rows`` pass.
         """
         g = self.store.graph
         vs64 = vs.astype(np.int64)
-        lo = g.indptr[vs64]
-        deg = g.indptr[vs64 + 1] - lo
-        # read accounting: one read per row, classified local/cache/remote
-        owned = shard.owned_mask[vs64]
-        cached = ~owned & self._cached_mask[vs64]
-        n_local = int(owned.sum())
-        n_cache = int(cached.sum())
-        shard.stats.local_reads += n_local
-        shard.stats.cache_reads += n_cache
-        shard.stats.remote_reads += len(vs) - n_local - n_cache
-        out = np.zeros((len(vs), fanout), np.int32)
-        mask = np.zeros((len(vs), fanout), np.float32)
-        nz = deg > 0
-        if not nz.any():
-            return out, mask
-        mask[nz] = 1.0
-        # with replacement iff fanout exceeds degree (GraphSAGE convention)
-        repl = np.nonzero(nz & (deg < fanout))[0]
-        if len(repl):
-            idx = (self.rng.random((len(repl), fanout))
-                   * deg[repl][:, None]).astype(np.int64)
-            out[repl] = g.indices[lo[repl][:, None] + idx]
-        worepl = np.nonzero(nz & (deg >= fanout))[0]
-        if len(worepl):
-            for d in np.unique(deg[worepl]):
-                rows = worepl[deg[worepl] == d]
-                keys = self.rng.random((len(rows), int(d)))
-                sel = np.argsort(keys, axis=1)[:, :fanout]
-                out[rows] = g.indices[lo[rows][:, None] + sel]
-        return out, mask
+        _account_shard_reads(shard, self._cached_mask, vs64)
+        return _uniform_rows(self.rng, g.indptr, g.indices, vs64, fanout)
 
     def sample(self, seeds: np.ndarray, fanouts: Sequence[int],
                *, edge_type: Optional[int] = None,
@@ -286,6 +316,275 @@ class NeighborhoodSampler:
             fvia = np.repeat(fvia, fanout)   # expansion stays on the seed's server
         return SampleBatch(seeds=seeds, neighbors=hops, masks=masks,
                            fanouts=tuple(fanouts))
+
+
+# ---------------------------------------------------------------------------
+# METAPATH / WALK (typed multi-hop traversals, paper §3.3 typed sampling)
+# ---------------------------------------------------------------------------
+
+def _cached_vertex_mask(store: DistributedGraphStore) -> np.ndarray:
+    """[n] bool membership mask of the replicated neighbor cache (shared by
+    the vectorised samplers' read accounting)."""
+    mask = np.zeros(store.graph.n, bool)
+    plan = getattr(store, "cache_plan", None)
+    cached = plan.cached_vertices if plan is not None else ()
+    mask[np.asarray(cached, np.int64)] = True
+    return mask
+
+
+def _account_shard_reads(shard, cached_mask: np.ndarray,
+                         vs64: np.ndarray) -> None:
+    """One read per row on ``shard``, classified local/cache/remote."""
+    owned = shard.owned_mask[vs64]
+    cached = ~owned & cached_mask[vs64]
+    n_local = int(owned.sum())
+    n_cache = int(cached.sum())
+    shard.stats.local_reads += n_local
+    shard.stats.cache_reads += n_cache
+    shard.stats.remote_reads += len(vs64) - n_local - n_cache
+
+
+def _account_reads(store: DistributedGraphStore, cached_mask: np.ndarray,
+                   vs: np.ndarray, via: np.ndarray) -> None:
+    """Request-flow-bucket read accounting: each frontier vertex costs one
+    row read on its routing shard, classified local/cache/remote."""
+    vs64 = np.asarray(vs, np.int64)
+    for s in np.unique(via):
+        _account_shard_reads(store.shards[int(s)], cached_mask,
+                             vs64[via == s])
+
+
+def _uniform_rows(rng: np.random.Generator, indptr: np.ndarray,
+                  indices: np.ndarray, vs: np.ndarray, fanout: int
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+    """One vectorised uniform gather over CSR rows (GraphSAGE convention:
+    with replacement iff fanout exceeds the row degree)."""
+    vs64 = np.asarray(vs, np.int64)
+    lo = indptr[vs64]
+    deg = indptr[vs64 + 1] - lo
+    out = np.zeros((len(vs64), fanout), np.int32)
+    mask = np.zeros((len(vs64), fanout), np.float32)
+    nz = deg > 0
+    if not nz.any():
+        return out, mask
+    mask[nz] = 1.0
+    repl = np.nonzero(nz & (deg < fanout))[0]
+    if len(repl):
+        idx = (rng.random((len(repl), fanout))
+               * deg[repl][:, None]).astype(np.int64)
+        out[repl] = indices[lo[repl][:, None] + idx]
+    worepl = np.nonzero(nz & (deg >= fanout))[0]
+    for d in np.unique(deg[worepl]):
+        rows = worepl[deg[worepl] == d]
+        keys = rng.random((len(rows), int(d)))
+        sel = np.argsort(keys, axis=1)[:, :fanout]
+        out[rows] = indices[lo[rows][:, None] + sel]
+    return out, mask
+
+
+def _importance_rows(rng: np.random.Generator, indptr: np.ndarray,
+                     indices: np.ndarray, vs: np.ndarray, fanout: int,
+                     imp: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Importance-weighted gather WITHOUT replacement (AHEP convention):
+    rows with degree <= fanout keep all their neighbors (padded, in CSR
+    order); larger rows draw ``fanout`` distinct neighbors with
+    p(u) ∝ imp(u) via the Gumbel-top-k trick — distribution-identical to
+    successive ``choice(replace=False, p=imp/imp.sum())`` draws, but one
+    vectorised pass per distinct degree instead of a per-vertex loop."""
+    vs64 = np.asarray(vs, np.int64)
+    lo = indptr[vs64]
+    deg = indptr[vs64 + 1] - lo
+    out = np.zeros((len(vs64), fanout), np.int32)
+    mask = np.zeros((len(vs64), fanout), np.float32)
+    small = np.nonzero((deg > 0) & (deg <= fanout))[0]
+    if len(small):
+        col = np.arange(fanout, dtype=np.int64)
+        take = lo[small][:, None] + np.minimum(col[None, :],
+                                               deg[small][:, None] - 1)
+        valid = col[None, :] < deg[small][:, None]
+        out[small] = np.where(valid, indices[take], 0)
+        mask[small] = valid.astype(np.float32)
+    big = np.nonzero(deg > fanout)[0]
+    for d in np.unique(deg[big]):
+        rows = big[deg[big] == d]
+        cand = indices[lo[rows][:, None] + np.arange(int(d), dtype=np.int64)]
+        keys = (np.log(np.maximum(imp[cand], 1e-300))
+                + rng.gumbel(size=cand.shape))
+        sel = np.argsort(-keys, axis=1)[:, :fanout]
+        out[rows] = np.take_along_axis(cand, sel, axis=1)
+        mask[rows] = 1.0
+    return out, mask
+
+
+class MetapathSampler:
+    """Vectorised typed multi-hop traversal — the sampler behind the GQL
+    ``.out_vertices()/.in_vertices()`` metapath steps.
+
+    Each distinct hop signature ``(direction, vtype, etype)`` is compiled
+    once into a filtered CSR (``filtered_adjacency``); a typed hop is then a
+    plain bucket-level gather over that CSR — no per-vertex Python loop, and
+    the same request-flow read accounting as ``NeighborhoodSampler``.
+
+    ``importance`` is an optional [n] per-vertex weight array backing the
+    ``"importance"`` hop strategy (AHEP's variance-minimising sampling).
+    """
+
+    def __init__(self, store: DistributedGraphStore, *, seed: int = 0,
+                 importance: Optional[np.ndarray] = None):
+        self.store = store
+        self.rng = np.random.default_rng(seed)
+        self.importance = (None if importance is None
+                           else np.asarray(importance, np.float64))
+        self._csr: Dict[Tuple, Tuple[np.ndarray, np.ndarray]] = {}
+        self._cached_mask = _cached_vertex_mask(store)
+
+    def _adj(self, direction: str, vtype: Optional[int], etype: Optional[int]
+             ) -> Tuple[np.ndarray, np.ndarray]:
+        key = (direction, vtype, etype)
+        hit = self._csr.get(key)
+        if hit is None:
+            hit = filtered_adjacency(self.store.graph, direction, vtype, etype)
+            self._csr[key] = hit
+        return hit
+
+    def sample(self, seeds: np.ndarray, hops: Sequence,
+               *, via: Optional[np.ndarray] = None) -> SampleBatch:
+        """Expand ``seeds`` through a chain of :class:`HopSpec` (ints are
+        promoted to plain uniform out-hops); same aligned SampleBatch layout
+        and ``via`` routing semantics as ``NeighborhoodSampler.sample``."""
+        seeds = np.asarray(seeds, np.int32)
+        specs = [h if isinstance(h, HopSpec) else HopSpec(fanout=int(h))
+                 for h in hops]
+        if via is None:
+            via = self.store.partition.vertex_home[seeds]
+        frontier, fvia = seeds, np.asarray(via, np.int32)
+        hop_out: List[np.ndarray] = []
+        masks: List[np.ndarray] = []
+        for hop in specs:
+            indptr, indices = self._adj(hop.direction, hop.vtype, hop.etype)
+            _account_reads(self.store, self._cached_mask, frontier, fvia)
+            if hop.strategy == "importance":
+                imp = self.importance
+                if imp is None:
+                    imp = np.ones(self.store.graph.n)
+                nxt, msk = _importance_rows(self.rng, indptr, indices,
+                                            frontier, hop.fanout, imp)
+            else:
+                nxt, msk = _uniform_rows(self.rng, indptr, indices,
+                                         frontier, hop.fanout)
+            hop_out.append(nxt.reshape(-1))
+            masks.append(msk.reshape(-1))
+            frontier = nxt.reshape(-1)
+            fvia = np.repeat(fvia, hop.fanout)  # expansion stays on the seed's server
+        return SampleBatch(seeds=seeds, neighbors=hop_out, masks=masks,
+                           fanouts=tuple(h.fanout for h in specs))
+
+
+class WalkSampler:
+    """Vectorised random walks — the sampler behind the GQL ``.walk()`` step.
+
+    All walkers advance one step per pass (a handful of numpy gathers per
+    step instead of a per-walker Python loop); a walker whose frontier has no
+    (type-matching) out-edge freezes in place for the rest of the walk —
+    byte-compatible with the legacy per-vertex host loop's dead-end handling.
+    """
+
+    def __init__(self, store: DistributedGraphStore, *, seed: int = 0):
+        self.store = store
+        self.rng = np.random.default_rng(seed)
+        self._csr: Dict[Optional[int], Tuple[np.ndarray, np.ndarray]] = {}
+        self._cached_mask = _cached_vertex_mask(store)
+
+    def _adj(self, etype: Optional[int]) -> Tuple[np.ndarray, np.ndarray]:
+        hit = self._csr.get(etype)
+        if hit is None:
+            hit = filtered_adjacency(self.store.graph, "out", None, etype)
+            self._csr[etype] = hit
+        return hit
+
+    def walk(self, starts: np.ndarray, length: int, *,
+             etype: Optional[int] = None,
+             via: Optional[np.ndarray] = None,
+             return_lengths: bool = False):
+        """[B, length] int32 walk matrix; column 0 is ``starts``.
+
+        With ``return_lengths=True`` also returns [B] int64 walk lengths:
+        the number of REAL positions before the walker froze at a dead end
+        (``length`` when it never froze) — positions at/after a walker's
+        length are copies of its dead-end vertex.
+        """
+        starts = np.asarray(starts, np.int32)
+        indptr, indices = self._adj(etype)
+        if via is None:
+            via = self.store.partition.vertex_home[starts]
+        via = np.asarray(via, np.int32)
+        walks = np.zeros((len(starts), length), np.int32)
+        walks[:, 0] = starts
+        cur = starts.astype(np.int64)
+        lengths = np.full(len(starts), length, np.int64)
+        frozen = np.zeros(len(starts), bool)
+        last = len(indices) - 1
+        for t in range(1, length):
+            # a frozen walker makes no further storage reads (the read that
+            # discovered the dead end was its last — legacy loop semantics)
+            active = ~frozen
+            if active.any():
+                _account_reads(self.store, self._cached_mask,
+                               cur[active], via[active])
+            lo = indptr[cur]
+            deg = indptr[cur + 1] - lo
+            newly_frozen = active & (deg == 0)
+            lengths[newly_frozen] = t
+            frozen |= newly_frozen
+            if last >= 0:
+                r = self.rng.random(len(cur))
+                idx = np.minimum((r * deg).astype(np.int64),
+                                 np.maximum(deg - 1, 0))
+                step = indices[np.minimum(lo + idx, last)]
+                nxt = np.where(deg > 0, step, cur)
+            else:
+                nxt = cur                      # empty (filtered) graph
+            walks[:, t] = nxt
+            cur = nxt.astype(np.int64)
+        if return_lengths:
+            return walks, lengths
+        return walks
+
+
+def skipgram_pairs(walks: np.ndarray, window: int,
+                   lengths: Optional[np.ndarray] = None):
+    """(center, context) pairs within ``window`` positions of each other,
+    both directions — the skip-gram extraction GATNE trains on (Eq. 4).
+    The pair count is a pure function of (B, walk length, window), so walk
+    minibatches have static shapes for jit.
+
+    With ``lengths`` (per-walk real-position counts from
+    ``WalkSampler.walk(..., return_lengths=True)``) also returns a float32
+    pair mask: 1 where BOTH positions of the pair are real walk positions,
+    0 where the pair involves dead-end padding.  Pairs between repeated
+    vertices of a genuine cycle stay unmasked.
+    """
+    B, L = walks.shape
+    cs: List[np.ndarray] = []
+    ctx: List[np.ndarray] = []
+    for off in range(1, window + 1):
+        cs.append(walks[:, :-off].reshape(-1))
+        ctx.append(walks[:, off:].reshape(-1))
+        cs.append(walks[:, off:].reshape(-1))
+        ctx.append(walks[:, :-off].reshape(-1))
+    centers, contexts = np.concatenate(cs), np.concatenate(ctx)
+    if lengths is None:
+        return centers, contexts
+    his: List[np.ndarray] = []
+    lens: List[np.ndarray] = []
+    for off in range(1, window + 1):
+        # the pair (p, p+off) is real iff its later position is < length
+        hi = np.tile(np.arange(off, L, dtype=np.int64), B)
+        rep = np.repeat(np.asarray(lengths, np.int64), L - off)
+        his += [hi, hi]
+        lens += [rep, rep]
+    mask = (np.concatenate(his) < np.concatenate(lens)).astype(np.float32)
+    return centers, contexts, mask
 
 
 # ---------------------------------------------------------------------------
@@ -355,6 +654,8 @@ class NegativeSampler:
 SAMPLERS = {
     "traverse": TraverseSampler,
     "neighborhood": NeighborhoodSampler,
+    "metapath": MetapathSampler,
+    "walk": WalkSampler,
     "negative": NegativeSampler,
 }
 

@@ -141,14 +141,17 @@ class SyntheticTokenPipeline:
 class GraphBatchPipeline:
     """GNN minibatch producer: TRAVERSE seeds -> NEIGHBORHOOD plans ->
     NEGATIVE samples, prefetched off the training thread (the paper's
-    sampling/operator overlap)."""
+    sampling/operator overlap).  Produces the trainer's .joint() layout:
+    one shared src‖dst‖neg device plan per batch."""
 
     def __init__(self, trainer, batch_size: int):
         self.trainer = trainer            # core.gnn.GNNTrainer
         self.batch_size = batch_size
 
-    def batch_at(self, step: int) -> Tuple:
-        return self.trainer._plans_for_batch(self.batch_size)
+    def batch_at(self, step: int) -> PyTree:
+        mb = self.trainer.train_query(self.batch_size).values(
+            executor=self.trainer.executor, pad=self.trainer._joint_pad())
+        return mb.device["joint"]
 
     def iterator(self, *, depth: int = 2,
                  deadline_s: Optional[float] = None) -> PrefetchIterator:

@@ -24,6 +24,27 @@ import re
 from collections import defaultdict
 from typing import Dict, List, Optional, Tuple
 
+def xla_cost_dict(compiled) -> Dict[str, float]:
+    """``compiled.cost_analysis()`` across the jax version skew.
+
+    jax 0.4.x returns a LIST of per-program dicts (one entry for the main
+    program); newer jax returns the dict directly.  This flattens either
+    form into one {metric: value} dict, summing numeric keys across entries,
+    so callers never index a list that may not be there.
+    """
+    ca = compiled.cost_analysis()
+    if ca is None:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        merged: Dict[str, float] = {}
+        for entry in ca:
+            for k, v in dict(entry).items():
+                if isinstance(v, (int, float)):
+                    merged[k] = merged.get(k, 0.0) + float(v)
+        return merged
+    return dict(ca)
+
+
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
     "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,

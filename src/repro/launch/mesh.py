@@ -4,12 +4,30 @@
 jax device state).  Single pod = 16x16 = 256 chips, axes (data, model);
 multi-pod = 2x16x16 = 512 chips, axes (pod, data, model) — the pod axis is
 the DCN-connected data-parallel dimension (DESIGN.md §5).
+
+``compat_make_mesh`` papers over the jax version skew around explicit axis
+types: ``jax.sharding.AxisType`` (and ``make_mesh(axis_types=...)``) only
+exist on newer jax; on the pinned 0.4.37 every mesh axis is implicitly Auto,
+so the kwarg is simply dropped.
 """
 from __future__ import annotations
 
 from typing import Optional, Tuple
 
 import numpy as np
+
+
+def compat_make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...], *,
+                     devices=None):
+    """``jax.make_mesh`` with Auto axis types where the jax version has them
+    (>= 0.5's ``jax.sharding.AxisType``), plain mesh construction where it
+    does not (0.4.x raises on the attribute AND lacks the kwarg)."""
+    import jax
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes, devices=devices,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, devices=devices)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -23,8 +41,7 @@ def make_production_mesh(*, multi_pod: bool = False):
             f"mesh {shape} needs {n} devices, have {len(devices)} — launch "
             f"with XLA_FLAGS=--xla_force_host_platform_device_count={n} "
             f"(dryrun.py does this) or on a real {n}-chip slice")
-    return jax.make_mesh(shape, axes, devices=devices,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat_make_mesh(shape, axes, devices=devices)
 
 
 def make_debug_mesh(shape: Tuple[int, ...] = (1, 1),
@@ -32,5 +49,4 @@ def make_debug_mesh(shape: Tuple[int, ...] = (1, 1),
     """Tiny mesh over whatever devices exist (smoke tests)."""
     import jax
     n = int(np.prod(shape))
-    return jax.make_mesh(shape, axes, devices=jax.devices()[:n],
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat_make_mesh(shape, axes, devices=jax.devices()[:n])

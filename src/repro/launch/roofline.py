@@ -167,7 +167,7 @@ def analyze(compiled, lowered_text: Optional[str], meta: Dict[str, Any],
             mesh_name: str, n_devices: int) -> Roofline:
     from repro.launch import hlo_cost
 
-    ca = compiled.cost_analysis() or {}
+    ca = hlo_cost.xla_cost_dict(compiled)
     text = compiled.as_text()
     pod = 256 if n_devices > 256 else n_devices
     # trip-count-aware analysis (XLA's cost_analysis counts scan bodies once;

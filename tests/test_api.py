@@ -176,6 +176,24 @@ def test_executor_strategy_mismatch_rejected(small_store):
         q.values(executor=ex)
 
 
+def test_trainer_explicit_pad_levels_with_joint_plan(small_store):
+    """pad_levels stays a per-seed-role bucket list: the trainer scales it
+    by (2 + n_negatives) for its shared .joint() plan, and seed-level
+    padding (pad_levels[0] > batch) never leaks into the loss — the padded
+    run is numerically identical to the auto-padded one."""
+    from repro.core.gnn import GNNTrainer, make_gnn
+    g = small_store.graph
+    spec = make_gnn("graphsage", d_in=g.vertex_attr_table.shape[1],
+                    d_hidden=16, d_out=16, fanouts=(4, 3))
+    tr_pad = GNNTrainer(small_store, spec, n_negatives=2, lr=0.05, seed=0,
+                        pad_levels=[32, 1 << 10, 1 << 12])
+    tr_auto = GNNTrainer(small_store, spec, n_negatives=2, lr=0.05, seed=0)
+    l_pad = tr_pad.train(2, batch_size=16)
+    l_auto = tr_auto.train(2, batch_size=16)
+    assert all(np.isfinite(l_pad))
+    np.testing.assert_allclose(l_pad, l_auto, rtol=1e-5)
+
+
 def test_trainer_through_gql_losses_decrease(small_store):
     """GNNTrainer now drives the GQL Dataset path end-to-end."""
     from repro.core.gnn import GNNTrainer, make_gnn

@@ -1,0 +1,338 @@
+"""Metapath traversal engine: typed hops, walks, skip-gram pairs, and the
+GATNE/AHEP refactor onto the GQL surface (ISSUE 2)."""
+import numpy as np
+import pytest
+
+from repro.api import G, QueryValidationError
+from repro.api.plan import HopSpec
+from repro.core.graph import from_edges
+from repro.core.sampling import WalkSampler, skipgram_pairs
+from repro.core.storage import build_store
+
+
+# ---------------------------------------------------------------------------
+# Compilation / AST lowering
+# ---------------------------------------------------------------------------
+
+def test_metapath_hops_lower_to_hopspecs(small_store):
+    p = (G(small_store, vertex_types={"user": 1}, edge_types={"click": 0})
+         .V().batch(8)
+         .out_vertices("user", 5, etype="click")
+         .in_vertices(0, 3)
+         .compile())
+    assert p.hops == (
+        HopSpec(fanout=5, direction="out", vtype=1, etype=0, strategy=None),
+        HopSpec(fanout=3, direction="in", vtype=0, etype=None, strategy=None),
+    )
+    assert p.typed and p.fanouts == (5, 3)
+
+
+def test_plain_sample_hops_stay_untyped(small_store):
+    p = G(small_store).E().batch(8).sample(4).sample(3).compile()
+    assert not p.typed
+    assert all(h.plain for h in p.hops)
+    assert p.fanouts == (4, 3)
+
+
+def test_walk_query_lowering(small_store):
+    p = (G(small_store).V().batch(4).walk(6, etype=0).pairs(2).negative(3)
+         .compile())
+    assert p.walk_len == 6 and p.walk_etype == 0 and p.window == 2
+    assert p.n_negatives == 3 and not p.hops
+
+
+def test_importance_strategy_rides_the_hops(small_store):
+    p = (G(small_store).V(ids=np.arange(8))
+         .out_vertices(vtype=0, fanout=4, strategy="importance").compile())
+    assert p.strategy == "importance"
+    assert p.hops[0].strategy == "importance" and p.typed
+
+
+def test_metapath_validation_errors(small_store):
+    q = G(small_store)
+    cases = [
+        # type resolution on hops
+        lambda: q.V().batch(4).out_vertices("user", 3).compile(),  # unbound
+        lambda: q.V().batch(4).out_vertices(99, 3).compile(),      # bad vtype
+        lambda: q.V().batch(4).in_vertices(0, 3, etype=99).compile(),
+        lambda: q.V().batch(4).out_vertices(0, 0).compile(),       # bad fanout
+        # walk step ordering
+        lambda: q.V().batch(4).negative(2).walk(5).compile(),      # walk-after-negative
+        lambda: q.V().batch(4).sample(3).walk(5).compile(),        # mix hops+walk
+        lambda: q.V().batch(4).walk(5).sample(3).compile(),
+        lambda: q.V().batch(4).walk(5).out_vertices(0, 3).compile(),
+        lambda: q.V().batch(4).walk(5).walk(5).compile(),          # dup walk
+        lambda: q.V().batch(4).walk(1).compile(),                  # too short
+        lambda: q.V().batch(4).walk(5, etype=99).compile(),        # bad etype
+        lambda: q.E().batch(4).walk(5).compile(),                  # edge source
+        lambda: q.V().batch(4).out_edges().walk(5).compile(),
+        lambda: q.V().walk(5).batch(4).compile(),                  # batch late
+        # pairs
+        lambda: q.V().batch(4).pairs(2).compile(),                 # no walk
+        lambda: q.V().batch(4).walk(5).pairs(5).compile(),         # window >= L
+        lambda: q.V().batch(4).walk(5).pairs(2).pairs(2).compile(),
+        lambda: q.V().batch(4).walk(5).pairs(0).compile(),         # bad window
+        # strategy constraints
+        lambda: q.V().batch(4).out_vertices(0, 3, strategy="edge_weight")
+                 .compile(),                                       # typed+edge_weight
+        lambda: q.V().batch(4).out_vertices(0, 3, strategy="zipf").compile(),
+        # importance strategy without weights on the executor
+        lambda: q.V().batch(4)
+                 .out_vertices(0, 3, strategy="importance").values(seed=0),
+    ]
+    for i, bad in enumerate(cases):
+        with pytest.raises(QueryValidationError):
+            bad()
+            pytest.fail(f"case {i} did not raise")
+
+
+# ---------------------------------------------------------------------------
+# Typed hop execution
+# ---------------------------------------------------------------------------
+
+def test_out_vertices_respects_types_and_adjacency(small_store):
+    g = small_store.graph
+    mb = (G(small_store).V().batch(32).out_vertices(vtype=0, fanout=5, etype=2)
+          .values(seed=3, pad=None))
+    p = mb.plans["seeds"]
+    seeds = p.levels[0]
+    nbrs = p.levels[1][p.child_idx[0]]
+    msk = p.child_msk[0] > 0
+    assert msk.any()
+    # every masked neighbor has the requested vertex type...
+    assert (g.vertex_type[nbrs[msk]] == 0).all()
+    # ...and is reached over a type-2 out-edge of its seed
+    src_all, dst_all = g.edge_list()
+    et2 = {(int(s), int(d)) for s, d in
+           zip(src_all[g.edge_type == 2], dst_all[g.edge_type == 2])}
+    for i in range(len(seeds)):
+        for j in np.nonzero(msk[i])[0]:
+            assert (int(seeds[i]), int(nbrs[i, j])) in et2
+
+
+def test_in_vertices_traverses_in_adjacency(small_store):
+    g = small_store.graph
+    mb = (G(small_store).V().batch(32).in_vertices(fanout=4)
+          .values(seed=5, pad=None))
+    p = mb.plans["seeds"]
+    seeds = p.levels[0]
+    nbrs = p.levels[1][p.child_idx[0]]
+    msk = p.child_msk[0] > 0
+    assert msk.any()
+    for i in range(len(seeds)):
+        for j in np.nonzero(msk[i])[0]:
+            # u is an in-neighbor of seed  <=>  edge u -> seed exists
+            assert int(seeds[i]) in g.neighbors(int(nbrs[i, j]))
+
+
+def test_metapath_chain_two_typed_hops(small_store):
+    g = small_store.graph
+    mb = (G(small_store, vertex_types={"user": 1, "item": 0})
+          .V(vtype="user").batch(16)
+          .out_vertices("item", 4)
+          .in_vertices("user", 3)
+          .values(seed=7, pad=None))
+    p = mb.plans["seeds"]
+    assert (g.vertex_type[p.levels[0]] == 1).all()
+    hop1, m1 = p.levels[1][p.child_idx[0]], p.child_msk[0] > 0
+    hop2, m2 = p.levels[2][p.child_idx[1]], p.child_msk[1] > 0
+    assert (g.vertex_type[hop1[m1]] == 0).all()
+    assert (g.vertex_type[hop2[m2]] == 1).all()
+
+
+# ---------------------------------------------------------------------------
+# Walks
+# ---------------------------------------------------------------------------
+
+def _star_store():
+    # 0 -> {1..5}; leaves are dead ends
+    g = from_edges(6, np.zeros(5, np.int64), np.arange(1, 6),
+                   n_vertex_types=1, n_edge_types=1)
+    return build_store(g, 1)
+
+
+def test_walks_freeze_at_dead_ends_and_stay_uniform():
+    store = _star_store()
+    ws = WalkSampler(store, seed=0)
+    walks, lengths = ws.walk(np.zeros(200, np.int32), 3, return_lengths=True)
+    assert (walks[:, 0] == 0).all()
+    # one real step into the leaves, then frozen (legacy dead-end semantics)
+    assert (walks[:, 1] != 0).all()
+    assert (walks[:, 2] == walks[:, 1]).all()
+    assert (lengths == 2).all()          # positions 0 and 1 are real
+    # distribution-level equivalence with the per-vertex host loop: the next
+    # hop is uniform over the 5 out-neighbors (200 draws, expect 40 each)
+    counts = np.bincount(walks[:, 1], minlength=6)[1:]
+    assert counts.sum() == 200 and counts.min() >= 15 and counts.max() <= 75
+
+
+def test_frozen_walkers_stop_paying_storage_reads():
+    """Legacy loop semantics: the read that discovers a dead end is the
+    walker's last — frozen walkers are not billed for remaining steps."""
+    store = _star_store()
+    store.reset_stats()
+    ws = WalkSampler(store, seed=0)
+    ws.walk(np.zeros(50, np.int32), 5)
+    # step 1 reads the hub, step 2 reads the (empty) leaf row, steps 3-4 free
+    assert store.stats().total == 100
+
+
+def test_pair_mask_spares_cycles_masks_padding():
+    # 2-cycle: 0 <-> 1 never freezes; every pair is real even when a
+    # revisit makes center == context
+    g = from_edges(2, [0, 1], [1, 0])
+    store = build_store(g, 1)
+    ws = WalkSampler(store, seed=0)
+    walks, lengths = ws.walk(np.zeros(10, np.int32), 4, return_lengths=True)
+    assert (lengths == 4).all()
+    centers, contexts, mask = skipgram_pairs(walks, 2, lengths)
+    assert (mask == 1.0).all()
+    assert (centers == contexts).any()   # off=2 revisit pairs exist, live
+    # star: freeze after one step -> exactly the pairs whose later position
+    # is a dead-end copy are masked
+    walks, lengths = WalkSampler(_star_store(), seed=0).walk(
+        np.zeros(10, np.int32), 3, return_lengths=True)
+    _, _, mask = skipgram_pairs(walks, 2, lengths)
+    # off=1 pairs (p0,p1) live in both directions; (p1,p2) and the off=2
+    # (p0,p2) pairs all touch the dead-end copy at position 2 -> masked
+    assert mask.sum() == 10 * 2
+
+
+def test_walk_etype_filter():
+    # 0 -> 1 over type 0, 0 -> 2 over type 1
+    g = from_edges(3, [0, 0], [1, 2], edge_type=np.array([0, 1]),
+                   n_edge_types=2)
+    store = build_store(g, 1)
+    ws = WalkSampler(store, seed=0)
+    walks = ws.walk(np.zeros(50, np.int32), 2, etype=0)
+    assert (walks[:, 1] == 1).all()
+    walks = ws.walk(np.zeros(50, np.int32), 2, etype=1)
+    assert (walks[:, 1] == 2).all()
+
+
+def test_walk_transitions_are_edges(small_store):
+    g = small_store.graph
+    mb = G(small_store).V().batch(16).walk(6).values(seed=2)
+    assert mb.walks.shape == (16, 6)
+    for i in range(16):
+        for t in range(1, 6):
+            a, b = int(mb.walks[i, t - 1]), int(mb.walks[i, t])
+            assert a == b or b in g.neighbors(a)
+
+
+def test_skipgram_pairs_match_legacy_extraction():
+    rng = np.random.default_rng(0)
+    walks = rng.integers(0, 100, (7, 6)).astype(np.int32)
+    window = 2
+    # the deleted GATNE._pairs, verbatim
+    cs, ctx = [], []
+    for off in range(1, window + 1):
+        cs.append(walks[:, :-off].reshape(-1))
+        ctx.append(walks[:, off:].reshape(-1))
+        cs.append(walks[:, off:].reshape(-1))
+        ctx.append(walks[:, :-off].reshape(-1))
+    legacy = (np.concatenate(cs), np.concatenate(ctx))
+    centers, contexts = skipgram_pairs(walks, window)
+    np.testing.assert_array_equal(centers, legacy[0])
+    np.testing.assert_array_equal(contexts, legacy[1])
+
+
+def test_walk_query_pairs_and_negatives(small_store):
+    B, L, W, Q = 8, 6, 2, 4
+    mb = G(small_store).V().batch(B).walk(L).pairs(W).negative(Q).values(seed=4)
+    P = B * 2 * sum(L - off for off in range(1, W + 1))
+    assert mb.roles["center"].shape == (P,)
+    assert mb.roles["context"].shape == (P,)
+    assert mb.negatives.shape == (P, Q)
+    assert mb.pair_mask.shape == (P,)
+    assert set(np.unique(mb.pair_mask)) <= {0.0, 1.0}
+
+
+def test_walk_dataset_epochs_deterministic(small_store):
+    q = G(small_store).V().batch(8).walk(5).pairs(2).negative(2)
+    run1 = list(q.dataset(3, epochs=2, seed=42))
+    run2 = list(q.dataset(3, epochs=2, seed=42))
+    assert len(run1) == len(run2) == 6
+    for a, b in zip(run1, run2):
+        np.testing.assert_array_equal(a.walks, b.walks)
+        for role in a.roles:
+            np.testing.assert_array_equal(a.roles[role], b.roles[role])
+    # epochs differ from each other (fresh per-epoch executor seed)
+    assert (run1[0].walks != run1[3].walks).any()
+
+
+def test_chunked_walk_dataset_covers_ids(small_store):
+    ids = np.arange(40, dtype=np.int32)
+    ds = G(small_store).V(ids=ids).batch(16).walk(4).dataset()
+    starts = np.concatenate([mb.walks[:, 0] for mb in ds])
+    np.testing.assert_array_equal(starts, ids)
+
+
+# ---------------------------------------------------------------------------
+# GATNE / AHEP through the new path
+# ---------------------------------------------------------------------------
+
+def test_gatne_trains_through_walk_query(small_store):
+    from repro.core.models import GATNE
+    m1, m2 = GATNE(small_store, seed=5), GATNE(small_store, seed=5)
+    # equivalence under a fixed seed: two instances replay the same batches
+    l1, l2 = m1.train(3, batch_size=8), m2.train(3, batch_size=8)
+    np.testing.assert_allclose(l1, l2, rtol=1e-6)
+    p = m1.train_query(8).compile()
+    assert p.walk_len == m1.cfg.walk_len and p.window == m1.cfg.window
+
+
+def test_hep_typed_gather_matches_legacy_exactly(small_store):
+    """HEP's full-neighborhood gather through the metapath query equals the
+    deleted per-vertex _typed_neighbors loop element-for-element."""
+    from repro.core.models import HEP
+    g = small_store.graph
+    hep = HEP(small_store, seed=1)
+    width = int(np.diff(g.indptr).max())
+    batch = np.array([3, 17, 17, 200, 999], np.int32)   # dupes on purpose
+    ids, msk = hep.batch_arrays(batch, width)
+    for i, v in enumerate(batch):
+        nbrs = g.neighbors(int(v))
+        for c in range(g.n_vertex_types):
+            sel = nbrs[g.vertex_type[nbrs] == c][:width]
+            k = len(sel)
+            np.testing.assert_array_equal(ids[i, c, :k], sel)
+            assert msk[i, c, :k].all()
+            assert not msk[i, c, k:].any()
+
+
+def test_ahep_importance_sampling_distribution(small_store):
+    """AHEP's sampled gather: a subset of the typed neighborhood, without
+    replacement, exactly min(deg_c, fanout) entries per (vertex, type)."""
+    from repro.core.models import AHEP
+    g = small_store.graph
+    ahep = AHEP(small_store, seed=2)
+    W = ahep.cfg.fanout
+    batch = np.arange(30, dtype=np.int32)
+    ids, msk = ahep.batch_arrays(batch, W)
+    from collections import Counter
+    for i, v in enumerate(batch):
+        nbrs = g.neighbors(int(v))
+        for c in range(g.n_vertex_types):
+            # typed rows are multisets: parallel edges duplicate a neighbor,
+            # and the legacy loop sampled *positions* without replacement
+            typed = Counter(nbrs[g.vertex_type[nbrs] == c].tolist())
+            got = Counter(ids[i, c][msk[i, c] > 0].tolist())
+            assert sum(got.values()) == min(sum(typed.values()), W)
+            assert not got - typed                    # multiset subset
+    # determinism under seed through the executor
+    ahep2 = AHEP(small_store, seed=2)
+    ids2, msk2 = ahep2.batch_arrays(batch, W)
+    np.testing.assert_array_equal(ids, ids2)
+    np.testing.assert_array_equal(msk, msk2)
+
+
+def test_models_do_not_touch_storage_for_traversal():
+    """The refactor's point: GATNE/AHEP source no longer reads the storage
+    layer directly — traversal goes through compiled GQL queries."""
+    import inspect
+    from repro.core.models import ahep, gatne
+    for mod in (gatne, ahep):
+        src = inspect.getsource(mod)
+        assert "shard.neighbors" not in src
+        assert ".neighbors(" not in src

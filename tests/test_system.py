@@ -34,8 +34,8 @@ def test_sampling_through_pipeline_prefetch():
     tr = GNNTrainer(store, spec, lr=0.05, seed=0)
     pipe = GraphBatchPipeline(tr, batch_size=16).iterator(depth=2)
     for _ in range(3):
-        plan_s, plan_d, plan_n = next(pipe)
-        tr.params, loss = tr._step(tr.params, plan_s, plan_d, plan_n)
+        plan_joint = next(pipe)
+        tr.params, loss = tr._step(tr.params, plan_joint, 16)
         assert np.isfinite(float(loss))
     pipe.close()
 
