@@ -7,9 +7,11 @@ import traceback
 def main() -> None:
     print("name,us_per_call,derived")
     from . import (bench_algorithms, bench_cache, bench_graph_build,
-                   bench_operators, bench_sampling, bench_walks)
+                   bench_operators, bench_sampling, bench_serving,
+                   bench_walks)
     for mod in (bench_graph_build, bench_cache, bench_sampling,
-                bench_walks, bench_operators, bench_algorithms):
+                bench_walks, bench_operators, bench_serving,
+                bench_algorithms):
         try:
             mod.run()
         except Exception:

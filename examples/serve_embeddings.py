@@ -25,7 +25,9 @@ from repro.core.gnn import GNNTrainer, gnn_apply
 
 BATCH = 128
 N_REQ = 60
-PAD_LEVELS = [BATCH, 1 << 11, 1 << 13]     # static jit shape buckets
+# static jit shape buckets, carried BY the query (.pad policy) instead of
+# hand-threaded through every .values() call site
+PAD_BUCKETS = [BATCH, 1 << 11, 1 << 13]
 
 
 def main():
@@ -45,9 +47,10 @@ def main():
 
     def request(vids: np.ndarray) -> np.ndarray:
         """A serving request is one GQL query: pin the requested ids, expand
-        the 2-hop neighborhood, pad to the static jit shape buckets."""
-        mb = (G(store).V(ids=vids).sample(8).sample(4)
-              .values(executor=tr.executor, pad=PAD_LEVELS))
+        the 2-hop neighborhood; the query itself carries the static jit
+        shape buckets (expression-level padding policy)."""
+        mb = (G(store).V(ids=vids).sample(8).sample(4).pad(buckets=PAD_BUCKETS)
+              .values(executor=tr.executor))
         return serve(mb.device["seeds"])
 
     _ = request(np.zeros(BATCH, np.int32)).block_until_ready()   # warmup

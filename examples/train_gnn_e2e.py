@@ -68,10 +68,13 @@ def main():
           f"(table {g.n:,} x {cfg.d_in} + 2 GraphSAGE layers)")
 
     # GQL: one edge-source query produces the joint src‖dst‖neg plan the
-    # device step consumes; the executor holds persistent sampler state
+    # device step consumes; the executor holds persistent sampler state.
+    # The query carries its own pad policy (the device step's static level
+    # sizes) — no pad= threading at the call sites below.
     train_q = (gql(store).E().batch(args.batch)
                .sample(cfg.fanouts[0]).sample(cfg.fanouts[1])
-               .negative(cfg.n_negatives).joint())
+               .negative(cfg.n_negatives).joint()
+               .pad(buckets=cfg.level_sizes))
     qexec = train_q.executor(seed=0)
 
     # --------------------------------------------------------------- device
@@ -93,7 +96,7 @@ def main():
     step_jit = jax.jit(G.train_step(cfg, lr=0.05))
 
     def make_batch_plan():
-        mb = train_q.values(executor=qexec, pad=list(cfg.level_sizes))
+        mb = train_q.values(executor=qexec)
         return to_device_plan(mb.plans["joint"])
 
     # --------------------------------------------------- resilient train loop
@@ -126,7 +129,8 @@ def main():
             (cfg.level_sizes[0] // len(v)) + 1)[: cfg.level_sizes[0]]
         mb = (gql(store).V(ids=ids)
               .sample(cfg.fanouts[0]).sample(cfg.fanouts[1])
-              .values(executor=qexec, pad=list(cfg.level_sizes)))
+              .pad(buckets=cfg.level_sizes)
+              .values(executor=qexec))
         return np.asarray(fwd(params, to_device_plan(mb.plans["seeds"])))[: len(v)]
 
     z_s = embed(src_all[idx])

@@ -21,6 +21,11 @@ way: every batch is a padded skip-gram pair minibatch with static shapes
 (the pair count is a pure function of batch size, walk length and window),
 so a training loop can jit one step and stream epochs — GATNE's training
 path.
+
+Padding: the default ``pad="auto"`` defers to the query's own ``.pad()``
+policy when it carries one (bounded jit shape variants across the whole
+stream), falling back to per-batch power-of-two rounding otherwise; an
+explicit ``pad=`` list here overrides both (legacy per-seed-role buckets).
 """
 from __future__ import annotations
 

@@ -79,10 +79,19 @@ class QueryExecutor:
         self.negative = SAMPLERS["negative"](
             store, alpha=neg_alpha, per_type=per_type_negatives, seed=seed + 2)
         # typed traversal samplers (metapath = seed+3, walk = seed+4);
-        # ``importance`` backs the "importance" hop strategy (AHEP)
+        # ``importance`` backs the "importance" hop strategy (AHEP), and the
+        # metapath sampler SHARES the neighborhood sampler's dynamic edge
+        # logits so update_weights() steers plain and typed edge_weight hops
+        # alike (plugin samplers without the kwarg fall back to their own)
         self.importance = importance
-        self.metapath = SAMPLERS["metapath"](store, seed=seed + 3,
-                                             importance=importance)
+        logits = getattr(self.neighborhood, "edge_logits", None)
+        try:
+            self.metapath = SAMPLERS["metapath"](
+                store, seed=seed + 3, importance=importance,
+                edge_logits=logits)
+        except TypeError:
+            self.metapath = SAMPLERS["metapath"](store, seed=seed + 3,
+                                                 importance=importance)
         self.walk = SAMPLERS["walk"](store, seed=seed + 4)
         # typed-filter pools are deterministic per store: compute once per
         # (vtype)/(etype, vtype) key, not O(n)/O(m) per minibatch
@@ -157,7 +166,11 @@ def _pad_for_role(pad: PadSpec, role: str, n_negatives: int
     by n_negatives (its seed level is B*Q).  The "joint" role does NOT scale
     — callers of .joint() queries pass raw level sizes (the device-step
     static shapes, e.g. ``configs.aligraph_gnn.level_sizes``, are already
-    sized for the concatenated src‖dst‖neg seed level)."""
+    sized for the concatenated src‖dst‖neg seed level).
+
+    A query carrying its own ``.pad()`` policy resolves under the default
+    ``pad="auto"`` instead (see :func:`execute`); the policy's raw per-level
+    targets apply to every role as-is."""
     if pad is None or pad == "auto":
         return pad
     scale = n_negatives if role == "neg" else 1
@@ -250,7 +263,13 @@ def execute(plan: TraversalPlan, executor: QueryExecutor, *,
             p = build_plan(sampler, seeds, hops_arg, dedup=dedup)
             rp = _pad_for_role(pad, role, plan.n_negatives)
             if rp == "auto":
-                p = ops.pad_plan(p, ops.auto_pad_sizes(p))
+                # the query's own .pad() policy wins over per-batch pow2
+                # rounding; an explicit pad= argument overrides both
+                if plan.pad_buckets is not None:
+                    p = ops.pad_plan(
+                        p, plan.resolve_pad([len(l) for l in p.levels]))
+                else:
+                    p = ops.pad_plan(p, ops.auto_pad_sizes(p))
             elif rp is not None:
                 p = ops.pad_plan(p, rp)
             plans[role] = p

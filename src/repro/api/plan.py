@@ -20,7 +20,7 @@ from repro.core.sampling import HopSpec
 __all__ = [
     "QueryValidationError", "TraversalPlan", "compile_steps", "HopSpec",
     "SourceV", "SourceE", "Batch", "OutEdges", "Sample", "HopV", "Walk",
-    "Pairs", "Negative", "Joint", "STRATEGIES",
+    "Pairs", "Negative", "Joint", "Pad", "STRATEGIES",
 ]
 
 STRATEGIES = ("uniform", "edge_weight", "importance")
@@ -94,6 +94,14 @@ class Joint:
     pass
 
 
+@dataclasses.dataclass(frozen=True)
+class Pad:
+    """Expression-level padding policy (.pad): per-level jit shape targets,
+    normalised to one ladder tuple per plan level."""
+
+    buckets: Tuple[Tuple[int, ...], ...]
+
+
 # ---------------------------------------------------------------------------
 # The validated logical plan
 # ---------------------------------------------------------------------------
@@ -112,6 +120,12 @@ class TraversalPlan:
     ``n_negatives``/``neg_alpha`` the NEGATIVE stage, and ``joint``
     collapses src‖dst‖neg into one shared MinibatchPlan (the e2e training
     layout).
+
+    ``pad_buckets`` is the query's own padding policy (the ``.pad()`` step):
+    one ladder of candidate jit sizes per plan level.  Execution picks ONE
+    ladder index for the whole plan — the smallest variant every level fits
+    (``resolve_pad``) — so a query compiles at most max-ladder-length
+    distinct jit shapes, regardless of traffic.
     """
 
     source: str                                # "vertex" | "edge"
@@ -127,6 +141,7 @@ class TraversalPlan:
     n_negatives: int = 0
     neg_alpha: float = 0.75
     joint: bool = False
+    pad_buckets: Optional[Tuple[Tuple[int, ...], ...]] = None
 
     @property
     def fanouts(self) -> Tuple[int, ...]:
@@ -142,6 +157,28 @@ class TraversalPlan:
     def chunked(self) -> bool:
         """Explicit ids + a batch size = iterate ids in fixed-size chunks."""
         return self.ids is not None and self.batch_size is not None
+
+    @property
+    def n_pad_variants(self) -> int:
+        """How many distinct jit shape variants the pad policy allows."""
+        if self.pad_buckets is None:
+            return 0
+        return max(len(ladder) for ladder in self.pad_buckets)
+
+    def resolve_pad(self, level_sizes: Sequence[int]) -> List[int]:
+        """Pick the pad targets for one executed plan: the smallest ladder
+        index ``j`` such that EVERY level fits its ``j``-th target (ladders
+        shorter than the longest repeat their last entry).  Levels beyond the
+        policy keep their exact size."""
+        assert self.pad_buckets is not None
+        for j in range(self.n_pad_variants):
+            tgt = [ladder[min(j, len(ladder) - 1)]
+                   for ladder in self.pad_buckets]
+            if all(int(level_sizes[h]) <= tgt[h] for h in range(len(tgt))):
+                return tgt
+        raise QueryValidationError(
+            f"plan levels {[int(s) for s in level_sizes]} exceed the largest "
+            f".pad() variant {[l[-1] for l in self.pad_buckets]}")
 
 
 def _resolve_type(value, names: Optional[Dict[str, int]], n_types: int,
@@ -171,6 +208,39 @@ def _check_count(value, what: str) -> int:
     return int(value)
 
 
+def _check_pad_buckets(buckets) -> Tuple[Tuple[int, ...], ...]:
+    """Normalise a .pad(buckets=...) argument: one entry per plan level,
+    each an int (one fixed size) or an ascending ladder of candidate sizes."""
+    try:
+        entries = list(buckets)
+    except TypeError:
+        raise QueryValidationError(
+            f".pad() buckets must be a sequence of per-level targets, "
+            f"got {buckets!r}")
+    if not entries:
+        raise QueryValidationError(".pad() needs at least one level target")
+    out: list = []
+    for h, entry in enumerate(entries):
+        if isinstance(entry, (int, np.integer)) and not isinstance(entry, bool):
+            ladder = (_check_count(entry, f"pad level {h} target"),)
+        else:
+            try:
+                ladder = tuple(_check_count(x, f"pad level {h} bucket")
+                               for x in entry)
+            except TypeError:
+                raise QueryValidationError(
+                    f"pad level {h} must be an int or a sequence of ints, "
+                    f"got {entry!r}")
+        if not ladder:
+            raise QueryValidationError(f"pad level {h} has an empty ladder")
+        if any(b <= a for a, b in zip(ladder, ladder[1:])):
+            raise QueryValidationError(
+                f"pad level {h} ladder {list(ladder)} must be strictly "
+                "ascending")
+        out.append(ladder)
+    return tuple(out)
+
+
 def compile_steps(store, steps: Sequence, *,
                   vertex_types: Optional[Dict[str, int]] = None,
                   edge_types: Optional[Dict[str, int]] = None
@@ -196,6 +266,7 @@ def compile_steps(store, steps: Sequence, *,
     n_negatives = 0
     neg_alpha = 0.75
     joint = False
+    pad_buckets: Optional[Tuple[Tuple[int, ...], ...]] = None
 
     head = steps[0]
     if isinstance(head, SourceV):
@@ -309,6 +380,10 @@ def compile_steps(store, steps: Sequence, *,
             neg_alpha = float(step.alpha)
         elif isinstance(step, Joint):
             joint = True
+        elif isinstance(step, Pad):
+            if pad_buckets is not None:
+                raise QueryValidationError("duplicate .pad() step")
+            pad_buckets = _check_pad_buckets(step.buckets)
         else:
             raise QueryValidationError(f"unknown query step {step!r}")
 
@@ -317,13 +392,6 @@ def compile_steps(store, steps: Sequence, *,
             f"conflicting sample strategies {sorted(strategies)}: all hops of "
             "a query share one NEIGHBORHOOD sampler")
     strategy = strategies.pop() if strategies else "uniform"
-    if strategy == "edge_weight" and any(
-            d != "out" or vt is not None or et is not None
-            for d, vt, et, _ in hops):
-        raise QueryValidationError(
-            "edge_weight strategy supports only plain .sample() hops "
-            "(per-edge dynamic weights are not defined on typed metapath "
-            "traversals)")
     if joint and source != "edge":
         raise QueryValidationError(
             ".joint() requires an edge-source query (it concatenates "
@@ -331,10 +399,29 @@ def compile_steps(store, steps: Sequence, *,
     if ids is None and batch_size is None:
         raise QueryValidationError(
             "query needs .batch(n) or explicit V(ids=...) seeds")
+    if pad_buckets is not None:
+        if not hops:
+            raise QueryValidationError(
+                ".pad() applies to plan levels: the query needs at least one "
+                ".sample()/.out_vertices()/.in_vertices() hop")
+        if len(pad_buckets) > len(hops) + 1:
+            raise QueryValidationError(
+                f".pad() carries {len(pad_buckets)} level targets but the "
+                f"query has only {len(hops) + 1} plan levels")
 
     # the resolved query strategy applies to every hop (one shared sampler);
-    # "importance" rides in the HopSpec so the metapath sampler sees it
-    hop_strategy = "importance" if strategy == "importance" else None
+    # "importance" rides in the HopSpec so the metapath sampler sees it, and
+    # "edge_weight" rides there too when any hop is typed-shaped (the plain
+    # all-out untyped form keeps the legacy weighted NeighborhoodSampler
+    # path, byte-identical under a fixed seed)
+    any_typed_shape = any(d != "out" or vt is not None or et is not None
+                          for d, vt, et, _ in hops)
+    if strategy == "importance":
+        hop_strategy: Optional[str] = "importance"
+    elif strategy == "edge_weight" and any_typed_shape:
+        hop_strategy = "edge_weight"
+    else:
+        hop_strategy = None
     hop_specs = tuple(
         HopSpec(fanout=f, direction=d, vtype=vt, etype=et,
                 strategy=hop_strategy)
@@ -343,4 +430,5 @@ def compile_steps(store, steps: Sequence, *,
         source=source, vtype=vtype, etype=etype, ids=ids,
         batch_size=batch_size, hops=hop_specs, strategy=strategy,
         walk_len=walk_len, walk_etype=walk_etype, window=window,
-        n_negatives=n_negatives, neg_alpha=neg_alpha, joint=joint)
+        n_negatives=n_negatives, neg_alpha=neg_alpha, joint=joint,
+        pad_buckets=pad_buckets)

@@ -138,6 +138,26 @@ class Query:
         the e2e device step consumes)."""
         return self._with(_plan.Joint())
 
+    def pad(self, buckets: Sequence) -> "Query":
+        """Expression-level padding policy: the query carries its own jit
+        shape targets, so executing it (``.values()``/``.dataset()`` with the
+        default ``pad="auto"``) pads plan levels to these instead of
+        per-batch power-of-two rounding — consumers stop hand-picking
+        ``PAD_LEVELS``-style constants at every call site.
+
+        ``buckets[h]`` targets plan level ``h`` (level 0 = seeds) and is
+        either an int (one fixed size) or an ascending ladder of candidate
+        sizes.  Ladder entries form coupled *shape variants*: execution picks
+        the smallest index ``j`` such that every level fits its ``j``-th
+        target, so the query compiles at most max-ladder-length distinct jit
+        shapes — the serving runtime's bounded-recompile contract.  Levels a
+        batch overflows past the largest variant raise at execution.
+
+        Unlike an explicit ``pad=`` argument to ``.values()`` (a per-SEED-role
+        convention that scales the "neg" role), the policy applies to every
+        role's plan as-is."""
+        return self._with(_plan.Pad(buckets=_plan._check_pad_buckets(buckets)))
+
     # -- terminals ---------------------------------------------------------
     def compile(self) -> TraversalPlan:
         """Validate the chain and lower it to a :class:`TraversalPlan`."""

@@ -22,7 +22,8 @@ import numpy as np
 
 from .graph import AHG, k_hop_degrees
 
-__all__ = ["importance", "plan_cache", "CachePlan", "LRUCache", "power_law_fit"]
+__all__ = ["importance", "plan_cache", "CachePlan", "LRUCache", "CachePolicy",
+           "power_law_fit"]
 
 
 def importance(g: AHG, k: int = 1) -> np.ndarray:
@@ -123,6 +124,101 @@ class LRUCache:
 
     def reset_stats(self) -> None:
         self.hits = self.misses = 0
+
+
+class CachePolicy:
+    """Keyed value cache under a pluggable admission/eviction policy — the
+    §3.2 strategies as one comparable surface (Fig 9, and the serving
+    runtime's embedding cache):
+
+      * ``"importance"`` — static admission: only the top-``capacity`` keys
+        by the supplied ``scores`` (Imp^(k), Eq. 1) are ever stored; the
+        steady state is exactly the paper's importance cache.  Never evicts.
+      * ``"lru"``        — classic recency cache (``LRUCache``).
+      * ``"random"``     — static admission of a seeded random
+        ``capacity``-subset (the Fig 9 baseline).
+      * ``"off"``        — stores nothing (ablation baseline).
+
+    ``get`` counts a hit/miss per call; ``put`` silently drops keys the
+    policy does not admit.
+    """
+
+    POLICIES = ("importance", "lru", "random", "off")
+
+    def __init__(self, capacity: int, policy: str = "importance", *,
+                 scores: Optional[np.ndarray] = None,
+                 n_keys: Optional[int] = None, seed: int = 0):
+        if policy not in self.POLICIES:
+            raise ValueError(f"unknown cache policy {policy!r} "
+                             f"(known: {self.POLICIES})")
+        if capacity <= 0 and policy != "off":
+            raise ValueError("capacity must be positive")
+        self.capacity = int(capacity)
+        self.policy = policy
+        self.hits = 0
+        self.misses = 0
+        self._lru: Optional[LRUCache] = None
+        self._d: Dict[int, object] = {}
+        self._admit: Optional[np.ndarray] = None      # [n_keys] bool
+        if policy == "lru":
+            self._lru = LRUCache(capacity)
+        elif policy == "importance":
+            if scores is None:
+                raise ValueError("importance policy needs per-key scores "
+                                 "(core.cache.importance Eq. 1)")
+            scores = np.asarray(scores, np.float64)
+            admit = np.zeros(len(scores), bool)
+            top = np.argpartition(-scores, min(self.capacity, len(scores)) - 1
+                                  )[:self.capacity]
+            admit[top] = True
+            self._admit = admit
+        elif policy == "random":
+            if n_keys is None:
+                raise ValueError("random policy needs n_keys")
+            rng = np.random.default_rng(seed)
+            admit = np.zeros(int(n_keys), bool)
+            admit[rng.choice(int(n_keys), size=min(self.capacity, int(n_keys)),
+                             replace=False)] = True
+            self._admit = admit
+
+    def __len__(self) -> int:
+        if self._lru is not None:
+            return len(self._lru)
+        return len(self._d)
+
+    def get(self, key: int):
+        if self.policy == "off":
+            self.misses += 1
+            return None
+        if self._lru is not None:
+            hit = self._lru.get(int(key))
+        else:
+            hit = self._d.get(int(key))
+        if hit is None:
+            self.misses += 1
+        else:
+            self.hits += 1
+        return hit
+
+    def put(self, key: int, value) -> None:
+        if self.policy == "off":
+            return
+        if self._lru is not None:
+            self._lru.put(int(key), value)
+            return
+        if self._admit is not None and not self._admit[int(key)]:
+            return
+        self._d[int(key)] = value
+
+    @property
+    def hit_rate(self) -> float:
+        tot = self.hits + self.misses
+        return self.hits / tot if tot else 0.0
+
+    def reset_stats(self) -> None:
+        self.hits = self.misses = 0
+        if self._lru is not None:
+            self._lru.reset_stats()
 
 
 def random_cache_plan(g: AHG, rate: float, *, seed: int = 0) -> CachePlan:

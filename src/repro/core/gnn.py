@@ -236,15 +236,16 @@ class GNNTrainer:
         return q
 
     def _plans_for_batch(self, batch_size: int):
-        """Deprecated shim (pre-GQL surface) — kept only for out-of-tree
-        callers; equivalent to one legacy three-plan ``train_query`` batch
-        on the trainer's executor.  NOTE: its (src, dst, neg) output no
-        longer matches ``self._step``, which now consumes one .joint() plan
-        plus a static batch size (``data.GraphBatchPipeline`` produces
-        that layout)."""
-        mb = self.train_query(batch_size, joint=False).values(
-            executor=self.executor, pad=self.pad_levels)
-        return mb.device["src"], mb.device["dst"], mb.device["neg"]
+        """REMOVED (pre-GQL shim).  Every consumer rides the GQL surface
+        since PR 2; the trainer's device step consumes ONE shared .joint()
+        plan, not the three-plan (src, dst, neg) layout this produced."""
+        raise RuntimeError(
+            "GNNTrainer._plans_for_batch was removed: build batches with "
+            "trainer.train_query(batch_size, joint=True).values(executor="
+            "trainer.executor) and feed mb.device['joint'] to the device "
+            "step (data.GraphBatchPipeline produces that layout); "
+            "train_query(batch_size, joint=False) gives the legacy "
+            "three-plan query if you really need it.")
 
     def _joint_pad(self):
         """``pad_levels`` is a per-seed-role bucket list (the pre-joint
@@ -270,12 +271,16 @@ class GNNTrainer:
                                                 pad=None)
         return np.asarray(self._embed(self.params, mb.device["seeds"]))
 
-    def embed_many(self, vertices: np.ndarray, *, chunk: int = 256
-                   ) -> np.ndarray:
+    def embed_many(self, vertices: np.ndarray, *, chunk: int = 256,
+                   executor=None) -> np.ndarray:
         """Embed a large id set in fixed chunks, prefetching the host-side
-        sampling of chunk i+1 while the device embeds chunk i."""
+        sampling of chunk i+1 while the device embeds chunk i.
+
+        ``executor`` overrides the trainer's own (e.g. a serving
+        ``ServerPlan.executor()`` with frozen sampling, which makes this the
+        offline reference the served path is byte-compared against)."""
         ds = self._embed_query(vertices, chunk=chunk).dataset(
-            executor=self.executor, pad=None)
+            executor=executor or self.executor, pad=None)
         return np.concatenate([
             np.asarray(self._embed(self.params, mb.device["seeds"]))
             for mb in ds], axis=0)

@@ -68,9 +68,11 @@ class HopSpec:
     ``direction`` is "out" (follow out-edges) or "in" (follow in-edges);
     ``vtype``/``etype`` restrict the destination vertex type / the traversed
     edge type (``None`` = unrestricted).  ``strategy`` is ``None`` (uniform,
-    GraphSAGE replacement convention) or ``"importance"`` (per-vertex
+    GraphSAGE replacement convention), ``"importance"`` (per-vertex
     importance-weighted sampling *without* replacement, padded when the typed
-    degree is below the fanout — AHEP's variance-minimising draw).
+    degree is below the fanout — AHEP's variance-minimising draw), or
+    ``"edge_weight"`` (neighbors drawn ∝ the traversed edge's weight, the
+    weights carried through the signature filter).
     """
 
     fanout: int
@@ -88,37 +90,43 @@ class HopSpec:
 
 def filtered_adjacency(g: AHG, direction: str = "out",
                        vtype: Optional[int] = None,
-                       etype: Optional[int] = None
-                       ) -> Tuple[np.ndarray, np.ndarray]:
+                       etype: Optional[int] = None,
+                       *, return_edge_ids: bool = False):
     """CSR (indptr, indices) over all n rows keeping only edges that match a
     hop's type constraints — the precomputation that turns typed metapath
     hops into plain bucket-level gathers.
 
     ``direction="in"`` builds the filter over the in-adjacency (edge types are
     carried through the same stable argsort that builds it).
+
+    With ``return_edge_ids=True`` a third array gives, per kept CSR slot, the
+    GLOBAL edge id it came from — the key that lets per-edge state (weights,
+    dynamic logits) ride along a filtered signature.
     """
     if direction == "out":
         indptr, indices = g.indptr, g.indices
+        eids = np.arange(len(indices), dtype=np.int64)
     elif direction == "in":
         indptr, indices = g.in_adjacency()
+        # in-edge at position p holds out-edge in_edge_order()[p]
+        eids = g.in_edge_order().astype(np.int64)
     else:
         raise ValueError(f"direction must be 'out' or 'in', got {direction!r}")
     if vtype is None and etype is None:
+        if return_edge_ids:
+            return indptr, indices, eids
         return indptr, indices
     keep = np.ones(len(indices), bool)
     if etype is not None:
-        if direction == "out":
-            et = g.edge_type
-        else:
-            # in-edge at position p holds out-edge in_edge_order()[p]
-            et = g.edge_type[g.in_edge_order()]
-        keep &= et == etype
+        keep &= g.edge_type[eids] == etype
     if vtype is not None:
         keep &= g.vertex_type[indices] == vtype
     row = np.repeat(np.arange(g.n, dtype=np.int64), np.diff(indptr))
     row_f = row[keep]
     new_indptr = np.zeros(g.n + 1, np.int64)
     np.cumsum(np.bincount(row_f, minlength=g.n), out=new_indptr[1:])
+    if return_edge_ids:
+        return new_indptr, indices[keep], eids[keep]
     return new_indptr, indices[keep]
 
 
@@ -416,34 +424,92 @@ def _importance_rows(rng: np.random.Generator, indptr: np.ndarray,
     return out, mask
 
 
+def _weighted_rows(rng: np.random.Generator, indptr: np.ndarray,
+                   indices: np.ndarray, weights: np.ndarray, vs: np.ndarray,
+                   fanout: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Edge-weighted gather over a (filtered) CSR: within each row,
+    p(slot) ∝ ``weights[slot]``, with replacement iff the fanout exceeds the
+    row degree (the ``NeighborhoodSampler`` weighted convention).  Rows large
+    enough to draw without replacement use the Gumbel-top-k trick on
+    log-weights (distribution-identical to successive weighted draws);
+    smaller rows draw by inverse-CDF.  One vectorised pass per distinct
+    degree instead of a per-vertex loop."""
+    vs64 = np.asarray(vs, np.int64)
+    lo = indptr[vs64]
+    deg = indptr[vs64 + 1] - lo
+    out = np.zeros((len(vs64), fanout), np.int32)
+    mask = np.zeros((len(vs64), fanout), np.float32)
+    repl = np.nonzero((deg > 0) & (deg < fanout))[0]
+    for d in np.unique(deg[repl]):
+        rows = repl[deg[repl] == d]
+        take = lo[rows][:, None] + np.arange(int(d), dtype=np.int64)
+        w = np.maximum(weights[take], 1e-300)            # [R, d]
+        cum = np.cumsum(w, axis=1)
+        u = rng.random((len(rows), fanout)) * cum[:, -1:]
+        sel = np.minimum((cum[:, None, :] <= u[:, :, None]).sum(-1), int(d) - 1)
+        out[rows] = np.take_along_axis(indices[take], sel, axis=1)
+        mask[rows] = 1.0
+    worepl = np.nonzero(deg >= fanout)[0]
+    for d in np.unique(deg[worepl]):
+        rows = worepl[deg[worepl] == d]
+        take = lo[rows][:, None] + np.arange(int(d), dtype=np.int64)
+        keys = (np.log(np.maximum(weights[take], 1e-300))
+                + rng.gumbel(size=(len(rows), int(d))))
+        sel = np.argsort(-keys, axis=1)[:, :fanout]
+        out[rows] = np.take_along_axis(indices[take], sel, axis=1)
+        mask[rows] = 1.0
+    return out, mask
+
+
 class MetapathSampler:
     """Vectorised typed multi-hop traversal — the sampler behind the GQL
     ``.out_vertices()/.in_vertices()`` metapath steps.
 
     Each distinct hop signature ``(direction, vtype, etype)`` is compiled
-    once into a filtered CSR (``filtered_adjacency``); a typed hop is then a
+    once into a filtered CSR (``filtered_adjacency``) along with the
+    per-signature slice of the graph's edge weights; a typed hop is then a
     plain bucket-level gather over that CSR — no per-vertex Python loop, and
     the same request-flow read accounting as ``NeighborhoodSampler``.
 
     ``importance`` is an optional [n] per-vertex weight array backing the
-    ``"importance"`` hop strategy (AHEP's variance-minimising sampling).
+    ``"importance"`` hop strategy (AHEP's variance-minimising sampling); the
+    ``"edge_weight"`` hop strategy draws neighbors ∝ the traversed edge's
+    weight (carried through the signature filter, in-direction included).
+    ``edge_logits`` optionally SHARES another sampler's dynamic per-edge
+    weight array (``QueryExecutor`` passes the ``NeighborhoodSampler``'s, so
+    ``update_weights`` on either sampler steers both the plain and the typed
+    spelling of an ``edge_weight`` hop); weight slices are gathered per call,
+    so in-place updates are always visible.
     """
 
     def __init__(self, store: DistributedGraphStore, *, seed: int = 0,
-                 importance: Optional[np.ndarray] = None):
+                 importance: Optional[np.ndarray] = None,
+                 edge_logits: Optional[np.ndarray] = None):
         self.store = store
         self.rng = np.random.default_rng(seed)
         self.importance = (None if importance is None
                            else np.asarray(importance, np.float64))
-        self._csr: Dict[Tuple, Tuple[np.ndarray, np.ndarray]] = {}
+        self.edge_logits = (edge_logits if edge_logits is not None
+                            else store.graph.edge_weight.astype(np.float64
+                                                                ).copy())
+        self._csr: Dict[Tuple, Tuple[np.ndarray, np.ndarray, np.ndarray]] = {}
         self._cached_mask = _cached_vertex_mask(store)
 
+    def update_weights(self, edge_ids: np.ndarray, grads: np.ndarray,
+                       lr: float = 0.1) -> None:
+        """Same exponentiated-gradient update as ``NeighborhoodSampler``
+        (in place, so a shared ``edge_logits`` array stays shared)."""
+        np.multiply.at(self.edge_logits, edge_ids,
+                       np.exp(lr * np.clip(grads, -8, 8)))
+
     def _adj(self, direction: str, vtype: Optional[int], etype: Optional[int]
-             ) -> Tuple[np.ndarray, np.ndarray]:
+             ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Per-signature filtered CSR + the GLOBAL edge id of each slot."""
         key = (direction, vtype, etype)
         hit = self._csr.get(key)
         if hit is None:
-            hit = filtered_adjacency(self.store.graph, direction, vtype, etype)
+            hit = filtered_adjacency(self.store.graph, direction, vtype,
+                                     etype, return_edge_ids=True)
             self._csr[key] = hit
         return hit
 
@@ -461,7 +527,8 @@ class MetapathSampler:
         hop_out: List[np.ndarray] = []
         masks: List[np.ndarray] = []
         for hop in specs:
-            indptr, indices = self._adj(hop.direction, hop.vtype, hop.etype)
+            indptr, indices, eids = self._adj(hop.direction, hop.vtype,
+                                              hop.etype)
             _account_reads(self.store, self._cached_mask, frontier, fvia)
             if hop.strategy == "importance":
                 imp = self.importance
@@ -469,6 +536,11 @@ class MetapathSampler:
                     imp = np.ones(self.store.graph.n)
                 nxt, msk = _importance_rows(self.rng, indptr, indices,
                                             frontier, hop.fanout, imp)
+            elif hop.strategy == "edge_weight":
+                # gather the CURRENT logits per call (dynamic updates land)
+                nxt, msk = _weighted_rows(self.rng, indptr, indices,
+                                          self.edge_logits[eids],
+                                          frontier, hop.fanout)
             else:
                 nxt, msk = _uniform_rows(self.rng, indptr, indices,
                                          frontier, hop.fanout)

@@ -1,0 +1,36 @@
+"""repro.serving — the online inference runtime over the AliGraph stack.
+
+AliGraph is not only a trainer: the platform serves vertex embeddings for
+recommendation and personalised search under heavy traffic (paper §1, §3.2).
+This package turns a GQL query + a trained model into that server:
+
+  * :func:`compile_server` lowers the query ONCE into a :class:`ServerPlan`
+    — frozen per-vertex sampling decisions (the §3.2 neighbor-cache
+    semantics), static pad buckets chosen from traffic statistics, and one
+    jitted forward per bucket (bounded recompiles).
+  * :class:`EmbeddingServer` runs the plan behind an async request queue
+    with continuous micro-batching (the slot-recycling model of
+    ``launch/serve.py`` applied to minibatch plans), short-circuiting hot
+    vertices through an importance-driven embedding cache
+    (``core.cache.CachePolicy``), and exposes hit-rate / p50/p99 latency /
+    recompile counters as server metrics.
+
+Quickstart::
+
+    from repro.serving import Traffic, compile_server, EmbeddingServer
+
+    plan = compile_server(G(store).V().sample(8).sample(4), trainer,
+                          Traffic(observed_request_sizes))
+    with EmbeddingServer(plan, cache_policy="importance") as srv:
+        req = srv.submit(vertex_ids)
+        rows = req.result()          # [len(vertex_ids), d_out]
+        print(srv.metrics.snapshot())
+"""
+from .plan import FrozenNeighborSampler, ServerPlan, compile_server  # noqa: F401
+from .server import EmbeddingServer, ServeRequest, ServerMetrics  # noqa: F401
+from .traffic import Traffic, choose_buckets  # noqa: F401
+
+__all__ = [
+    "Traffic", "choose_buckets", "FrozenNeighborSampler", "ServerPlan",
+    "compile_server", "EmbeddingServer", "ServeRequest", "ServerMetrics",
+]

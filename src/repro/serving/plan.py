@@ -1,0 +1,275 @@
+"""Compile-once server plans: GQL query + trained model → ServerPlan.
+
+``compile_server`` lowers a query AST ONCE into everything the online path
+needs, so per-request work is pure gathers + one jitted forward:
+
+  * **Frozen sampling** (:class:`FrozenNeighborSampler`): every vertex's
+    sampled neighbor set per fanout is drawn once at compile time — the
+    §3.2 neighbor-cache semantics (AliGraph caches ONE neighborhood per
+    important vertex; the server freezes one per vertex).  This is what
+    makes serving deterministic: a vertex's embedding is a pure function of
+    (plan, params), independent of how requests are packed into
+    micro-batches — so cached rows are byte-identical to recomputed ones,
+    and the served path is byte-identical to the offline
+    ``GNNTrainer.embed_many`` run over the same frozen executor.
+  * **Static pad buckets** from traffic statistics: the request-size
+    histogram picks a small bucket set (``serving.traffic.choose_buckets``);
+    each bucket's deeper plan levels are worst-case sized (no-dedup bound),
+    so every bucket is exactly ONE jit shape and recompiles are bounded by
+    the bucket count.  The policy is carried as the query's own ``.pad()``
+    expression (ladders coupled per bucket).
+  * **One jitted forward** over the padded plan pytree
+    (``operators.plan_to_device`` reuse), shared by all buckets — XLA
+    retraces per bucket shape, which the server counts as its recompile
+    metric.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api import QueryExecutor, QueryValidationError
+from repro.api import plan as qplan
+from repro.core import cache as cache_mod
+from repro.core.sampling import (SampleBatch, _account_reads,
+                                 _cached_vertex_mask, _uniform_rows)
+from repro.core.gnn import GNNSpec, gnn_apply
+
+from .traffic import Traffic, choose_buckets
+
+__all__ = ["FrozenNeighborSampler", "ServerPlan", "compile_server"]
+
+
+class FrozenNeighborSampler:
+    """Sampling decisions fixed at compile time: per fanout, ONE presampled
+    neighbor set per vertex (``[n, fanout]`` tables + masks, drawn with the
+    same uniform-gather machinery the live samplers use).
+
+    Drop-in for ``NeighborhoodSampler`` in ``operators.build_plan``: the
+    same aligned ``SampleBatch`` layout, the same request-flow read
+    accounting against the storage layer (the tables ARE the §3.2 replicated
+    neighbor cache, so the reads they answer are classified through the
+    local/cache/remote access path like any other sampler's).
+    """
+
+    def __init__(self, store, fanouts: Sequence[int], *, seed: int = 0):
+        self.store = store
+        self.seed = seed
+        g = store.graph
+        rng = np.random.default_rng(seed)
+        all_v = np.arange(g.n, dtype=np.int64)
+        self.tables: Dict[int, np.ndarray] = {}
+        self.masks: Dict[int, np.ndarray] = {}
+        for f in sorted(set(int(f) for f in fanouts)):
+            nbrs, msk = _uniform_rows(rng, g.indptr, g.indices, all_v, f)
+            self.tables[f] = nbrs
+            self.masks[f] = msk
+        self._cached_mask = _cached_vertex_mask(store)
+
+    def sample(self, seeds: np.ndarray, fanouts: Sequence,
+               *, via: Optional[np.ndarray] = None) -> SampleBatch:
+        seeds = np.asarray(seeds, np.int32)
+        if via is None:
+            via = self.store.partition.vertex_home[seeds]
+        frontier, fvia = seeds, np.asarray(via, np.int32)
+        hops: List[np.ndarray] = []
+        masks: List[np.ndarray] = []
+        fs: List[int] = []
+        for hop in fanouts:
+            f = int(hop.fanout) if hasattr(hop, "fanout") else int(hop)
+            table = self.tables.get(f)
+            if table is None:
+                raise QueryValidationError(
+                    f"fanout {f} was not compiled into this server plan "
+                    f"(frozen fanouts: {sorted(self.tables)})")
+            _account_reads(self.store, self._cached_mask, frontier, fvia)
+            nxt = table[frontier]
+            msk = self.masks[f][frontier]
+            hops.append(nxt.reshape(-1))
+            masks.append(msk.reshape(-1).astype(np.float32))
+            frontier = nxt.reshape(-1)
+            fvia = np.repeat(fvia, f)
+            fs.append(f)
+        return SampleBatch(seeds=seeds, neighbors=hops, masks=masks,
+                           fanouts=tuple(fs))
+
+
+def _model_parts(model) -> Tuple[GNNSpec, Dict, jnp.ndarray]:
+    """Accept a GNNTrainer, or any (spec, params, features) carrier."""
+    if isinstance(model, tuple) and len(model) == 3:
+        spec, params, features = model
+    else:
+        try:
+            spec, params, features = model.spec, model.params, model.features
+        except AttributeError:
+            raise TypeError(
+                "compile_server model must be a GNNTrainer, a (spec, params, "
+                f"features) triple, or expose those attributes; got "
+                f"{type(model).__name__}")
+    if not isinstance(spec, GNNSpec):
+        raise TypeError(f"model spec must be a GNNSpec, got "
+                        f"{type(spec).__name__}")
+    return spec, params, jnp.asarray(features)
+
+
+@dataclasses.dataclass
+class ServerPlan:
+    """One compiled (query, model, traffic) triple — everything the online
+    path needs, built once.
+
+    ``template`` is the validated hop-only TraversalPlan; a request for ids
+    ``v`` executes ``dataclasses.replace(template, ids=v)`` against
+    ``executor()`` (whose NEIGHBORHOOD stage is the frozen sampler).
+    ``buckets`` are the traffic-chosen seed-level jit sizes; each bucket's
+    full level shapes come from :meth:`levels_for` (worst-case no-dedup
+    bound, so one jit trace per bucket).
+    """
+
+    store: object
+    template: qplan.TraversalPlan
+    spec: GNNSpec
+    params: Dict
+    features: jnp.ndarray
+    buckets: Tuple[int, ...]
+    frozen: FrozenNeighborSampler
+    importance: np.ndarray
+    seed: int = 0
+
+    @property
+    def fanouts(self) -> Tuple[int, ...]:
+        return self.template.fanouts
+
+    @property
+    def d_out(self) -> int:
+        return self.spec.dims[-1]
+
+    def levels_for(self, bucket: int) -> List[int]:
+        """Worst-case (no dedup overlap) level sizes for one seed bucket —
+        a pure function of the bucket, so shapes never depend on batch
+        content."""
+        sizes = [int(bucket)]
+        for f in self.fanouts:
+            sizes.append(sizes[-1] * (1 + int(f)))
+        return sizes
+
+    def bucket_for(self, n: int) -> int:
+        """Smallest bucket covering ``n`` seed ids."""
+        for b in self.buckets:
+            if n <= b:
+                return b
+        raise ValueError(f"micro-batch of {n} ids exceeds the largest "
+                         f"bucket {self.buckets[-1]}")
+
+    @property
+    def pad_ladders(self) -> Tuple[Tuple[int, ...], ...]:
+        """The bucket set as a ``.pad()`` policy: level ``h``'s ladder is
+        ``levels_for(bucket)[h]`` across buckets (coupled variants — one
+        ladder index per executed batch = one jit shape per bucket)."""
+        per_bucket = [self.levels_for(b) for b in self.buckets]
+        return tuple(tuple(lv[h] for lv in per_bucket)
+                     for h in range(len(self.fanouts) + 1))
+
+    def executor(self) -> QueryExecutor:
+        """A query executor whose NEIGHBORHOOD stage is the frozen sampler —
+        the same object the offline ``GNNTrainer.embed_many(executor=...)``
+        byte-identity check injects."""
+        ex = QueryExecutor(self.store, strategy=self.template.strategy,
+                           seed=self.seed)
+        ex.neighborhood = self.frozen
+        return ex
+
+    def request_plan(self, ids: np.ndarray) -> qplan.TraversalPlan:
+        return dataclasses.replace(
+            self.template, ids=np.asarray(ids, np.int32), batch_size=None)
+
+    # -- the jitted device step (one trace per bucket shape) ---------------
+    @functools.cached_property
+    def _forward(self):
+        spec, params, features = self.spec, self.params, self.features
+
+        @jax.jit
+        def fwd(device_plan):
+            return gnn_apply(spec, params, device_plan, features)
+
+        return fwd
+
+    def forward(self, device_plan) -> jnp.ndarray:
+        """Jitted Algorithm-1 forward over a padded plan pytree."""
+        return self._forward(device_plan)
+
+    def shape_key(self, device_plan) -> Tuple[int, ...]:
+        """The jit-relevant shape signature of a plan pytree (what the
+        server's recompile counter keys on)."""
+        return tuple(int(lv.shape[0]) for lv in device_plan["levels"])
+
+
+def compile_server(query, model, traffic, *, max_buckets: int = 4,
+                   seed: int = 0) -> ServerPlan:
+    """Lower a GQL query + trained model + traffic statistics into a
+    :class:`ServerPlan` (see module docstring).
+
+    ``query`` must be a reusable vertex template: ``G(store).V()`` followed
+    only by plain ``.sample()`` hops — no ``.batch()/.V(ids=...)`` (requests
+    supply the ids), and no negatives/walks/typed hops (typed hops in the
+    server path are a ROADMAP follow-up).  ``traffic`` is a
+    :class:`~repro.serving.traffic.Traffic` trace or a sequence of observed
+    request sizes.
+    """
+    if not isinstance(traffic, Traffic):
+        traffic = Traffic(tuple(int(s) for s in traffic))
+    steps = tuple(query.steps)
+    if not steps or not isinstance(steps[0], qplan.SourceV):
+        raise QueryValidationError(
+            "compile_server needs a vertex-source query (.V() …)")
+    if steps[0].ids is not None or any(isinstance(s, qplan.Batch)
+                                       for s in steps):
+        raise QueryValidationError(
+            "the server query is a template: requests supply the seed ids — "
+            "drop .batch()/V(ids=...) from the compiled query")
+    if any(isinstance(s, qplan.Pad) for s in steps):
+        raise QueryValidationError(
+            "the server chooses its pad buckets from the traffic statistics "
+            "— drop .pad() from the compiled query (tune max_buckets / the "
+            "traffic trace instead)")
+    # compile with a placeholder seed batch (stripped from the template)
+    probe = (steps[0], qplan.Batch(size=1)) + steps[1:]
+    tplan = qplan.compile_steps(query.store, probe,
+                                vertex_types=query.vertex_types,
+                                edge_types=query.edge_types)
+    if tplan.walk_len is not None or tplan.n_negatives or tplan.joint:
+        raise QueryValidationError(
+            "serving queries are embedding lookups: .walk()/.negative()/"
+            ".joint() have no server lowering")
+    if not tplan.hops:
+        raise QueryValidationError(
+            "serving query needs at least one .sample() hop (a 0-hop lookup "
+            "is a feature-table read, not a GNN forward)")
+    if tplan.typed or tplan.strategy != "uniform":
+        raise QueryValidationError(
+            "typed/weighted hops in the server path are not supported yet "
+            "(ROADMAP: serving follow-ups) — use plain .sample(fanout) hops")
+
+    spec, params, features = _model_parts(model)
+    if tplan.fanouts != spec.fanouts:
+        raise QueryValidationError(
+            f"query fanouts {tplan.fanouts} do not match the model's "
+            f"GNNSpec.fanouts {spec.fanouts}")
+
+    store = query.store
+    buckets = choose_buckets(traffic.sizes, max_buckets)
+    frozen = FrozenNeighborSampler(store, tplan.fanouts, seed=seed)
+    imp = cache_mod.importance(store.graph, k=1)
+    template = dataclasses.replace(tplan, batch_size=None)
+    plan = ServerPlan(store=store, template=template, spec=spec,
+                      params=params, features=features, buckets=buckets,
+                      frozen=frozen, importance=imp, seed=seed)
+    # carry the bucket policy as the template's own .pad() expression so
+    # execute() pads every micro-batch to exactly one bucket variant
+    plan.template = dataclasses.replace(template,
+                                        pad_buckets=plan.pad_ladders)
+    return plan

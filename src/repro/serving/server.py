@@ -1,0 +1,308 @@
+"""The online embedding server: async queue + continuous micro-batching +
+importance-driven embedding cache.
+
+``EmbeddingServer`` runs a :class:`~repro.serving.plan.ServerPlan` behind a
+request queue.  The batching model is ``launch/serve.py``'s slot recycling
+applied to minibatch plans instead of KV caches: a micro-batch's "slots" are
+seed-id positions of one pad bucket, and every tick packs as many pending
+ids as fit the largest bucket — head-of-line requests may be split across
+ticks and trailing requests pulled forward, so the device step never runs
+half-empty while work is queued (continuous batching).
+
+Per tick:
+
+  1. pack pending ids, looking each up in the embedding cache first — hits
+     are served without touching the samplers or the device (the §3.2
+     short-circuit: hot vertices are answered from the importance cache);
+  2. the unique misses pick the smallest covering bucket; the plan executes
+     through the frozen sampler and the bucket's single jitted forward;
+  3. rows are written back to requests and inserted into the cache under
+     the configured ``CachePolicy``.
+
+Because the plan froze every sampling decision at compile time, the rows a
+tick produces are byte-identical however requests were packed — the
+property the serving tests pin against the offline ``GNNTrainer.embed_many``
+path.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+from typing import Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.api.engine import execute
+from repro.core.cache import CachePolicy
+
+from .plan import ServerPlan
+
+__all__ = ["EmbeddingServer", "ServeRequest", "ServerMetrics"]
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    """One submitted vertex-id batch; ``result()`` blocks until every id's
+    embedding row has been filled in (cache hits may complete it without a
+    device step)."""
+
+    rid: int
+    ids: np.ndarray                     # [k] int32
+    out: np.ndarray                     # [k, d] float32, filled as slots land
+    t_submit: float
+    t_done: Optional[float] = None
+    _remaining: int = 0
+    _event: threading.Event = dataclasses.field(
+        default_factory=threading.Event)
+
+    @property
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    @property
+    def latency_ms(self) -> Optional[float]:
+        if self.t_done is None:
+            return None
+        return (self.t_done - self.t_submit) * 1e3
+
+    def result(self, timeout: Optional[float] = None) -> np.ndarray:
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"request {self.rid} not served within "
+                               f"{timeout}s")
+        return self.out
+
+
+class ServerMetrics:
+    """Server-side counters + latency percentiles (thread-safe snapshots
+    are taken under the server lock).  Latencies keep the most recent
+    ``LATENCY_WINDOW`` completions — percentiles over a sliding window, so
+    a long-lived server never grows without bound."""
+
+    LATENCY_WINDOW = 4096
+
+    def __init__(self):
+        self.requests = 0
+        self.completed = 0
+        self.ids_served = 0
+        self.cache_hits = 0
+        self.cache_misses = 0
+        self.ticks = 0
+        self.recompiles = 0
+        self.bucket_steps: Dict[int, int] = collections.Counter()
+        self.latencies_ms: "collections.deque[float]" = collections.deque(
+            maxlen=self.LATENCY_WINDOW)
+
+    @property
+    def cache_hit_rate(self) -> float:
+        tot = self.cache_hits + self.cache_misses
+        return self.cache_hits / tot if tot else 0.0
+
+    def _pct(self, q: float) -> float:
+        if not self.latencies_ms:
+            return 0.0
+        return float(np.percentile(np.asarray(list(self.latencies_ms)), q))
+
+    @property
+    def p50_ms(self) -> float:
+        return self._pct(50)
+
+    @property
+    def p99_ms(self) -> float:
+        return self._pct(99)
+
+    def snapshot(self) -> Dict:
+        return {
+            "requests": self.requests,
+            "completed": self.completed,
+            "ids_served": self.ids_served,
+            "cache_hits": self.cache_hits,
+            "cache_misses": self.cache_misses,
+            "cache_hit_rate": round(self.cache_hit_rate, 4),
+            "ticks": self.ticks,
+            "recompiles": self.recompiles,
+            "bucket_steps": dict(self.bucket_steps),
+            "p50_ms": round(self.p50_ms, 3),
+            "p99_ms": round(self.p99_ms, 3),
+        }
+
+
+class EmbeddingServer:
+    """Continuous-batching embedding server over a compiled ServerPlan.
+
+    ``cache_policy`` is one of ``core.cache.CachePolicy.POLICIES``
+    ("importance" pins the top-capacity vertices by Imp^(k) Eq. 1 — the
+    paper's cache — "lru"/"random" are the Fig 9 baselines, "off" disables
+    the cache for ablations).  Use as a context manager, or call
+    :meth:`stop` when done to join the worker thread.
+    """
+
+    def __init__(self, plan: ServerPlan, *, cache_policy: str = "importance",
+                 cache_capacity: int = 4096, cache_seed: int = 0,
+                 start: bool = True):
+        self.plan = plan
+        self.executor = plan.executor()
+        g = plan.store.graph
+        self.cache = CachePolicy(cache_capacity, cache_policy,
+                                 scores=plan.importance, n_keys=g.n,
+                                 seed=cache_seed)
+        self.metrics = ServerMetrics()
+        self._lock = threading.Lock()
+        self._work = threading.Condition(self._lock)
+        self._idle = threading.Condition(self._lock)
+        # pending slots: (request, position) in FIFO submit order
+        self._pending: Deque[Tuple[ServeRequest, int]] = collections.deque()
+        self._next_rid = 0
+        self._stopping = False
+        self._inflight = False
+        self._seen_shapes: set = set()
+        self._worker: Optional[threading.Thread] = None
+        if start:
+            self.start()
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self) -> None:
+        """Start (or restart after stop()) the worker thread."""
+        if self._worker is not None and self._worker.is_alive():
+            return
+        with self._work:
+            self._stopping = False
+        self._worker = threading.Thread(target=self._loop, daemon=True)
+        self._worker.start()
+
+    def stop(self) -> None:
+        with self._work:
+            self._stopping = True
+            self._work.notify_all()
+        if self._worker is not None:
+            self._worker.join()
+            self._worker = None
+
+    def __enter__(self) -> "EmbeddingServer":
+        self.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # ------------------------------------------------------------ submit
+    def submit(self, ids: np.ndarray) -> ServeRequest:
+        """Enqueue one embedding request; returns immediately."""
+        ids = np.asarray(ids, np.int32).reshape(-1)
+        if len(ids) == 0:
+            raise ValueError("empty request")
+        g = self.plan.store.graph
+        if ids.min() < 0 or ids.max() >= g.n:
+            raise ValueError(f"request ids out of range [0, {g.n})")
+        req = ServeRequest(
+            rid=-1, ids=ids,
+            out=np.zeros((len(ids), self.plan.d_out), np.float32),
+            t_submit=time.perf_counter(), _remaining=len(ids))
+        with self._work:
+            req.rid = self._next_rid
+            self._next_rid += 1
+            self.metrics.requests += 1
+            self._pending.extend((req, i) for i in range(len(ids)))
+            self._work.notify()
+        return req
+
+    def drain(self, timeout: Optional[float] = None) -> None:
+        """Block until every submitted request has completed."""
+        self.start()                      # a stopped server would never drain
+        deadline = None if timeout is None else time.perf_counter() + timeout
+        with self._idle:
+            while self._pending or self._inflight:
+                rest = (None if deadline is None
+                        else deadline - time.perf_counter())
+                if rest is not None and rest <= 0:
+                    raise TimeoutError("server did not drain in time")
+                self._idle.wait(timeout=rest)
+
+    # ------------------------------------------------------------ the loop
+    def _loop(self) -> None:
+        while True:
+            with self._work:
+                while not self._pending and not self._stopping:
+                    self._work.wait()
+                if self._stopping and not self._pending:
+                    return
+                batch = self._pack_locked()
+                self._inflight = True
+            try:
+                self._serve(batch)
+            finally:
+                with self._idle:
+                    self._inflight = False
+                    self._idle.notify_all()
+
+    def _pack_locked(self) -> Dict:
+        """Pop pending slots until the unique cache-missed ids fill the
+        largest bucket (or the queue empties).  Hits are resolved here —
+        they never reach the device."""
+        cap = self.plan.buckets[-1]
+        miss_slots: Dict[int, List[Tuple[ServeRequest, int]]] = {}
+        hit_rows: List[Tuple[ServeRequest, int, np.ndarray]] = []
+        while self._pending and len(miss_slots) < cap:
+            req, pos = self._pending.popleft()
+            vid = int(req.ids[pos])
+            if vid in miss_slots:          # same miss already in this pack
+                miss_slots[vid].append((req, pos))
+                self.metrics.cache_misses += 1   # per occurrence, like hits
+                continue
+            row = self.cache.get(vid)
+            if row is not None:
+                self.metrics.cache_hits += 1
+                hit_rows.append((req, pos, row))
+            else:
+                self.metrics.cache_misses += 1
+                miss_slots[vid] = [(req, pos)]
+        return {"miss_slots": miss_slots, "hit_rows": hit_rows}
+
+    def _serve(self, batch: Dict) -> None:
+        plan = self.plan
+        touched: Dict[int, ServeRequest] = {}
+        rows_by_id: Dict[int, np.ndarray] = {}
+        miss_ids = np.fromiter(batch["miss_slots"].keys(), np.int32,
+                               count=len(batch["miss_slots"]))
+        if len(miss_ids):
+            mb = execute(plan.request_plan(miss_ids), self.executor)
+            z = np.asarray(plan.forward(mb.device["seeds"]))[:len(miss_ids)]
+            shape = plan.shape_key(mb.device["seeds"])
+            # .copy(): a plain z[i] view would pin the whole padded [bucket,
+            # d] buffer in the cache for as long as the row lives
+            rows_by_id = {int(v): z[i].copy() for i, v in enumerate(miss_ids)}
+        with self._work:
+            if len(miss_ids):
+                self.metrics.ticks += 1
+                self.metrics.bucket_steps[shape[0]] += 1
+                if shape not in self._seen_shapes:
+                    self._seen_shapes.add(shape)
+                    self.metrics.recompiles += 1
+            for vid, row in rows_by_id.items():
+                self.cache.put(vid, row)
+                for req, pos in batch["miss_slots"][vid]:
+                    req.out[pos] = row
+                    req._remaining -= 1
+                    touched[req.rid] = req
+                    self.metrics.ids_served += 1
+            for req, pos, row in batch["hit_rows"]:
+                req.out[pos] = row
+                req._remaining -= 1
+                touched[req.rid] = req
+                self.metrics.ids_served += 1
+            now = time.perf_counter()
+            for req in touched.values():
+                if req._remaining == 0 and not req.done:
+                    req.t_done = now
+                    self.metrics.completed += 1
+                    self.metrics.latencies_ms.append(req.latency_ms)
+                    req._event.set()
+
+    # ------------------------------------------------------------ sync API
+    def serve_trace(self, trace: List[np.ndarray]) -> List[np.ndarray]:
+        """Submit a whole request trace, drain, and return the rows per
+        request (benchmark/CI convenience)."""
+        reqs = [self.submit(ids) for ids in trace]
+        self.drain()
+        return [r.result(timeout=0) for r in reqs]

@@ -1,0 +1,128 @@
+"""Traffic statistics → static pad buckets.
+
+A production embedding server sees requests of many sizes; jitting one step
+per exact size recompiles unboundedly, while one worst-case shape wastes
+compute padding small requests.  The middle ground (and the ROADMAP
+"Serving" item): observe a request-size trace, then choose a SMALL fixed
+bucket set that minimises total padded waste — each bucket gets exactly one
+jitted step and recompiles are bounded by the bucket count.
+
+``choose_buckets`` solves the bucket choice exactly by dynamic programming
+over the distinct observed sizes (the classic 1-D k-partition: every
+request pads up to its bucket, the largest observed size must be a bucket so
+everything fits).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["Traffic", "choose_buckets"]
+
+
+def choose_buckets(sizes: Sequence[int], max_buckets: int = 4
+                   ) -> Tuple[int, ...]:
+    """Pick ≤ ``max_buckets`` request-size pad targets minimising the total
+    padded waste ``Σ_r (bucket(r) - size(r))`` over the observed trace.
+
+    Exact DP over the ``u`` distinct sizes (O(u² · max_buckets)): a bucket
+    set is a subset of observed sizes containing the maximum, and every
+    request rounds up to the smallest covering bucket.
+    """
+    sizes = np.asarray(list(sizes), np.int64)
+    if len(sizes) == 0:
+        raise ValueError("traffic trace is empty — need observed request "
+                         "sizes to choose buckets")
+    if sizes.min() < 1:
+        raise ValueError("request sizes must be >= 1")
+    if max_buckets < 1:
+        raise ValueError("max_buckets must be >= 1")
+    uniq, counts = np.unique(sizes, return_counts=True)
+    u = len(uniq)
+    k = min(max_buckets, u)
+    # waste[i][j] = cost of serving uniques (i..j] with bucket uniq[j]
+    # (prefix sums make each cell O(1))
+    w_cum = np.concatenate([[0], np.cumsum(counts * uniq)])
+    c_cum = np.concatenate([[0], np.cumsum(counts)])
+
+    def span_waste(i: int, j: int) -> int:
+        """uniques with index in (i, j] padded up to uniq[j]."""
+        n_req = c_cum[j + 1] - c_cum[i + 1]
+        mass = w_cum[j + 1] - w_cum[i + 1]
+        return int(uniq[j]) * int(n_req) - int(mass)
+
+    INF = float("inf")
+    # dp[b][j] = min waste covering uniq[0..j] with b buckets, uniq[j] a bucket
+    dp = [[INF] * u for _ in range(k + 1)]
+    arg = [[-1] * u for _ in range(k + 1)]
+    for j in range(u):
+        dp[1][j] = span_waste(-1, j)
+    for b in range(2, k + 1):
+        for j in range(b - 1, u):
+            best, best_i = INF, -1
+            for i in range(b - 2, j):
+                cand = dp[b - 1][i] + span_waste(i, j)
+                if cand < best:
+                    best, best_i = cand, i
+            dp[b][j] = best
+            arg[b][j] = best_i
+    # the largest observed size must be a bucket; take the best b ≤ k
+    best_b = min(range(1, k + 1), key=lambda b: dp[b][u - 1])
+    picks = []
+    b, j = best_b, u - 1
+    while j >= 0 and b >= 1:
+        picks.append(int(uniq[j]))
+        j = arg[b][j]
+        b -= 1
+    return tuple(sorted(picks))
+
+
+@dataclasses.dataclass(frozen=True)
+class Traffic:
+    """An observed request-size trace (the statistic a server plan compiles
+    against).  Construct from production logs, or synthesise one with
+    :meth:`synthetic` for examples/benchmarks."""
+
+    sizes: Tuple[int, ...]
+
+    def __post_init__(self):
+        object.__setattr__(self, "sizes",
+                           tuple(int(s) for s in self.sizes))
+        if not self.sizes:
+            raise ValueError("traffic trace is empty")
+        if min(self.sizes) < 1:
+            raise ValueError("request sizes must be >= 1")
+
+    @property
+    def max_size(self) -> int:
+        return max(self.sizes)
+
+    def histogram(self) -> Dict[int, int]:
+        uniq, counts = np.unique(np.asarray(self.sizes), return_counts=True)
+        return {int(s): int(c) for s, c in zip(uniq, counts)}
+
+    def buckets(self, max_buckets: int = 4) -> Tuple[int, ...]:
+        return choose_buckets(self.sizes, max_buckets)
+
+    def waste(self, buckets: Sequence[int]) -> int:
+        """Total pad waste of serving this trace with ``buckets``."""
+        b = np.sort(np.asarray(list(buckets), np.int64))
+        s = np.asarray(self.sizes, np.int64)
+        if s.max() > b[-1]:
+            raise ValueError(f"largest request {s.max()} exceeds largest "
+                             f"bucket {b[-1]}")
+        return int(b[np.searchsorted(b, s)].sum() - s.sum())
+
+    @classmethod
+    def synthetic(cls, n_requests: int = 512, *, mean_size: float = 24.0,
+                  sigma: float = 0.8, max_size: int = 256,
+                  seed: int = 0) -> "Traffic":
+        """Log-normal request sizes (a heavy right tail, like batched
+        recommendation traffic): most requests small, a few large."""
+        rng = np.random.default_rng(seed)
+        raw = rng.lognormal(mean=np.log(mean_size), sigma=sigma,
+                            size=n_requests)
+        return cls(tuple(int(x) for x in
+                         np.clip(np.round(raw), 1, max_size)))

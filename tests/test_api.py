@@ -208,3 +208,70 @@ def test_trainer_through_gql_losses_decrease(small_store):
     assert z.shape == (12, 16) and np.isfinite(z).all()
     z_many = tr.embed_many(np.arange(50, dtype=np.int32), chunk=16)
     assert z_many.shape == (50, 16) and np.isfinite(z_many).all()
+
+
+def test_prefetch_determinism_across_epochs_and_roles(small_store):
+    """ISSUE 3 satellite: the double-buffered producer must yield the exact
+    stream the synchronous iterator does — same seed, all roles, all epochs,
+    byte-identical plans — for edge+negative and chunked-id queries alike."""
+    q = G(small_store).E().batch(8).sample(4).sample(3).negative(3)
+    pre = list(q.dataset(3, epochs=2, seed=13, prefetch=2))
+    syn = list(q.dataset(3, epochs=2, seed=13, prefetch=0))
+    assert len(pre) == len(syn) == 6
+    for a, b in zip(pre, syn):
+        assert set(a.roles) == set(b.roles) == {"src", "dst", "neg"}
+        for role in a.roles:
+            np.testing.assert_array_equal(a.roles[role], b.roles[role])
+            _assert_plans_byte_identical(a.plans[role], b.plans[role])
+        np.testing.assert_array_equal(a.edges, b.edges)
+        np.testing.assert_array_equal(a.negatives, b.negatives)
+
+    ids = np.arange(70, dtype=np.int32)
+    qc = G(small_store).V(ids=ids).batch(16).sample(3)
+    pre_c = list(qc.dataset(seed=5, prefetch=2, pad=None))
+    syn_c = list(qc.dataset(seed=5, prefetch=0, pad=None))
+    for a, b in zip(pre_c, syn_c):
+        np.testing.assert_array_equal(a.roles["seeds"], b.roles["seeds"])
+        _assert_plans_byte_identical(a.plans["seeds"], b.plans["seeds"])
+
+
+def test_pad_policy_fixed_and_ladder(small_store):
+    """.pad(buckets=...) carries the jit shapes in the query: fixed ints pin
+    every level; ladders pick the smallest variant every level fits."""
+    mb = (G(small_store).V().batch(16).sample(4).sample(3)
+          .pad(buckets=[16, 128, 512]).values(seed=0))
+    assert [len(l) for l in mb.plans["seeds"].levels] == [16, 128, 512]
+
+    q = (G(small_store).V().batch(8).sample(4).sample(3)
+         .pad(buckets=[[8, 16], [64, 128], [256, 512]]))
+    mb = q.values(seed=0)
+    assert [len(l) for l in mb.plans["seeds"].levels] == [8, 64, 256]
+    # the policy is sticky across the dataset stream (bounded jit shapes)
+    shapes = {tuple(len(l) for l in b.plans["seeds"].levels)
+              for b in q.dataset(4, seed=1)}
+    assert shapes <= {(8, 64, 256), (8, 128, 512)}
+
+
+def test_pad_policy_validation_and_overrides(small_store):
+    v = G(small_store).V().batch(8)
+    with pytest.raises(QueryValidationError):      # needs hops
+        v.pad(buckets=[8]).compile()
+    with pytest.raises(QueryValidationError):      # dup
+        v.sample(3).pad(buckets=[8]).pad(buckets=[8]).compile()
+    with pytest.raises(QueryValidationError):      # more targets than levels
+        v.sample(3).pad(buckets=[8, 32, 64]).compile()
+    with pytest.raises(QueryValidationError):      # descending ladder
+        v.sample(3).pad(buckets=[[16, 8]])
+    with pytest.raises(QueryValidationError):      # bad entry
+        v.sample(3).pad(buckets=[0])
+    # a batch that overflows the largest variant raises at execution
+    with pytest.raises(QueryValidationError):
+        (G(small_store).V().batch(64).sample(4).sample(3)
+         .pad(buckets=[32, 256, 1024]).values(seed=0))
+    # an explicit pad= argument still overrides the query's own policy
+    q = (G(small_store).V().batch(8).sample(4).sample(3)
+         .pad(buckets=[8, 64, 256]))
+    mb = q.values(seed=0, pad=[8, 128, 512])
+    assert [len(l) for l in mb.plans["seeds"].levels] == [8, 128, 512]
+    assert [len(l) for l in q.values(seed=0, pad=None).plans["seeds"].levels
+            ][0] == 8

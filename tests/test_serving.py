@@ -1,0 +1,219 @@
+"""Serving runtime: bucket choice, compile validation, byte-identity vs the
+offline embed path, recompile bounds, cache short-circuit."""
+import numpy as np
+import pytest
+
+from repro.api import G, QueryValidationError
+from repro.core import make_gnn, synthetic_ahg, build_store
+from repro.core.gnn import GNNTrainer
+from repro.serving import (EmbeddingServer, Traffic, choose_buckets,
+                           compile_server)
+
+FAN = (4, 3)
+
+
+@pytest.fixture(scope="module")
+def trainer(small_store):
+    g = small_store.graph
+    spec = make_gnn("graphsage", d_in=g.vertex_attr_table.shape[1],
+                    d_hidden=16, d_out=16, fanouts=FAN)
+    tr = GNNTrainer(small_store, spec, lr=0.05, seed=0)
+    tr.train(3, batch_size=16)
+    return tr
+
+
+@pytest.fixture(scope="module")
+def server_plan(small_store, trainer):
+    traffic = Traffic((4, 4, 4, 9, 9, 17, 30, 30, 30, 6, 12, 25))
+    return compile_server(G(small_store).V().sample(4).sample(3), trainer,
+                          traffic, max_buckets=3, seed=5)
+
+
+def _mixed_trace(g, n_req=18, seed=3, order=None):
+    """Mixed request sizes; vertex popularity is zipf over ``order`` ranks
+    (pass an importance ordering to make the hot head cache-aligned, the
+    paper's premise that important vertices are the frequently-read ones)."""
+    rng = np.random.default_rng(seed)
+    sizes = rng.choice([3, 4, 7, 9, 17, 25, 30], size=n_req)
+    out = []
+    for s in sizes:
+        ranks = np.minimum(rng.zipf(1.4, size=int(s)) - 1, g.n - 1)
+        ids = ranks if order is None else order[ranks]
+        out.append(np.asarray(ids, np.int32))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Traffic → buckets
+# ---------------------------------------------------------------------------
+
+def test_choose_buckets_exact_dp():
+    # 3 sizes, 2 buckets: optimal keeps the heavy small size tight
+    assert choose_buckets([3, 3, 3, 10, 10, 60], 2) == (10, 60)
+    # every distinct size fits when the budget allows
+    assert choose_buckets([3, 10, 60], 3) == (3, 10, 60)
+    # one bucket = the max
+    assert choose_buckets([3, 10, 60], 1) == (60,)
+
+
+def test_choose_buckets_covers_and_minimises():
+    rng = np.random.default_rng(0)
+    sizes = rng.integers(1, 100, size=200)
+    buckets = choose_buckets(sizes, 4)
+    assert max(buckets) == sizes.max()          # everything fits
+    t = Traffic(tuple(int(s) for s in sizes))
+    # the exact DP beats a pow2-style heuristic ladder at equal budget
+    heur = sorted({32, 64, 96, int(sizes.max())})
+    assert t.waste(buckets) <= t.waste(heur)
+
+
+def test_traffic_validation():
+    with pytest.raises(ValueError):
+        Traffic(())
+    with pytest.raises(ValueError):
+        Traffic((0, 3))
+    with pytest.raises(ValueError):
+        Traffic((4, 8)).waste([4])              # 8 doesn't fit
+
+
+# ---------------------------------------------------------------------------
+# compile_server validation
+# ---------------------------------------------------------------------------
+
+def test_compile_server_rejects_non_templates(small_store, trainer):
+    traffic = Traffic((4, 8))
+    cases = [
+        G(small_store).E(),                                  # edge source
+        G(small_store).V().batch(8).sample(4).sample(3),     # batched
+        G(small_store).V(ids=np.arange(4)).sample(4).sample(3),  # pinned ids
+        G(small_store).V(),                                  # no hops
+        G(small_store).V().sample(4).sample(3).negative(2),  # negatives
+        G(small_store).V().walk(4),                          # walk
+        G(small_store).V().out_vertices(0, 4).sample(3),     # typed hop
+        G(small_store).V().sample(4, strategy="edge_weight").sample(3),
+        G(small_store).V().sample(4).sample(3).pad(buckets=[8]),  # own pad
+    ]
+    for i, q in enumerate(cases):
+        with pytest.raises((QueryValidationError, TypeError)):
+            compile_server(q, trainer, traffic)
+            pytest.fail(f"case {i} did not raise")
+    # fanout mismatch with the model's spec
+    with pytest.raises(QueryValidationError):
+        compile_server(G(small_store).V().sample(5).sample(3), trainer,
+                       traffic)
+
+
+def test_server_plan_shapes(server_plan):
+    # bucketed levels are a pure function of the bucket (worst-case bound)
+    for b in server_plan.buckets:
+        assert server_plan.levels_for(b) == [b, b * 5, b * 20]
+    # the policy rides the template as a .pad() expression: one ladder
+    # index per bucket → at most len(buckets) jit shapes
+    assert server_plan.template.n_pad_variants == len(server_plan.buckets)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: byte-identity + bounded recompiles + cache
+# ---------------------------------------------------------------------------
+
+def test_served_byte_identical_to_offline_embed_many(small_store, trainer,
+                                                     server_plan):
+    """ISSUE 3 acceptance: served rows == offline GNNTrainer.embed_many
+    (same frozen executor), cache on AND off, over a mixed packed trace."""
+    g = small_store.graph
+    trace = _mixed_trace(g, order=np.argsort(-server_plan.importance))
+    all_ids = np.unique(np.concatenate(trace))
+    offline = trainer.embed_many(all_ids, chunk=16,
+                                 executor=server_plan.executor())
+    row_of = {int(v): offline[i] for i, v in enumerate(all_ids)}
+
+    outs = {}
+    for policy, cap in (("importance", 256), ("off", 1)):
+        with EmbeddingServer(server_plan, cache_policy=policy,
+                             cache_capacity=cap) as srv:
+            outs[policy] = srv.serve_trace(trace)
+        if policy == "importance":
+            assert srv.metrics.cache_hits > 0    # the trace is zipf-hot
+    for policy in outs:
+        for ids, out in zip(trace, outs[policy]):
+            want = np.stack([row_of[int(v)] for v in ids])
+            assert want.tobytes() == out.tobytes(), f"policy={policy}"
+
+
+def test_recompile_count_bounded_by_buckets(small_store, server_plan):
+    """Mixed-size trace, paced AND saturated: jitted step shapes stay
+    <= the configured bucket count."""
+    g = small_store.graph
+    with EmbeddingServer(server_plan, cache_policy="off",
+                         cache_capacity=1) as srv:
+        for ids in _mixed_trace(g, n_req=10, seed=11):   # paced: one at a time
+            srv.submit(ids)
+            srv.drain()
+        srv.serve_trace(_mixed_trace(g, n_req=10, seed=12))  # saturated
+        m = srv.metrics.snapshot()
+    assert m["recompiles"] <= len(server_plan.buckets)
+    assert set(m["bucket_steps"]) <= set(server_plan.buckets)
+    assert m["completed"] == 20
+
+
+def test_cache_short_circuits_device_steps(small_store, server_plan):
+    """A fully-hot repeat request must be served without a new tick."""
+    ids = np.arange(8, dtype=np.int32)
+    with EmbeddingServer(server_plan, cache_policy="lru",
+                         cache_capacity=64) as srv:
+        first = srv.submit(ids).result(timeout=30)
+        ticks = srv.metrics.snapshot()["ticks"]
+        again = srv.submit(ids).result(timeout=30)
+        m = srv.metrics.snapshot()
+    assert m["ticks"] == ticks                  # no device step for the repeat
+    assert m["cache_hits"] >= len(ids)
+    assert first.tobytes() == again.tobytes()
+
+
+def test_server_restart_after_stop(server_plan):
+    """stop() → submit → drain must auto-restart the worker, repeatedly."""
+    srv = EmbeddingServer(server_plan, cache_policy="off", cache_capacity=1)
+    ids = np.arange(4, dtype=np.int32)
+    a = srv.submit(ids).result(timeout=30)
+    srv.stop()
+    b = srv.submit(ids)
+    srv.drain(timeout=30)
+    srv.stop()
+    c = srv.submit(ids)
+    srv.drain(timeout=30)
+    srv.stop()
+    assert a.tobytes() == b.result(timeout=0).tobytes()
+    assert a.tobytes() == c.result(timeout=0).tobytes()
+
+
+def test_cached_rows_do_not_pin_padded_buffers(small_store, server_plan):
+    """Cache entries must be standalone rows, not views into the [bucket, d]
+    forward output."""
+    with EmbeddingServer(server_plan, cache_policy="lru",
+                         cache_capacity=64) as srv:
+        srv.submit(np.arange(5, dtype=np.int32)).result(timeout=30)
+        row = srv.cache.get(0)
+    assert row is not None and row.base is None
+    assert row.shape == (server_plan.d_out,)
+
+
+def test_request_validation(server_plan):
+    with EmbeddingServer(server_plan, cache_policy="off",
+                         cache_capacity=1) as srv:
+        with pytest.raises(ValueError):
+            srv.submit(np.zeros(0, np.int32))
+        with pytest.raises(ValueError):
+            srv.submit(np.asarray([10 ** 9], np.int32))
+
+
+def test_oversized_request_spans_ticks(small_store, server_plan):
+    """Continuous batching: a request larger than the largest bucket is
+    split across micro-batches and still completes."""
+    big = np.arange(2 * server_plan.buckets[-1] + 3, dtype=np.int32)
+    with EmbeddingServer(server_plan, cache_policy="off",
+                         cache_capacity=1) as srv:
+        out = srv.submit(big).result(timeout=60)
+        m = srv.metrics.snapshot()
+    assert out.shape == (len(big), server_plan.d_out)
+    assert m["ticks"] >= 3
+    assert m["recompiles"] <= len(server_plan.buckets)

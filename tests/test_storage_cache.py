@@ -97,3 +97,74 @@ def test_lru():
     assert c.get(2) is None
     assert c.get(1) == "a" and c.get(3) == "c"
     assert 0 < c.hit_rate < 1
+
+
+# ---------------------------------------------------------------------------
+# CachePolicy — importance vs LRU vs random vs off (ISSUE 3 satellite:
+# the Fig 9 strategies as a real assertion, not only a benchmark)
+# ---------------------------------------------------------------------------
+
+def _policy_hit_rate(policy, capacity, trace, scores, n, seed=0):
+    from repro.core.cache import CachePolicy
+    c = CachePolicy(capacity, policy, scores=scores, n_keys=n, seed=seed)
+    for v in trace:
+        if c.get(int(v)) is None:
+            c.put(int(v), v)          # "compute" + insert on miss
+    return c.hit_rate
+
+
+def test_cache_policy_hit_rate_ordering():
+    """On a power-law graph with importance-correlated hot traffic (the
+    paper's premise — the frequently-read vertices are the structurally
+    important ones) POLLUTED by periodic cold scans (batch jobs / crawlers,
+    LRU's classic failure mode), the Eq. 1 static admission beats LRU,
+    which beats random; off caches nothing."""
+    g = synthetic_ahg(3000, avg_degree=8, seed=1)
+    imp = importance(g, k=1)
+    order = np.argsort(-imp)
+    cap = g.n // 20
+    rng = np.random.default_rng(4)
+    hot = order[np.minimum(rng.zipf(1.7, size=6000) - 1, g.n - 1)]
+    cold = order[-800:]                        # never admitted by importance
+    chunks = []
+    for i, h in enumerate(np.array_split(hot, 11)):
+        chunks.append(h)
+        if i < 10:                             # scan of 400 cold ids,
+            off = (i * 137) % 400              # longer than the capacity
+            chunks.append(cold[off:off + 400])
+    trace = np.concatenate(chunks)
+    rates = {p: _policy_hit_rate(p, cap, trace, imp, g.n)
+             for p in ("importance", "lru", "random", "off")}
+    assert rates["off"] == 0.0
+    assert rates["importance"] > rates["lru"] > rates["random"] > 0.0
+    assert rates["importance"] > 0.5      # the hot head stays pinned
+
+
+def test_cache_policy_admission_and_validation():
+    from repro.core.cache import CachePolicy
+    scores = np.array([5.0, 1.0, 3.0, 0.5])
+    c = CachePolicy(2, "importance", scores=scores)
+    for k in range(4):
+        c.put(k, k * 10)
+    # only the top-2 by score (keys 0 and 2) were admitted
+    assert c.get(0) == 0 and c.get(2) == 20
+    assert c.get(1) is None and c.get(3) is None
+    assert len(c) == 2
+
+    r = CachePolicy(2, "random", n_keys=4, seed=0)
+    for k in range(4):
+        r.put(k, k)
+    assert len(r) == 2
+
+    off = CachePolicy(1, "off")
+    off.put(0, "x")
+    assert off.get(0) is None and len(off) == 0
+
+    with pytest.raises(ValueError):
+        CachePolicy(4, "mru")
+    with pytest.raises(ValueError):
+        CachePolicy(0, "lru")
+    with pytest.raises(ValueError):
+        CachePolicy(4, "importance")          # needs scores
+    with pytest.raises(ValueError):
+        CachePolicy(4, "random")              # needs n_keys
