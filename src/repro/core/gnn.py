@@ -48,12 +48,22 @@ class GNNSpec:
     combiner: str = "concat"
     normalize: bool = True
     gcn_self_loop: bool = False            # GCN folds self into the mean
-    use_kernel: bool = False               # Pallas neighbor_agg fast path
+    use_kernel: bool = False               # Pallas fused-layer fast path
     name: str = "graphsage"
 
     def __post_init__(self):
         assert len(self.dims) == self.k_max + 1
         assert len(self.fanouts) == self.k_max
+        if self.use_kernel:
+            # validate the kernel pairing HERE, not as a bare ValueError deep
+            # inside a pallas wrapper three layers down mid-training
+            ok, why = ops.kernel_compat(self.aggregator, self.combiner)
+            if not ok:
+                raise ValueError(
+                    f"use_kernel=True: {why}.  The fused Pallas layer "
+                    f"supports aggregators {sorted(ops.KERNEL_AGGREGATORS)} "
+                    f"× combiners {sorted(ops.KERNEL_COMBINERS)}; set "
+                    f"use_kernel=False for the jnp operator path.")
 
 
 def init_gnn_params(spec: GNNSpec, seed: int = 0) -> Dict:
@@ -80,22 +90,19 @@ def gnn_apply(spec: GNNSpec, params: Dict, plan: Dict, features: Array) -> Array
     h = features[plan["levels"][k_max]]
     for h_lvl in range(k_max - 1, -1, -1):
         k = k_max - h_lvl                      # hop being produced
-        layer = params[f"layer_{k}"]
-        child = plan["child_idx"][h_lvl]       # [N_h, fanout]
-        msk = plan["child_msk"][h_lvl]
-        sidx = plan["self_idx"][h_lvl]
-        h_self = h[sidx]                       # h^{k-1} of the level's vertices
-        if spec.use_kernel:
-            from repro.kernels import ops as kops  # lazy: optional dependency
-            h_agg = kops.neighbor_aggregate(h, child, msk, reduction=spec.aggregator)
-        else:
-            neigh = h[child]                   # [N_h, fanout, D]
-            if spec.gcn_self_loop:
-                neigh = jnp.concatenate([neigh, h_self[:, None, :]], axis=1)
-                msk = jnp.concatenate([msk, jnp.ones_like(msk[:, :1])], axis=1)
-            h_agg = ops.aggregate(spec.aggregator, neigh, msk, layer.get("agg"))
-        h = ops.combine(spec.combiner, layer["comb"], h_self, h_agg,
-                        act=(k < k_max))      # final hop linear (see ops)
+        # one dispatched hop: the fused Pallas layer when the spec opts in
+        # and the (aggregator, combiner) pair has a kernel lowering (the
+        # GCN self-loop folds into the kernel as an extra masked column),
+        # the jnp plugin registries otherwise — see operators.apply_layer
+        h = ops.apply_layer(params[f"layer_{k}"], h,
+                            plan["self_idx"][h_lvl],
+                            plan["child_idx"][h_lvl],
+                            plan["child_msk"][h_lvl],
+                            aggregator=spec.aggregator,
+                            combiner=spec.combiner,
+                            act=(k < k_max),   # final hop linear (see ops)
+                            self_loop=spec.gcn_self_loop,
+                            use_kernel=spec.use_kernel)
         if spec.normalize:
             h = h / jnp.maximum(jnp.linalg.norm(h, axis=-1, keepdims=True), 1e-9)
     return h

@@ -15,6 +15,7 @@ Table 5 benchmark compares against.
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -25,6 +26,9 @@ from .sampling import HopSpec, NeighborhoodSampler, SampleBatch
 
 __all__ = [
     "AGGREGATORS", "COMBINERS", "register_aggregator", "register_combiner",
+    "KERNEL_AGGREGATORS", "KERNEL_COMBINERS", "register_kernel_aggregator",
+    "register_kernel_combiner", "kernel_supported", "kernel_compat",
+    "kernel_mode", "set_kernel_mode", "apply_layer",
     "MinibatchPlan", "build_plan", "aggregate", "combine", "plan_to_device",
 ]
 
@@ -175,6 +179,136 @@ def aggregate(name: str, neigh: Array, mask: Array, params=None) -> Array:
 def combine(name: str, params, h_self: Array, h_agg: Array,
             act: bool = True) -> Array:
     return COMBINERS[name](params, h_self, h_agg, act)
+
+
+# ---------------------------------------------------------------------------
+# Kernel dispatch — the Pallas fused-layer fast path (paper §3.4 hot loop)
+# ---------------------------------------------------------------------------
+#
+# ``apply_layer`` is the one entry the GNN forward uses per hop.  When the
+# spec opts in (``use_kernel=True``) AND the (aggregator, combiner) pair has
+# a kernel lowering, the whole hop runs as ONE Pallas kernel
+# (``repro.kernels.ops.fused_gnn_layer``): neighbor rows stream HBM→VMEM
+# once and feed the MXU directly — no [N_h, S, D] gathered intermediate, no
+# [B, 2D] concat.  Anything else (attention/gru aggregators, gru combiner,
+# runtime-registered plugins without a kernel entry) falls back to the jnp
+# operator registries above, cleanly and silently.
+#
+# Mode selection: ``native`` on TPU, ``interpret`` elsewhere (validation
+# grade — bit-equivalent math at Python-loop speed), or an explicit override
+# via ``set_kernel_mode(...)`` / the ``REPRO_KERNELS`` env var
+# (``native`` | ``interpret`` | ``oracle``; ``oracle`` forces the jnp path
+# even for kernel-capable specs).
+
+# kernel-capable AGGREGATE plugins: name -> pallas reduction
+KERNEL_AGGREGATORS: Dict[str, str] = {"mean": "mean", "sum": "sum",
+                                      "max": "max"}
+
+# kernel-capable COMBINE plugins: name -> fn(comb_params, d_in) -> (W1, W2, b)
+# where the fused layer computes act(h_self @ W1 + h_agg @ W2 + b)
+KERNEL_COMBINERS: Dict[str, Callable] = {
+    # GraphSAGE concat: [h_self ‖ h_agg] @ W == h_self @ W[:d] + h_agg @ W[d:]
+    "concat": lambda p, d: (p["w"][:d], p["w"][d:], p["b"]),
+    # GCN add: (h_self + h_agg) @ W == h_self @ W + h_agg @ W
+    "add": lambda p, d: (p["w"], p["w"], p["b"]),
+}
+
+
+def register_kernel_aggregator(name: str, reduction: str) -> None:
+    """Declare that aggregator ``name`` lowers to the fused kernel's
+    ``reduction`` (one of sum/mean/max)."""
+    if reduction not in ("sum", "mean", "max"):
+        raise ValueError(f"no kernel reduction named {reduction!r}")
+    KERNEL_AGGREGATORS[name] = reduction
+
+
+def register_kernel_combiner(name: str, weight_split: Callable) -> None:
+    """Declare combiner ``name`` kernel-capable via
+    ``weight_split(comb_params, d_in) -> (W1, W2, bias)``.
+
+    Contract: the fused kernel computes ``act(h_self@W1 + h_agg@W2 + b)``
+    with act fixed to relu (hidden hops) / identity (final hop) — only
+    combiners whose jnp plugin has that exact shape (e.g. concat, add)
+    belong here.  A combiner with its own nonlinearity (like gru) must NOT
+    be registered: the kernel path would silently compute different math
+    from its jnp counterpart."""
+    KERNEL_COMBINERS[name] = weight_split
+
+
+def kernel_compat(aggregator: str, combiner: str) -> Tuple[bool, str]:
+    """(supported, reason-if-not) for the fused kernel path."""
+    if aggregator not in KERNEL_AGGREGATORS:
+        return False, (f"aggregator {aggregator!r} has no kernel lowering "
+                       f"(kernel-capable: {sorted(KERNEL_AGGREGATORS)})")
+    if combiner not in KERNEL_COMBINERS:
+        return False, (f"combiner {combiner!r} has no kernel lowering "
+                       f"(kernel-capable: {sorted(KERNEL_COMBINERS)})")
+    return True, ""
+
+
+def kernel_supported(aggregator: str, combiner: str) -> bool:
+    return kernel_compat(aggregator, combiner)[0]
+
+
+_KERNEL_MODE: Optional[str] = None
+_KERNEL_MODES = ("native", "interpret", "oracle")
+
+
+def set_kernel_mode(mode: Optional[str]) -> Optional[str]:
+    """Force the fused-path mode (``None`` restores automatic selection).
+    Returns the previous override so callers can scope it."""
+    global _KERNEL_MODE
+    if mode is not None and mode not in _KERNEL_MODES:
+        raise ValueError(f"kernel mode must be one of {_KERNEL_MODES}")
+    prev, _KERNEL_MODE = _KERNEL_MODE, mode
+    return prev
+
+
+def kernel_mode() -> str:
+    if _KERNEL_MODE is not None:
+        return _KERNEL_MODE
+    env = os.environ.get("REPRO_KERNELS", "").strip().lower()
+    if env in _KERNEL_MODES:
+        return env
+    from repro.kernels import ops as kops  # lazy: optional dependency
+    return "native" if kops.on_tpu() else "interpret"
+
+
+def _fold_self_loop(self_idx: Array, child_idx: Array,
+                    child_msk: Array) -> Tuple[Array, Array]:
+    """GCN self-loop as one extra always-valid neighbor column, so the
+    aggregate sees the anchor's own row (kernel and jnp paths share this)."""
+    child = jnp.concatenate([child_idx, self_idx[:, None]], axis=1)
+    msk = jnp.concatenate([child_msk, jnp.ones_like(child_msk[:, :1])],
+                          axis=1)
+    return child, msk
+
+
+def apply_layer(layer_params: Dict, h: Array, self_idx: Array,
+                child_idx: Array, child_msk: Array, *, aggregator: str,
+                combiner: str, act: bool = True, self_loop: bool = False,
+                use_kernel: bool = False) -> Array:
+    """One Algorithm-1 hop: AGGREGATE sampled neighbors, COMBINE with the
+    anchor's previous-hop embedding.  Dispatches to the fused Pallas layer
+    when enabled+supported, else the jnp plugin registries."""
+    child, msk = child_idx, child_msk
+    if self_loop:
+        child, msk = _fold_self_loop(self_idx, child_idx, child_msk)
+    if use_kernel and kernel_supported(aggregator, combiner):
+        mode = kernel_mode()
+        if mode != "oracle":
+            from repro.kernels import ops as kops  # lazy: optional dependency
+            w1, w2, b = KERNEL_COMBINERS[combiner](layer_params["comb"],
+                                                   h.shape[-1])
+            return kops.fused_gnn_layer(
+                h, self_idx, child, msk, w1, w2, b,
+                reduction=KERNEL_AGGREGATORS[aggregator],
+                activation="relu" if act else "none",
+                interpret=(mode == "interpret"))
+    h_self = h[self_idx]
+    neigh = h[child]                         # [N_h, fanout(+self), D]
+    h_agg = aggregate(aggregator, neigh, msk, layer_params.get("agg"))
+    return combine(combiner, layer_params["comb"], h_self, h_agg, act)
 
 
 # ---------------------------------------------------------------------------

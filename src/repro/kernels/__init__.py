@@ -1,3 +1,17 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the paper's §3.4 AGGREGATE/COMBINE hot loop.
+
+``fused_layer``    — the production fast path: one kernel per GNN hop
+                     (gather → aggregate → combine, single HBM pass).
+``neighbor_agg``   — fused gather+aggregate (the two-kernel split's first
+                     half; still exposed for ad-hoc aggregation).
+``fused_combine``  — fused two-matmul COMBINE (the split's second half).
+``backward``       — the training-grade VJP kernels: masked scatter-add as
+                     a one-hot MXU contraction + tiled matmul.
+``ops``            — differentiable jit'd wrappers (padding, custom_vjp,
+                     TPU/interpret selection).  Use these, not the raw
+                     kernels.
+``ref``            — pure-jnp oracles (allclose targets and fallbacks).
+
+Dispatch between kernels and the jnp operator plugins lives in
+``repro.core.operators.apply_layer`` (``GNNSpec.use_kernel`` opts in).
+"""

@@ -1,0 +1,182 @@
+"""Pallas TPU kernels for the training-grade backward passes.
+
+The fused forward kernels gather feature rows by data-dependent index; their
+VJPs need the transpose — a masked **scatter-add** of per-anchor cotangent
+rows back into the feature table.  Data-dependent *writes* race under a
+blocked grid, so both scatter kernels here express the scatter as a dense
+one-hot contraction the MXU executes deterministically:
+
+    dh[v, :] = Σ_j  1[idx_j == v] · contrib[j, :]        (scatter_add_rows)
+    dh[v, :] = Σ_i (Σ_s coef[i,s] · 1[child[i,s] == v]) · g[i, :]
+                                                         (scatter_add_weighted)
+
+Each output (block_n, block_d) tile owns a VMEM f32 accumulator; every
+contribution block builds its one-hot (or coefficient-weighted) assignment
+tile in registers and contracts it against the cotangent block — no
+intermediate ever goes back to HBM, and ``scatter_add_weighted`` never
+materialises the [B, S, D] per-neighbor cotangent at all.
+
+``matmul`` is the plain tiled MXU matmul the combine VJP uses for its two
+transposed products (dpre @ Wᵀ, hᵀ @ dpre).
+
+jnp fallbacks for all three live in ``ref.py`` (`*_ref`); the ops.py
+wrappers select kernel vs fallback.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scatter_rows_kernel(idx_ref, c_ref, out_ref, acc_ref, *, n_m: int,
+                         block_n: int):
+    m = pl.program_id(2)
+
+    @pl.when(m == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    ids = idx_ref[0, :]                               # (block_m,) int32
+    v0 = pl.program_id(0) * block_n
+    cols = jax.lax.broadcasted_iota(jnp.int32, (ids.shape[0], block_n), 1) + v0
+    onehot = (ids[:, None] == cols).astype(jnp.float32)
+    # onehotᵀ @ contrib — contracting over the contribution axis
+    acc_ref[...] += jax.lax.dot_general(
+        onehot, c_ref[...].astype(jnp.float32),
+        (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(m == n_m - 1)
+    def _finish():
+        out_ref[...] = acc_ref[...]
+
+
+def _scatter_add_rows(indices, contrib, n_rows, *, block_n, block_m, block_d,
+                      interpret):
+    """indices [1, M] int32, contrib [M, D] -> dh [n_rows, D] f32 with
+    dh[indices[j]] += contrib[j].  Out-of-range indices (the wrapper's -1
+    padding) match no output row and drop.  The ops.py wrapper pre-pads:
+    M % block_m == 0, D % block_d == 0, n_rows % block_n == 0."""
+    _, m_len = indices.shape
+    _, d = contrib.shape
+    assert contrib.shape[0] == m_len
+    assert m_len % block_m == 0 and d % block_d == 0 and n_rows % block_n == 0
+    grid = (n_rows // block_n, d // block_d, m_len // block_m)
+    kernel = functools.partial(_scatter_rows_kernel, n_m=grid[2],
+                               block_n=block_n)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_m), lambda i, j, m: (0, m)),
+            pl.BlockSpec((block_m, block_d), lambda i, j, m: (m, j)),
+        ],
+        out_specs=pl.BlockSpec((block_n, block_d), lambda i, j, m: (i, j)),
+        scratch_shapes=[pltpu.VMEM((block_n, block_d), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((n_rows, d), jnp.float32),
+        interpret=interpret,
+    )(indices, contrib)
+
+
+scatter_add_rows = jax.jit(_scatter_add_rows,
+                           static_argnames=("n_rows", "block_n", "block_m",
+                                           "block_d", "interpret"))
+
+
+def _scatter_weighted_kernel(cidx_ref, coef_ref, g_ref, out_ref, acc_ref, *,
+                             n_b: int, n_s: int, block_n: int):
+    bb = pl.program_id(2)
+
+    @pl.when(bb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    ids = cidx_ref[...]                               # (block_b, S) int32
+    cf = coef_ref[...].astype(jnp.float32)            # (block_b, S)
+    v0 = pl.program_id(0) * block_n
+    cols = jax.lax.broadcasted_iota(
+        jnp.int32, (ids.shape[0], block_n), 1) + v0
+    wmat = jnp.zeros((ids.shape[0], block_n), jnp.float32)
+    for s in range(n_s):                              # S is a small fanout
+        wmat += (ids[:, s][:, None] == cols) * cf[:, s][:, None]
+    # wmatᵀ @ g — [block_n, block_b] x [block_b, block_d] on the MXU
+    acc_ref[...] += jax.lax.dot_general(
+        wmat, g_ref[...].astype(jnp.float32),
+        (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(bb == n_b - 1)
+    def _finish():
+        out_ref[...] = acc_ref[...]
+
+
+def _scatter_add_weighted(child, coef, g, n_rows, *, block_n, block_b,
+                          block_d, interpret):
+    b, s = child.shape
+    d = g.shape[1]
+    assert coef.shape == (b, s) and g.shape == (b, d)
+    assert b % block_b == 0 and d % block_d == 0 and n_rows % block_n == 0
+    grid = (n_rows // block_n, d // block_d, b // block_b)
+    kernel = functools.partial(_scatter_weighted_kernel, n_b=grid[2], n_s=s,
+                               block_n=block_n)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, s), lambda i, j, bb: (bb, 0)),
+            pl.BlockSpec((block_b, s), lambda i, j, bb: (bb, 0)),
+            pl.BlockSpec((block_b, block_d), lambda i, j, bb: (bb, j)),
+        ],
+        out_specs=pl.BlockSpec((block_n, block_d), lambda i, j, bb: (i, j)),
+        scratch_shapes=[pltpu.VMEM((block_n, block_d), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((n_rows, d), jnp.float32),
+        interpret=interpret,
+    )(child, coef, g)
+
+
+scatter_add_weighted = jax.jit(_scatter_add_weighted,
+                               static_argnames=("n_rows", "block_n", "block_b",
+                                               "block_d", "interpret"))
+
+
+def _matmul_kernel(a_ref, b_ref, out_ref, acc_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...].astype(jnp.float32),
+                            b_ref[...].astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _finish():
+        out_ref[...] = acc_ref[...]
+
+
+def _matmul(a, b, *, block_m, block_n, block_k, interpret):
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0
+    grid = (m // block_m, n // block_n, k // block_k)
+    kernel = functools.partial(_matmul_kernel, n_k=grid[2])
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(a, b)
+
+
+matmul = jax.jit(_matmul, static_argnames=("block_m", "block_n", "block_k",
+                                           "interpret"))

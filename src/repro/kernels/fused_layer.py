@@ -1,0 +1,137 @@
+"""Pallas TPU kernel: single-pass fused GNN layer (paper §3.4 hot loop).
+
+One kernel computes a whole Algorithm-1 layer,
+
+    out[i] = act( h[self_idx[i]] @ W1  +  agg_s(h[child_idx[i,s]], mask) @ W2
+                  + b )
+
+streaming every needed feature row HBM→VMEM exactly once per use and feeding
+the MXU accumulator directly.  This removes BOTH intermediates the two-kernel
+split (``neighbor_agg`` then ``fused_combine``) still materialises between
+calls: the ``[N_h, S, D]`` gathered tensor never exists, and the ``[B, D]``
+aggregate goes straight from the VMEM scratch into its matmul instead of
+round-tripping through HBM.
+
+TPU-native design (same conventions as ``neighbor_agg``):
+  * ``self_idx``/``child_idx`` ride in as **scalar prefetch** (SMEM) so the
+    feature BlockSpec index maps can address HBM rows by data-dependent
+    index;
+  * grid = (anchors, O-blocks, S): S innermost so the f32 VMEM scratch
+    accumulates the aggregate across one anchor's neighbors, then the two
+    (1, D) x (D, block_o) MXU dots fire once at the last neighbor;
+  * the aggregate is ALSO emitted as a second output — it is the residual
+    the custom VJP needs for dW2, and writing the [B, D] row costs nothing
+    extra since it is already resident in VMEM.
+
+The GCN self-loop is folded by the caller as one extra masked neighbor
+column (child_idx[:, -1] = self_idx, mask 1) — see ``operators.apply_layer``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float("-inf")
+
+
+def _kernel(sidx_ref, cidx_ref, mask_ref, self_ref, nbr_ref, w1_ref, w2_ref,
+            b_ref, out_ref, agg_ref, acc_ref, *, reduction: str,
+            n_neighbors: int, activation: str):
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        if reduction == "max":
+            acc_ref[...] = jnp.full_like(acc_ref, NEG_INF)
+        else:
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    m = mask_ref[0, s]
+    row = nbr_ref[...].astype(jnp.float32)           # (1, d_pad)
+    if reduction == "max":
+        acc_ref[...] = jnp.maximum(acc_ref[...], jnp.where(m > 0, row, NEG_INF))
+    else:
+        acc_ref[...] += row * m
+
+    @pl.when(s == n_neighbors - 1)
+    def _combine():
+        agg = acc_ref[...]
+        count = jnp.sum(mask_ref[0, :])
+        if reduction == "mean":
+            agg = agg / jnp.maximum(count, 1.0)
+        if reduction == "max":
+            agg = jnp.where(count > 0, agg, 0.0)     # all-masked rows -> 0
+        agg_ref[...] = agg                            # residual for the VJP
+        hs = self_ref[...].astype(jnp.float32)
+        pre = jnp.dot(hs, w1_ref[...].astype(jnp.float32),
+                      preferred_element_type=jnp.float32)
+        pre += jnp.dot(agg, w2_ref[...].astype(jnp.float32),
+                       preferred_element_type=jnp.float32)
+        pre += b_ref[...].astype(jnp.float32)
+        if activation == "relu":
+            pre = jnp.maximum(pre, 0.0)
+        elif activation == "tanh":
+            pre = jnp.tanh(pre)
+        out_ref[...] = pre.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("reduction", "activation",
+                                             "block_o", "interpret"))
+def fused_layer(features: jax.Array, self_idx: jax.Array,
+                child_idx: jax.Array, mask: jax.Array, w1: jax.Array,
+                w2: jax.Array, bias: jax.Array, *, reduction: str = "mean",
+                activation: str = "relu", block_o: int = 128,
+                interpret: bool = False):
+    """features [N, D], self_idx [B], child_idx [B, S], mask [B, S],
+    w1/w2 [D, O], bias [O] -> (out [B, O], h_agg [B, D] f32).
+
+    D % 128 == O % block_o == 0 (the ops.py wrapper pads); the aggregate and
+    both matmuls accumulate in f32 regardless of input dtype.
+    """
+    if reduction not in ("sum", "mean", "max"):
+        raise ValueError(reduction)
+    if activation not in ("relu", "tanh", "none"):
+        raise ValueError(activation)
+    n, d = features.shape
+    b, s = child_idx.shape
+    o = w1.shape[1]
+    assert self_idx.shape == (b,) and mask.shape == (b, s)
+    assert w1.shape == (d, o) and w2.shape == (d, o)
+    assert d % 128 == 0 and o % block_o == 0, (d, o, block_o)
+
+    grid = (b, o // block_o, s)
+    kernel = functools.partial(_kernel, reduction=reduction, n_neighbors=s,
+                               activation=activation)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                # mask row for this anchor (whole S — S is a small fanout)
+                pl.BlockSpec((1, s), lambda i, j, k, sidx, cidx: (i, 0)),
+                # h_self row: data-dependent via scalar prefetch
+                pl.BlockSpec((1, d), lambda i, j, k, sidx, cidx: (sidx[i], 0)),
+                # the sampled neighbor's row, streamed once per (i, s)
+                pl.BlockSpec((1, d), lambda i, j, k, sidx, cidx: (cidx[i, k], 0)),
+                pl.BlockSpec((d, block_o), lambda i, j, k, sidx, cidx: (0, j)),
+                pl.BlockSpec((d, block_o), lambda i, j, k, sidx, cidx: (0, j)),
+                pl.BlockSpec((1, block_o), lambda i, j, k, sidx, cidx: (0, j)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, block_o), lambda i, j, k, sidx, cidx: (i, j)),
+                pl.BlockSpec((1, d), lambda i, j, k, sidx, cidx: (i, 0)),
+            ],
+            scratch_shapes=[pltpu.VMEM((1, d), jnp.float32)],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((b, o), features.dtype),
+            jax.ShapeDtypeStruct((b, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(self_idx, child_idx, mask, features, features, w1, w2,
+      bias.reshape(1, -1))

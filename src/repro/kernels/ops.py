@@ -1,8 +1,15 @@
-"""jit'd public wrappers around the Pallas kernels.
+"""jit'd public wrappers around the Pallas kernels — now training-grade.
 
-Handle padding to hardware-aligned tiles, pick interpret mode automatically
-(this box is CPU-only; TPU is the target), and fall back to the jnp oracle
-for shapes where a kernel launch is not worthwhile.
+Every wrapper here is differentiable: ``jax.custom_vjp`` pairs each fused
+forward kernel with its backward kernels (masked scatter-add for the
+gathers, tiled matmuls for the combine — see ``backward.py``), so
+``use_kernel=True`` works under ``jax.value_and_grad``.
+
+The wrappers handle padding to hardware-aligned tiles and pick interpret
+mode automatically (``interpret=None`` → native on TPU, interpret elsewhere;
+this box is CPU-only, TPU is the target).  The pure-jnp oracles live in
+``ref.py``; the production dispatch between kernels and jnp operators is
+``repro.core.operators.apply_layer``.
 """
 from __future__ import annotations
 
@@ -12,11 +19,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import backward as bwdk
 from . import ref
 from .fused_combine import fused_combine as _fused_combine_kernel
+from .fused_layer import fused_layer as _fused_layer_kernel
 from .neighbor_agg import neighbor_agg as _neighbor_agg_kernel
 
-__all__ = ["neighbor_aggregate", "combine_dense", "on_tpu"]
+__all__ = ["neighbor_aggregate", "combine_dense", "fused_gnn_layer",
+           "scatter_add_weighted", "scatter_add_rows", "matmul_f32", "on_tpu"]
 
 
 def on_tpu() -> bool:
@@ -27,42 +37,297 @@ def _round_up(x: int, to: int) -> int:
     return ((x + to - 1) // to) * to
 
 
+def _float0(x):
+    """Symbolic-zero cotangent for integer (index) primals."""
+    return np.zeros(np.shape(x), jax.dtypes.float0)
+
+
+def _act_bwd(activation: str, g: jax.Array, out: jax.Array) -> jax.Array:
+    """d(pre-activation) from the output cotangent, using the saved OUTPUT
+    (relu/tanh gradients are expressible from the activated value, so the
+    pre-activation is never stored)."""
+    g = g.astype(jnp.float32)
+    out = out.astype(jnp.float32)
+    if activation == "relu":
+        return g * (out > 0)
+    if activation == "tanh":
+        return g * (1.0 - out * out)
+    return g
+
+
+# ---------------------------------------------------------------------------
+# Backward building blocks (each a Pallas kernel; jnp fallbacks in ref.py)
+# ---------------------------------------------------------------------------
+
+def matmul_f32(a: jax.Array, b: jax.Array, *,
+               interpret: bool | None = None) -> jax.Array:
+    """[M, K] @ [K, N] -> [M, N] f32 via the tiled MXU kernel."""
+    if interpret is None:
+        interpret = not on_tpu()
+    m, k = a.shape
+    _, n = b.shape
+    m_pad, k_pad, n_pad = (_round_up(m, 128), _round_up(k, 128),
+                           _round_up(n, 128))
+    ap = jnp.pad(a.astype(jnp.float32), ((0, m_pad - m), (0, k_pad - k)))
+    bp = jnp.pad(b.astype(jnp.float32), ((0, k_pad - k), (0, n_pad - n)))
+    out = bwdk.matmul(ap, bp, block_m=128, block_n=128, block_k=128,
+                      interpret=interpret)
+    return out[:m, :n]
+
+
+def scatter_add_rows(indices: jax.Array, contrib: jax.Array, n_rows: int, *,
+                     interpret: bool | None = None) -> jax.Array:
+    """dh[indices[j]] += contrib[j] over j — the masked scatter-add VJP of a
+    row gather, as a deterministic one-hot MXU contraction (no
+    data-dependent writes).  indices [M] int32, contrib [M, D] -> [n_rows,
+    D] f32.  jnp fallback: ``ref.scatter_add_rows_ref``."""
+    if interpret is None:
+        interpret = not on_tpu()
+    m = int(indices.shape[0])
+    d = contrib.shape[1]
+    m_pad, d_pad = _round_up(m, 128), _round_up(d, 128)
+    n_pad = _round_up(n_rows, 128)
+    idx = jnp.pad(indices.astype(jnp.int32), (0, m_pad - m),
+                  constant_values=-1).reshape(1, -1)
+    cp = jnp.pad(contrib.astype(jnp.float32),
+                 ((0, m_pad - m), (0, d_pad - d)))
+    out = bwdk.scatter_add_rows(idx, cp, n_pad, block_n=128, block_m=128,
+                                block_d=128, interpret=interpret)
+    return out[:n_rows, :d]
+
+
+def scatter_add_weighted(child: jax.Array, coef: jax.Array, g: jax.Array,
+                         n_rows: int, *,
+                         interpret: bool | None = None) -> jax.Array:
+    """dh[child[i,s]] += coef[i,s] * g[i] — the AGGREGATE backward.  Builds
+    the coefficient-weighted assignment tile in-kernel, so the [B, S, D]
+    per-neighbor cotangent is never materialised (the bwd mirror of the fwd
+    kernel's win).  child/coef [B, S], g [B, D] -> [n_rows, D] f32.  jnp
+    fallback: ``ref.scatter_add_weighted_ref``."""
+    if interpret is None:
+        interpret = not on_tpu()
+    b, s = child.shape
+    d = g.shape[1]
+    b_pad, d_pad = _round_up(b, 128), _round_up(d, 128)
+    n_pad = _round_up(n_rows, 128)
+    child_p = jnp.pad(child.astype(jnp.int32), ((0, b_pad - b), (0, 0)),
+                      constant_values=-1)
+    coef_p = jnp.pad(coef.astype(jnp.float32), ((0, b_pad - b), (0, 0)))
+    gp = jnp.pad(g.astype(jnp.float32), ((0, b_pad - b), (0, d_pad - d)))
+    out = bwdk.scatter_add_weighted(child_p, coef_p, gp, n_pad, block_n=128,
+                                    block_b=128, block_d=128,
+                                    interpret=interpret)
+    return out[:n_rows, :d]
+
+
+def _agg_coef(reduction: str, mask: jax.Array) -> jax.Array:
+    """Per-(anchor, slot) weight of each neighbor row in a linear {sum,mean}
+    aggregate (the scatter-add coefficients of the backward pass)."""
+    if reduction == "sum":
+        return mask
+    return mask / jnp.maximum(mask.sum(1, keepdims=True), 1.0)
+
+
+def _max_contrib(features, idx, mask, agg, g):
+    """Per-slot cotangent rows for the max aggregate: route g to the argmax
+    slots, split evenly among ties (matching jax's reduce_max gradient)."""
+    nbr = features[idx].astype(jnp.float32)
+    sel = ((nbr == agg.astype(jnp.float32)[:, None, :])
+           & (mask[..., None] > 0)).astype(jnp.float32)
+    sel = sel / jnp.maximum(sel.sum(1, keepdims=True), 1.0)
+    return (sel * g[:, None, :]).reshape(-1, features.shape[1])
+
+
+# ---------------------------------------------------------------------------
+# neighbor_aggregate — fused gather+aggregate, differentiable
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _neighbor_agg_vjp(reduction: str, interpret: bool):
+    def run(features, idx, mask):
+        n, d = features.shape
+        block_d = 128 if d <= 128 else (256 if d <= 512 else 512)
+        d_pad = _round_up(d, block_d)
+        feats = features
+        if d_pad != d:
+            feats = jnp.pad(features, ((0, 0), (0, d_pad - d)))
+        out = _neighbor_agg_kernel(feats, idx, mask, reduction=reduction,
+                                   block_d=block_d, interpret=interpret)
+        return out[:, :d]
+
+    @jax.custom_vjp
+    def agg(features, idx, mask):
+        return run(features, idx, mask)
+
+    def fwd(features, idx, mask):
+        out = run(features, idx, mask)
+        return out, (features, idx, mask, out if reduction == "max" else None)
+
+    def bwd(res, g):
+        features, idx, mask, out = res
+        n = features.shape[0]
+        g = g.astype(jnp.float32)
+        if reduction == "max":
+            contrib = _max_contrib(features, idx, mask, out, g)
+            dh = scatter_add_rows(idx.reshape(-1), contrib, n,
+                                  interpret=interpret)
+        else:
+            dh = scatter_add_weighted(idx, _agg_coef(reduction, mask), g, n,
+                                      interpret=interpret)
+        return dh.astype(features.dtype), _float0(idx), jnp.zeros_like(mask)
+
+    agg.defvjp(fwd, bwd)
+    return agg
+
+
 def neighbor_aggregate(features: jax.Array, indices: jax.Array, mask: jax.Array,
                        *, reduction: str = "mean",
                        interpret: bool | None = None) -> jax.Array:
-    """Fused gather+aggregate.  [N,D] x [B,S] -> [B,D]."""
+    """Fused gather+aggregate.  [N,D] x [B,S] -> [B,D].  Differentiable in
+    ``features`` ONLY (bwd = masked scatter-add kernel); ``mask`` gets a
+    zero cotangent — plan masks are sampling artifacts, not parameters.
+    Differentiating a learned soft mask requires the jnp oracle path."""
     if interpret is None:
         interpret = not on_tpu()
-    n, d = features.shape
-    block_d = 128 if d <= 128 else (256 if d <= 512 else 512)
-    d_pad = _round_up(d, block_d)
-    feats = features
-    if d_pad != d:
-        feats = jnp.pad(features, ((0, 0), (0, d_pad - d)))
-    out = _neighbor_agg_kernel(feats, indices.astype(jnp.int32),
-                               mask.astype(jnp.float32), reduction=reduction,
-                               block_d=block_d, interpret=interpret)
-    return out[:, :d]
+    fn = _neighbor_agg_vjp(reduction, bool(interpret))
+    return fn(features, indices.astype(jnp.int32), mask.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# combine_dense — fused COMBINE, differentiable
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _combine_vjp(activation: str, interpret: bool):
+    def run(h_self, h_agg, w, bias):
+        b, d = h_self.shape
+        o = w.shape[1]
+        bb, bk, bo = min(128, _round_up(b, 8)), 128, 128
+        b_pad, d_pad, o_pad = (_round_up(b, bb), _round_up(d, bk),
+                               _round_up(o, bo))
+        hs = jnp.pad(h_self, ((0, b_pad - b), (0, d_pad - d)))
+        ha = jnp.pad(h_agg, ((0, b_pad - b), (0, d_pad - d)))
+        w1 = jnp.pad(w[:d], ((0, d_pad - d), (0, o_pad - o)))
+        w2 = jnp.pad(w[d:], ((0, d_pad - d), (0, o_pad - o)))
+        wp = jnp.concatenate([w1, w2], axis=0)
+        bp = jnp.pad(bias, (0, o_pad - o))
+        out = _fused_combine_kernel(hs, ha, wp, bp, activation=activation,
+                                    block_b=bb, block_o=bo, block_k=bk,
+                                    interpret=interpret)
+        return out[:b, :o]
+
+    @jax.custom_vjp
+    def comb(h_self, h_agg, w, bias):
+        return run(h_self, h_agg, w, bias)
+
+    def fwd(h_self, h_agg, w, bias):
+        out = run(h_self, h_agg, w, bias)
+        return out, (h_self, h_agg, w, bias, out)
+
+    def bwd(res, g):
+        h_self, h_agg, w, bias, out = res
+        d = h_self.shape[1]
+        dpre = _act_bwd(activation, g, out)
+        w32 = w.astype(jnp.float32)
+        dhs = matmul_f32(dpre, w32[:d].T, interpret=interpret)
+        dha = matmul_f32(dpre, w32[d:].T, interpret=interpret)
+        dw = jnp.concatenate([
+            matmul_f32(h_self.astype(jnp.float32).T, dpre, interpret=interpret),
+            matmul_f32(h_agg.astype(jnp.float32).T, dpre, interpret=interpret),
+        ], axis=0)
+        return (dhs.astype(h_self.dtype), dha.astype(h_agg.dtype),
+                dw.astype(w.dtype), dpre.sum(0).astype(bias.dtype))
+
+    comb.defvjp(fwd, bwd)
+    return comb
 
 
 def combine_dense(h_self: jax.Array, h_agg: jax.Array, w: jax.Array,
                   bias: jax.Array, *, activation: str = "relu",
                   interpret: bool | None = None) -> jax.Array:
-    """Fused COMBINE.  [B,D] x [B,D] x [2D,O] -> [B,O]."""
+    """Fused COMBINE.  [B,D] x [B,D] x [2D,O] -> [B,O].  Differentiable in
+    all four operands (bwd = two transposed matmul kernels per input)."""
     if interpret is None:
         interpret = not on_tpu()
-    b, d = h_self.shape
-    o = w.shape[1]
-    bb, bk, bo = min(128, _round_up(b, 8)), 128, 128
-    b_pad, d_pad, o_pad = _round_up(b, bb), _round_up(d, bk), _round_up(o, bo)
+    fn = _combine_vjp(activation, bool(interpret))
+    return fn(h_self, h_agg, w, bias)
 
-    hs = jnp.pad(h_self, ((0, b_pad - b), (0, d_pad - d)))
-    ha = jnp.pad(h_agg, ((0, b_pad - b), (0, d_pad - d)))
-    w1 = jnp.pad(w[:d], ((0, d_pad - d), (0, o_pad - o)))
-    w2 = jnp.pad(w[d:], ((0, d_pad - d), (0, o_pad - o)))
-    wp = jnp.concatenate([w1, w2], axis=0)
-    bp = jnp.pad(bias, (0, o_pad - o))
-    out = _fused_combine_kernel(hs, ha, wp, bp, activation=activation,
-                                block_b=bb, block_o=bo, block_k=bk,
-                                interpret=interpret)
-    return out[:b, :o]
+
+# ---------------------------------------------------------------------------
+# fused_gnn_layer — the single-pass layer (gather → aggregate → combine)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _fused_layer_vjp(reduction: str, activation: str, interpret: bool):
+    def run(features, sidx, cidx, mask, w1, w2, bias):
+        n, d = features.shape
+        o = w1.shape[1]
+        d_pad = _round_up(d, 128)
+        block_o = min(_round_up(o, 128), 512)
+        o_pad = _round_up(o, block_o)
+        feats = features
+        if d_pad != d:
+            feats = jnp.pad(features, ((0, 0), (0, d_pad - d)))
+        w1p = jnp.pad(w1, ((0, d_pad - d), (0, o_pad - o)))
+        w2p = jnp.pad(w2, ((0, d_pad - d), (0, o_pad - o)))
+        bp = jnp.pad(bias, (0, o_pad - o))
+        out, h_agg = _fused_layer_kernel(feats, sidx, cidx, mask, w1p, w2p,
+                                         bp, reduction=reduction,
+                                         activation=activation,
+                                         block_o=block_o, interpret=interpret)
+        return out[:, :o], h_agg[:, :d]
+
+    @jax.custom_vjp
+    def layer(features, sidx, cidx, mask, w1, w2, bias):
+        return run(features, sidx, cidx, mask, w1, w2, bias)[0]
+
+    def fwd(features, sidx, cidx, mask, w1, w2, bias):
+        out, h_agg = run(features, sidx, cidx, mask, w1, w2, bias)
+        return out, (features, sidx, cidx, mask, w1, w2, bias, h_agg, out)
+
+    def bwd(res, g):
+        features, sidx, cidx, mask, w1, w2, bias, h_agg, out = res
+        n = features.shape[0]
+        dpre = _act_bwd(activation, g, out)                      # [B, O]
+        h_self = features[sidx].astype(jnp.float32)              # [B, D]
+        dw1 = matmul_f32(h_self.T, dpre, interpret=interpret)
+        dw2 = matmul_f32(h_agg.T, dpre, interpret=interpret)
+        d_self = matmul_f32(dpre, w1.astype(jnp.float32).T,
+                            interpret=interpret)
+        d_agg = matmul_f32(dpre, w2.astype(jnp.float32).T,
+                           interpret=interpret)
+        dh = scatter_add_rows(sidx, d_self, n, interpret=interpret)
+        if reduction == "max":
+            contrib = _max_contrib(features, cidx, mask, h_agg, d_agg)
+            dh = dh + scatter_add_rows(cidx.reshape(-1), contrib, n,
+                                       interpret=interpret)
+        else:
+            dh = dh + scatter_add_weighted(cidx, _agg_coef(reduction, mask),
+                                           d_agg, n, interpret=interpret)
+        return (dh.astype(features.dtype), _float0(sidx), _float0(cidx),
+                jnp.zeros_like(mask), dw1.astype(w1.dtype),
+                dw2.astype(w2.dtype), dpre.sum(0).astype(bias.dtype))
+
+    layer.defvjp(fwd, bwd)
+    return layer
+
+
+def fused_gnn_layer(features: jax.Array, self_idx: jax.Array,
+                    child_idx: jax.Array, mask: jax.Array, w1: jax.Array,
+                    w2: jax.Array, bias: jax.Array, *,
+                    reduction: str = "mean", activation: str = "relu",
+                    interpret: bool | None = None) -> jax.Array:
+    """One single-pass Algorithm-1 layer:
+    ``act(h[self_idx] @ W1 + agg(h[child_idx], mask) @ W2 + b)``.
+
+    features [N, D], self_idx [B], child_idx [B, S], mask [B, S],
+    w1/w2 [D, O], bias [O] -> [B, O].  Differentiable in features, w1, w2
+    and bias (the bwd is the scatter-add + transposed-matmul kernel pair);
+    ``mask`` gets a zero cotangent — plan masks are sampling artifacts,
+    not parameters.  jnp oracle: ``ref.fused_layer_ref``."""
+    if interpret is None:
+        interpret = not on_tpu()
+    fn = _fused_layer_vjp(reduction, activation, bool(interpret))
+    return fn(features, self_idx.astype(jnp.int32),
+              child_idx.astype(jnp.int32), mask.astype(jnp.float32),
+              w1, w2, bias)

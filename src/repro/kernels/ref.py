@@ -34,3 +34,45 @@ def fused_combine_ref(h_self: jax.Array, h_agg: jax.Array, w: jax.Array,
     elif activation != "none":
         raise ValueError(activation)
     return out.astype(h_self.dtype)
+
+
+def fused_layer_ref(features: jax.Array, self_idx: jax.Array,
+                    child_idx: jax.Array, mask: jax.Array, w1: jax.Array,
+                    w2: jax.Array, bias: jax.Array, *,
+                    reduction: str = "mean",
+                    activation: str = "relu") -> jax.Array:
+    """act(h[self_idx] @ W1 + agg(h[child_idx], mask) @ W2 + b) — the whole
+    Algorithm-1 layer in plain jnp (gather materialised), gradable by jax
+    autodiff.  The fused kernel's allclose target AND the oracle-mode
+    dispatch path."""
+    h_self = features[self_idx].astype(jnp.float32)
+    h_agg = neighbor_agg_ref(features, child_idx, mask,
+                             reduction=reduction).astype(jnp.float32)
+    out = (h_self @ w1.astype(jnp.float32) + h_agg @ w2.astype(jnp.float32)
+           + bias.astype(jnp.float32))
+    if activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif activation == "tanh":
+        out = jnp.tanh(out)
+    elif activation != "none":
+        raise ValueError(activation)
+    return out.astype(features.dtype)
+
+
+def scatter_add_rows_ref(indices: jax.Array, contrib: jax.Array,
+                         n_rows: int) -> jax.Array:
+    """dh[indices[j]] += contrib[j]; out-of-range indices drop (kernel
+    semantics — the -1 padding rows)."""
+    return jnp.zeros((n_rows, contrib.shape[-1]), jnp.float32).at[
+        indices.reshape(-1)].add(contrib.astype(jnp.float32), mode="drop")
+
+
+def scatter_add_weighted_ref(child: jax.Array, coef: jax.Array, g: jax.Array,
+                             n_rows: int) -> jax.Array:
+    """dh[child[i,s]] += coef[i,s] * g[i] without the [B,S,D] intermediate
+    the naive formulation would broadcast (jnp fallback keeps it — it is the
+    oracle, not the fast path)."""
+    contrib = (coef[..., None].astype(jnp.float32)
+               * g[:, None, :].astype(jnp.float32))
+    return scatter_add_rows_ref(child.reshape(-1),
+                                contrib.reshape(-1, g.shape[-1]), n_rows)

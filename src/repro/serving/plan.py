@@ -209,7 +209,8 @@ class ServerPlan:
 
 
 def compile_server(query, model, traffic, *, max_buckets: int = 4,
-                   seed: int = 0) -> ServerPlan:
+                   seed: int = 0,
+                   use_kernel: Optional[bool] = None) -> ServerPlan:
     """Lower a GQL query + trained model + traffic statistics into a
     :class:`ServerPlan` (see module docstring).
 
@@ -219,6 +220,12 @@ def compile_server(query, model, traffic, *, max_buckets: int = 4,
     server path are a ROADMAP follow-up).  ``traffic`` is a
     :class:`~repro.serving.traffic.Traffic` trace or a sequence of observed
     request sizes.
+
+    ``use_kernel`` overrides the model spec's flag for the per-bucket jitted
+    forwards (validated eagerly via ``GNNSpec``): the server then runs the
+    fused Pallas layer path.  Frozen-table byte-identity holds against the
+    SAME-spec offline ``embed_many`` (both sides must run the same operator
+    path — fused vs jnp differ in f32 reduction order).
     """
     if not isinstance(traffic, Traffic):
         traffic = Traffic(tuple(int(s) for s in traffic))
@@ -255,6 +262,10 @@ def compile_server(query, model, traffic, *, max_buckets: int = 4,
             "(ROADMAP: serving follow-ups) — use plain .sample(fanout) hops")
 
     spec, params, features = _model_parts(model)
+    if use_kernel is not None and use_kernel != spec.use_kernel:
+        # replace re-runs __post_init__, so an unsupported aggregator ×
+        # combiner pairing fails HERE, not inside a per-bucket jit trace
+        spec = dataclasses.replace(spec, use_kernel=use_kernel)
     if tplan.fanouts != spec.fanouts:
         raise QueryValidationError(
             f"query fanouts {tplan.fanouts} do not match the model's "

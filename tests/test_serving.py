@@ -217,3 +217,47 @@ def test_oversized_request_spans_ticks(small_store, server_plan):
     assert out.shape == (len(big), server_plan.d_out)
     assert m["ticks"] >= 3
     assert m["recompiles"] <= len(server_plan.buckets)
+
+
+def test_served_use_kernel_byte_identical(small_store, trainer):
+    """ISSUE 4 acceptance: compile_server(..., use_kernel=True) serves rows
+    byte-identical to the SAME-spec offline embed_many (fused path both
+    sides, shared frozen executor), recompiles still <= bucket count."""
+    import dataclasses as _dc
+
+    from repro.core.gnn import GNNTrainer
+
+    g = small_store.graph
+    traffic = Traffic((3, 3, 6, 9, 14, 14))
+    plan = compile_server(G(small_store).V().sample(4).sample(3), trainer,
+                          traffic, max_buckets=2, seed=5, use_kernel=True)
+    assert plan.spec.use_kernel
+    # same-spec offline reference: a trainer whose spec matches the served
+    # one (same seed => identical params), riding the same frozen sampler
+    spec_k = _dc.replace(trainer.spec, use_kernel=True)
+    tr_k = GNNTrainer(small_store, spec_k, lr=0.05, seed=0)
+    tr_k.params = trainer.params
+    trace = _mixed_trace(g, n_req=6, seed=13)
+    trace = [ids[:14] for ids in trace]
+    all_ids = np.unique(np.concatenate(trace))
+    offline = tr_k.embed_many(all_ids, chunk=8, executor=plan.executor())
+    row_of = {int(v): offline[i] for i, v in enumerate(all_ids)}
+    with EmbeddingServer(plan, cache_policy="off", cache_capacity=1) as srv:
+        outs = srv.serve_trace(trace)
+        m = srv.metrics.snapshot()
+    for ids, out in zip(trace, outs):
+        want = np.stack([row_of[int(v)] for v in ids])
+        assert want.tobytes() == out.tobytes()
+    assert m["recompiles"] <= len(plan.buckets)
+
+
+def test_compile_server_use_kernel_validates_spec(small_store, trainer):
+    """The use_kernel override re-validates the spec eagerly: a non-kernel
+    aggregator fails at compile time, not inside a per-bucket jit trace."""
+    import dataclasses as _dc
+
+    bad = (_dc.replace(trainer.spec, aggregator="gru"),
+           trainer.params, trainer.features)
+    with pytest.raises(ValueError, match="kernel"):
+        compile_server(G(small_store).V().sample(4).sample(3), bad,
+                       Traffic((4, 8)), use_kernel=True)
