@@ -1,0 +1,187 @@
+"""Streaming-update benchmark: incremental refresh vs full rebuild.
+
+The paper's headline is *fast graph build* (minutes, not hours) because the
+production graph mutates continuously.  This benchmark reproduces that
+comparison at our scale, on three layers of the stack:
+
+  * **live server refresh** — ``ServerPlan.apply_delta`` (targeted frozen-
+    row re-freeze + incremental Eq. 1 + hop-radius cache invalidation)
+    against a cold ``compile_server`` on the mutated store; served rows are
+    byte-identical either way, so the wall-clock gap is pure rebuild waste;
+  * **store build** — ``StreamingStore.apply + compact()`` against
+    ``build_store`` from scratch on the mutated graph (the Fig 7 row;
+    shares ``incremental_vs_scratch`` with ``bench_graph_build`` so the two
+    artifacts can't drift);
+  * **sampling throughput** — uniform 2-hop batches through the delta
+    overlay (merged candidate gathers on touched rows) vs after
+    ``compact()`` (pure CSR fast path): the price of NOT compacting.
+
+Writes ``BENCH_streaming.json``; ``--smoke`` runs tiny sizes and skips the
+JSON so CI can exercise the whole mutation path in seconds.
+
+Run:  PYTHONPATH=src python benchmarks/bench_streaming.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+_BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
+                           "BENCH_streaming.json")
+
+try:
+    from .common import emit
+    from .bench_graph_build import incremental_vs_scratch, make_sparse_delta
+except ImportError:               # script mode: benchmarks/ is sys.path[0]
+    from common import emit
+    from bench_graph_build import incremental_vs_scratch, make_sparse_delta
+
+
+def _serving_refresh(n: int, fanouts, smoke: bool) -> dict:
+    from repro.api import G
+    from repro.core import build_store, make_gnn, synthetic_ahg
+    from repro.core.gnn import GNNTrainer
+    from repro.serving import EmbeddingServer, Traffic, compile_server
+    from repro.streaming import StreamingStore
+
+    g = synthetic_ahg(n, avg_degree=8, seed=0)
+    store = StreamingStore(build_store(g, 4))
+    spec = make_gnn("graphsage", d_in=g.vertex_attr_table.shape[1],
+                    d_hidden=32, d_out=32, fanouts=fanouts)
+    tr = GNNTrainer(store, spec, lr=0.05, seed=0)
+    tr.train(3 if smoke else 10, batch_size=64)
+    traffic = Traffic.synthetic(256, mean_size=16.0, max_size=64, seed=1)
+    query = G(store).V().sample(fanouts[0]).sample(fanouts[1])
+    plan = compile_server(query, tr, traffic, max_buckets=3)
+
+    # zipf-hot trace over the importance head (the Fig 9 premise: the
+    # frequently-read vertices are the structurally important ones)
+    rng = np.random.default_rng(2)
+    order = np.argsort(-plan.importance)
+    trace = []
+    for s in rng.choice(traffic.sizes, size=8 if smoke else 40):
+        ranks = np.minimum(rng.zipf(1.3, size=int(s)) - 1, g.n - 1)
+        trace.append(order[ranks].astype(np.int32))
+    srv = EmbeddingServer(plan, cache_policy="importance",
+                          cache_capacity=max(n // 10, 64))
+    srv.serve_trace(trace)                       # warm cache + jit
+
+    n_deltas = 2 if smoke else 5
+    t_inc = 0.0
+    refreshed = invalidated = 0
+    for k in range(n_deltas):
+        delta = make_sparse_delta(store.graph, frac=0.005, seed=10 + k,
+                                  store=store)
+        t0 = time.perf_counter()
+        refresh = srv.apply_delta(delta)
+        t_inc += time.perf_counter() - t0
+        refreshed += refresh.refreshed_vertices
+        invalidated += len(refresh.invalidated)
+        srv.serve_trace(trace)                   # between-delta traffic
+    metrics = srv.metrics.snapshot()
+    srv.stop()
+
+    # the rebuild alternative: one cold compile_server on the mutated store
+    t0 = time.perf_counter()
+    plan_cold = compile_server(query, tr, traffic, max_buckets=3)
+    t_cold = (time.perf_counter() - t0) * n_deltas
+    # correctness spot-check: cold plan serves the same bytes
+    with EmbeddingServer(plan_cold, cache_policy="off",
+                         cache_capacity=1) as srv2:
+        rows_cold = srv2.serve_trace(trace[:2])
+    with EmbeddingServer(plan, cache_policy="off", cache_capacity=1) as srv3:
+        rows_inc = srv3.serve_trace(trace[:2])
+    assert all(np.array_equal(a, b) for a, b in zip(rows_cold, rows_inc))
+
+    frozen_entries = g.n * len(set(fanouts))
+    return {
+        "n": n, "n_deltas": n_deltas,
+        "apply_delta_us": round(t_inc / n_deltas * 1e6, 1),
+        "cold_recompile_us": round(t_cold / n_deltas * 1e6, 1),
+        "speedup": round(t_cold / max(t_inc, 1e-9), 2),
+        "refreshed_vertices": int(refreshed),
+        "frozen_table_rows": int(frozen_entries),
+        "invalidated_rows": int(invalidated),
+        "delta_epochs": metrics["delta_epochs"],
+        "post_delta_hit_rate": metrics["epoch_hit_rate"],
+    }
+
+
+def _sampling_throughput(n: int, smoke: bool) -> dict:
+    from repro.core import build_store, synthetic_ahg
+    from repro.core.sampling import NeighborhoodSampler
+    from repro.streaming import StreamingStore
+
+    g = synthetic_ahg(n, avg_degree=8, seed=0)
+    store = StreamingStore(build_store(g, 4))
+    for k in range(3):
+        store.apply(make_sparse_delta(store.graph, frac=0.01, seed=20 + k,
+                                      store=store))
+    rng = np.random.default_rng(3)
+    seeds = rng.integers(0, g.n, size=256).astype(np.int32)
+    reps = 3 if smoke else 10
+
+    def run_batches(s):
+        ns = NeighborhoodSampler(s, seed=0)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            ns.sample(seeds, [8, 4])
+        return (time.perf_counter() - t0) / reps * 1e6
+
+    t_overlay = run_batches(store)
+    store.compact()
+    t_compacted = run_batches(store)
+    return {
+        "overlay_us_per_batch": round(t_overlay, 1),
+        "compacted_us_per_batch": round(t_compacted, 1),
+        "overlay_slowdown": round(t_overlay / max(t_compacted, 1e-9), 2),
+    }
+
+
+def run(smoke: bool = False) -> dict:
+    n = 4_000 if smoke else 60_000
+    fanouts = (4, 3) if smoke else (8, 4)
+    record: dict = {}
+
+    record["serving_refresh"] = _serving_refresh(n, fanouts, smoke)
+    r = record["serving_refresh"]
+    emit("streaming_apply_delta_us", r["apply_delta_us"],
+         f"refreshed={r['refreshed_vertices']}/{r['frozen_table_rows']}")
+    emit("streaming_cold_recompile_us", r["cold_recompile_us"],
+         f"speedup={r['speedup']}x")
+
+    from repro.core.graph import synthetic_ahg
+    g = synthetic_ahg(n, avg_degree=8, seed=0)
+    record["store_build"] = incremental_vs_scratch(g, 4, frac=0.01, seed=0)
+    b = record["store_build"]
+    emit("streaming_build_incremental_us", b["incremental_us"],
+         f"speedup={b['speedup']}x")
+    emit("streaming_build_scratch_us", b["from_scratch_us"], "")
+
+    record["sampling"] = _sampling_throughput(n, smoke)
+    s = record["sampling"]
+    emit("streaming_sampling_overlay_us", s["overlay_us_per_batch"],
+         f"slowdown_vs_compacted={s['overlay_slowdown']}x")
+
+    if not smoke:
+        with open(_BENCH_JSON, "w") as f:
+            json.dump({"streaming": record}, f, indent=2)
+            f.write("\n")
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes, no JSON artifact (CI)")
+    args = ap.parse_args()
+    record = run(smoke=args.smoke)
+    print(json.dumps({"streaming": record}, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""Streaming updates: delta → live server refresh → unchanged rows still hit.
+
+The quickstart of the mutation subsystem (paper §1/§3.2: the production
+graph never stands still, so the platform refreshes, never rebuilds):
+
+  1. build a :class:`~repro.streaming.StreamingStore` over the graph, train
+     a GNN, compile a :class:`~repro.serving.ServerPlan`, serve traffic;
+  2. stream a :class:`~repro.streaming.GraphDelta` into the LIVE server —
+     frozen sampling tables are re-drawn only for the touched vertices,
+     Eq. 1 importance moves incrementally, and exactly the cached rows
+     within the plan's hop radius are invalidated;
+  3. serve again: rows outside the radius are still cache HITS, and every
+     served row is byte-identical to a cold ``compile_server`` on the
+     mutated store (checked here).
+
+Run:  PYTHONPATH=src python examples/streaming_updates.py [--smoke]
+"""
+import argparse
+import time
+
+import numpy as np
+
+from repro.api import G
+from repro.core import build_store, make_gnn, synthetic_ahg
+from repro.core.gnn import GNNTrainer
+from repro.serving import EmbeddingServer, Traffic, compile_server
+from repro.streaming import GraphDelta, StreamingStore
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="tiny sizes for CI")
+    args = ap.parse_args()
+    n = 3_000 if args.smoke else 40_000
+    fanouts = (4, 3) if args.smoke else (8, 4)
+
+    g = synthetic_ahg(n, avg_degree=8, seed=0)
+    store = StreamingStore(build_store(g, n_parts=4))
+    spec = make_gnn("graphsage", d_in=g.vertex_attr_table.shape[1],
+                    d_hidden=32, d_out=32, fanouts=fanouts)
+    tr = GNNTrainer(store, spec, lr=0.05, seed=0)
+    tr.train(3 if args.smoke else 20, batch_size=64)
+
+    traffic = Traffic.synthetic(256, mean_size=16.0, max_size=64, seed=1)
+    plan = compile_server(
+        G(store).V().sample(fanouts[0]).sample(fanouts[1]), tr, traffic,
+        max_buckets=3)
+    srv = EmbeddingServer(plan, cache_policy="importance",
+                          cache_capacity=n // 10)
+
+    # -- 1. steady-state traffic (zipf-hot over the importance head) -------
+    rng = np.random.default_rng(2)
+    order = np.argsort(-plan.importance)
+    trace = []
+    for s in rng.choice(traffic.sizes, size=10 if args.smoke else 60):
+        ranks = np.minimum(rng.zipf(1.3, size=int(s)) - 1, g.n - 1)
+        trace.append(order[ranks].astype(np.int32))
+    srv.serve_trace(trace)
+    print(f"[steady] hit_rate={srv.metrics.epoch_hit_rate:.2f} over "
+          f"{sum(map(len, trace))} ids")
+
+    # -- 2. stream a delta into the live server ----------------------------
+    src, dst = g.edge_list()
+    pairs = np.unique(np.stack([src, dst], 1), axis=0)
+    sel = rng.choice(len(pairs), size=max(n // 200, 8), replace=False)
+    n_add = max(n // 200, 8)
+    delta = (GraphDelta.delete_edges(pairs[sel, 0], pairs[sel, 1])
+             + GraphDelta.add_edges(rng.integers(0, g.n, n_add),
+                                    rng.integers(0, g.n, n_add)))
+    t0 = time.perf_counter()
+    refresh = srv.apply_delta(delta)
+    dt = (time.perf_counter() - t0) * 1e3
+    print(f"[delta]  {delta!r} applied in {dt:.1f}ms: re-froze "
+          f"{refresh.refreshed_vertices}/{g.n} sampling rows, invalidated "
+          f"{len(refresh.invalidated)} cached rows (hop radius "
+          f"{len(plan.fanouts) - 1})")
+
+    # -- 3. post-delta traffic: unchanged rows still cache-hit -------------
+    rows = srv.serve_trace(trace)
+    m = srv.metrics.snapshot()
+    print(f"[post]   hit_rate={m['epoch_hit_rate']:.2f} "
+          f"(epoch before the delta: "
+          f"{m['delta_epochs'][0]['hit_rate']:.2f}); cache dropped "
+          f"{m['cache_dropped']} rows")
+    srv.stop()
+
+    # -- byte-identity: a cold compile on the mutated store serves the same
+    tr2 = GNNTrainer(store, spec, lr=0.05, seed=0)
+    tr2.params, tr2.features = tr.params, tr.features
+    plan_cold = compile_server(
+        G(store).V().sample(fanouts[0]).sample(fanouts[1]), tr2, traffic,
+        max_buckets=3)
+    with EmbeddingServer(plan_cold, cache_policy="off",
+                         cache_capacity=1) as srv2:
+        rows_cold = srv2.serve_trace(trace)
+    assert all(np.array_equal(a, b) for a, b in zip(rows, rows_cold))
+    print("[check]  served rows byte-identical to a cold rebuild on the "
+          "mutated store")
+
+
+if __name__ == "__main__":
+    main()

@@ -26,6 +26,14 @@ Padding: the default ``pad="auto"`` defers to the query's own ``.pad()``
 policy when it carries one (bounded jit shape variants across the whole
 stream), falling back to per-batch power-of-two rounding otherwise; an
 explicit ``pad=`` list here overrides both (legacy per-seed-role buckets).
+
+Streaming updates: ``deltas={global_step: GraphDelta}`` interleaves graph
+mutations with the batch stream — each delta is committed to the (mutable)
+store immediately BEFORE its step's batch is drawn, so that batch and every
+later one sample the mutated graph.  This is how Evolving-GNN snapshots
+become incremental: one dataset over one StreamingStore, deltas at the
+snapshot boundaries, no store rebuilds.  Replay determinism holds only as
+far as the store's mutation schedule is replayed with it.
 """
 from __future__ import annotations
 
@@ -53,7 +61,8 @@ class Dataset:
                  seed: int = 0, prefetch: int = 2,
                  pad: Union[str, None, Sequence[int]] = "auto",
                  dedup: bool = True,
-                 executor: Optional[QueryExecutor] = None):
+                 executor: Optional[QueryExecutor] = None,
+                 deltas=None):
         self.store = store
         self.plan = plan
         self.epochs = int(epochs)
@@ -62,6 +71,16 @@ class Dataset:
         self.pad = pad
         self.dedup = dedup
         self.executor = executor
+        if plan.updates:
+            raise QueryValidationError(
+                "a .update() query cannot be iterated as a dataset (the "
+                "delta would re-apply every batch) — pass deltas={step: "
+                "delta} to .dataset() instead")
+        self.deltas = self._check_deltas(store, deltas)
+        # a delta commits exactly once per Dataset lifetime: re-iterating
+        # the stream replays batches, but a mutation cannot be un-applied —
+        # re-committing it would silently duplicate the added edges
+        self._deltas_applied: set = set()
         if plan.chunked:
             # explicit ids + batch: sequential fixed-size chunks over the ids
             n_chunks = -(-len(plan.ids) // plan.batch_size)
@@ -76,9 +95,39 @@ class Dataset:
                     "dataset(steps_per_epoch=...) is required unless the "
                     "query fixes V(ids=...).batch(n) chunks")
             self.steps_per_epoch = int(steps_per_epoch)
+        if self.deltas:
+            last = self.steps_per_epoch * self.epochs - 1
+            bad = sorted(s for s in self.deltas if s > last)
+            if bad:
+                raise QueryValidationError(
+                    f"delta steps {bad} are beyond the stream's last global "
+                    f"step {last} ({self.epochs} epoch(s) x "
+                    f"{self.steps_per_epoch} steps) — they would silently "
+                    "never apply")
 
     def __len__(self) -> int:
         return self.steps_per_epoch * self.epochs
+
+    @staticmethod
+    def _check_deltas(store, deltas):
+        """Normalise the interleaved delta stream to {global_step: [delta]}
+        (accepts a dict or an iterable of (step, delta) pairs)."""
+        if deltas is None:
+            return None
+        if not callable(getattr(store, "update", None)):
+            raise QueryValidationError(
+                "dataset deltas need a mutable store — wrap it: "
+                "repro.streaming.StreamingStore(store)")
+        pairs = (deltas.items() if isinstance(deltas, dict)
+                 else list(deltas))
+        out: dict = {}
+        for step, delta in pairs:
+            if not isinstance(step, (int, np.integer)) or step < 0:
+                raise QueryValidationError(
+                    f"delta step must be a global step index >= 0, "
+                    f"got {step!r}")
+            out.setdefault(int(step), []).append(delta)
+        return out
 
     # -- producers ---------------------------------------------------------
     def _epoch_executor(self, epoch: int) -> QueryExecutor:
@@ -98,6 +147,13 @@ class Dataset:
         for epoch in range(self.epochs):
             ex = self._epoch_executor(epoch)
             for step in range(self.steps_per_epoch):
+                if self.deltas:
+                    g_step = epoch * self.steps_per_epoch + step
+                    if (g_step in self.deltas
+                            and g_step not in self._deltas_applied):
+                        self._deltas_applied.add(g_step)
+                        for delta in self.deltas[g_step]:
+                            self.store.update(delta)
                 yield execute(self._step_plan(step), ex,
                               dedup=self.dedup, pad=self.pad)
 

@@ -140,18 +140,24 @@ def _filtered_edge_batch(ex: QueryExecutor, batch: int,
                          etype: Optional[int], vtype: Optional[int]
                          ) -> np.ndarray:
     """Edge TRAVERSE with a source-vertex-type filter (the .V().out_edges()
-    form); the plain .E() form goes through the sampler directly."""
+    form); the plain .E() form goes through the sampler directly.  Pools
+    come from the store's live edge set and are re-derived whenever the
+    store's mutation epoch moves (streaming stores)."""
     g = ex.store.graph
-    pools = ex._edge_pools.get((etype, vtype))
+    epoch = getattr(ex.store, "mutation_epoch", 0)
+    key = (etype, vtype, epoch)
+    pools = ex._edge_pools.get(key)
     if pools is None:
-        src, dst = g.edge_list()
-        keep = np.ones(g.m, bool)
-        if etype is not None:
-            keep &= g.edge_type == etype
+        # evict only pools from older mutation epochs — same-epoch pools
+        # for other (etype, vtype) filters stay warm
+        for k in [k for k in ex._edge_pools if k[2] != epoch]:
+            del ex._edge_pools[k]
+        src, dst = ex.store.edge_pool(etype)
         if vtype is not None:
-            keep &= g.vertex_type[src] == vtype
-        pools = (src[keep], dst[keep])
-        ex._edge_pools[(etype, vtype)] = pools
+            keep = g.vertex_type[src] == vtype
+            src, dst = src[keep], dst[keep]
+        pools = (src, dst)
+        ex._edge_pools[key] = pools
     src, dst = pools
     if len(src) == 0:
         raise QueryValidationError(
@@ -184,12 +190,18 @@ def _pad_for_role(pad: PadSpec, role: str, n_negatives: int
 def execute(plan: TraversalPlan, executor: QueryExecutor, *,
             dedup: bool = True, pad: PadSpec = "auto",
             to_device: bool = True) -> Minibatch:
-    """Run one compiled query: TRAVERSE → NEGATIVE → per-role build_plan."""
+    """Run one compiled query: UPDATE → TRAVERSE → NEGATIVE → build_plan."""
     executor.check_compatible(plan)
     if plan.chunked:
         raise QueryValidationError(
             "V(ids=...).batch(n) is a chunked query — iterate it with "
             ".dataset(), or drop .batch() for a single pass")
+    # mutation prefix: committed before the seed stage, so this very
+    # minibatch already samples the mutated graph
+    for spec in plan.updates:
+        executor.store.update(spec.delta)
+    if plan.source == "update":
+        return Minibatch(roles={}, plans={}, device={})
 
     roles: Dict[str, np.ndarray] = {}
     edges = negatives = walks = pair_mask = None

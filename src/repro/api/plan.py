@@ -20,7 +20,8 @@ from repro.core.sampling import HopSpec
 __all__ = [
     "QueryValidationError", "TraversalPlan", "compile_steps", "HopSpec",
     "SourceV", "SourceE", "Batch", "OutEdges", "Sample", "HopV", "Walk",
-    "Pairs", "Negative", "Joint", "Pad", "STRATEGIES",
+    "Pairs", "Negative", "Joint", "Pad", "Update", "UpdateSpec",
+    "STRATEGIES",
 ]
 
 STRATEGIES = ("uniform", "edge_weight", "importance")
@@ -102,6 +103,28 @@ class Pad:
     buckets: Tuple[Tuple[int, ...], ...]
 
 
+@dataclasses.dataclass(frozen=True)
+class Update:
+    """A graph-mutation step (.update): apply a
+    :class:`repro.streaming.GraphDelta` before the query's traverse."""
+
+    delta: object
+
+
+@dataclasses.dataclass(frozen=True)
+class UpdateSpec:
+    """The validated lowering of an :class:`Update` step: the delta, checked
+    against the bound store's schema at compile time, to be committed by the
+    executor before the seed stage runs."""
+
+    delta: object
+
+    @property
+    def n_mutations(self) -> int:
+        d = self.delta
+        return d.n_adds + d.n_deletes + d.n_weight_updates
+
+
 # ---------------------------------------------------------------------------
 # The validated logical plan
 # ---------------------------------------------------------------------------
@@ -126,9 +149,14 @@ class TraversalPlan:
     ladder index for the whole plan — the smallest variant every level fits
     (``resolve_pad``) — so a query compiles at most max-ladder-length
     distinct jit shapes, regardless of traffic.
+
+    ``updates`` are graph mutations (the ``.update()`` steps, compiled to
+    :class:`UpdateSpec`) the executor commits to the bound StreamingStore
+    before the seed stage; ``source == "update"`` marks an update-only
+    query (no traverse follows).
     """
 
-    source: str                                # "vertex" | "edge"
+    source: str                                # "vertex" | "edge" | "update"
     vtype: Optional[int] = None
     etype: Optional[int] = None
     ids: Optional[np.ndarray] = None
@@ -142,6 +170,7 @@ class TraversalPlan:
     neg_alpha: float = 0.75
     joint: bool = False
     pad_buckets: Optional[Tuple[Tuple[int, ...], ...]] = None
+    updates: Tuple[UpdateSpec, ...] = ()
 
     @property
     def fanouts(self) -> Tuple[int, ...]:
@@ -249,6 +278,31 @@ def compile_steps(store, steps: Sequence, *,
     g = store.graph
     if not steps:
         raise QueryValidationError("empty query: start with .V() or .E()")
+    # -- mutation prefix: .update(delta) steps precede the source ----------
+    updates: list = []
+    rest = list(steps)
+    while rest and isinstance(rest[0], Update):
+        updates.append(rest.pop(0))
+    if any(isinstance(s, Update) for s in rest):
+        raise QueryValidationError(
+            ".update(delta) steps must precede the source (.V/.E): a "
+            "mutation applies to the whole query, not mid-traversal")
+    update_specs: Tuple[UpdateSpec, ...] = ()
+    if updates:
+        if not callable(getattr(store, "update", None)):
+            raise QueryValidationError(
+                ".update(delta) needs a mutable store — wrap it: "
+                "repro.streaming.StreamingStore(store)")
+        for u in updates:
+            try:
+                u.delta.validate(g)
+            except Exception as e:          # schema mismatch -> query error
+                raise QueryValidationError(f"invalid .update() delta: {e}")
+        update_specs = tuple(UpdateSpec(delta=u.delta) for u in updates)
+    if not rest:
+        # update-only query: commit the deltas, produce nothing
+        return TraversalPlan(source="update", updates=update_specs)
+    steps = rest
     if not isinstance(steps[0], (SourceV, SourceE)):
         raise QueryValidationError(
             f"query must start with .V() or .E(), got .{type(steps[0]).__name__}")
@@ -431,4 +485,4 @@ def compile_steps(store, steps: Sequence, *,
         batch_size=batch_size, hops=hop_specs, strategy=strategy,
         walk_len=walk_len, walk_etype=walk_etype, window=window,
         n_negatives=n_negatives, neg_alpha=neg_alpha, joint=joint,
-        pad_buckets=pad_buckets)
+        pad_buckets=pad_buckets, updates=update_specs)

@@ -68,6 +68,18 @@ class Query:
                      edge_types=self.edge_types)
 
     # -- chain steps -------------------------------------------------------
+    def update(self, delta) -> "Query":
+        """Graph-mutation step: commit a
+        :class:`repro.streaming.GraphDelta` to the bound store (which must
+        be a :class:`repro.streaming.StreamingStore`) before the query's
+        traverse runs.  ``.update()`` steps must precede ``.V()/.E()``; a
+        chain of only ``.update()`` steps is a pure mutation query
+        (``.values()`` commits it and returns an empty minibatch).  For a
+        minibatch STREAM with interleaved mutations, use
+        ``.dataset(deltas={step: delta})`` instead — a dataset applies each
+        delta once at its step, not once per batch."""
+        return self._with(_plan.Update(delta=delta))
+
     def V(self, vtype: Optional[Union[int, str]] = None,
           ids: Optional[np.ndarray] = None) -> "Query":
         """Vertex source: TRAVERSE a batch (optionally typed), or pin
@@ -184,12 +196,15 @@ class Query:
     def dataset(self, steps_per_epoch: Optional[int] = None, *,
                 epochs: int = 1, seed: int = 0, prefetch: int = 2,
                 pad: PadSpec = "auto", dedup: bool = True,
-                executor: Optional[QueryExecutor] = None) -> Dataset:
-        """A minibatch stream (see :class:`repro.api.dataset.Dataset`)."""
+                executor: Optional[QueryExecutor] = None,
+                deltas=None) -> Dataset:
+        """A minibatch stream (see :class:`repro.api.dataset.Dataset`).
+        ``deltas={global_step: GraphDelta}`` interleaves graph mutations
+        with the stream (committed right before that step's batch)."""
         return Dataset(self.store, self.compile(),
                        steps_per_epoch=steps_per_epoch, epochs=epochs,
                        seed=seed, prefetch=prefetch, pad=pad, dedup=dedup,
-                       executor=executor)
+                       executor=executor, deltas=deltas)
 
 
 def G(store, *, vertex_types: Optional[Dict[str, int]] = None,

@@ -220,6 +220,33 @@ class CachePolicy:
         if self._lru is not None:
             self._lru.reset_stats()
 
+    # -- streaming-update hooks -------------------------------------------
+    def invalidate(self, keys) -> int:
+        """Drop ``keys`` from the cache (stale after a graph delta);
+        returns how many were actually cached.  Admission masks are
+        untouched — an invalidated important key re-enters on next put."""
+        dropped = 0
+        store = self._lru._d if self._lru is not None else self._d
+        for k in np.asarray(keys).reshape(-1).tolist():
+            if store.pop(int(k), None) is not None:
+                dropped += 1
+        return dropped
+
+    def rescore(self, scores: np.ndarray) -> None:
+        """Re-derive the importance admission set from updated scores
+        (Eq. 1 moves when degrees move); entries that fell out of the
+        top-``capacity`` are dropped.  No-op for other policies."""
+        if self.policy != "importance":
+            return
+        scores = np.asarray(scores, np.float64)
+        admit = np.zeros(len(scores), bool)
+        top = np.argpartition(-scores, min(self.capacity, len(scores)) - 1
+                              )[:self.capacity]
+        admit[top] = True
+        self._admit = admit
+        for k in [k for k in self._d if not admit[k]]:
+            del self._d[k]
+
 
 def random_cache_plan(g: AHG, rate: float, *, seed: int = 0) -> CachePlan:
     """Baseline for Fig 9: cache a random ``rate`` fraction of vertices."""

@@ -17,6 +17,7 @@ __all__ = [
     "synthetic_ahg",
     "synthetic_power_law_graph",
     "degree_arrays",
+    "filtered_adjacency",
     "k_hop_degrees",
 ]
 
@@ -139,6 +140,48 @@ class AHG:
             assert self.indices.min() >= 0 and self.indices.max() < self.n
         assert len(self.edge_type) == self.m == len(self.edge_weight) == len(self.edge_attr_index)
         assert len(self.vertex_type) == self.n == len(self.vertex_attr_index)
+
+
+def filtered_adjacency(g: AHG, direction: str = "out",
+                       vtype: Optional[int] = None,
+                       etype: Optional[int] = None,
+                       *, return_edge_ids: bool = False):
+    """CSR (indptr, indices) over all n rows keeping only edges that match a
+    hop's type constraints — the precomputation that turns typed metapath
+    hops into plain bucket-level gathers.
+
+    ``direction="in"`` builds the filter over the in-adjacency (edge types are
+    carried through the same stable argsort that builds it).
+
+    With ``return_edge_ids=True`` a third array gives, per kept CSR slot, the
+    GLOBAL edge id it came from — the key that lets per-edge state (weights,
+    dynamic logits) ride along a filtered signature.
+    """
+    if direction == "out":
+        indptr, indices = g.indptr, g.indices
+        eids = np.arange(len(indices), dtype=np.int64)
+    elif direction == "in":
+        indptr, indices = g.in_adjacency()
+        # in-edge at position p holds out-edge in_edge_order()[p]
+        eids = g.in_edge_order().astype(np.int64)
+    else:
+        raise ValueError(f"direction must be 'out' or 'in', got {direction!r}")
+    if vtype is None and etype is None:
+        if return_edge_ids:
+            return indptr, indices, eids
+        return indptr, indices
+    keep = np.ones(len(indices), bool)
+    if etype is not None:
+        keep &= g.edge_type[eids] == etype
+    if vtype is not None:
+        keep &= g.vertex_type[indices] == vtype
+    row = np.repeat(np.arange(g.n, dtype=np.int64), np.diff(indptr))
+    row_f = row[keep]
+    new_indptr = np.zeros(g.n + 1, np.int64)
+    np.cumsum(np.bincount(row_f, minlength=g.n), out=new_indptr[1:])
+    if return_edge_ids:
+        return new_indptr, indices[keep], eids[keep]
+    return new_indptr, indices[keep]
 
 
 # ---------------------------------------------------------------------------

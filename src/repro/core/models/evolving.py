@@ -6,11 +6,25 @@ snapshot's links are integrated with GraphSAGE to embed vertices, then a
 VAE + RNN head predicts the next snapshot's normal/burst information; the
 two run in an interleaved loop (paper's description, built on Kingma-Welling
 VAE + a GRU recurrence over timestamps).
+
+Two snapshot regimes:
+
+  * **materialised** (``EvolvingGNN(snapshots)``): every snapshot is a full
+    AHG and every timestamp rebuilds the storage stack from scratch — the
+    pre-streaming behaviour;
+  * **delta stream** (``EvolvingGNN.from_delta_stream(base, deltas)``): one
+    :class:`repro.streaming.StreamingStore` is built ONCE over the first
+    snapshot; each transition applies a :class:`GraphDelta` and compacts
+    (byte-equivalent to the from-scratch snapshot), so partition + shards
+    + caches survive across timestamps — the paper's continuously-mutating
+    production regime.  Loss curves match the rebuild path exactly: the
+    ``edge_cut`` partition is a pure vertex hash (edge-independent homes)
+    and compaction reproduces the snapshot CSR byte-for-byte.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -52,9 +66,17 @@ class EvolvingGNN:
     """Interleaved snapshot embedding + next-step prediction."""
 
     def __init__(self, snapshots: Sequence[AHG], cfg: EvolvingConfig = EvolvingConfig(),
-                 n_parts: int = 2, seed: int = 0):
-        assert len(snapshots) >= 2
+                 n_parts: int = 2, seed: int = 0, *, _deltas=None):
         self.snapshots = list(snapshots)
+        self._deltas = _deltas
+        self._stream_store = None
+        if _deltas is None:
+            assert len(snapshots) >= 2
+        else:
+            assert len(snapshots) == 1 and len(_deltas) >= 1
+            from repro.streaming import StreamingStore
+            self._stream_store = StreamingStore(
+                build_store(snapshots[0], n_parts))
         self.cfg = cfg
         self.rng = np.random.default_rng(seed)
         r = np.random.default_rng(seed)
@@ -81,9 +103,43 @@ class EvolvingGNN:
         self._trainers: List[GNNTrainer] = []
         self._step = jax.jit(self._step_impl)
 
+    # -- delta-stream constructor -----------------------------------------------
+    @classmethod
+    def from_delta_stream(cls, base: AHG, deltas: Sequence,
+                          cfg: EvolvingConfig = EvolvingConfig(),
+                          n_parts: int = 2, seed: int = 0) -> "EvolvingGNN":
+        """Train over a mutation stream instead of materialised snapshots:
+        snapshot ``t+1 = t + deltas[t]``, realised incrementally on ONE
+        shared :class:`~repro.streaming.StreamingStore` (apply + compact per
+        transition — no per-snapshot store rebuilds).  Produces the same
+        loss curve as ``EvolvingGNN(apply_delta_rebuild-chain)``."""
+        return cls([base], cfg, n_parts, seed, _deltas=list(deltas))
+
+    @property
+    def n_transitions(self) -> int:
+        if self._deltas is not None:
+            return len(self._deltas)
+        return len(self.snapshots) - 1
+
+    def _graph_at(self, t: int) -> AHG:
+        """Snapshot ``t`` — in delta-stream mode, advance the shared
+        streaming store to ``t`` (apply + compact), memoising each
+        compacted AHG so earlier snapshots stay readable."""
+        if self._deltas is not None:
+            while len(self.snapshots) <= t:
+                self._stream_store.apply(self._deltas[len(self.snapshots) - 1])
+                self.snapshots.append(self._stream_store.compact())
+        return self.snapshots[t]
+
     # -- per-snapshot GraphSAGE embeddings ---------------------------------------
     def _snapshot_embed(self, g: AHG, t: int) -> np.ndarray:
-        store = build_store(g, self.n_parts)
+        if self._stream_store is not None:
+            # the shared streaming store, already advanced (and compacted)
+            # to snapshot t: partition/shards/caches survive the transition
+            assert self._stream_store.graph is g
+            store = self._stream_store
+        else:
+            store = build_store(g, self.n_parts)
         spec = make_gnn("graphsage", d_in=max(g.vertex_attr_table.shape[1], 1),
                         d_hidden=self.cfg.d, d_out=self.cfg.d, fanouts=(5, 5))
         tr = GNNTrainer(store, spec, lr=5e-2, seed=self.seed + t)
@@ -134,16 +190,18 @@ class EvolvingGNN:
         n = self.snapshots[0].n
         h_state = jnp.zeros((n, self.cfg.d), jnp.float32)
         self.embeddings: List[np.ndarray] = []
-        for t in range(len(self.snapshots) - 1):
-            emb_t = self._snapshot_embed(self.snapshots[t], t)
+        for t in range(self.n_transitions):
+            # embed FIRST (in delta-stream mode the shared store currently
+            # sits at snapshot t), then advance to t+1 for the predictor
+            g_t = self._graph_at(t)
+            emb_t = self._snapshot_embed(g_t, t)
             self.embeddings.append(emb_t)
-            g_t = self.snapshots[t]
+            g_next = self._graph_at(t + 1)
             logdeg = np.log1p(g_t.out_degree()
                               + g_t.in_degree()).astype(np.float32)
-            normal, burst = split_normal_burst(self.snapshots[t],
-                                               self.snapshots[t + 1],
+            normal, burst = split_normal_burst(g_t, g_next,
                                                self.cfg.burst_quantile)
-            src, dst = self.snapshots[t + 1].edge_list()
+            src, dst = g_next.edge_list()
             burst_idx = np.where(burst)[0]
             normal_idx = np.where(~burst)[0]
             for _ in range(inner_steps):
@@ -192,3 +250,28 @@ def make_dynamic_snapshots(g: AHG, n_snapshots: int, *, seed: int = 0
         keep[order[: int(g.m * frac)]] = True
         snaps.append(g.subgraph_edges(keep))
     return snaps
+
+
+def snapshot_deltas(g: AHG, n_snapshots: int, *, seed: int = 0):
+    """The same dynamic sequence as :func:`make_dynamic_snapshots`, emitted
+    as a delta STREAM: ``(base, deltas)`` where ``base`` is the first
+    snapshot and ``deltas[t]`` adds the edges arriving between snapshot
+    ``t+1`` and ``t+2`` (same seed ⇒ the same edge multiset per snapshot).
+    Feed it to :meth:`EvolvingGNN.from_delta_stream` to train incrementally
+    over one StreamingStore instead of rebuilding a store per snapshot."""
+    from repro.streaming import GraphDelta
+    rng = np.random.default_rng(seed)
+    order = rng.permutation(g.m)
+    cuts = [int(g.m * (0.5 + 0.5 * t / n_snapshots))
+            for t in range(1, n_snapshots + 1)]
+    keep = np.zeros(g.m, bool)
+    keep[order[:cuts[0]]] = True
+    base = g.subgraph_edges(keep)
+    src, dst = g.edge_list()
+    deltas = []
+    for lo, hi in zip(cuts, cuts[1:]):
+        ids = order[lo:hi]
+        deltas.append(GraphDelta.add_edges(
+            src[ids], dst[ids], etype=g.edge_type[ids],
+            weight=g.edge_weight[ids], attr=g.edge_attr_index[ids]))
+    return base, deltas

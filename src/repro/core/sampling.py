@@ -27,13 +27,13 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .graph import AHG
+from .graph import filtered_adjacency  # noqa: F401 (re-export)
 from .storage import DistributedGraphStore
 
 __all__ = [
     "SampleBatch", "HopSpec", "TraverseSampler", "NeighborhoodSampler",
     "MetapathSampler", "WalkSampler", "NegativeSampler", "skipgram_pairs",
-    "SAMPLERS", "register_sampler",
+    "filtered_adjacency", "SAMPLERS", "register_sampler",
 ]
 
 
@@ -88,46 +88,39 @@ class HopSpec:
                 and self.etype is None and self.strategy is None)
 
 
-def filtered_adjacency(g: AHG, direction: str = "out",
-                       vtype: Optional[int] = None,
-                       etype: Optional[int] = None,
-                       *, return_edge_ids: bool = False):
-    """CSR (indptr, indices) over all n rows keeping only edges that match a
-    hop's type constraints — the precomputation that turns typed metapath
-    hops into plain bucket-level gathers.
+def _store_view(store, direction: str = "out", vtype: Optional[int] = None,
+                etype: Optional[int] = None):
+    """Resolve the adjacency view samplers gather from.  Every
+    ``DistributedGraphStore`` answers ``signature_view`` (a plain filtered
+    CSR for static stores, a delta-merged ``OverlayView`` for
+    ``repro.streaming.StreamingStore``); duck-typed stores without it get
+    an ad-hoc static view."""
+    getter = getattr(store, "signature_view", None)
+    if getter is not None:
+        return getter(direction, vtype, etype)
+    from .storage import StaticSignatureView
+    return StaticSignatureView(*filtered_adjacency(
+        store.graph, direction, vtype, etype, return_edge_ids=True))
 
-    ``direction="in"`` builds the filter over the in-adjacency (edge types are
-    carried through the same stable argsort that builds it).
 
-    With ``return_edge_ids=True`` a third array gives, per kept CSR slot, the
-    GLOBAL edge id it came from — the key that lets per-edge state (weights,
-    dynamic logits) ride along a filtered signature.
-    """
-    if direction == "out":
-        indptr, indices = g.indptr, g.indices
-        eids = np.arange(len(indices), dtype=np.int64)
-    elif direction == "in":
-        indptr, indices = g.in_adjacency()
-        # in-edge at position p holds out-edge in_edge_order()[p]
-        eids = g.in_edge_order().astype(np.int64)
-    else:
-        raise ValueError(f"direction must be 'out' or 'in', got {direction!r}")
-    if vtype is None and etype is None:
-        if return_edge_ids:
-            return indptr, indices, eids
-        return indptr, indices
-    keep = np.ones(len(indices), bool)
-    if etype is not None:
-        keep &= g.edge_type[eids] == etype
-    if vtype is not None:
-        keep &= g.vertex_type[indices] == vtype
-    row = np.repeat(np.arange(g.n, dtype=np.int64), np.diff(indptr))
-    row_f = row[keep]
-    new_indptr = np.zeros(g.n + 1, np.int64)
-    np.cumsum(np.bincount(row_f, minlength=g.n), out=new_indptr[1:])
-    if return_edge_ids:
-        return new_indptr, indices[keep], eids[keep]
-    return new_indptr, indices[keep]
+def _initial_logits(store) -> np.ndarray:
+    """A sampler's starting per-edge dynamic weights: the graph's edge
+    weights — read LIVE (overlay included) on a streaming store — and
+    registered with the store so later deltas can extend/replay them."""
+    live = getattr(store, "live_edge_weights", None)
+    w = live() if live is not None else store.graph.edge_weight
+    logits = np.asarray(w, np.float64).copy()
+    adopt = getattr(store, "adopt_logits", None)
+    if adopt is not None:
+        adopt(logits)
+    return logits
+
+
+def _synced_logits(store, logits: np.ndarray) -> np.ndarray:
+    """Bring dynamic logits up to date with a mutable store (extend over
+    added edges, replay weight-update deltas); static stores are a no-op."""
+    sync = getattr(store, "sync_logits", None)
+    return logits if sync is None else sync(logits)
 
 
 class _AliasTable:
@@ -194,10 +187,16 @@ class TraverseSampler:
             if len(pool) == 0:
                 pool = np.arange(g.n, dtype=np.int32)
             return pool[self.rng.integers(0, len(pool), size=batch_size)].astype(np.int32)
-        src, dst = g.edge_list()
-        if edge_type is not None:
-            keep = g.edge_type == edge_type
-            src, dst = src[keep], dst[keep]
+        # the store's pool excludes tombstoned edges and includes overlay
+        # additions on a streaming store (identical arrays on a static one)
+        pool_fn = getattr(self.store, "edge_pool", None)
+        if pool_fn is not None:
+            src, dst = pool_fn(edge_type)
+        else:
+            src, dst = g.edge_list()
+            if edge_type is not None:
+                keep = g.edge_type == edge_type
+                src, dst = src[keep], dst[keep]
         if len(src) == 0:
             return np.zeros((batch_size, 2), np.int32)
         idx = self.rng.integers(0, len(src), size=batch_size)
@@ -223,9 +222,8 @@ class NeighborhoodSampler:
         self.weighted = weighted
         self.vectorized = vectorized
         self.rng = np.random.default_rng(seed)
-        g = store.graph
-        # dynamic weights start at the graph's edge weights
-        self.edge_logits = g.edge_weight.astype(np.float64).copy()
+        # dynamic weights start at the graph's (live) edge weights
+        self.edge_logits = _initial_logits(store)
         self._dirty = True
         self._row_cum: Optional[np.ndarray] = None
         # cached-vertex membership mask for the vectorised read accounting
@@ -237,6 +235,7 @@ class NeighborhoodSampler:
         """Paper: "register a gradient function for the sampler". Positive
         grad ⇒ sample this edge more. Exponentiated-gradient update keeps
         weights positive; alias/cdf tables rebuilt lazily."""
+        self.edge_logits = _synced_logits(self.store, self.edge_logits)
         np.multiply.at(self.edge_logits, edge_ids, np.exp(lr * np.clip(grads, -8, 8)))
         self._dirty = True
 
@@ -269,19 +268,19 @@ class NeighborhoodSampler:
                    else self.rng.integers(0, d, size=fanout))
         return nbrs[idx].astype(np.int32), np.ones(fanout, np.float32)
 
-    def _sample_bucket(self, vs: np.ndarray, fanout: int, shard
+    def _sample_bucket(self, view, vs: np.ndarray, fanout: int, shard
                        ) -> Tuple[np.ndarray, np.ndarray]:
         """One vectorised pass over a whole request-flow bucket (uniform case).
 
         Replaces the per-vertex Python loop: reads are accounted per row
         exactly as the scalar path does (the cached/remote paths return the
         same rows — the replicated cache is a copy of the owner's row), then
-        the gather itself is the shared ``_uniform_rows`` pass.
+        the gather itself is the shared ``_gather_uniform`` pass over the
+        store's adjacency view (delta-merged on a streaming store).
         """
-        g = self.store.graph
         vs64 = vs.astype(np.int64)
         _account_shard_reads(shard, self._cached_mask, vs64)
-        return _uniform_rows(self.rng, g.indptr, g.indices, vs64, fanout)
+        return _gather_uniform(self.rng, view, vs64, fanout)
 
     def sample(self, seeds: np.ndarray, fanouts: Sequence[int],
                *, edge_type: Optional[int] = None,
@@ -296,6 +295,9 @@ class NeighborhoodSampler:
         """
         self._ensure_tables()
         seeds = np.asarray(seeds, np.int32)
+        view = _store_view(self.store)
+        if self.weighted:
+            self.edge_logits = _synced_logits(self.store, self.edge_logits)
         if via is None:
             via = self.store.partition.vertex_home[seeds]
         frontier, fvia = seeds, np.asarray(via, np.int32)
@@ -309,9 +311,19 @@ class NeighborhoodSampler:
             for s in np.unique(fvia):
                 shard = self.store.shards[int(s)]
                 rows = np.nonzero(fvia == s)[0]
-                if self.vectorized and not self.weighted:
+                if self.weighted and view.patched:
+                    # delta overlay present: the weighted draw reads the
+                    # merged rows (tombstoned edges excluded, added edges
+                    # included) through the vectorised candidate gather
+                    vs64 = frontier[rows].astype(np.int64)
+                    _account_shard_reads(shard, self._cached_mask, vs64)
+                    nxt[rows], msk[rows] = _gather_weighted(
+                        self.rng, view, vs64, fanout, self.edge_logits)
+                elif not self.weighted and (self.vectorized or view.patched):
+                    # (a patched view forces the bucket path: the scalar
+                    # shard rows do not see the delta overlay)
                     nxt[rows], msk[rows] = self._sample_bucket(
-                        frontier[rows], fanout, shard)
+                        view, frontier[rows], fanout, shard)
                 else:
                     # weighted sampling keeps the per-row path (per-edge
                     # dynamic weights are row-local distributions)
@@ -461,6 +473,138 @@ def _weighted_rows(rng: np.random.Generator, indptr: np.ndarray,
     return out, mask
 
 
+def _uniform_candidates(rng: np.random.Generator, cand: np.ndarray,
+                        cmask: np.ndarray, fanout: int
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+    """Uniform gather over left-packed candidate matrices (the delta-merged
+    rows of a streaming store): same replacement convention as
+    ``_uniform_rows`` — with replacement iff the fanout exceeds the live
+    degree."""
+    deg = cmask.sum(1).astype(np.int64)
+    out = np.zeros((len(deg), fanout), np.int32)
+    mask = np.zeros((len(deg), fanout), np.float32)
+    repl = np.nonzero((deg > 0) & (deg < fanout))[0]
+    if len(repl):
+        idx = (rng.random((len(repl), fanout))
+               * deg[repl][:, None]).astype(np.int64)
+        out[repl] = np.take_along_axis(cand[repl], idx, axis=1)
+        mask[repl] = 1.0
+    worepl = np.nonzero(deg >= fanout)[0]
+    if len(worepl):
+        keys = rng.random((len(worepl), cand.shape[1]))
+        keys[~cmask[worepl]] = -1.0          # padding never outranks a draw
+        sel = np.argsort(-keys, axis=1)[:, :fanout]
+        out[worepl] = np.take_along_axis(cand[worepl], sel, axis=1)
+        mask[worepl] = 1.0
+    return out, mask
+
+
+def _importance_candidates(rng: np.random.Generator, cand: np.ndarray,
+                           cmask: np.ndarray, fanout: int, imp: np.ndarray
+                           ) -> Tuple[np.ndarray, np.ndarray]:
+    """``_importance_rows`` (Gumbel-top-k without replacement, keep-all
+    when the degree fits) over candidate matrices."""
+    deg = cmask.sum(1).astype(np.int64)
+    out = np.zeros((len(deg), fanout), np.int32)
+    mask = np.zeros((len(deg), fanout), np.float32)
+    small = np.nonzero((deg > 0) & (deg <= fanout))[0]
+    if len(small):
+        col = np.arange(fanout, dtype=np.int64)
+        take = np.minimum(col[None, :], deg[small][:, None] - 1)
+        valid = col[None, :] < deg[small][:, None]
+        out[small] = np.where(valid,
+                              np.take_along_axis(cand[small], take, axis=1),
+                              0)
+        mask[small] = valid.astype(np.float32)
+    big = np.nonzero(deg > fanout)[0]
+    if len(big):
+        keys = (np.log(np.maximum(imp[cand[big]], 1e-300))
+                + rng.gumbel(size=(len(big), cand.shape[1])))
+        keys[~cmask[big]] = -np.inf
+        sel = np.argsort(-keys, axis=1)[:, :fanout]
+        out[big] = np.take_along_axis(cand[big], sel, axis=1)
+        mask[big] = 1.0
+    return out, mask
+
+
+def _weighted_candidates(rng: np.random.Generator, cand: np.ndarray,
+                         cmask: np.ndarray, w: np.ndarray, fanout: int
+                         ) -> Tuple[np.ndarray, np.ndarray]:
+    """``_weighted_rows`` (inverse-CDF with replacement / Gumbel-top-k
+    without) over candidate matrices; ``w`` is aligned with ``cand`` and
+    zeroed on padding."""
+    deg = cmask.sum(1).astype(np.int64)
+    out = np.zeros((len(deg), fanout), np.int32)
+    mask = np.zeros((len(deg), fanout), np.float32)
+    w = np.where(cmask, np.maximum(w, 1e-300), 0.0)
+    repl = np.nonzero((deg > 0) & (deg < fanout))[0]
+    if len(repl):
+        cum = np.cumsum(w[repl], axis=1)
+        u = rng.random((len(repl), fanout)) * cum[:, -1:]
+        sel = np.minimum((cum[:, None, :] <= u[:, :, None]).sum(-1),
+                         deg[repl][:, None] - 1)
+        out[repl] = np.take_along_axis(cand[repl], sel, axis=1)
+        mask[repl] = 1.0
+    worepl = np.nonzero(deg >= fanout)[0]
+    if len(worepl):
+        keys = (np.log(np.maximum(w[worepl], 1e-300))
+                + rng.gumbel(size=(len(worepl), cand.shape[1])))
+        keys[~cmask[worepl]] = -np.inf
+        sel = np.argsort(-keys, axis=1)[:, :fanout]
+        out[worepl] = np.take_along_axis(cand[worepl], sel, axis=1)
+        mask[worepl] = 1.0
+    return out, mask
+
+
+def _split_gather(view, rng, vs, fanout, fast, patched
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+    """Run ``fast(rows)`` (plain CSR gather) on rows the delta overlay never
+    touched and ``patched(cand, cmask, ceids)`` on merged candidate
+    matrices for the touched rest — the bucket-gather merge point of the
+    streaming read path."""
+    vs64 = np.asarray(vs, np.int64)
+    if not getattr(view, "patched", False):
+        return fast(vs64)
+    t = view.touched[vs64]
+    if not t.any():
+        return fast(vs64)
+    out = np.zeros((len(vs64), fanout), np.int32)
+    msk = np.zeros((len(vs64), fanout), np.float32)
+    u_rows = np.nonzero(~t)[0]
+    if len(u_rows):
+        out[u_rows], msk[u_rows] = fast(vs64[u_rows])
+    t_rows = np.nonzero(t)[0]
+    cand, cmask, ceids = view.candidates(vs64[t_rows])
+    out[t_rows], msk[t_rows] = patched(cand, cmask, ceids)
+    return out, msk
+
+
+def _gather_uniform(rng, view, vs, fanout):
+    return _split_gather(
+        view, rng, vs, fanout,
+        lambda rows: _uniform_rows(rng, view.indptr, view.indices, rows,
+                                   fanout),
+        lambda cand, cmask, _: _uniform_candidates(rng, cand, cmask, fanout))
+
+
+def _gather_importance(rng, view, vs, fanout, imp):
+    return _split_gather(
+        view, rng, vs, fanout,
+        lambda rows: _importance_rows(rng, view.indptr, view.indices, rows,
+                                      fanout, imp),
+        lambda cand, cmask, _: _importance_candidates(rng, cand, cmask,
+                                                      fanout, imp))
+
+
+def _gather_weighted(rng, view, vs, fanout, logits):
+    return _split_gather(
+        view, rng, vs, fanout,
+        lambda rows: _weighted_rows(rng, view.indptr, view.indices,
+                                    logits[view.eids], rows, fanout),
+        lambda cand, cmask, ceids: _weighted_candidates(
+            rng, cand, cmask, logits[ceids], fanout))
+
+
 class MetapathSampler:
     """Vectorised typed multi-hop traversal — the sampler behind the GQL
     ``.out_vertices()/.in_vertices()`` metapath steps.
@@ -490,34 +634,27 @@ class MetapathSampler:
         self.importance = (None if importance is None
                            else np.asarray(importance, np.float64))
         self.edge_logits = (edge_logits if edge_logits is not None
-                            else store.graph.edge_weight.astype(np.float64
-                                                                ).copy())
-        self._csr: Dict[Tuple, Tuple[np.ndarray, np.ndarray, np.ndarray]] = {}
+                            else _initial_logits(store))
         self._cached_mask = _cached_vertex_mask(store)
 
     def update_weights(self, edge_ids: np.ndarray, grads: np.ndarray,
                        lr: float = 0.1) -> None:
         """Same exponentiated-gradient update as ``NeighborhoodSampler``
         (in place, so a shared ``edge_logits`` array stays shared)."""
+        self.edge_logits = _synced_logits(self.store, self.edge_logits)
         np.multiply.at(self.edge_logits, edge_ids,
                        np.exp(lr * np.clip(grads, -8, 8)))
-
-    def _adj(self, direction: str, vtype: Optional[int], etype: Optional[int]
-             ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-        """Per-signature filtered CSR + the GLOBAL edge id of each slot."""
-        key = (direction, vtype, etype)
-        hit = self._csr.get(key)
-        if hit is None:
-            hit = filtered_adjacency(self.store.graph, direction, vtype,
-                                     etype, return_edge_ids=True)
-            self._csr[key] = hit
-        return hit
 
     def sample(self, seeds: np.ndarray, hops: Sequence,
                *, via: Optional[np.ndarray] = None) -> SampleBatch:
         """Expand ``seeds`` through a chain of :class:`HopSpec` (ints are
         promoted to plain uniform out-hops); same aligned SampleBatch layout
-        and ``via`` routing semantics as ``NeighborhoodSampler.sample``."""
+        and ``via`` routing semantics as ``NeighborhoodSampler.sample``.
+
+        Adjacency comes from the STORE's per-signature views (cached there,
+        invalidated per touched signature on a streaming store), so typed
+        hops stay plain bucket gathers with or without a delta overlay.
+        """
         seeds = np.asarray(seeds, np.int32)
         specs = [h if isinstance(h, HopSpec) else HopSpec(fanout=int(h))
                  for h in hops]
@@ -527,23 +664,24 @@ class MetapathSampler:
         hop_out: List[np.ndarray] = []
         masks: List[np.ndarray] = []
         for hop in specs:
-            indptr, indices, eids = self._adj(hop.direction, hop.vtype,
-                                              hop.etype)
+            view = _store_view(self.store, hop.direction, hop.vtype,
+                               hop.etype)
             _account_reads(self.store, self._cached_mask, frontier, fvia)
             if hop.strategy == "importance":
                 imp = self.importance
                 if imp is None:
                     imp = np.ones(self.store.graph.n)
-                nxt, msk = _importance_rows(self.rng, indptr, indices,
-                                            frontier, hop.fanout, imp)
+                nxt, msk = _gather_importance(self.rng, view, frontier,
+                                              hop.fanout, imp)
             elif hop.strategy == "edge_weight":
                 # gather the CURRENT logits per call (dynamic updates land)
-                nxt, msk = _weighted_rows(self.rng, indptr, indices,
-                                          self.edge_logits[eids],
-                                          frontier, hop.fanout)
+                self.edge_logits = _synced_logits(self.store,
+                                                  self.edge_logits)
+                nxt, msk = _gather_weighted(self.rng, view, frontier,
+                                            hop.fanout, self.edge_logits)
             else:
-                nxt, msk = _uniform_rows(self.rng, indptr, indices,
-                                         frontier, hop.fanout)
+                nxt, msk = _gather_uniform(self.rng, view, frontier,
+                                           hop.fanout)
             hop_out.append(nxt.reshape(-1))
             masks.append(msk.reshape(-1))
             frontier = nxt.reshape(-1)
@@ -564,15 +702,7 @@ class WalkSampler:
     def __init__(self, store: DistributedGraphStore, *, seed: int = 0):
         self.store = store
         self.rng = np.random.default_rng(seed)
-        self._csr: Dict[Optional[int], Tuple[np.ndarray, np.ndarray]] = {}
         self._cached_mask = _cached_vertex_mask(store)
-
-    def _adj(self, etype: Optional[int]) -> Tuple[np.ndarray, np.ndarray]:
-        hit = self._csr.get(etype)
-        if hit is None:
-            hit = filtered_adjacency(self.store.graph, "out", None, etype)
-            self._csr[etype] = hit
-        return hit
 
     def walk(self, starts: np.ndarray, length: int, *,
              etype: Optional[int] = None,
@@ -584,9 +714,17 @@ class WalkSampler:
         the number of REAL positions before the walker froze at a dead end
         (``length`` when it never froze) — positions at/after a walker's
         length are copies of its dead-end vertex.
+
+        Adjacency comes from the store's per-signature view; on a streaming
+        store a walker stepping off a touched row draws from the merged
+        (tombstone-excluded, overlay-included) candidates, and a row whose
+        last live out-edge was deleted freezes exactly like a native dead
+        end.
         """
         starts = np.asarray(starts, np.int32)
-        indptr, indices = self._adj(etype)
+        view = _store_view(self.store, "out", None, etype)
+        indptr, indices = view.indptr, view.indices
+        patched = getattr(view, "patched", False)
         if via is None:
             via = self.store.partition.vertex_home[starts]
         via = np.asarray(via, np.int32)
@@ -604,11 +742,25 @@ class WalkSampler:
                 _account_reads(self.store, self._cached_mask,
                                cur[active], via[active])
             lo = indptr[cur]
-            deg = indptr[cur + 1] - lo
+            deg = (view.live_deg[cur] if patched
+                   else indptr[cur + 1] - lo)
             newly_frozen = active & (deg == 0)
             lengths[newly_frozen] = t
             frozen |= newly_frozen
-            if last >= 0:
+            if patched:
+                r = self.rng.random(len(cur))
+                idx = np.minimum((r * deg).astype(np.int64),
+                                 np.maximum(deg - 1, 0))
+                nxt = cur.copy()
+                tmask = view.touched[cur] & (deg > 0)
+                umask = ~view.touched[cur] & (deg > 0)
+                if umask.any():
+                    nxt[umask] = indices[lo[umask] + idx[umask]]
+                if tmask.any():
+                    cand, _, _ = view.candidates(cur[tmask])
+                    nxt[tmask] = cand[np.arange(int(tmask.sum())),
+                                      idx[tmask]]
+            elif last >= 0:
                 r = self.rng.random(len(cur))
                 idx = np.minimum((r * deg).astype(np.int64),
                                  np.maximum(deg - 1, 0))
@@ -617,7 +769,7 @@ class WalkSampler:
             else:
                 nxt = cur                      # empty (filtered) graph
             walks[:, t] = nxt
-            cur = nxt.astype(np.int64)
+            cur = np.asarray(nxt, np.int64)
         if return_lengths:
             return walks, lengths
         return walks

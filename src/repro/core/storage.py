@@ -23,10 +23,29 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .cache import CachePlan, LRUCache, plan_cache
-from .graph import AHG
+from .graph import AHG, filtered_adjacency
 from .partition import Partition, partition_graph
 
-__all__ = ["GraphShard", "DistributedGraphStore", "build_store"]
+__all__ = ["GraphShard", "DistributedGraphStore", "StaticSignatureView",
+           "build_store"]
+
+
+@dataclasses.dataclass
+class StaticSignatureView:
+    """One ``(direction, vtype, etype)`` filtered CSR of a static store.
+
+    The adjacency surface every sampler reads through
+    (``store.signature_view(...)``): a plain filtered CSR plus the global
+    edge id of each slot.  ``patched=False`` means there is no delta
+    overlay to merge — samplers take their vectorised fast paths untouched.
+    A :class:`~repro.streaming.store.StreamingStore` answers the same call
+    with an :class:`~repro.streaming.store.OverlayView` instead.
+    """
+
+    indptr: np.ndarray
+    indices: np.ndarray
+    eids: np.ndarray
+    patched: bool = False
 
 
 @dataclasses.dataclass
@@ -118,11 +137,17 @@ class GraphShard:
 class DistributedGraphStore:
     """The storage layer: partition + shards + caches + global stats."""
 
+    # static stores never mutate; StreamingStore bumps this per delta (the
+    # key executor-side pool caches use to notice the graph moved)
+    mutation_epoch = 0
+
     def __init__(self, g: AHG, partition: Partition, cache_plan: CachePlan,
                  attr_cache_capacity: int = 4096):
         self.graph = g
         self.partition = partition
         self.cache_plan = cache_plan
+        self._sig_views: Dict[Tuple, StaticSignatureView] = {}
+        self._edge_pools: Dict[Optional[int], Tuple] = {}
         # Replicated neighbor cache: same dict object shared by all shards —
         # mirrors the paper's "cache on each partition where v exists" without
         # paying n_parts× host RAM in this single-host simulation. The cost
@@ -141,6 +166,36 @@ class DistributedGraphStore:
     def remote_neighbors(self, v: int) -> np.ndarray:
         """Fetch from the owning shard (the 'RPC')."""
         return self.graph.neighbors(v)
+
+    # -- the sampler-facing adjacency surface -----------------------------
+    def signature_view(self, direction: str = "out",
+                       vtype: Optional[int] = None,
+                       etype: Optional[int] = None) -> StaticSignatureView:
+        """The filtered CSR samplers gather from, cached per signature.
+        Subclasses with mutable edges (``repro.streaming.StreamingStore``)
+        return delta-merged views from the same call."""
+        key = (direction, vtype, etype)
+        hit = self._sig_views.get(key)
+        if hit is None:
+            hit = StaticSignatureView(*filtered_adjacency(
+                self.graph, direction, vtype, etype, return_edge_ids=True))
+            self._sig_views[key] = hit
+        return hit
+
+    def edge_pool(self, etype: Optional[int] = None
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+        """(src, dst) arrays of the edges a TRAVERSE edge batch draws from
+        (optionally restricted to one edge type).  StreamingStore overrides
+        this with the live (tombstone-excluded, overlay-included) pool."""
+        hit = self._edge_pools.get(etype)
+        if hit is None:
+            src, dst = self.graph.edge_list()
+            if etype is not None:
+                keep = self.graph.edge_type == etype
+                src, dst = src[keep], dst[keep]
+            hit = (src, dst)
+            self._edge_pools[etype] = hit
+        return hit
 
     def shard_of(self, v: int) -> int:
         return int(self.partition.vertex_home[v])

@@ -26,11 +26,13 @@ Quickstart::
         rows = req.result()          # [len(vertex_ids), d_out]
         print(srv.metrics.snapshot())
 """
-from .plan import FrozenNeighborSampler, ServerPlan, compile_server  # noqa: F401
+from .plan import (DeltaRefresh, FrozenNeighborSampler, ServerPlan,  # noqa: F401
+                   compile_server)
 from .server import EmbeddingServer, ServeRequest, ServerMetrics  # noqa: F401
 from .traffic import Traffic, choose_buckets  # noqa: F401
 
 __all__ = [
     "Traffic", "choose_buckets", "FrozenNeighborSampler", "ServerPlan",
-    "compile_server", "EmbeddingServer", "ServeRequest", "ServerMetrics",
+    "DeltaRefresh", "compile_server", "EmbeddingServer", "ServeRequest",
+    "ServerMetrics",
 ]

@@ -37,39 +37,145 @@ from repro.api import QueryExecutor, QueryValidationError
 from repro.api import plan as qplan
 from repro.core import cache as cache_mod
 from repro.core.sampling import (SampleBatch, _account_reads,
-                                 _cached_vertex_mask, _uniform_rows)
+                                 _cached_vertex_mask, _store_view)
 from repro.core.gnn import GNNSpec, gnn_apply
 
 from .traffic import Traffic, choose_buckets
 
-__all__ = ["FrozenNeighborSampler", "ServerPlan", "compile_server"]
+__all__ = ["FrozenNeighborSampler", "ServerPlan", "DeltaRefresh",
+           "compile_server"]
+
+
+# -- counter-based per-row uniforms ------------------------------------------
+# The frozen tables are drawn from a KEYED hash stream, u = h(seed, fanout,
+# vertex, slot), instead of one shared np.random stream.  Each row's draw is
+# then independent of every other row's degree, which is what makes the
+# streaming refresh exact: re-freezing ONLY the vertices a delta touched
+# reproduces, byte-for-byte, the table a cold compile on the mutated store
+# would draw (`slot` indexes the row's canonical neighbor order — base CSR
+# for untouched rows, the dst-sorted merged candidates for touched ones,
+# identical by construction to the compacted CSR row).
+
+_MASK64 = (1 << 64) - 1
+
+
+def _hash_u01(seed: int, fanout: int, rows: np.ndarray, n_cols: int
+              ) -> np.ndarray:
+    """[len(rows), n_cols] float64 in [0,1): splitmix64-finalised hash of
+    (seed, fanout, row, col)."""
+    salt = np.uint64((seed * 0x94D049BB133111EB
+                      + fanout * 0xD6E8FEB86659FD93) & _MASK64)
+    r = np.asarray(rows, np.uint64)[:, None]
+    c = np.arange(n_cols, dtype=np.uint64)[None, :]
+    x = (r * np.uint64(0x9E3779B97F4A7C15)) \
+        ^ (c * np.uint64(0xBF58476D1CE4E5B9)) ^ salt
+    x ^= x >> np.uint64(30)
+    x *= np.uint64(0xFF51AFD7ED558CCD)
+    x ^= x >> np.uint64(27)
+    x *= np.uint64(0xC4CEB9FE1A85EC53)
+    x ^= x >> np.uint64(31)
+    return (x >> np.uint64(11)).astype(np.float64) * (2.0 ** -53)
+
+
+def _freeze_rows(view, fanout: int, seed: int, rows: np.ndarray
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+    """Draw the frozen table rows for ``rows`` (GraphSAGE replacement
+    convention: with replacement iff fanout exceeds the live degree)."""
+    rows = np.asarray(rows, np.int64)
+    out = np.zeros((len(rows), fanout), np.int32)
+    msk = np.zeros((len(rows), fanout), np.float32)
+    patched = getattr(view, "patched", False)
+    touched = (view.touched[rows] if patched
+               else np.zeros(len(rows), bool))
+
+    u_idx = np.nonzero(~touched)[0]
+    if len(u_idx):
+        vs = rows[u_idx]
+        lo = view.indptr[vs]
+        deg = view.indptr[vs + 1] - lo
+        repl = np.nonzero((deg > 0) & (deg < fanout))[0]
+        if len(repl):
+            u = _hash_u01(seed, fanout, vs[repl], fanout)
+            idx = np.minimum((u * deg[repl][:, None]).astype(np.int64),
+                             deg[repl][:, None] - 1)
+            out[u_idx[repl]] = view.indices[lo[repl][:, None] + idx]
+            msk[u_idx[repl]] = 1.0
+        worepl = np.nonzero(deg >= fanout)[0]
+        for d in np.unique(deg[worepl]):
+            sel_rows = worepl[deg[worepl] == d]
+            keys = _hash_u01(seed, fanout, vs[sel_rows], int(d))
+            sel = np.argsort(keys, axis=1, kind="stable")[:, :fanout]
+            out[u_idx[sel_rows]] = view.indices[
+                lo[sel_rows][:, None] + sel]
+            msk[u_idx[sel_rows]] = 1.0
+
+    t_idx = np.nonzero(touched)[0]
+    if len(t_idx):
+        vs = rows[t_idx]
+        cand, cmask, _ = view.candidates(vs)
+        deg = cmask.sum(1).astype(np.int64)
+        repl = np.nonzero((deg > 0) & (deg < fanout))[0]
+        if len(repl):
+            u = _hash_u01(seed, fanout, vs[repl], fanout)
+            idx = np.minimum((u * deg[repl][:, None]).astype(np.int64),
+                             deg[repl][:, None] - 1)
+            out[t_idx[repl]] = np.take_along_axis(cand[repl], idx, axis=1)
+            msk[t_idx[repl]] = 1.0
+        worepl = np.nonzero(deg >= fanout)[0]
+        if len(worepl):
+            keys = _hash_u01(seed, fanout, vs[worepl], cand.shape[1])
+            keys[~cmask[worepl]] = 2.0       # hash values live in [0,1)
+            sel = np.argsort(keys, axis=1, kind="stable")[:, :fanout]
+            out[t_idx[worepl]] = np.take_along_axis(cand[worepl], sel,
+                                                    axis=1)
+            msk[t_idx[worepl]] = 1.0
+    return out, msk
 
 
 class FrozenNeighborSampler:
     """Sampling decisions fixed at compile time: per fanout, ONE presampled
-    neighbor set per vertex (``[n, fanout]`` tables + masks, drawn with the
-    same uniform-gather machinery the live samplers use).
+    neighbor set per vertex (``[n, fanout]`` tables + masks).
 
     Drop-in for ``NeighborhoodSampler`` in ``operators.build_plan``: the
     same aligned ``SampleBatch`` layout, the same request-flow read
     accounting against the storage layer (the tables ARE the §3.2 replicated
     neighbor cache, so the reads they answer are classified through the
     local/cache/remote access path like any other sampler's).
+
+    Rows are drawn from a per-(vertex, slot) keyed hash stream (see
+    ``_freeze_rows``), so :meth:`refreeze` of just the vertices a delta
+    touched is byte-identical to a cold compile on the mutated store — the
+    live-refresh contract of ``ServerPlan.apply_delta``.
     """
 
     def __init__(self, store, fanouts: Sequence[int], *, seed: int = 0):
         self.store = store
         self.seed = seed
         g = store.graph
-        rng = np.random.default_rng(seed)
         all_v = np.arange(g.n, dtype=np.int64)
         self.tables: Dict[int, np.ndarray] = {}
         self.masks: Dict[int, np.ndarray] = {}
+        view = _store_view(store)
         for f in sorted(set(int(f) for f in fanouts)):
-            nbrs, msk = _uniform_rows(rng, g.indptr, g.indices, all_v, f)
+            nbrs, msk = _freeze_rows(view, f, seed, all_v)
             self.tables[f] = nbrs
             self.masks[f] = msk
         self._cached_mask = _cached_vertex_mask(store)
+
+    def refreeze(self, rows: np.ndarray) -> int:
+        """Re-draw the frozen rows of ``rows`` from the store's CURRENT
+        (delta-merged) adjacency; returns the number of table entries
+        refreshed — ``len(rows) × n_fanouts``, the counter the sparse-delta
+        acceptance bound checks against the full table size."""
+        rows = np.asarray(rows, np.int64)
+        if not len(rows):
+            return 0
+        view = _store_view(self.store)
+        for f in self.tables:
+            tbl, msk = _freeze_rows(view, f, self.seed, rows)
+            self.tables[f][rows] = tbl
+            self.masks[f][rows] = msk
+        return len(rows) * len(self.tables)
 
     def sample(self, seeds: np.ndarray, fanouts: Sequence,
                *, via: Optional[np.ndarray] = None) -> SampleBatch:
@@ -97,6 +203,18 @@ class FrozenNeighborSampler:
             fs.append(f)
         return SampleBatch(seeds=seeds, neighbors=hops, masks=masks,
                            fanouts=tuple(fs))
+
+
+@dataclasses.dataclass(frozen=True)
+class DeltaRefresh:
+    """What one ``ServerPlan.apply_delta`` actually refreshed — the receipt
+    the server's metrics (and the paper's build-time comparison) consume."""
+
+    refreshed_vertices: int        # frozen rows re-drawn (touched out-rows)
+    refreshed_entries: int         # rows × distinct fanout tables
+    invalidated: np.ndarray        # vertex ids within the plan's hop radius
+    n_structural: int
+    n_weight_updates: int
 
 
 def _model_parts(model) -> Tuple[GNNSpec, Dict, jnp.ndarray]:
@@ -207,6 +325,48 @@ class ServerPlan:
         server's recompile counter keys on)."""
         return tuple(int(lv.shape[0]) for lv in device_plan["levels"])
 
+    # -- streaming refresh (the live-update contract) ----------------------
+    def apply_delta(self, delta) -> DeltaRefresh:
+        """Commit a :class:`repro.streaming.GraphDelta` to the plan's store
+        and refresh ONLY what it touched:
+
+          * frozen sampling tables are re-drawn for the vertices whose
+            out-row structurally changed (keyed-hash draws make the result
+            byte-identical to a cold ``compile_server`` on the mutated
+            store — see :func:`_freeze_rows`);
+          * Eq. 1 importance is recomputed incrementally for the delta's
+            endpoint vertices from the store's live degree counters;
+          * the returned ``invalidated`` set is every vertex within the
+            plan's hop radius (``k_max - 1`` reverse hops — a frozen row is
+            read for every vertex at levels ``0..k_max-1`` of a seed's
+            expansion) of a touched vertex: exactly the cached embedding
+            rows whose value may have moved.
+
+        The plan's store must be a ``repro.streaming.StreamingStore``.
+        """
+        store = self.store
+        if not callable(getattr(store, "update", None)):
+            raise QueryValidationError(
+                "ServerPlan.apply_delta needs a mutable store — compile "
+                "the server over repro.streaming.StreamingStore(store)")
+        applied = store.update(delta)
+        touched = applied.touched_out
+        refreshed = self.frozen.refreeze(touched)
+        if len(applied.endpoints):
+            self.importance[applied.endpoints] = store.importance_k1(
+                applied.endpoints)
+        if len(touched):
+            invalidated = store.reverse_frontier(
+                touched, depth=len(self.fanouts) - 1)
+        else:
+            invalidated = np.zeros(0, np.int32)
+        return DeltaRefresh(
+            refreshed_vertices=int(len(touched)),
+            refreshed_entries=int(refreshed),
+            invalidated=invalidated,
+            n_structural=applied.n_structural,
+            n_weight_updates=applied.n_weight_updates)
+
 
 def compile_server(query, model, traffic, *, max_buckets: int = 4,
                    seed: int = 0,
@@ -274,7 +434,11 @@ def compile_server(query, model, traffic, *, max_buckets: int = 4,
     store = query.store
     buckets = choose_buckets(traffic.sizes, max_buckets)
     frozen = FrozenNeighborSampler(store, tplan.fanouts, seed=seed)
-    imp = cache_mod.importance(store.graph, k=1)
+    # Eq. 1 from the live degree counters on a streaming store (identical
+    # to the from-graph recompute; stays refreshable via apply_delta)
+    imp_fn = getattr(store, "importance_k1", None)
+    imp = (imp_fn() if imp_fn is not None
+           else cache_mod.importance(store.graph, k=1))
     template = dataclasses.replace(tplan, batch_size=None)
     plan = ServerPlan(store=store, template=template, spec=spec,
                       params=params, features=features, buckets=buckets,

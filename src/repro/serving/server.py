@@ -78,9 +78,15 @@ class ServerMetrics:
     """Server-side counters + latency percentiles (thread-safe snapshots
     are taken under the server lock).  Latencies keep the most recent
     ``LATENCY_WINDOW`` completions — percentiles over a sliding window, so
-    a long-lived server never grows without bound."""
+    a long-lived server never grows without bound.
+
+    Streaming updates split time into **delta epochs**: hit/miss counters
+    accumulate per epoch and are rolled into ``delta_epochs`` when a delta
+    is applied, so a BENCH run can attribute a hit-rate drop to graph
+    updates (invalidation) rather than to the cache policy."""
 
     LATENCY_WINDOW = 4096
+    DELTA_WINDOW = 4096           # delta-epoch records kept (sliding)
 
     def __init__(self):
         self.requests = 0
@@ -93,6 +99,45 @@ class ServerMetrics:
         self.bucket_steps: Dict[int, int] = collections.Counter()
         self.latencies_ms: "collections.deque[float]" = collections.deque(
             maxlen=self.LATENCY_WINDOW)
+        # streaming-update accounting
+        self.deltas_applied = 0
+        self.refreshed_vertices = 0      # frozen rows re-drawn, cumulative
+        self.invalidated_rows = 0        # hop-radius invalidation set sizes
+        self.cache_dropped = 0           # rows actually evicted by deltas
+        self.epoch_hits = 0
+        self.epoch_misses = 0
+        self.delta_epochs: "collections.deque[Dict]" = collections.deque(
+            maxlen=self.DELTA_WINDOW)
+
+    def note_hit(self) -> None:
+        self.cache_hits += 1
+        self.epoch_hits += 1
+
+    def note_miss(self) -> None:
+        self.cache_misses += 1
+        self.epoch_misses += 1
+
+    def roll_delta_epoch(self, refresh, dropped: int) -> None:
+        """Close the current delta epoch: record its hit rate + what the
+        delta refreshed, then reset the per-epoch counters."""
+        self.deltas_applied += 1
+        self.refreshed_vertices += refresh.refreshed_vertices
+        self.invalidated_rows += len(refresh.invalidated)
+        self.cache_dropped += dropped
+        self.delta_epochs.append({
+            "hits": self.epoch_hits,
+            "misses": self.epoch_misses,
+            "hit_rate": round(self.epoch_hit_rate, 4),
+            "refreshed_vertices": refresh.refreshed_vertices,
+            "invalidated": int(len(refresh.invalidated)),
+            "cache_dropped": dropped,
+        })
+        self.epoch_hits = self.epoch_misses = 0
+
+    @property
+    def epoch_hit_rate(self) -> float:
+        tot = self.epoch_hits + self.epoch_misses
+        return self.epoch_hits / tot if tot else 0.0
 
     @property
     def cache_hit_rate(self) -> float:
@@ -125,6 +170,12 @@ class ServerMetrics:
             "bucket_steps": dict(self.bucket_steps),
             "p50_ms": round(self.p50_ms, 3),
             "p99_ms": round(self.p99_ms, 3),
+            "deltas_applied": self.deltas_applied,
+            "refreshed_vertices": self.refreshed_vertices,
+            "invalidated_rows": self.invalidated_rows,
+            "cache_dropped": self.cache_dropped,
+            "epoch_hit_rate": round(self.epoch_hit_rate, 4),
+            "delta_epochs": list(self.delta_epochs),
         }
 
 
@@ -248,14 +299,14 @@ class EmbeddingServer:
             vid = int(req.ids[pos])
             if vid in miss_slots:          # same miss already in this pack
                 miss_slots[vid].append((req, pos))
-                self.metrics.cache_misses += 1   # per occurrence, like hits
+                self.metrics.note_miss()   # per occurrence, like hits
                 continue
             row = self.cache.get(vid)
             if row is not None:
-                self.metrics.cache_hits += 1
+                self.metrics.note_hit()
                 hit_rows.append((req, pos, row))
             else:
-                self.metrics.cache_misses += 1
+                self.metrics.note_miss()
                 miss_slots[vid] = [(req, pos)]
         return {"miss_slots": miss_slots, "hit_rows": hit_rows}
 
@@ -298,6 +349,31 @@ class EmbeddingServer:
                     self.metrics.completed += 1
                     self.metrics.latencies_ms.append(req.latency_ms)
                     req._event.set()
+
+    # ------------------------------------------------------------ streaming
+    def apply_delta(self, delta):
+        """Stream a graph mutation into the LIVE server.
+
+        Applies at a tick boundary (waits for any in-flight device step to
+        land, so a pre-delta tick's rows never enter the cache after the
+        refresh): the plan re-freezes only touched frozen rows and updates
+        Eq. 1 importance incrementally (``ServerPlan.apply_delta``); the
+        embedding cache then drops exactly the rows within the plan's hop
+        radius of a touched vertex and re-derives the importance admission
+        set from the moved scores.  Rows outside the radius stay cached —
+        subsequent requests for them are still hits, and they are still
+        byte-identical to a cold rebuild's output (the refresh contract the
+        streaming tests pin).  Returns the
+        :class:`~repro.serving.plan.DeltaRefresh` receipt.
+        """
+        with self._idle:
+            while self._inflight:
+                self._idle.wait()
+            refresh = self.plan.apply_delta(delta)
+            dropped = self.cache.invalidate(refresh.invalidated)
+            self.cache.rescore(self.plan.importance)
+            self.metrics.roll_delta_epoch(refresh, dropped)
+        return refresh
 
     # ------------------------------------------------------------ sync API
     def serve_trace(self, trace: List[np.ndarray]) -> List[np.ndarray]:

@@ -1,0 +1,40 @@
+"""repro.streaming — graph mutation as a first-class subsystem.
+
+AliGraph's headline is *fast graph build* because the production graph
+never stands still (paper §1, §3.2).  This package makes every consumer of
+the repo — samplers, GQL queries, the trainer, the embedding server —
+correct under edge mutations WITHOUT full rebuilds:
+
+  * :class:`GraphDelta` — one validated batch of edge additions /
+    deletions / weight updates against the store's type schema;
+  * :class:`StreamingStore` — a delta overlay (append-only COO + tombstone
+    set) over a built :class:`~repro.core.storage.DistributedGraphStore`;
+    samplers read through per-signature merged views, and
+    :meth:`~StreamingStore.compact` folds the overlay into a fresh CSR
+    byte-equivalent to a from-scratch rebuild
+    (:func:`apply_delta_rebuild`, the reference oracle);
+  * the GQL ``.update(delta)`` step and ``Dataset(deltas=...)`` interleave
+    mutations with query streams (Evolving-GNN snapshots become deltas);
+  * ``ServerPlan.apply_delta`` refreshes a LIVE embedding server: frozen
+    sampling tables re-drawn only for touched vertices, Eq. 1 importance
+    updated incrementally, and cached rows invalidated exactly within the
+    plan's hop radius of a touched vertex.
+
+Quickstart::
+
+    from repro.streaming import GraphDelta, StreamingStore
+
+    store = StreamingStore(build_store(g, n_parts=4))
+    delta = (GraphDelta.add_edges([0, 1], [5, 6], etype=0)
+             + GraphDelta.delete_edges([2], [7]))
+    store.apply(delta)            # samplers/GQL see the mutation at once
+    mutated = store.compact()     # == rebuilding the mutated graph
+"""
+from .delta import (ANY_ETYPE, DeltaValidationError, GraphDelta,  # noqa: F401
+                    apply_delta_rebuild)
+from .store import AppliedDelta, OverlayView, StreamingStore  # noqa: F401
+
+__all__ = [
+    "GraphDelta", "DeltaValidationError", "apply_delta_rebuild",
+    "StreamingStore", "OverlayView", "AppliedDelta", "ANY_ETYPE",
+]

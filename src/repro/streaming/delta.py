@@ -1,0 +1,299 @@
+"""GraphDelta — the typed unit of graph mutation.
+
+AliGraph's storage exists because e-commerce graphs never stand still
+(paper §1: the graph is rebuilt in minutes, not hours, precisely because it
+must be rebuilt *continuously*).  A :class:`GraphDelta` is one validated
+batch of mutations against an :class:`~repro.core.graph.AHG` schema:
+
+  * **edge additions** — (src, dst, etype, weight, attr-row) tuples;
+  * **edge deletions** — (src, dst[, etype]) patterns; a deletion removes
+    EVERY currently-alive edge matching the pattern (``etype=-1`` matches
+    any type), and deleting a pattern with no alive match is an error
+    (silent no-op deletes hide upstream bugs);
+  * **weight updates**   — (src, dst[, etype], weight) patterns, same
+    match-all-alive semantics.
+
+Deltas are immutable and composable (``a + b`` applies ``a`` then ``b``).
+``validate(g)`` checks every id/type/weight against the target schema
+without touching the graph, so a bad delta is rejected before any state
+changes (mutation is all-or-nothing at the batch level).
+
+``apply_delta_rebuild`` is the *reference* path: apply a delta sequence to
+an explicit edge list and rebuild the CSR from scratch.  It defines the
+canonical edge order every incremental path must reproduce byte-for-byte
+(see :meth:`~repro.streaming.store.StreamingStore.compact`): surviving base
+edges in CSR order, then additions in arrival order, stably lexsorted by
+``(src, dst)``.  Stable sorting makes the convention associative — folding
+at any intermediate point yields the same final bytes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.graph import AHG
+
+__all__ = ["GraphDelta", "DeltaValidationError", "apply_delta_rebuild"]
+
+ANY_ETYPE = -1          # wildcard edge type in delete/update patterns
+
+
+class DeltaValidationError(ValueError):
+    """A mutation batch that does not fit the target graph's schema."""
+
+
+def _ids(a, dtype=np.int32) -> np.ndarray:
+    out = np.asarray(a, dtype=dtype).reshape(-1)
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphDelta:
+    """One immutable batch of edge mutations (see module docstring)."""
+
+    add_src: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.int32))
+    add_dst: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.int32))
+    add_etype: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.int16))
+    add_weight: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.float32))
+    add_attr: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.int32))
+    del_src: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.int32))
+    del_dst: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.int32))
+    del_etype: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.int16))
+    upd_src: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.int32))
+    upd_dst: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.int32))
+    upd_etype: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.int16))
+    upd_weight: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.float32))
+
+    # ------------------------------------------------------------- builders
+    @classmethod
+    def add_edges(cls, src, dst, *, etype=0, weight=1.0, attr=0
+                  ) -> "GraphDelta":
+        """Delta adding edges ``src[i] -> dst[i]``; scalar ``etype`` /
+        ``weight`` / ``attr`` broadcast over the batch."""
+        src = _ids(src)
+        n = len(src)
+        return cls(add_src=src, add_dst=_ids(dst),
+                   add_etype=np.broadcast_to(
+                       np.asarray(etype, np.int16), (n,)).copy(),
+                   add_weight=np.broadcast_to(
+                       np.asarray(weight, np.float32), (n,)).copy(),
+                   add_attr=np.broadcast_to(
+                       np.asarray(attr, np.int32), (n,)).copy())
+
+    @classmethod
+    def delete_edges(cls, src, dst, *, etype: Optional[object] = None
+                     ) -> "GraphDelta":
+        """Delta deleting every alive edge matching ``src[i] -> dst[i]``
+        (restricted to ``etype`` unless None = any type)."""
+        src = _ids(src)
+        et = (np.full(len(src), ANY_ETYPE, np.int16) if etype is None
+              else np.broadcast_to(np.asarray(etype, np.int16),
+                                   (len(src),)).copy())
+        return cls(del_src=src, del_dst=_ids(dst), del_etype=et)
+
+    @classmethod
+    def update_weights(cls, src, dst, weight, *,
+                       etype: Optional[object] = None) -> "GraphDelta":
+        """Delta setting the weight of every alive edge matching
+        ``src[i] -> dst[i]`` to ``weight[i]``."""
+        src = _ids(src)
+        n = len(src)
+        et = (np.full(n, ANY_ETYPE, np.int16) if etype is None
+              else np.broadcast_to(np.asarray(etype, np.int16), (n,)).copy())
+        return cls(upd_src=src, upd_dst=_ids(dst), upd_etype=et,
+                   upd_weight=np.broadcast_to(
+                       np.asarray(weight, np.float32), (n,)).copy())
+
+    def __add__(self, other: "GraphDelta") -> "GraphDelta":
+        """Concatenate two deltas (self's mutations first)."""
+        return GraphDelta(**{
+            f.name: np.concatenate([getattr(self, f.name),
+                                    getattr(other, f.name)])
+            for f in dataclasses.fields(self)})
+
+    # ------------------------------------------------------------ inspection
+    @property
+    def n_adds(self) -> int:
+        return len(self.add_src)
+
+    @property
+    def n_deletes(self) -> int:
+        return len(self.del_src)
+
+    @property
+    def n_weight_updates(self) -> int:
+        return len(self.upd_src)
+
+    @property
+    def empty(self) -> bool:
+        return not (self.n_adds or self.n_deletes or self.n_weight_updates)
+
+    def touched_sources(self) -> np.ndarray:
+        """Unique vertices whose OUT-adjacency this delta structurally
+        changes (weight updates do not move edges, only re-weight them)."""
+        return np.unique(np.concatenate([self.del_src, self.add_src]))
+
+    def touched_destinations(self) -> np.ndarray:
+        return np.unique(np.concatenate([self.del_dst, self.add_dst]))
+
+    def __repr__(self) -> str:
+        return (f"GraphDelta(+{self.n_adds} edges, -{self.n_deletes} "
+                f"patterns, ~{self.n_weight_updates} weights)")
+
+    # ------------------------------------------------------------ validation
+    def validate(self, g: AHG) -> None:
+        """Check every mutation against ``g``'s schema; raises
+        :class:`DeltaValidationError` without touching the graph."""
+        for name, arr in (("add_src", self.add_src),
+                          ("add_dst", self.add_dst),
+                          ("del_src", self.del_src),
+                          ("del_dst", self.del_dst),
+                          ("upd_src", self.upd_src),
+                          ("upd_dst", self.upd_dst)):
+            if len(arr) and (arr.min() < 0 or arr.max() >= g.n):
+                raise DeltaValidationError(
+                    f"{name} ids out of range [0, {g.n})")
+        for a, b, what in ((self.add_src, self.add_dst, "add"),
+                           (self.del_src, self.del_dst, "delete"),
+                           (self.upd_src, self.upd_dst, "update")):
+            if len(a) != len(b):
+                raise DeltaValidationError(
+                    f"{what} src/dst length mismatch: {len(a)} vs {len(b)}")
+        if len(self.add_etype) != self.n_adds or \
+                len(self.add_weight) != self.n_adds or \
+                len(self.add_attr) != self.n_adds:
+            raise DeltaValidationError(
+                "add etype/weight/attr must align with add_src")
+        if len(self.del_etype) != self.n_deletes:
+            raise DeltaValidationError("del_etype must align with del_src")
+        if len(self.upd_etype) != self.n_weight_updates or \
+                len(self.upd_weight) != self.n_weight_updates:
+            raise DeltaValidationError(
+                "upd etype/weight must align with upd_src")
+        if self.n_adds:
+            if (self.add_etype.min() < 0
+                    or self.add_etype.max() >= g.n_edge_types):
+                raise DeltaValidationError(
+                    f"add_etype out of range [0, {g.n_edge_types})")
+            if not np.all(np.isfinite(self.add_weight)) or \
+                    self.add_weight.min() <= 0:
+                raise DeltaValidationError(
+                    "add_weight must be finite and > 0")
+            n_attr = len(g.edge_attr_table)
+            if self.add_attr.min() < 0 or self.add_attr.max() >= n_attr:
+                raise DeltaValidationError(
+                    f"add_attr rows out of range [0, {n_attr}) of the "
+                    "deduplicated edge-attribute table")
+        for et, what in ((self.del_etype, "del"), (self.upd_etype, "upd")):
+            if len(et) and (et.min() < ANY_ETYPE
+                            or et.max() >= g.n_edge_types):
+                raise DeltaValidationError(
+                    f"{what}_etype out of range [0, {g.n_edge_types}) "
+                    f"(or {ANY_ETYPE} for any)")
+        if self.n_weight_updates and (
+                not np.all(np.isfinite(self.upd_weight))
+                or self.upd_weight.min() <= 0):
+            raise DeltaValidationError("upd_weight must be finite and > 0")
+
+
+# ---------------------------------------------------------------------------
+# The reference (from-scratch) application path
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _EdgeList:
+    """Mutable explicit edge list (the reference representation)."""
+
+    src: List[int]
+    dst: List[int]
+    etype: List[int]
+    weight: List[float]
+    attr: List[int]
+    alive: List[bool]
+
+
+def _match_pattern(el: _EdgeList, s: int, d: int, et: int) -> List[int]:
+    return [i for i in range(len(el.src))
+            if el.alive[i] and el.src[i] == s and el.dst[i] == d
+            and (et == ANY_ETYPE or el.etype[i] == et)]
+
+
+def apply_delta_rebuild(g: AHG, deltas: Sequence[GraphDelta]) -> AHG:
+    """Apply ``deltas`` in order and rebuild the mutated AHG from scratch.
+
+    Deliberately simple (python edge list; O(deletes × m) matching): this is
+    the oracle incremental paths are byte-compared against, so clarity beats
+    speed.  Vertex-side arrays and both deduplicated attribute tables are
+    carried through unchanged — deltas mutate edges, not the vertex set.
+    """
+    src, dst = g.edge_list()
+    el = _EdgeList(src=list(map(int, src)), dst=list(map(int, dst)),
+                   etype=list(map(int, g.edge_type)),
+                   weight=list(map(float, g.edge_weight)),
+                   attr=list(map(int, g.edge_attr_index)),
+                   alive=[True] * g.m)
+    for delta in deltas:
+        delta.validate(g)
+        for s, d, et in zip(delta.del_src, delta.del_dst, delta.del_etype):
+            hits = _match_pattern(el, int(s), int(d), int(et))
+            if not hits:
+                raise DeltaValidationError(
+                    f"delete pattern ({int(s)}->{int(d)}, etype={int(et)}) "
+                    "matches no alive edge")
+            for i in hits:
+                el.alive[i] = False
+        for s, d, et, w in zip(delta.upd_src, delta.upd_dst,
+                               delta.upd_etype, delta.upd_weight):
+            hits = _match_pattern(el, int(s), int(d), int(et))
+            if not hits:
+                raise DeltaValidationError(
+                    f"weight-update pattern ({int(s)}->{int(d)}, "
+                    f"etype={int(et)}) matches no alive edge")
+            for i in hits:
+                el.weight[i] = float(w)
+        for s, d, et, w, a in zip(delta.add_src, delta.add_dst,
+                                  delta.add_etype, delta.add_weight,
+                                  delta.add_attr):
+            el.src.append(int(s))
+            el.dst.append(int(d))
+            el.etype.append(int(et))
+            el.weight.append(float(w))
+            el.attr.append(int(a))
+            el.alive.append(True)
+
+    alive = np.asarray(el.alive, bool)
+    src = np.asarray(el.src, np.int32)[alive]
+    dst = np.asarray(el.dst, np.int32)[alive]
+    et = np.asarray(el.etype, np.int16)[alive]
+    w = np.asarray(el.weight, np.float32)[alive]
+    at = np.asarray(el.attr, np.int32)[alive]
+    # the canonical order: stable lexsort by (src, dst) over
+    # [base-CSR-order survivors, then additions in arrival order]
+    order = np.lexsort((dst, src))
+    src, dst, et, w, at = (src[order], dst[order], et[order], w[order],
+                           at[order])
+    indptr = np.zeros(g.n + 1, np.int64)
+    np.cumsum(np.bincount(src, minlength=g.n), out=indptr[1:])
+    out = AHG(indptr=indptr, indices=dst, edge_type=et, edge_weight=w,
+              vertex_type=g.vertex_type,
+              vertex_attr_index=g.vertex_attr_index,
+              vertex_attr_table=g.vertex_attr_table,
+              edge_attr_index=at, edge_attr_table=g.edge_attr_table,
+              n_vertex_types=g.n_vertex_types, n_edge_types=g.n_edge_types,
+              directed=g.directed)
+    out.validate()
+    return out

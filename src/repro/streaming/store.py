@@ -1,0 +1,716 @@
+"""StreamingStore — mutable graph storage as a delta overlay.
+
+The static :class:`~repro.core.storage.DistributedGraphStore` is built once
+(partition → shards → caches, the paper's Fig 7 "graph build").  Production
+graphs mutate continuously, and rebuilding that stack per update batch
+throws away exactly the caches §3.2 exists to keep warm.  ``StreamingStore``
+wraps a built store with the classic LSM split:
+
+  * the **base** CSR stays immutable between compactions;
+  * an append-only **COO overlay** holds added edges;
+  * a **tombstone set** marks deleted base slots (and dead overlay slots);
+  * per-signature **views** (:class:`OverlayView`) merge all three at read
+    time — untouched rows keep the base fast path, touched rows read
+    canonical (neighbor-sorted) merged candidate lists;
+  * :meth:`compact` folds everything into a fresh CSR, byte-equivalent to
+    :func:`~repro.streaming.delta.apply_delta_rebuild` of the same mutation
+    sequence (the from-scratch oracle), and rebases the store in place.
+
+Samplers never see any of this directly: they read adjacency through
+``store.signature_view(direction, vtype, etype)`` (see ``core.sampling``),
+which a static store answers with its plain filtered CSR.  Signature views
+are cached and invalidated only when a delta structurally touches that
+``(direction, vtype, etype)`` signature; weight-only deltas invalidate
+nothing (weights are read live through the sampler logits sync).
+
+Bookkeeping kept live per mutation (all O(delta), never O(m)):
+
+  * in/out degrees (→ Eq. 1 importance for the serving refresh path),
+  * the replicated neighbor-cache rows of touched cached vertices,
+  * touched-row masks per direction (→ targeted server re-freeze),
+  * a weight-update log replayed into sampler logits on demand.
+"""
+from __future__ import annotations
+
+import dataclasses
+import weakref
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.graph import AHG, filtered_adjacency
+from repro.core.partition import Partition
+from repro.core.storage import DistributedGraphStore, GraphShard
+
+from .delta import ANY_ETYPE, DeltaValidationError, GraphDelta
+
+__all__ = ["StreamingStore", "OverlayView", "AppliedDelta"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AppliedDelta:
+    """What one committed delta structurally touched (the serving refresh
+    path consumes this to re-freeze/invalidate only what changed)."""
+
+    touched_out: np.ndarray      # unique vertices whose out-row changed
+    touched_in: np.ndarray       # unique vertices whose in-row changed
+    endpoints: np.ndarray        # union (degree/importance refresh set)
+    n_structural: int            # edges added + edges actually deleted
+    n_weight_updates: int
+
+
+class OverlayView:
+    """Merged read view of one ``(direction, vtype, etype)`` signature.
+
+    ``indptr/indices/eids`` are the BASE filtered CSR (immutable between
+    compactions; ``eids`` are global edge slots).  ``dead`` marks tombstoned
+    base slots; the ``ov_*`` CSR holds matching alive overlay edges.
+    ``touched`` flags rows whose merged candidates differ from the base row
+    — only those pay the merge; everything else keeps the static gather.
+    """
+
+    patched = True
+
+    def __init__(self, store: "StreamingStore",
+                 key: Tuple[str, Optional[int], Optional[int]]):
+        self._store = store
+        direction, vtype, etype = key
+        self.indptr, self.indices, self.eids = store._base_signature(key)
+        n = store.graph.n
+        self.dead = store._tomb[self.eids]
+        dead_slots = np.nonzero(self.dead)[0]
+        dead_count = np.zeros(n, np.int64)
+        if len(dead_slots):
+            rows = np.searchsorted(self.indptr, dead_slots, side="right") - 1
+            np.add.at(dead_count, rows, 1)
+        self.ov_indptr, self.ov_nbr, self.ov_eids = store._overlay_signature(
+            direction, vtype, etype)
+        ov_deg = np.diff(self.ov_indptr)
+        base_deg = np.diff(self.indptr)
+        self.live_deg = base_deg - dead_count + ov_deg
+        self.touched = (dead_count > 0) | (ov_deg > 0)
+        self.patched = bool(self.touched.any())
+
+    def candidates(self, rows: np.ndarray
+                   ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Merged candidate lists for ``rows``: ``(cand, cmask, ceids)`` all
+        ``[R, Dmax]``, left-packed, neighbor-id-sorted (stable).  The sort
+        makes the candidate order identical whether a row is read through
+        the overlay or after :meth:`StreamingStore.compact` — the invariant
+        the hash-keyed frozen-sampling refresh relies on."""
+        rows = np.asarray(rows, np.int64)
+        nbrs: List[np.ndarray] = []
+        eids: List[np.ndarray] = []
+        for r in rows:
+            lo, hi = int(self.indptr[r]), int(self.indptr[r + 1])
+            keep = ~self.dead[lo:hi]
+            bn, be = self.indices[lo:hi][keep], self.eids[lo:hi][keep]
+            olo, ohi = int(self.ov_indptr[r]), int(self.ov_indptr[r + 1])
+            nbr = np.concatenate([bn, self.ov_nbr[olo:ohi]])
+            eid = np.concatenate([be, self.ov_eids[olo:ohi]])
+            order = np.argsort(nbr, kind="stable")
+            nbrs.append(nbr[order].astype(np.int32))
+            eids.append(eid[order].astype(np.int64))
+        d_max = max([len(x) for x in nbrs] + [1])
+        cand = np.zeros((len(rows), d_max), np.int32)
+        ceid = np.zeros((len(rows), d_max), np.int64)
+        cmask = np.zeros((len(rows), d_max), bool)
+        for i, (nbr, eid) in enumerate(zip(nbrs, eids)):
+            cand[i, :len(nbr)] = nbr
+            ceid[i, :len(nbr)] = eid
+            cmask[i, :len(nbr)] = True
+        return cand, cmask, ceid
+
+    def all_neighbors(self, rows: np.ndarray) -> np.ndarray:
+        """Every live neighbor of every row (with multiplicity) — the
+        frontier-walk primitive behind hop-radius invalidation."""
+        rows = np.asarray(rows, np.int64)
+        lo = self.indptr[rows]
+        deg = self.indptr[rows + 1] - lo
+        total = int(deg.sum())
+        pos = (np.repeat(lo, deg)
+               + np.arange(total) - np.repeat(np.cumsum(deg) - deg, deg))
+        base = self.indices[pos][~self.dead[pos]]
+        olo = self.ov_indptr[rows]
+        odeg = self.ov_indptr[rows + 1] - olo
+        ototal = int(odeg.sum())
+        opos = (np.repeat(olo, odeg)
+                + np.arange(ototal) - np.repeat(np.cumsum(odeg) - odeg, odeg))
+        return np.concatenate([base, self.ov_nbr[opos]])
+
+
+class StreamingStore(DistributedGraphStore):
+    """Delta-overlay wrapper over a built store (see module docstring).
+
+    The wrapped store is never mutated: shards are re-instantiated over the
+    same base graph (sharing ``owned_mask``; the replicated neighbor cache
+    is shallow-copied so incremental row refreshes stay private), and
+    :meth:`compact` rebases only this store.  ``store.graph`` always returns
+    the current base CSR — i.e. the graph as of the last compaction; reads
+    that must see the overlay go through :meth:`signature_view` /
+    :meth:`edge_pool` / the live-degree accessors.
+    """
+
+    def __init__(self, base: DistributedGraphStore):
+        g = base.graph
+        self._g_cur = g
+        self.partition = base.partition
+        self.cache_plan = base.cache_plan
+        cached = (dict(base.shards[0].cached_neighbors) if base.shards
+                  else {})
+        self._cached_dict = cached
+        self.shards = [
+            GraphShard(s.shard_id, g, s.owned_mask, cached,
+                       s.v_attr_cache.capacity) for s in base.shards]
+        self.mutation_epoch = 0
+        self.generation = 0
+        self._reset_overlay()
+        # live degrees (Eq. 1 inputs, maintained per delta)
+        self._out_deg = g.out_degree().astype(np.int64).copy()
+        self._in_deg = g.in_degree().astype(np.int64).copy()
+        self._logit_reg: Dict[int, dict] = {}
+
+    # ------------------------------------------------------------ plumbing
+    def _reset_overlay(self) -> None:
+        g = self._g_cur
+        self._tomb = np.zeros(g.m, bool)
+        self._base_weight = g.edge_weight          # copy-on-write
+        self._ov_src = np.zeros(0, np.int32)
+        self._ov_dst = np.zeros(0, np.int32)
+        self._ov_etype = np.zeros(0, np.int16)
+        self._ov_weight = np.zeros(0, np.float32)
+        self._ov_attr = np.zeros(0, np.int32)
+        self._ov_alive = np.zeros(0, bool)
+        self._ov_by_src: Dict[int, List[int]] = {}
+        self._ov_by_dst: Dict[int, List[int]] = {}
+        self._touched_out = np.zeros(g.n, bool)
+        self._touched_in = np.zeros(g.n, bool)
+        self._views: Dict[Tuple, OverlayView] = {}
+        self._base_csr: Dict[Tuple, Tuple] = {}
+        self._pools: Dict = {}
+        self._base_src: Optional[np.ndarray] = None
+        self._weight_log: List[Tuple[np.ndarray, np.ndarray]] = []
+
+    @property
+    def graph(self) -> AHG:
+        return self._g_cur
+
+    @property
+    def m_base(self) -> int:
+        return len(self._tomb)
+
+    @property
+    def total_edge_slots(self) -> int:
+        return self.m_base + len(self._ov_src)
+
+    @property
+    def n_live_edges(self) -> int:
+        return int((~self._tomb).sum() + self._ov_alive.sum())
+
+    def _base_edge_src(self) -> np.ndarray:
+        if self._base_src is None:
+            g = self._g_cur
+            self._base_src = np.repeat(np.arange(g.n, dtype=np.int32),
+                                       np.diff(g.indptr))
+        return self._base_src
+
+    # ------------------------------------------------------------ views
+    def _base_signature(self, key: Tuple) -> Tuple:
+        hit = self._base_csr.get(key)
+        if hit is None:
+            direction, vtype, etype = key
+            hit = filtered_adjacency(self._g_cur, direction, vtype, etype,
+                                     return_edge_ids=True)
+            self._base_csr[key] = hit
+        return hit
+
+    def _overlay_signature(self, direction: str, vtype: Optional[int],
+                           etype: Optional[int]) -> Tuple:
+        """CSR over matching alive overlay edges; eids are global slots."""
+        g = self._g_cur
+        keep = self._ov_alive.copy()
+        if etype is not None:
+            keep &= self._ov_etype == etype
+        row = self._ov_src if direction == "out" else self._ov_dst
+        nbr = self._ov_dst if direction == "out" else self._ov_src
+        if vtype is not None:
+            keep &= g.vertex_type[nbr] == vtype
+        sel = np.nonzero(keep)[0]
+        order = sel[np.argsort(row[sel], kind="stable")]
+        indptr = np.zeros(g.n + 1, np.int64)
+        np.cumsum(np.bincount(row[order], minlength=g.n), out=indptr[1:])
+        return indptr, nbr[order].astype(np.int32), \
+            (self.m_base + order).astype(np.int64)
+
+    def signature_view(self, direction: str = "out",
+                       vtype: Optional[int] = None,
+                       etype: Optional[int] = None) -> OverlayView:
+        key = (direction, vtype, etype)
+        view = self._views.get(key)
+        if view is None:
+            view = OverlayView(self, key)
+            self._views[key] = view
+        return view
+
+    # ------------------------------------------------------------ edge pool
+    def edge_pool(self, etype: Optional[int] = None
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+        """Live (src, dst) arrays — the TRAVERSE edge-mode pool.  Deleted
+        edges never appear; added edges do."""
+        hit = self._pools.get(etype)
+        if hit is not None:
+            return hit
+        g = self._g_cur
+        keep_b = ~self._tomb
+        keep_o = self._ov_alive.copy()
+        if etype is not None:
+            keep_b = keep_b & (g.edge_type == etype)
+            keep_o &= self._ov_etype == etype
+        src = np.concatenate([self._base_edge_src()[keep_b],
+                              self._ov_src[keep_o]])
+        dst = np.concatenate([g.indices[keep_b].astype(np.int32),
+                              self._ov_dst[keep_o]])
+        self._pools[etype] = (src, dst)
+        return src, dst
+
+    # ------------------------------------------------------------ weights
+    def live_edge_weights(self) -> np.ndarray:
+        """[total_edge_slots] current weight per global edge slot (dead
+        slots keep their last value; they are never gathered)."""
+        return np.concatenate([self._base_weight, self._ov_weight])
+
+    def _prune_logit_reg(self) -> None:
+        for k in [k for k, e in self._logit_reg.items()
+                  if e["ref"]() is None]:
+            del self._logit_reg[k]
+
+    def adopt_logits(self, arr: np.ndarray) -> None:
+        """Register a sampler's dynamic-logit array as current (created
+        from :meth:`live_edge_weights` at this generation/log position).
+        Arrays are held by WEAK reference — dropping an executor drops its
+        registry entries, so per-epoch executors never accumulate.  A live
+        entry under the same ``id`` whose array IS ``arr`` (the shared-
+        array second sampler) is kept; anything else (CPython id reuse)
+        is overwritten with a fresh registration."""
+        self._prune_logit_reg()
+        entry = self._logit_reg.get(id(arr))
+        if entry is not None and entry["ref"]() is arr:
+            return
+        self._logit_reg[id(arr)] = {"gen": self.generation,
+                                    "log": len(self._weight_log),
+                                    "ref": weakref.ref(arr)}
+
+    def sync_logits(self, arr: np.ndarray) -> np.ndarray:
+        """Bring a registered logit array up to date: extend it over newly
+        added edge slots (initialised to the add's weight) and replay
+        pending weight-update deltas (a weight update RESETS any learned
+        logit on that edge to the served weight).  Returns the current
+        array — callers must re-bind, as extension reallocates (the old
+        id keeps resolving to the successor until every holder re-binds);
+        arrays that predate a :meth:`compact` are refused (edge slots
+        renumbered)."""
+        entry = self._logit_reg.get(id(arr))
+        cur = entry["ref"]() if entry is not None else None
+        if cur is None or entry["gen"] != self.generation:
+            raise RuntimeError(
+                "sampler logits predate a compact() of this StreamingStore "
+                "(edge slots were renumbered); build a fresh executor")
+        if len(cur) < self.total_edge_slots:
+            ext = np.concatenate([
+                cur, self._ov_weight[len(cur) - self.m_base:].astype(
+                    cur.dtype)])
+            entry["ref"] = weakref.ref(ext)
+            self._logit_reg[id(ext)] = entry
+            cur = ext
+        for eids, vals in self._weight_log[entry["log"]:]:
+            cur[eids] = vals
+        entry["log"] = len(self._weight_log)
+        return cur
+
+    # ------------------------------------------------------------ degrees
+    def live_out_degree(self) -> np.ndarray:
+        return self._out_deg
+
+    def live_in_degree(self) -> np.ndarray:
+        return self._in_deg
+
+    def importance_k1(self, vertices: Optional[np.ndarray] = None
+                      ) -> np.ndarray:
+        """Eq. 1 ``Imp^(1) = D_i / D_o`` from the LIVE degrees — the
+        incremental counterpart of ``core.cache.importance(g, k=1)``."""
+        if vertices is None:
+            d_i, d_o = self._in_deg, self._out_deg
+        else:
+            v = np.asarray(vertices, np.int64)
+            d_i, d_o = self._in_deg[v], self._out_deg[v]
+        return (d_i / np.maximum(d_o, 1.0)).astype(np.float64)
+
+    def touched_out_since_compact(self) -> np.ndarray:
+        return np.nonzero(self._touched_out)[0].astype(np.int32)
+
+    # ------------------------------------------------------------ frontier
+    def reverse_frontier(self, seeds: np.ndarray, depth: int) -> np.ndarray:
+        """All vertices within ``depth`` reverse (in-adjacency) hops of
+        ``seeds`` over the LIVE graph, seeds included — the hop-radius
+        invalidation set of the serving layer."""
+        view = self.signature_view("in", None, None)
+        visited = np.zeros(self.graph.n, bool)
+        seeds = np.unique(np.asarray(seeds, np.int64))
+        visited[seeds] = True
+        frontier = seeds
+        for _ in range(depth):
+            if not len(frontier):
+                break
+            nbrs = np.unique(view.all_neighbors(frontier))
+            frontier = nbrs[~visited[nbrs]]
+            visited[frontier] = True
+        return np.nonzero(visited)[0].astype(np.int32)
+
+    # ------------------------------------------------------------ matching
+    def _match_base(self, s: int, d: int, et: int, pending: set) -> List[int]:
+        g = self._g_cur
+        lo, hi = int(g.indptr[s]), int(g.indptr[s + 1])
+        sel = (g.indices[lo:hi] == d) & ~self._tomb[lo:hi]
+        if et != ANY_ETYPE:
+            sel &= g.edge_type[lo:hi] == et
+        return [lo + int(i) for i in np.nonzero(sel)[0]
+                if lo + int(i) not in pending]
+
+    def _match_overlay(self, s: int, d: int, et: int, pending: set
+                       ) -> List[int]:
+        out = []
+        for slot in self._ov_by_src.get(int(s), ()):
+            if (self._ov_alive[slot] and slot not in pending
+                    and int(self._ov_dst[slot]) == d
+                    and (et == ANY_ETYPE or int(self._ov_etype[slot]) == et)):
+                out.append(slot)
+        return out
+
+    def _match_patterns_vec(self, src: np.ndarray, dst: np.ndarray,
+                            et: np.ndarray, dead_extra: Optional[np.ndarray]
+                            ) -> Tuple[np.ndarray, np.ndarray]:
+        """Vectorised pattern → base-slot resolution for a batch whose
+        (src, dst) pairs are DISTINCT (so no two patterns can claim the
+        same slot and sequential-within-batch semantics are vacuous).
+        Returns (slots, pattern_id); ``dead_extra`` masks slots already
+        claimed by this delta's deletes.  Overlay matches are resolved by
+        the caller (tiny: only patterns whose src has overlay rows)."""
+        g = self._g_cur
+        s64 = src.astype(np.int64)
+        lo = g.indptr[s64]
+        deg = g.indptr[s64 + 1] - lo
+        total = int(deg.sum())
+        pid = np.repeat(np.arange(len(s64)), deg)
+        pos = (np.repeat(lo, deg)
+               + np.arange(total) - np.repeat(np.cumsum(deg) - deg, deg))
+        match = (g.indices[pos] == dst[pid]) & ~self._tomb[pos]
+        if dead_extra is not None:
+            match &= ~dead_extra[pos]
+        et_p = et[pid].astype(np.int64)
+        match &= (et_p == ANY_ETYPE) | (g.edge_type[pos] == et_p)
+        return pos[match], pid[match]
+
+    @staticmethod
+    def _pairs_distinct(src: np.ndarray, dst: np.ndarray, n: int) -> bool:
+        key = src.astype(np.int64) * n + dst.astype(np.int64)
+        return len(np.unique(key)) == len(key)
+
+    def _resolve_mutations(self, delta: GraphDelta):
+        """Pattern resolution for one batch, before any state changes
+        (all-or-nothing).  Distinct-pair batches take the vectorised path;
+        batches with repeated (src, dst) pairs keep the sequential
+        reference loop (a later pattern must see earlier deletions)."""
+        g = self._g_cur
+        n = g.n
+        del_base: set = set()
+        del_ov: set = set()
+        upd_base: List[Tuple[int, float]] = []
+        upd_ov: List[Tuple[int, float]] = []
+        vec = (self._pairs_distinct(delta.del_src, delta.del_dst, n)
+               and self._pairs_distinct(delta.upd_src, delta.upd_dst, n))
+        if vec:
+            counts = np.zeros(delta.n_deletes, np.int64)
+            slots, pid = self._match_patterns_vec(
+                delta.del_src, delta.del_dst, delta.del_etype, None)
+            counts += np.bincount(pid, minlength=delta.n_deletes)
+            del_base = set(slots.tolist())
+            for i, (s, d, et) in enumerate(zip(delta.del_src, delta.del_dst,
+                                               delta.del_etype)):
+                if int(s) not in self._ov_by_src:
+                    continue
+                hits = self._match_overlay(int(s), int(d), int(et), del_ov)
+                del_ov.update(hits)
+                counts[i] += len(hits)
+            bad = np.nonzero(counts == 0)[0]
+            if len(bad):
+                i = int(bad[0])
+                raise DeltaValidationError(
+                    f"delete pattern ({int(delta.del_src[i])}->"
+                    f"{int(delta.del_dst[i])}, "
+                    f"etype={int(delta.del_etype[i])}) matches no alive "
+                    "edge")
+            if delta.n_weight_updates:
+                dead = np.zeros(g.m, bool)
+                if del_base:
+                    dead[np.fromiter(del_base, np.int64,
+                                     count=len(del_base))] = True
+                counts = np.zeros(delta.n_weight_updates, np.int64)
+                slots, pid = self._match_patterns_vec(
+                    delta.upd_src, delta.upd_dst, delta.upd_etype, dead)
+                counts += np.bincount(pid, minlength=delta.n_weight_updates)
+                upd_base = list(zip(slots.tolist(),
+                                    delta.upd_weight[pid].tolist()))
+                for i, (s, d, et, w) in enumerate(zip(
+                        delta.upd_src, delta.upd_dst, delta.upd_etype,
+                        delta.upd_weight)):
+                    if int(s) not in self._ov_by_src:
+                        continue
+                    hits = self._match_overlay(int(s), int(d), int(et),
+                                               del_ov)
+                    upd_ov.extend((slot, float(w)) for slot in hits)
+                    counts[i] += len(hits)
+                bad = np.nonzero(counts == 0)[0]
+                if len(bad):
+                    i = int(bad[0])
+                    raise DeltaValidationError(
+                        f"weight-update pattern ({int(delta.upd_src[i])}->"
+                        f"{int(delta.upd_dst[i])}, "
+                        f"etype={int(delta.upd_etype[i])}) matches no "
+                        "alive edge")
+            return del_base, del_ov, upd_base, upd_ov
+        # -- sequential reference path: a pattern sees the effect of
+        #    earlier patterns in the same delta
+        for s, d, et in zip(delta.del_src, delta.del_dst, delta.del_etype):
+            hits_b = self._match_base(int(s), int(d), int(et), del_base)
+            hits_o = self._match_overlay(int(s), int(d), int(et), del_ov)
+            if not hits_b and not hits_o:
+                raise DeltaValidationError(
+                    f"delete pattern ({int(s)}->{int(d)}, etype={int(et)}) "
+                    "matches no alive edge")
+            del_base.update(hits_b)
+            del_ov.update(hits_o)
+        for s, d, et, w in zip(delta.upd_src, delta.upd_dst,
+                               delta.upd_etype, delta.upd_weight):
+            hits_b = self._match_base(int(s), int(d), int(et), del_base)
+            hits_o = self._match_overlay(int(s), int(d), int(et), del_ov)
+            if not hits_b and not hits_o:
+                raise DeltaValidationError(
+                    f"weight-update pattern ({int(s)}->{int(d)}, "
+                    f"etype={int(et)}) matches no alive edge")
+            upd_base.extend((slot, float(w)) for slot in hits_b)
+            upd_ov.extend((slot, float(w)) for slot in hits_o)
+        return del_base, del_ov, upd_base, upd_ov
+
+    # ------------------------------------------------------------ mutation
+    def apply(self, delta: GraphDelta) -> AppliedDelta:
+        """Validate and commit one mutation batch (all-or-nothing: pattern
+        resolution happens before any state changes)."""
+        g = self._g_cur
+        delta.validate(g)
+        del_base, del_ov, upd_base, upd_ov = self._resolve_mutations(delta)
+
+        # -- commit: tombstones
+        db = np.fromiter(del_base, np.int64, count=len(del_base))
+        do = np.fromiter(del_ov, np.int64, count=len(del_ov))
+        del_src = np.concatenate([self._base_edge_src()[db],
+                                  self._ov_src[do]]).astype(np.int32)
+        del_dst = np.concatenate([g.indices[db],
+                                  self._ov_dst[do]]).astype(np.int32)
+        del_et = np.concatenate([g.edge_type[db],
+                                 self._ov_etype[do]]).astype(np.int16)
+        if len(db):
+            self._tomb[db] = True
+        if len(do):
+            self._ov_alive[do] = False
+        # -- commit: weight updates (copy-on-write for the base array)
+        if upd_base or upd_ov:
+            if self._base_weight is g.edge_weight and upd_base:
+                self._base_weight = g.edge_weight.copy()
+            log_eids, log_vals = [], []
+            for slot, w in upd_base:
+                self._base_weight[slot] = w
+                log_eids.append(slot)
+                log_vals.append(w)
+            for slot, w in upd_ov:
+                self._ov_weight[slot] = w
+                log_eids.append(self.m_base + slot)
+                log_vals.append(w)
+            self._weight_log.append((np.asarray(log_eids, np.int64),
+                                     np.asarray(log_vals, np.float64)))
+        # -- commit: additions
+        if delta.n_adds:
+            n0 = len(self._ov_src)
+            self._ov_src = np.concatenate([self._ov_src, delta.add_src])
+            self._ov_dst = np.concatenate([self._ov_dst, delta.add_dst])
+            self._ov_etype = np.concatenate([self._ov_etype,
+                                             delta.add_etype])
+            self._ov_weight = np.concatenate([self._ov_weight,
+                                              delta.add_weight])
+            self._ov_attr = np.concatenate([self._ov_attr, delta.add_attr])
+            self._ov_alive = np.concatenate(
+                [self._ov_alive, np.ones(delta.n_adds, bool)])
+            for i, s in enumerate(delta.add_src):
+                self._ov_by_src.setdefault(int(s), []).append(n0 + i)
+            for i, d in enumerate(delta.add_dst):
+                self._ov_by_dst.setdefault(int(d), []).append(n0 + i)
+
+        # -- live bookkeeping
+        struct_src = np.concatenate([del_src, delta.add_src])
+        struct_dst = np.concatenate([del_dst, delta.add_dst])
+        struct_et = np.concatenate([del_et, delta.add_etype])
+        if len(struct_src):
+            np.add.at(self._out_deg, del_src, -1)
+            np.add.at(self._out_deg, delta.add_src, 1)
+            np.add.at(self._in_deg, del_dst, -1)
+            np.add.at(self._in_deg, delta.add_dst, 1)
+            self._touched_out[struct_src] = True
+            self._touched_in[struct_dst] = True
+            # signature caches: drop only views this delta's edges match
+            for key in list(self._views):
+                if self._signature_touched(key, struct_src, struct_dst,
+                                           struct_et):
+                    del self._views[key]
+            self._pools.clear()
+            # refresh replicated neighbor-cache rows of touched cached
+            # vertices (incremental Algorithm-2 maintenance)
+            self._refresh_cached_rows(np.unique(struct_src))
+        self.mutation_epoch += 1
+        t_out = np.unique(struct_src)
+        t_in = np.unique(struct_dst)
+        return AppliedDelta(
+            touched_out=t_out.astype(np.int32),
+            touched_in=t_in.astype(np.int32),
+            endpoints=np.unique(np.concatenate([t_out, t_in])).astype(
+                np.int32),
+            n_structural=int(len(struct_src)),
+            n_weight_updates=delta.n_weight_updates)
+
+    # alias: the GQL `.update()` verb
+    update = apply
+
+    def _signature_touched(self, key: Tuple, e_src: np.ndarray,
+                           e_dst: np.ndarray, e_et: np.ndarray) -> bool:
+        direction, vtype, etype = key
+        m = np.ones(len(e_src), bool)
+        if etype is not None:
+            m &= e_et == etype
+        if vtype is not None:
+            nbr = e_dst if direction == "out" else e_src
+            m &= self._g_cur.vertex_type[nbr] == vtype
+        return bool(m.any())
+
+    def _refresh_cached_rows(self, touched_src: np.ndarray) -> None:
+        """Recompute the replicated neighbor-cache rows of the touched
+        vertices that are cached — ONE vectorised pass (gather survivors,
+        append overlay, one lexsort over the touched rows' entries only)
+        instead of a per-row merge."""
+        vs = np.asarray([v for v in touched_src.tolist()
+                         if int(v) in self._cached_dict], np.int64)
+        if not len(vs):
+            return
+        g = self._g_cur
+        lo = g.indptr[vs]
+        deg = g.indptr[vs + 1] - lo
+        total = int(deg.sum())
+        rowid = np.repeat(np.arange(len(vs)), deg)
+        pos = (np.repeat(lo, deg)
+               + np.arange(total) - np.repeat(np.cumsum(deg) - deg, deg))
+        keep = ~self._tomb[pos]
+        o_rows: List[int] = []
+        o_nbrs: List[int] = []
+        for i, v in enumerate(vs):
+            for slot in self._ov_by_src.get(int(v), ()):
+                if self._ov_alive[slot]:
+                    o_rows.append(i)
+                    o_nbrs.append(int(self._ov_dst[slot]))
+        row = np.concatenate([rowid[keep],
+                              np.asarray(o_rows, np.int64)])
+        nbr = np.concatenate([g.indices[pos[keep]].astype(np.int64),
+                              np.asarray(o_nbrs, np.int64)])
+        order = np.lexsort((nbr, row))
+        counts = np.bincount(row, minlength=len(vs))
+        splits = np.split(nbr[order].astype(g.indices.dtype),
+                          np.cumsum(counts)[:-1])
+        for i, v in enumerate(vs):
+            self._cached_dict[int(v)] = splits[i]
+
+    def _merged_row(self, v: int) -> np.ndarray:
+        """Current out-neighbors of ``v`` in canonical (dst-sorted) order."""
+        g = self._g_cur
+        lo, hi = int(g.indptr[v]), int(g.indptr[v + 1])
+        base = g.indices[lo:hi][~self._tomb[lo:hi]]
+        ov = [int(self._ov_dst[s]) for s in self._ov_by_src.get(v, ())
+              if self._ov_alive[s]]
+        merged = np.concatenate([base, np.asarray(ov, base.dtype)])
+        return merged[np.argsort(merged, kind="stable")]
+
+    def remote_neighbors(self, v: int) -> np.ndarray:
+        return self._merged_row(int(v))
+
+    # ------------------------------------------------------------ compaction
+    def compact(self) -> AHG:
+        """Fold overlay + tombstones into a fresh CSR and rebase in place.
+
+        The result is byte-equivalent to
+        :func:`~repro.streaming.delta.apply_delta_rebuild` applied to the
+        same mutation sequence (canonical stable ``(src, dst)`` lexsort over
+        [survivors in CSR order, additions in arrival order]) — but built as
+        a MERGE, not a re-sort: survivors keep the base CSR's order (one
+        masked copy), only the small alive overlay is sorted, and
+        ``searchsorted(side='right')`` + ``np.insert`` splice it in (equal
+        keys land after their survivors, arrival order preserved — exactly
+        the canonical stable order).  Cost is O(m + k log k) copies instead
+        of an O(m log m) full lexsort.  Executors / samplers created before
+        the compaction hold renumbered edge slots and must be rebuilt
+        (``sync_logits`` raises if reused); the store's shards, partition
+        homes and caches carry over untouched.
+        """
+        g = self._g_cur
+        keep_b = ~self._tomb
+        keep_o = np.nonzero(self._ov_alive)[0]
+        src = self._base_edge_src()[keep_b]
+        dst = g.indices[keep_b].astype(np.int32)
+        et = g.edge_type[keep_b]
+        w = self._base_weight[keep_b]
+        at = g.edge_attr_index[keep_b]
+        assign = self.partition.edge_assign[keep_b]
+        if len(keep_o):
+            o_src = self._ov_src[keep_o]
+            o_dst = self._ov_dst[keep_o]
+            o_key = o_src.astype(np.int64) * g.n + o_dst.astype(np.int64)
+            o_order = np.argsort(o_key, kind="stable")
+            o_src, o_dst = o_src[o_order], o_dst[o_order]
+            key = src.astype(np.int64) * g.n + dst.astype(np.int64)
+            ins = np.searchsorted(key, o_key[o_order], side="right")
+            take = keep_o[o_order]
+            src = np.insert(src, ins, o_src)
+            dst = np.insert(dst, ins, o_dst)
+            et = np.insert(et, ins, self._ov_etype[take])
+            w = np.insert(w, ins, self._ov_weight[take])
+            at = np.insert(at, ins, self._ov_attr[take])
+            assign = np.insert(assign, ins,
+                               self.partition.vertex_home[o_src])
+        indptr = np.zeros(g.n + 1, np.int64)
+        np.cumsum(np.bincount(src, minlength=g.n), out=indptr[1:])
+        new_g = AHG(
+            indptr=indptr, indices=dst, edge_type=et.astype(np.int16),
+            edge_weight=w.astype(np.float32),
+            vertex_type=g.vertex_type,
+            vertex_attr_index=g.vertex_attr_index,
+            vertex_attr_table=g.vertex_attr_table,
+            edge_attr_index=at.astype(np.int32),
+            edge_attr_table=g.edge_attr_table,
+            n_vertex_types=g.n_vertex_types, n_edge_types=g.n_edge_types,
+            directed=g.directed)
+        new_g.validate()
+        self.partition = Partition(
+            self.partition.n_parts, assign.astype(np.int32),
+            self.partition.vertex_home, self.partition.method)
+        self._g_cur = new_g
+        for shard in self.shards:
+            shard._g = new_g
+        self.generation += 1
+        self.mutation_epoch += 1
+        self._logit_reg.clear()
+        self._reset_overlay()
+        return new_g

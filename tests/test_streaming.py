@@ -1,0 +1,420 @@
+"""Streaming-update subsystem: delta validation, compaction byte-equivalence
+vs the from-scratch oracle, tombstone-correct sampling, GQL .update /
+Dataset delta streams, live-server refresh byte-identity (cache on + off),
+and the incremental Evolving-GNN path."""
+import numpy as np
+import pytest
+
+from repro.api import G, QueryValidationError
+from repro.core import build_store, make_gnn, synthetic_ahg
+from repro.core.cache import importance
+from repro.core.gnn import GNNTrainer
+from repro.core.sampling import (HopSpec, MetapathSampler,
+                                 NeighborhoodSampler, WalkSampler)
+from repro.serving import EmbeddingServer, Traffic, compile_server
+from repro.streaming import (DeltaValidationError, GraphDelta,
+                             StreamingStore, apply_delta_rebuild)
+
+
+@pytest.fixture()
+def graph():
+    return synthetic_ahg(900, avg_degree=6, seed=3)
+
+
+@pytest.fixture()
+def sstore(graph):
+    return StreamingStore(build_store(graph, 3))
+
+
+def _unique_pairs(g):
+    src, dst = g.edge_list()
+    return np.unique(np.stack([src, dst], 1), axis=0)
+
+
+def _mixed_delta(g, rng, n_del=30, n_add=40):
+    pairs = _unique_pairs(g)
+    sel = rng.choice(len(pairs), size=n_del, replace=False)
+    return (GraphDelta.delete_edges(pairs[sel, 0], pairs[sel, 1])
+            + GraphDelta.add_edges(rng.integers(0, g.n, n_add),
+                                   rng.integers(0, g.n, n_add),
+                                   etype=rng.integers(
+                                       0, g.n_edge_types, n_add),
+                                   weight=2.5))
+
+
+# ---------------------------------------------------------------------------
+# GraphDelta validation
+# ---------------------------------------------------------------------------
+
+def test_delta_validation(graph):
+    g = graph
+    with pytest.raises(DeltaValidationError):
+        GraphDelta.add_edges([0], [g.n]).validate(g)          # dst range
+    with pytest.raises(DeltaValidationError):
+        GraphDelta.add_edges([0], [1], etype=g.n_edge_types).validate(g)
+    with pytest.raises(DeltaValidationError):
+        GraphDelta.add_edges([0], [1], weight=0.0).validate(g)
+    with pytest.raises(DeltaValidationError):
+        GraphDelta.add_edges([0], [1],
+                             attr=len(g.edge_attr_table)).validate(g)
+    with pytest.raises(DeltaValidationError):
+        GraphDelta.update_weights([0], [1], -1.0).validate(g)
+    GraphDelta.add_edges([0, 1], [2, 3], etype=1).validate(g)  # clean
+
+
+def test_delete_missing_edge_is_error(sstore):
+    g = sstore.graph
+    src, dst = g.edge_list()
+    # a pair guaranteed absent: self-loops are dropped by the generator
+    with pytest.raises(DeltaValidationError):
+        sstore.apply(GraphDelta.delete_edges([5], [5]))
+    # all-or-nothing: the failed batch left no state behind
+    assert sstore.mutation_epoch == 0
+    assert not sstore._tomb.any()
+
+
+def test_delta_compose_and_counts():
+    d = (GraphDelta.add_edges([0], [1]) + GraphDelta.delete_edges([2], [3])
+         + GraphDelta.update_weights([4], [5], 2.0))
+    assert (d.n_adds, d.n_deletes, d.n_weight_updates) == (1, 1, 1)
+    assert not d.empty
+    assert set(d.touched_sources()) == {0, 2}
+
+
+# ---------------------------------------------------------------------------
+# Compaction equivalence (acceptance criterion a)
+# ---------------------------------------------------------------------------
+
+def test_compact_byte_equals_rebuild(graph, sstore):
+    rng = np.random.default_rng(0)
+    deltas = [_mixed_delta(graph, rng)]
+    # weight updates on surviving edges
+    pairs = _unique_pairs(graph)
+    upd = pairs[500:505]
+    deltas.append(GraphDelta.update_weights(upd[:, 0], upd[:, 1], 7.5))
+    for d in deltas:
+        sstore.apply(d)
+    ref = apply_delta_rebuild(graph, deltas)
+    comp = sstore.compact()
+    for name in ("indptr", "indices", "edge_type", "edge_weight",
+                 "edge_attr_index", "vertex_type", "vertex_attr_index"):
+        a, b = getattr(comp, name), getattr(ref, name)
+        assert a.dtype == b.dtype
+        assert np.array_equal(a, b), name
+
+
+def test_compact_mid_sequence_associative(graph):
+    """Compacting mid-stream must not change the final bytes (stable
+    lexsort is associative over the canonical arrival order)."""
+    rng = np.random.default_rng(1)
+    d1 = _mixed_delta(graph, rng)
+    s_a = StreamingStore(build_store(graph, 2))
+    s_a.apply(d1)
+    mid = s_a.compact()                       # compact between the deltas
+    d2 = _mixed_delta(mid, rng)
+    s_a.apply(d2)
+    final_a = s_a.compact()
+    final_b = apply_delta_rebuild(graph, [d1, d2])
+    for name in ("indptr", "indices", "edge_type", "edge_weight"):
+        assert np.array_equal(getattr(final_a, name),
+                              getattr(final_b, name)), name
+
+
+def test_live_degrees_and_importance(graph, sstore):
+    rng = np.random.default_rng(2)
+    delta = _mixed_delta(graph, rng)
+    sstore.apply(delta)
+    ref = apply_delta_rebuild(graph, [delta])
+    assert np.array_equal(sstore.live_out_degree(), ref.out_degree())
+    assert np.array_equal(sstore.live_in_degree(), ref.in_degree())
+    assert np.allclose(sstore.importance_k1(), importance(ref, 1))
+
+
+# ---------------------------------------------------------------------------
+# Sampler correctness over tombstones / overlay
+# ---------------------------------------------------------------------------
+
+def _alive_pairs(g, deltas):
+    ref = apply_delta_rebuild(g, deltas)
+    return set(zip(*map(list, ref.edge_list())))
+
+
+def test_no_delta_sampling_byte_identical(graph):
+    """A StreamingStore with no deltas is byte-transparent: every sampler
+    draws exactly what it draws on the wrapped static store."""
+    static = build_store(graph, 3)
+    stream = StreamingStore(build_store(graph, 3))
+    seeds = np.arange(40, dtype=np.int32)
+    a = NeighborhoodSampler(static, seed=9).sample(seeds, [5, 3])
+    b = NeighborhoodSampler(stream, seed=9).sample(seeds, [5, 3])
+    for x, y in zip(a.neighbors + a.masks, b.neighbors + b.masks):
+        assert np.array_equal(x, y)
+    hops = [HopSpec(fanout=4, etype=1), HopSpec(fanout=3, direction="in")]
+    a = MetapathSampler(static, seed=9).sample(seeds, hops)
+    b = MetapathSampler(stream, seed=9).sample(seeds, hops)
+    for x, y in zip(a.neighbors + a.masks, b.neighbors + b.masks):
+        assert np.array_equal(x, y)
+    assert np.array_equal(WalkSampler(static, seed=9).walk(seeds, 6),
+                          WalkSampler(stream, seed=9).walk(seeds, 6))
+
+
+@pytest.mark.parametrize("fanout", [3, 64])   # without / with replacement
+def test_deleted_edges_never_sampled(graph, sstore, fanout):
+    rng = np.random.default_rng(4)
+    pairs = _unique_pairs(graph)
+    sel = rng.choice(len(pairs), size=50, replace=False)
+    delta = GraphDelta.delete_edges(pairs[sel, 0], pairs[sel, 1])
+    sstore.apply(delta)
+    alive = _alive_pairs(graph, [delta])
+    deleted = set(map(tuple, pairs[sel].tolist()))
+    seeds = np.unique(pairs[sel, 0])[:30].astype(np.int32)
+    ns = NeighborhoodSampler(sstore, seed=1)
+    for _ in range(10):
+        b = ns.sample(seeds, [fanout])
+        nb = b.neighbors[0].reshape(len(seeds), fanout)
+        mk = b.masks[0].reshape(len(seeds), fanout)
+        for i, s in enumerate(seeds):
+            drawn = {(int(s), int(v))
+                     for v, m in zip(nb[i], mk[i]) if m}
+            assert not (drawn & deleted)
+            assert drawn <= alive
+
+
+def test_added_edges_are_sampled(graph, sstore):
+    # give one low-degree vertex a burst of new out-edges; they must appear
+    deg = graph.out_degree()
+    v = int(np.argmin(deg + (deg == 0) * 10**6))
+    new_dst = np.arange(100, 140, dtype=np.int32)
+    sstore.apply(GraphDelta.add_edges(np.full(40, v), new_dst, etype=2))
+    ns = NeighborhoodSampler(sstore, seed=0)
+    b = ns.sample(np.asarray([v], np.int32), [64])
+    drawn = set(b.neighbors[0][b.masks[0] > 0].tolist())
+    assert drawn & set(new_dst.tolist())
+    # typed hop restricted to the new edges' type sees ONLY matching edges
+    mp = MetapathSampler(sstore, seed=0)
+    bt = mp.sample(np.asarray([v], np.int32), [HopSpec(fanout=32, etype=2)])
+    typed = set(bt.neighbors[0][bt.masks[0] > 0].tolist())
+    assert typed and typed <= set(new_dst.tolist())
+
+
+def test_walk_freezes_on_fully_deleted_row(graph, sstore):
+    """Deleting a vertex's whole out-row turns it into a dead end for
+    walkers (with and without the walk running through the overlay)."""
+    deg = graph.out_degree()
+    v = int(np.argmax((deg > 0) & (deg <= 4)) )
+    nbrs = graph.neighbors(v)
+    sstore.apply(GraphDelta.delete_edges(np.full(len(nbrs), v), nbrs))
+    walks, lengths = WalkSampler(sstore, seed=2).walk(
+        np.asarray([v], np.int32), 5, return_lengths=True)
+    assert lengths[0] == 1 and (walks[0] == v).all()
+
+
+def test_weight_update_steers_edge_weight_strategy(graph, sstore):
+    """A weight-update delta must dominate edge_weight-strategy draws."""
+    # find a vertex with >= 4 distinct out-neighbors
+    for v in range(graph.n):
+        nbrs = np.unique(graph.neighbors(v))
+        if len(nbrs) >= 4:
+            break
+    target = int(nbrs[0])
+    sstore.apply(GraphDelta.update_weights([v], [target], 10_000.0))
+    mp = MetapathSampler(sstore, seed=3)
+    hop = [HopSpec(fanout=2, direction="out", etype=None,
+                   strategy="edge_weight")]
+    hits = 0
+    for _ in range(30):
+        b = mp.sample(np.asarray([v], np.int32), hop)
+        hits += int(target in set(b.neighbors[0].tolist()))
+    assert hits >= 28        # ~always includes the heavy edge
+
+
+def test_traverse_edge_pool_is_live(graph, sstore):
+    rng = np.random.default_rng(5)
+    pairs = _unique_pairs(graph)
+    sel = rng.choice(len(pairs), size=60, replace=False)
+    delta = GraphDelta.delete_edges(pairs[sel, 0], pairs[sel, 1])
+    sstore.apply(delta)
+    deleted = set(map(tuple, pairs[sel].tolist()))
+    mb = G(sstore).E().batch(512).values(seed=0, to_device=False)
+    got = set(zip(mb.edges[:, 0].tolist(), mb.edges[:, 1].tolist()))
+    assert not (got & deleted)
+
+
+# ---------------------------------------------------------------------------
+# GQL surface
+# ---------------------------------------------------------------------------
+
+def test_gql_update_step(graph, sstore):
+    d = GraphDelta.add_edges([1, 2], [3, 4])
+    mb = G(sstore).update(d).values()                 # update-only query
+    assert mb.roles == {} and sstore.mutation_epoch == 1
+    mb = G(sstore).update(d).E().batch(8).sample(3).values(seed=0)
+    assert sstore.mutation_epoch == 2 and "src" in mb.plans
+
+
+def test_gql_update_validation(graph, sstore):
+    static = build_store(graph, 2)
+    d = GraphDelta.add_edges([0], [1])
+    with pytest.raises(QueryValidationError):
+        G(static).update(d).compile()                 # immutable store
+    with pytest.raises(QueryValidationError):
+        G(sstore).V().batch(4).update(d).compile()    # update mid-chain
+    with pytest.raises(QueryValidationError):          # schema-invalid delta
+        G(sstore).update(GraphDelta.add_edges([0], [graph.n])).compile()
+    with pytest.raises(QueryValidationError):          # datasets use deltas=
+        G(sstore).update(d).E().batch(4).sample(3).dataset(steps_per_epoch=2)
+    assert sstore.mutation_epoch == 0                  # nothing committed
+
+
+def test_dataset_delta_stream(graph, sstore):
+    rng = np.random.default_rng(6)
+    pairs = _unique_pairs(graph)
+    sel = rng.choice(len(pairs), size=40, replace=False)
+    delta = GraphDelta.delete_edges(pairs[sel, 0], pairs[sel, 1])
+    dead = set(map(tuple, pairs[sel].tolist()))
+    ds = G(sstore).E().batch(64).sample(3).dataset(
+        steps_per_epoch=6, deltas={3: delta}, prefetch=2)
+    for i, mb in enumerate(ds):
+        got = set(zip(mb.edges[:, 0].tolist(), mb.edges[:, 1].tolist()))
+        if i < 3:
+            continue                 # pre-delta batches may see them
+        assert not (got & dead)
+    assert sstore.mutation_epoch == 1
+
+
+# ---------------------------------------------------------------------------
+# Live serving refresh (acceptance criterion b)
+# ---------------------------------------------------------------------------
+
+FAN = (4, 3)
+
+
+def _server_fixture(g, store):
+    spec = make_gnn("graphsage", d_in=g.vertex_attr_table.shape[1],
+                    d_hidden=16, d_out=16, fanouts=FAN)
+    tr = GNNTrainer(store, spec, lr=0.05, seed=0)
+    tr.train(3, batch_size=16)
+    traffic = Traffic((4, 9, 17, 30))
+    plan = compile_server(G(store).V().sample(FAN[0]).sample(FAN[1]), tr,
+                          traffic, max_buckets=3, seed=5)
+    return tr, plan
+
+
+def _trace(g, seed=7):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, g.n, size=s).astype(np.int32)
+            for s in (9, 17, 4, 30)]
+
+
+@pytest.mark.parametrize("policy,cap", [("off", 1), ("importance", 256)])
+def test_served_rows_byte_identical_after_delta(graph, policy, cap):
+    g = graph
+    sstore = StreamingStore(build_store(g, 3))
+    tr, plan = _server_fixture(g, sstore)
+    trace = _trace(g)
+    rng = np.random.default_rng(8)
+    srv = EmbeddingServer(plan, cache_policy=policy, cache_capacity=cap)
+    srv.serve_trace(trace)                       # warm pre-delta
+    delta = _mixed_delta(g, rng)
+    refresh = srv.apply_delta(delta)
+    # targeted re-freeze: far fewer rows than the full table (sparse delta)
+    assert 0 < refresh.refreshed_vertices < g.n // 4
+    rows = srv.serve_trace(trace)
+    snap = srv.metrics.snapshot()
+    srv.stop()
+    assert snap["deltas_applied"] == 1
+    assert len(snap["delta_epochs"]) == 1        # per-epoch hit attribution
+
+    # cold rebuild over the SAME mutated store: byte-identical rows
+    tr2 = GNNTrainer(sstore, tr.spec, lr=0.05, seed=0)
+    tr2.params, tr2.features = tr.params, tr.features
+    plan_cold = compile_server(
+        G(sstore).V().sample(FAN[0]).sample(FAN[1]), tr2,
+        Traffic((4, 9, 17, 30)), max_buckets=3, seed=5)
+    with EmbeddingServer(plan_cold, cache_policy="off",
+                         cache_capacity=1) as srv2:
+        rows_cold = srv2.serve_trace(trace)
+    for a, b in zip(rows, rows_cold):
+        assert np.array_equal(a, b)
+
+    # ... and over a COMPACTED from-scratch store (the paper's full rebuild)
+    g2 = sstore.compact()
+    store2 = StreamingStore(build_store(g2, 3))
+    tr3 = GNNTrainer(store2, tr.spec, lr=0.05, seed=0)
+    tr3.params, tr3.features = tr.params, tr.features
+    plan_c = compile_server(
+        G(store2).V().sample(FAN[0]).sample(FAN[1]), tr3,
+        Traffic((4, 9, 17, 30)), max_buckets=3, seed=5)
+    with EmbeddingServer(plan_c, cache_policy="off",
+                         cache_capacity=1) as srv3:
+        rows_c = srv3.serve_trace(trace)
+    for a, b in zip(rows, rows_c):
+        assert np.array_equal(a, b)
+
+
+def test_unchanged_rows_still_cache_hit(graph):
+    """Rows outside the delta's hop radius survive invalidation: serving
+    them again after the delta is a cache hit AND still correct."""
+    g = graph
+    sstore = StreamingStore(build_store(g, 3))
+    tr, plan = _server_fixture(g, sstore)
+    trace = _trace(g)
+    srv = EmbeddingServer(plan, cache_policy="lru", cache_capacity=4096)
+    srv.serve_trace(trace)
+    # a delta touching ONE low-degree vertex far from most of the trace
+    deg = g.out_degree()
+    v = int(np.argmax((deg > 0) & (deg <= 3)))
+    nbr = int(g.neighbors(v)[0])
+    refresh = srv.apply_delta(GraphDelta.delete_edges([v], [nbr]))
+    assert refresh.refreshed_vertices == 1
+    rows = srv.serve_trace(trace)
+    snap = srv.metrics.snapshot()
+    srv.stop()
+    # most of the second pass was served from cache
+    assert snap["delta_epochs"][0]["cache_dropped"] <= len(
+        refresh.invalidated)
+    assert snap["epoch_hit_rate"] > 0.5
+    # and every row (hit or recomputed) matches the cold mutated rebuild
+    tr2 = GNNTrainer(sstore, tr.spec, lr=0.05, seed=0)
+    tr2.params, tr2.features = tr.params, tr.features
+    plan_cold = compile_server(
+        G(sstore).V().sample(FAN[0]).sample(FAN[1]), tr2,
+        Traffic((4, 9, 17, 30)), max_buckets=3, seed=5)
+    with EmbeddingServer(plan_cold, cache_policy="off",
+                         cache_capacity=1) as srv2:
+        rows_cold = srv2.serve_trace(trace)
+    for a, b in zip(rows, rows_cold):
+        assert np.array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Incremental Evolving-GNN (acceptance criterion c)
+# ---------------------------------------------------------------------------
+
+def test_evolving_delta_stream_matches_rebuild():
+    from repro.core.models.evolving import (EvolvingConfig, EvolvingGNN,
+                                            make_dynamic_snapshots,
+                                            snapshot_deltas)
+    g = synthetic_ahg(300, avg_degree=5, seed=2)
+    base, deltas = snapshot_deltas(g, 3, seed=4)
+    # the delta stream realises the same snapshots as the mask path
+    snaps_ref = [base] + [apply_delta_rebuild(base, deltas[:i + 1])
+                          for i in range(len(deltas))]
+    for a, b in zip(snaps_ref, make_dynamic_snapshots(g, 3, seed=4)):
+        assert (sorted(zip(*map(list, a.edge_list())))
+                == sorted(zip(*map(list, b.edge_list()))))
+    cfg = EvolvingConfig(d=16, latent=8, sage_steps_per_snapshot=3)
+    l_rebuild = EvolvingGNN(snaps_ref, cfg, n_parts=2, seed=0).train(
+        inner_steps=4)
+    l_stream = EvolvingGNN.from_delta_stream(base, deltas, cfg, n_parts=2,
+                                             seed=0).train(inner_steps=4)
+    assert np.allclose(l_rebuild, l_stream)
+
+
+def test_executor_predating_compact_is_refused(graph, sstore):
+    ns = NeighborhoodSampler(sstore, weighted=True, seed=0)
+    ns.sample(np.arange(4, dtype=np.int32), [3])
+    sstore.apply(GraphDelta.add_edges([0], [1]))
+    sstore.compact()
+    with pytest.raises(RuntimeError):
+        ns.sample(np.arange(4, dtype=np.int32), [3])
