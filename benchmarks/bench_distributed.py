@@ -1,0 +1,211 @@
+"""Distributed execution benchmark: partition quality, sharded-store
+equivalence, and mesh-step scaling vs simulated device count.
+
+Three tables (the paper's §3.2/§5 distributed claims at our scale):
+
+  * **partition quality** — edge-cut fraction / balance / build time per
+    partitioner (the Algorithm 2 trade-off the four methods span), plus the
+    ShardedStore row metrics (fraction of rows complete on their home
+    shard; boundary vertex count) that decide cross-shard gather traffic;
+  * **sharded equivalence** — asserts the GQL→GNNTrainer path is
+    byte-equal on a ShardedStore vs the unsharded store (edge_cut + metis)
+    — a correctness gate, not a timing;
+  * **mesh scaling** — wall/step of the shard_map training step over
+    1/2/4 simulated devices (fixed global batch), compressed and
+    uncompressed all-reduce.
+
+Writes ``BENCH_distributed.json``; ``--smoke`` runs tiny sizes, adds the
+restart/reshard correctness checks, prints ``SMOKE OK`` and skips the JSON
+(the CI distributed smoke step runs this under
+``XLA_FLAGS=--xla_force_host_platform_device_count=4``).
+
+Run:  XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
+      PYTHONPATH=src python benchmarks/bench_distributed.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+# must land before the first jax import; in aggregate `run.py` mode jax is
+# already up (earlier benches) and we degrade to whatever devices exist
+if "jax" not in sys.modules and \
+        "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=4").strip()
+
+import numpy as np
+
+_BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
+                           "BENCH_distributed.json")
+
+try:
+    from .common import emit
+except ImportError:               # script mode: benchmarks/ is sys.path[0]
+    from common import emit
+
+
+def _spec(g, fanouts):
+    from repro.core import make_gnn
+    return make_gnn("graphsage", d_in=g.vertex_attr_table.shape[1],
+                    d_hidden=16, d_out=16, fanouts=fanouts)
+
+
+def partition_quality(n: int, n_parts: int) -> dict:
+    from repro.core.graph import synthetic_ahg
+    from repro.core.partition import PARTITIONERS, partition_graph
+    from repro.distributed import ShardedStore
+    from repro.core.cache import plan_cache
+
+    g = synthetic_ahg(n, avg_degree=8, seed=0)
+    plan = plan_cache(g, h=2)
+    out = {}
+    for method in sorted(PARTITIONERS):
+        t0 = time.perf_counter()
+        p = partition_graph(g, n_parts, method)
+        build_us = (time.perf_counter() - t0) * 1e6
+        st = ShardedStore(g, p, plan)
+        row = {
+            "edge_cut_fraction": round(p.edge_cut_fraction(g), 4),
+            "balance": round(p.balance(g), 3),
+            "partition_us": round(build_us, 1),
+            "row_complete_fraction": round(float(st.row_complete.mean()), 4),
+            "boundary_vertices": int(len(st.boundary)),
+            "max_row_shard_spread": int(st.row_shard_spread.max()),
+        }
+        out[method] = row
+        emit(f"distributed_partition_{method}_cut_fraction",
+             row["edge_cut_fraction"] * 1e6,
+             f"balance={row['balance']} boundary={row['boundary_vertices']}")
+    return out
+
+
+def sharded_equivalence(n: int, steps: int) -> dict:
+    """Correctness gate: byte-equal loss curves on sharded vs plain storage
+    for two partitioners (the acceptance contract)."""
+    from repro.core import build_store
+    from repro.core.gnn import GNNTrainer
+    from repro.core.graph import synthetic_ahg
+    from repro.distributed import ShardedStore
+
+    g = synthetic_ahg(n, avg_degree=6, seed=11)
+    spec = _spec(g, (4, 3))
+    out = {}
+    for method in ("edge_cut", "metis"):
+        plain = build_store(g, 3, partition_method=method)
+        sharded = ShardedStore.from_store(plain)
+        l_plain = GNNTrainer(plain, spec, seed=5).train(steps, batch_size=16)
+        l_shard = GNNTrainer(sharded, spec, seed=5).train(steps, batch_size=16)
+        assert l_plain == l_shard, f"sharded path diverged ({method})"
+        out[method] = {"byte_equal": True, "steps": steps,
+                       "final_loss": round(l_shard[-1], 6)}
+    emit("distributed_sharded_byte_equal", 1.0, "edge_cut+metis")
+    return out
+
+
+def mesh_scaling(n: int, steps: int, batch: int, shard_counts) -> dict:
+    import jax
+    from repro.core.graph import synthetic_ahg
+    from repro.distributed import DistGNNTrainer, build_sharded_store
+
+    g = synthetic_ahg(n, avg_degree=6, seed=11)
+    spec = _spec(g, (4, 3))
+    avail = len(jax.devices())
+    out = {"available_devices": avail, "global_batch": batch, "rows": []}
+    for d in shard_counts:
+        if d > avail or batch % d:
+            continue
+        store = build_sharded_store(g, max(d, 2), partition_method="edge_cut")
+        for compress in (False, True):
+            tr = DistGNNTrainer(store, spec, n_devices=d, seed=3,
+                                compress=compress)
+            tr.train(1, batch_size=batch)        # compile + warm
+            t0 = time.perf_counter()
+            losses = tr.train(steps, batch_size=batch, start_step=1)
+            us = (time.perf_counter() - t0) / steps * 1e6
+            tag = "int8" if compress else "fp32"
+            out["rows"].append({"devices": d, "allreduce": tag,
+                                "us_per_step": round(us, 1),
+                                "final_loss": round(losses[-1], 4)})
+            emit(f"distributed_step_d{d}_{tag}", us, f"batch={batch}")
+    return out
+
+
+def restart_and_reshard_checks(n: int, batch: int, tmp_base: str) -> dict:
+    """Smoke-grade FT assertions on the real multi-device step: injected
+    failure replays byte-identically; a checkpoint written on D devices
+    resumes on D/2."""
+    import shutil
+    import tempfile
+
+    import jax
+    from repro.core.graph import synthetic_ahg
+    from repro.distributed import DistGNNTrainer, build_sharded_store
+    from repro.ft import FailureInjector
+
+    g = synthetic_ahg(n, avg_degree=6, seed=11)
+    spec = _spec(g, (4, 3))
+    d = len(jax.devices())
+    while batch % d:
+        d -= 1
+    store = build_sharded_store(g, max(d, 2), partition_method="metis")
+    tmp = tempfile.mkdtemp(dir=tmp_base or None)
+    try:
+        a = DistGNNTrainer(store, spec, n_devices=d, seed=7, compress=True)
+        ra = a.train_supervised(8, batch, os.path.join(tmp, "a"),
+                                ckpt_every=3)
+        b = DistGNNTrainer(store, spec, n_devices=d, seed=7, compress=True)
+        rb = b.train_supervised(8, batch, os.path.join(tmp, "b"),
+                                ckpt_every=3,
+                                injector=FailureInjector(fail_at=(5,)))
+        assert rb.restarts == 1 and ra.losses == rb.losses, \
+            "restart trajectory diverged"
+        resharded = False
+        if d >= 2:
+            c = DistGNNTrainer(store, spec, n_devices=d // 2, seed=7,
+                               compress=True)
+            rc = c.train_supervised(10, batch, os.path.join(tmp, "b"),
+                                    ckpt_every=3)
+            assert rc.final_step == 10 and np.isfinite(rc.losses).all(), \
+                "resharded resume failed"
+            resharded = True
+        return {"devices": d, "restart_byte_identical": True,
+                "reshard_resume": resharded}
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+def run(smoke: bool = False) -> dict:
+    n = 600 if smoke else 20_000
+    steps = 4 if smoke else 8
+    batch = 16 if smoke else 64
+    record: dict = {}
+    record["partition"] = partition_quality(n, 4)
+    record["sharded_equivalence"] = sharded_equivalence(
+        min(n, 2_000), steps)
+    record["scaling"] = mesh_scaling(n, steps, batch, (1, 2, 4))
+    if smoke:
+        record["ft"] = restart_and_reshard_checks(n, batch, "")
+    if not smoke:
+        with open(_BENCH_JSON, "w") as f:
+            json.dump({"distributed": record}, f, indent=2)
+            f.write("\n")
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes + FT asserts, no JSON artifact (CI)")
+    args = ap.parse_args()
+    record = run(smoke=args.smoke)
+    print(json.dumps({"distributed": record}, indent=2))
+    if args.smoke:
+        print("SMOKE OK")
+
+
+if __name__ == "__main__":
+    main()

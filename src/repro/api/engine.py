@@ -104,6 +104,23 @@ class QueryExecutor:
         return cls(store, strategy=plan.strategy, neg_alpha=plan.neg_alpha,
                    seed=seed, importance=importance)
 
+    def reseed(self, seed: int) -> "QueryExecutor":
+        """Reset every sampler's RNG to the canonical offsets of ``seed``
+        (traverse=+0, neighborhood=+1, negative=+2, metapath=+3, walk=+4)
+        and the traverse shard cursor to 0 — after which the next executed
+        query is a pure function of (store, seed), exactly as a fresh
+        executor's would be.  This is what makes a distributed trainer's
+        step-``t`` minibatch replayable: checkpoint-restart re-derives the
+        same batches instead of persisting sampler state."""
+        self.seed = seed
+        self.traverse.rng = np.random.default_rng(seed)
+        self.traverse._cursor = 0
+        self.neighborhood.rng = np.random.default_rng(seed + 1)
+        self.negative.rng = np.random.default_rng(seed + 2)
+        self.metapath.rng = np.random.default_rng(seed + 3)
+        self.walk.rng = np.random.default_rng(seed + 4)
+        return self
+
     def check_compatible(self, plan: TraversalPlan) -> None:
         if plan.fanouts and plan.strategy != self.strategy:
             raise QueryValidationError(

@@ -103,6 +103,22 @@ class CheckpointManager:
             leaves.append(arr)
         return step, jax.tree_util.tree_unflatten(treedef, leaves)
 
+    def load_leaves(self, step: Optional[int] = None
+                    ) -> Tuple[int, dict, dict]:
+        """Raw load: ``(step, extra, {leaf_key: np.ndarray})`` with no shape
+        checks against a template — the entry point for resharding restores
+        whose target shapes legitimately differ from what was saved."""
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(path, "MANIFEST.json")) as f:
+            manifest = json.load(f)
+        leaves = {l["key"]: np.load(os.path.join(path, l["file"]))
+                  for l in manifest["leaves"]}
+        return step, manifest.get("extra", {}), leaves
+
     def restore_extra(self, step: Optional[int] = None) -> dict:
         if step is None:
             step = self.latest_step()

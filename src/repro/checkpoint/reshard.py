@@ -5,10 +5,18 @@ restore targets ANY mesh: ``load_into_sharding`` device_puts every leaf with
 the pspec resolved against the *new* mesh (divisibility fallback included via
 layers.pspec_tree).  This is the elastic-scaling path: train on (16,16),
 lose a pod slice, restart on (8,16) — same call, different mesh.
+
+The GNN mesh step keeps its data-parallel state with an explicit leading
+``[D, ...]`` device axis (see ``distributed.mesh_step``), so its elastic
+restore is a leading-axis *regroup* rather than a sharding migration:
+``restore_resharded`` tiles replicated leaves (params — all D copies are
+identical) and sum-preservingly regroups additive leaves (error-feedback
+residuals — what matters is the total residual the next all-reduce folds
+back in, which the regroup conserves exactly).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -33,3 +41,63 @@ def reshard_between_meshes(tree: PyTree, new_mesh: Mesh, pspecs: PyTree) -> PyTr
     """
     host = jax.tree.map(np.asarray, tree)
     return load_into_sharding(host, pspecs, new_mesh)
+
+
+def reshard_leading_axis(x: np.ndarray, d_new: int) -> np.ndarray:
+    """Sum-preserving regroup of a per-device additive buffer ``[D_old, ...]``
+    onto ``d_new`` devices: ``x.sum(0)`` is invariant.
+
+    Shrink by an integer factor groups consecutive devices' residuals by
+    summation; growth by an integer factor scatters the old residuals over
+    the new axis (new devices start at zero); incommensurate counts collapse
+    the whole residual onto device 0 — still exact, just momentarily
+    unbalanced until the next step redistributes it."""
+    x = np.asarray(x)
+    d_old = x.shape[0]
+    if d_old == d_new:
+        return x
+    if d_new <= 0:
+        raise ValueError(f"d_new must be positive, got {d_new}")
+    if d_old % d_new == 0:
+        return x.reshape(d_new, d_old // d_new, *x.shape[1:]).sum(axis=1)
+    out = np.zeros((d_new,) + x.shape[1:], x.dtype)
+    if d_new % d_old == 0:
+        out[:: d_new // d_old] = x
+    else:
+        out[0] = x.sum(axis=0)
+    return out
+
+
+def restore_resharded(ckpt, tree_like: PyTree, step: Optional[int] = None, *,
+                      additive_keys: Sequence[str] = ("ef",)
+                      ) -> Tuple[int, PyTree]:
+    """``CheckpointManager.restore`` tolerant of a changed leading device
+    axis (restart on a different device count).
+
+    Leaves whose saved shape matches the template load as-is.  Leaves
+    differing ONLY in the leading axis are resharded: top-level keys in
+    ``additive_keys`` (per-device additive state, e.g. error-feedback
+    residuals) go through :func:`reshard_leading_axis`; everything else is
+    treated as D identical replicas — device 0's copy is tiled to the new
+    count.  Any other mismatch still fails loudly."""
+    step, _extra, by_key = ckpt.load_leaves(step)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+    leaves = []
+    for path, leaf in flat:
+        parts = [str(getattr(q, "key", getattr(q, "idx", getattr(q, "name", q))))
+                 for q in path]
+        key = "/".join(parts)
+        arr = by_key[key]
+        want = tuple(np.shape(leaf))
+        if tuple(arr.shape) != want:
+            if not (arr.ndim == len(want) and arr.shape[1:] == want[1:]):
+                raise ValueError(
+                    f"cannot reshard leaf {key}: saved {arr.shape} vs "
+                    f"template {want} (only the leading device axis may "
+                    f"differ)")
+            if parts and parts[0] in additive_keys:
+                arr = reshard_leading_axis(arr, want[0])
+            else:
+                arr = np.broadcast_to(arr[:1], want).copy()
+        leaves.append(arr)
+    return step, jax.tree_util.tree_unflatten(treedef, leaves)

@@ -50,6 +50,19 @@ class Partition:
         counts = np.bincount(self.edge_assign, minlength=self.n_parts)
         return float(counts.max() / max(counts.mean(), 1e-9))
 
+    def shard_edge_ids(self, shard: int) -> np.ndarray:
+        """Global edge ids assigned to ``shard``, in CSR (ascending) order —
+        the slice a per-shard CSR is built from."""
+        return np.nonzero(self.edge_assign == shard)[0].astype(np.int64)
+
+    def boundary_vertices(self, g: AHG) -> np.ndarray:
+        """Vertices incident to at least one cut edge (endpoint homes differ)
+        — the set whose neighborhoods span shards and need cross-shard
+        gathers (paper §3.2's cache candidates)."""
+        src, dst = g.edge_list()
+        cut = self.vertex_home[src] != self.vertex_home[dst]
+        return np.unique(np.concatenate([src[cut], dst[cut]]))
+
 
 # ---------------------------------------------------------------------------
 # Partitioner implementations

@@ -141,6 +141,11 @@ class DistributedGraphStore:
     # key executor-side pool caches use to notice the graph moved)
     mutation_epoch = 0
 
+    # subclass hook: the per-worker shard class (``repro.distributed``'s
+    # ShardedStore swaps in a shard whose scalar reads hit per-shard CSR
+    # slices instead of the global graph)
+    shard_cls = GraphShard
+
     def __init__(self, g: AHG, partition: Partition, cache_plan: CachePlan,
                  attr_cache_capacity: int = 4096):
         self.graph = g
@@ -155,7 +160,8 @@ class DistributedGraphStore:
         cached = {int(v): g.neighbors(int(v)).copy()
                   for v in cache_plan.cached_vertices}
         self.shards = [
-            GraphShard(s, g, partition.vertex_home == s, cached, attr_cache_capacity)
+            type(self).shard_cls(s, g, partition.vertex_home == s, cached,
+                                 attr_cache_capacity)
             for s in range(partition.n_parts)
         ]
 

@@ -2,3 +2,8 @@ from .sharding import (batch_pspec, mesh_axis_sizes, shard_batch,  # noqa: F401
                        with_zero, ShardingPlan, make_plan)
 from .compression import (compress_int8, decompress_int8,  # noqa: F401
                           compressed_allreduce, ErrorFeedback)
+from .sharded_store import (ShardSlice, ShardedGraphShard,  # noqa: F401
+                            ShardedStore, GatherStats, build_sharded_store)
+from .mesh_step import (data_mesh, stack_device_plans, ef_init,  # noqa: F401
+                        make_mesh_step)
+from .trainer import DistGNNTrainer  # noqa: F401

@@ -1,0 +1,148 @@
+"""Device-mesh GNN training step: shard_map data parallelism over stacked
+minibatch plans, with int8-compressed gradient all-reduce.
+
+The single-host :class:`~repro.core.gnn.GNNTrainer` step embeds one joint
+plan and applies SGD.  Here the batch axis is a 1-D ``("data",)`` device
+mesh: each device embeds its own joint sub-plan (host-side sampling stacks
+``D`` plans into one ``[D, ...]`` pytree, padded to shared shape buckets),
+gradients cross the mesh through
+:func:`~repro.distributed.compression.compressed_allreduce` (int8 + error
+feedback; ``compress=False`` swaps in a plain fp32 ``pmean``), and every
+device applies the identical averaged update.
+
+State layout: params and EF buffers carry a leading ``[D, ...]`` device
+axis and live sharded over "data" — params are D identical replicas (the
+all-reduce keeps them in lock-step), EF is genuinely per-device state (each
+device's quantisation residual).  Keeping the replica axis explicit makes
+checkpoints self-describing for elastic restarts: restore onto a different
+device count is a leading-axis reshape (`checkpoint.reshard`), not a
+sharding-metadata migration.
+
+Numerics contract (documented for the equivalence tests): a D-device step is
+*distribution-equal*, not byte-equal, to the host reference — the psum
+reassociates the gradient sum across devices and int8 compression quantises
+per-device before reduction.  With ``compress=False`` the gap is float
+reassociation only (allclose-tight); byte-equality is the job of the
+ShardedStore storage layer, which feeds both paths identical batches.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import operators as ops
+from repro.core.gnn import GNNSpec, gnn_apply, unsup_loss
+from repro.core.operators import MinibatchPlan, plan_to_device
+
+__all__ = ["data_mesh", "stack_device_plans", "ef_init", "make_mesh_step"]
+
+PyTree = Any
+
+
+def data_mesh(n_devices: Optional[int] = None):
+    """1-D ``("data",)`` mesh over the first ``n_devices`` (default: all).
+    CPU runs simulate devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (set before jax
+    imports — the CI smoke step does this)."""
+    import jax
+
+    from repro.launch.mesh import compat_make_mesh
+    avail = jax.devices()
+    n = len(avail) if n_devices is None else int(n_devices)
+    if n > len(avail):
+        raise RuntimeError(
+            f"data_mesh({n}) needs {n} devices, have {len(avail)} — set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n} before "
+            f"importing jax")
+    return compat_make_mesh((n,), ("data",), devices=avail[:n])
+
+
+def stack_device_plans(plans: Sequence[MinibatchPlan]) -> Dict:
+    """Stack D per-device joint plans into one ``[D, ...]`` device pytree.
+
+    Per-device plans are ragged below the seed level (each device sampled
+    its own frontier), so deeper levels pad to the power-of-two bucket of
+    the across-device max — one jit shape bucket per step, same policy as
+    ``operators.auto_pad_sizes``.  Seed levels must already agree (the
+    static per-device batch layout)."""
+    assert plans, "need at least one device plan"
+    n_levels = {len(p.levels) for p in plans}
+    assert len(n_levels) == 1, f"ragged level counts {n_levels}"
+    seed_sizes = {len(p.levels[0]) for p in plans}
+    assert len(seed_sizes) == 1, f"per-device seed levels differ: {seed_sizes}"
+    targets = [seed_sizes.pop()]
+    for h in range(1, n_levels.pop()):
+        mx = max(len(p.levels[h]) for p in plans)
+        targets.append(1 << int(np.ceil(np.log2(max(mx, 1)))))
+    import jax
+    import jax.numpy as jnp
+    device = [plan_to_device(ops.pad_plan(p, targets)) for p in plans]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *device)
+
+
+def ef_init(params: PyTree, n_devices: int) -> PyTree:
+    """Zero error-feedback buffers, one residual per gradient leaf per
+    device: ``[D, *leaf.shape]`` fp32."""
+    import jax
+    import jax.numpy as jnp
+    return jax.tree.map(
+        lambda p: jnp.zeros((n_devices,) + np.shape(p), jnp.float32), params)
+
+
+def make_mesh_step(spec: GNNSpec, mesh, *, batch_per_device: int,
+                   n_negatives: int, lr: float = 1e-2, compress: bool = True):
+    """Build the jitted mesh step.
+
+    Returns ``step(params, ef, features, plan_stack) -> (params, ef, loss)``
+    where params/ef/plan leaves carry the leading ``[D, ...]`` axis (sharded
+    over "data"), features is replicated ``[n, F]``, and loss is the ``[D]``
+    post-pmean scalar per device (all equal; callers read ``loss[0]``)."""
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from .compression import ErrorFeedback, compressed_allreduce
+
+    b, q = int(batch_per_device), int(n_negatives)
+
+    def device_step(params_s, ef_s, features, plan_s):
+        # shard_map hands each device its [1, ...] block of the data axis
+        params = jax.tree.map(lambda x: x[0], params_s)
+        ef = jax.tree.map(lambda x: x[0], ef_s)
+        plan = jax.tree.map(lambda x: x[0], plan_s)
+
+        def loss_fn(p):
+            z = gnn_apply(spec, p, plan, features)
+            z_src, z_dst = z[:b], z[b:2 * b]
+            z_neg = z[2 * b:(2 + q) * b].reshape(b, q, -1)
+            return unsup_loss(z_src, z_dst, z_neg)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        if compress:
+            grads, ef_new = compressed_allreduce(
+                grads, ErrorFeedback(ef), "data")
+            ef = ef_new.buffers
+        else:
+            grads = jax.tree.map(lambda g: jax.lax.pmean(g, "data"), grads)
+        loss = jax.lax.pmean(loss, "data")
+        params = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+        return (jax.tree.map(lambda x: x[None], params),
+                jax.tree.map(lambda x: x[None], ef),
+                loss[None])
+
+    sharded = shard_map(
+        device_step, mesh=mesh,
+        in_specs=(P("data"), P("data"), P(), P("data")),
+        out_specs=(P("data"), P("data"), P("data")),
+        check_rep=False)
+    step = jax.jit(sharded)
+
+    def run(params, ef, features, plan_stack):
+        return step(params, ef, features, plan_stack)
+
+    run.mesh = mesh
+    run.compress = compress
+    return run

@@ -1,0 +1,296 @@
+"""ShardedStore — distributed graph storage over per-shard CSR slices.
+
+The base :class:`~repro.core.storage.DistributedGraphStore` partitions
+*ownership* (stats, caches, routing) but every shard still reads adjacency
+out of the one global CSR.  ``ShardedStore`` completes the paper's §3.2
+picture: the edge set is physically split by ``Partition.edge_assign`` into
+per-shard CSR **slices** (what each worker would hold in RAM), and every
+read is served from slices:
+
+  * scalar access-path reads (:class:`ShardedGraphShard`) hit the local
+    slice when the vertex's full row lives on its home shard, fall back to
+    the replicated neighbor cache, and otherwise pay an accounted
+    cross-shard **gather** that merges the row's segments from every shard
+    holding a piece of it (2-D partitions split single rows across workers;
+    source-partitioned methods only split rows of cache-missed vertices);
+  * the sampler-facing ``signature_view`` is *assembled* from the slices by
+    a global-edge-id merge.  The assembly is byte-equal to
+    :func:`~repro.core.graph.filtered_adjacency` of the unsharded graph —
+    the invariant that makes GQL queries (and hence ``GNNTrainer`` loss
+    curves) byte-identical on a ShardedStore under a fixed seed, for every
+    partitioner.  Property tests pin it.
+
+Vertex/edge *type* tables and the deduplicated attribute tables stay
+replicated metadata (they are O(n) id arrays, not adjacency), matching the
+paper's separation of structure from attributes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.cache import CachePlan, plan_cache
+from repro.core.graph import AHG
+from repro.core.partition import Partition, partition_graph
+from repro.core.storage import (DistributedGraphStore, GraphShard,
+                                StaticSignatureView)
+
+__all__ = ["ShardSlice", "ShardedGraphShard", "ShardedStore", "GatherStats",
+           "build_sharded_store"]
+
+
+@dataclasses.dataclass
+class ShardSlice:
+    """One worker's physical edge slice: a CSR over the FULL vertex id space
+    holding only the edges ``Partition.edge_assign`` placed here.  ``eids``
+    maps each local slot back to its global CSR slot (ascending — slices are
+    cut from the global CSR in order, so per-row segments stay eid-sorted).
+    """
+
+    shard_id: int
+    indptr: np.ndarray     # [n+1] int64
+    indices: np.ndarray    # [m_s] int32 dst
+    eids: np.ndarray       # [m_s] int64 global edge id
+    src: np.ndarray        # [m_s] int32 src (row of each slot)
+
+    @property
+    def m(self) -> int:
+        return len(self.indices)
+
+    def row(self, v: int) -> Tuple[np.ndarray, np.ndarray]:
+        lo, hi = int(self.indptr[v]), int(self.indptr[v + 1])
+        return self.indices[lo:hi], self.eids[lo:hi]
+
+
+@dataclasses.dataclass
+class GatherStats:
+    """Cross-shard gather accounting (the §3.2 cost the 4 partitioners trade
+    off): how many requested rows were whole on one shard vs. merged from
+    several, and how many remote row-segments moved."""
+
+    local_rows: int = 0        # served entirely by the vertex's home slice
+    cross_rows: int = 0        # merged from >= 2 shards' segments
+    remote_segments: int = 0   # segments fetched from non-home shards
+
+    def reset(self) -> None:
+        self.local_rows = self.cross_rows = self.remote_segments = 0
+
+
+class ShardedGraphShard(GraphShard):
+    """A worker whose scalar reads come from its own CSR slice.
+
+    Same paper access path as the base class — local row → replicated
+    neighbor cache → remote — but "local" now means *this shard's slice
+    holds the complete row*, and "remote" is a real cross-shard gather that
+    merges row segments (not a read of a global CSR that a worker would not
+    have).
+    """
+
+    def neighbors(self, v: int, store: "ShardedStore") -> np.ndarray:
+        if self.owned_mask[v] and store.row_complete[v]:
+            self.stats.local_reads += 1
+            return store.slices[self.shard_id].row(v)[0]
+        hit = self.cached_neighbors.get(int(v))
+        if hit is not None:
+            self.stats.cache_reads += 1
+            return hit
+        self.stats.remote_reads += 1
+        return store.remote_neighbors(v)
+
+    def neighbors_batch(self, vs: np.ndarray, store: "ShardedStore"
+                        ) -> List[np.ndarray]:
+        vs = np.asarray(vs)
+        return [self.neighbors(int(v), store) for v in vs]
+
+
+class ShardedStore(DistributedGraphStore):
+    """A store whose adjacency physically lives in per-shard CSR slices."""
+
+    shard_cls = ShardedGraphShard
+
+    def __init__(self, g: AHG, partition: Partition, cache_plan: CachePlan,
+                 attr_cache_capacity: int = 4096):
+        super().__init__(g, partition, cache_plan, attr_cache_capacity)
+        src_all, _ = g.edge_list()
+        self.slices: List[ShardSlice] = []
+        for s in range(partition.n_parts):
+            eids = partition.shard_edge_ids(s)
+            src_s = src_all[eids].astype(np.int32)
+            indptr = np.zeros(g.n + 1, np.int64)
+            np.cumsum(np.bincount(src_s, minlength=g.n), out=indptr[1:])
+            self.slices.append(ShardSlice(
+                s, indptr, g.indices[eids].astype(np.int32), eids, src_s))
+        # rows whose every out-edge landed on the row's home shard can be
+        # read without any cross-shard traffic (always true for the
+        # source-partitioned methods; a strict subset under two_d)
+        on_home = partition.edge_assign == partition.vertex_home[src_all]
+        self.row_complete = np.ones(g.n, bool)
+        self.row_complete[src_all[~on_home]] = False
+        # per-row shard spread of the out-adjacency (2-D property check:
+        # bounded by pc; 1 for source-partitioned rows)
+        spread = np.zeros(g.n, np.int32)
+        for sl in self.slices:
+            spread += (np.diff(sl.indptr) > 0).astype(np.int32)
+        self.row_shard_spread = spread
+        self.boundary = partition.boundary_vertices(g)
+        self.gather_stats = GatherStats()
+        self._assembled_cache: Dict[str, Tuple] = {}
+
+    # ------------------------------------------------------------- builders
+    @classmethod
+    def from_store(cls, base: DistributedGraphStore) -> "ShardedStore":
+        """Shard an already-built store (reuses its partition + cache plan)."""
+        cap = base.shards[0].v_attr_cache.capacity if base.shards else 4096
+        return cls(base.graph, base.partition, base.cache_plan, cap)
+
+    # ------------------------------------------------------ cross-shard path
+    def remote_neighbors(self, v: int) -> np.ndarray:
+        """The 'RPC': merge the row's segments from every shard holding one
+        (global-eid order — identical to the unsharded row)."""
+        segs = [(sl.shard_id,) + sl.row(v) for sl in self.slices
+                if sl.indptr[v + 1] > sl.indptr[v]]
+        home = int(self.partition.vertex_home[v])
+        self.gather_stats.remote_segments += sum(
+            1 for sid, _, _ in segs if sid != home)
+        if not segs:
+            return np.zeros(0, np.int32)
+        if len(segs) == 1:
+            return segs[0][1]
+        self.gather_stats.cross_rows += 1
+        nbr = np.concatenate([s[1] for s in segs])
+        eid = np.concatenate([s[2] for s in segs])
+        return nbr[np.argsort(eid, kind="stable")]
+
+    def gather_rows(self, vs: np.ndarray
+                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Vectorised cross-shard gather of the out-rows of ``vs``: padded
+        ``(cand, cmask, ceids)`` each ``[R, Dmax]``, slots in global CSR
+        order — the executor-side primitive for boundary-vertex frontiers.
+        """
+        vs = np.asarray(vs, np.int64)
+        home = self.partition.vertex_home[vs]
+        rows_l: List[np.ndarray] = []
+        nbr_l: List[np.ndarray] = []
+        eid_l: List[np.ndarray] = []
+        seg_shard: List[np.ndarray] = []
+        for sl in self.slices:
+            lo = sl.indptr[vs]
+            deg = sl.indptr[vs + 1] - lo
+            total = int(deg.sum())
+            if not total:
+                continue
+            pos = (np.repeat(lo, deg)
+                   + np.arange(total) - np.repeat(np.cumsum(deg) - deg, deg))
+            rid = np.repeat(np.arange(len(vs)), deg)
+            rows_l.append(rid)
+            nbr_l.append(sl.indices[pos])
+            eid_l.append(sl.eids[pos])
+            seg_shard.append(np.full(total, sl.shard_id, np.int32))
+        if not rows_l:
+            cand = np.zeros((len(vs), 1), np.int32)
+            return cand, np.zeros((len(vs), 1), bool), np.zeros((len(vs), 1), np.int64)
+        rid = np.concatenate(rows_l)
+        nbr = np.concatenate(nbr_l)
+        eid = np.concatenate(eid_l)
+        shard = np.concatenate(seg_shard)
+        order = np.lexsort((eid, rid))       # per-row global CSR order
+        rid, nbr, eid, shard = rid[order], nbr[order], eid[order], shard[order]
+        # accounting: a row is local iff all its slots sit on its home shard
+        off_home = shard != home[rid]
+        has_remote = np.zeros(len(vs), bool)
+        has_remote[rid[off_home]] = True
+        served = np.zeros(len(vs), bool)
+        served[rid] = True
+        self.gather_stats.local_rows += int((served & ~has_remote).sum())
+        self.gather_stats.cross_rows += int(has_remote.sum())
+        self.gather_stats.remote_segments += len(
+            np.unique(rid[off_home] * self.n_shards + shard[off_home]))
+        counts = np.bincount(rid, minlength=len(vs))
+        d_max = max(int(counts.max()), 1)
+        col = np.arange(len(rid)) - np.repeat(np.cumsum(counts) - counts, counts)
+        cand = np.zeros((len(vs), d_max), np.int32)
+        ceid = np.zeros((len(vs), d_max), np.int64)
+        cmask = np.zeros((len(vs), d_max), bool)
+        cand[rid, col] = nbr
+        ceid[rid, col] = eid
+        cmask[rid, col] = True
+        return cand, cmask, ceid
+
+    # ------------------------------------------------- assembled sampler view
+    def _assemble(self, direction: str) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Merge all slices into the full (indptr, indices, eids) of one
+        direction.  Out: concat + stable sort by global eid reproduces the
+        global CSR exactly; in: lexsort (eid within dst) reproduces the
+        stable-argsort in-adjacency of ``AHG.in_adjacency`` exactly."""
+        hit = self._assembled_cache.get(direction)
+        if hit is not None:
+            return hit
+        src = np.concatenate([sl.src for sl in self.slices]) \
+            if self.slices else np.zeros(0, np.int32)
+        dst = np.concatenate([sl.indices for sl in self.slices]) \
+            if self.slices else np.zeros(0, np.int32)
+        eid = np.concatenate([sl.eids for sl in self.slices]) \
+            if self.slices else np.zeros(0, np.int64)
+        n = self.graph.n
+        if direction == "out":
+            order = np.argsort(eid, kind="stable")
+            row, nbr = src[order], dst[order]
+        elif direction == "in":
+            order = np.lexsort((eid, dst))
+            row, nbr = dst[order], src[order]
+        else:
+            raise ValueError(f"direction must be 'out' or 'in', got {direction!r}")
+        indptr = np.zeros(n + 1, np.int64)
+        np.cumsum(np.bincount(row, minlength=n), out=indptr[1:])
+        out = (indptr, nbr.astype(np.int32), eid[order])
+        self._assembled_cache[direction] = out
+        return out
+
+    def signature_view(self, direction: str = "out",
+                       vtype: Optional[int] = None,
+                       etype: Optional[int] = None) -> StaticSignatureView:
+        """Same contract as the base class, but the CSR is assembled from the
+        per-shard slices (then type-filtered with the identical rules as
+        ``filtered_adjacency``).  ``patched=False``: samplers keep their
+        vectorised fast paths, and the bytes match the unsharded view."""
+        key = (direction, vtype, etype)
+        hit = self._sig_views.get(key)
+        if hit is None:
+            indptr, indices, eids = self._assemble(direction)
+            if vtype is not None or etype is not None:
+                g = self.graph
+                keep = np.ones(len(indices), bool)
+                if etype is not None:
+                    keep &= g.edge_type[eids] == etype
+                if vtype is not None:
+                    keep &= g.vertex_type[indices] == vtype
+                row = np.repeat(np.arange(g.n, dtype=np.int64),
+                                np.diff(indptr))[keep]
+                indptr = np.zeros(g.n + 1, np.int64)
+                np.cumsum(np.bincount(row, minlength=g.n), out=indptr[1:])
+                indices, eids = indices[keep], eids[keep]
+            hit = StaticSignatureView(indptr, indices, eids, patched=False)
+            self._sig_views[key] = hit
+        return hit
+
+    def reset_stats(self) -> None:
+        super().reset_stats()
+        self.gather_stats.reset()
+
+
+def build_sharded_store(
+    g: AHG,
+    n_parts: int,
+    *,
+    partition_method: str = "edge_cut",
+    cache_depth: int = 2,
+    thresholds: Optional[Dict[int, float]] = None,
+    attr_cache_capacity: int = 4096,
+    seed: int = 0,
+) -> ShardedStore:
+    """``build_store`` counterpart producing physically sliced shards."""
+    part = partition_graph(g, n_parts, partition_method, seed=seed)
+    plan = plan_cache(g, h=cache_depth, thresholds=thresholds)
+    return ShardedStore(g, part, plan, attr_cache_capacity)

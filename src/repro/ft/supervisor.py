@@ -59,15 +59,25 @@ class Supervisor:
 
     def run(self, *, state: PyTree, step_fn: Callable[[PyTree, int], Tuple[PyTree, float]],
             n_steps: int, injector: Optional[FailureInjector] = None,
-            on_restore: Optional[Callable[[PyTree], PyTree]] = None) -> TrainResult:
-        """state must be a pytree (params+opt+rng...); step_fn pure."""
+            on_restore: Optional[Callable[[PyTree], PyTree]] = None,
+            restore_fn: Optional[Callable[[PyTree, Optional[int]],
+                                          Tuple[int, PyTree]]] = None
+            ) -> TrainResult:
+        """state must be a pytree (params+opt+rng...); step_fn pure.
+
+        ``restore_fn(state_like, step) -> (step, state)`` replaces the plain
+        ``ckpt.restore`` for both auto-resume and failure rollback — the
+        hook elastic restores use (e.g. ``checkpoint.reshard``'s
+        device-count-tolerant load, when the restarted incarnation runs on a
+        different mesh than the one that wrote the checkpoint)."""
+        restore = restore_fn or self.ckpt.restore
         losses: List[float] = []
         restarts = 0
         step = 0
         # resume if a checkpoint exists (auto-resume contract)
         latest = self.ckpt.latest_step()
         if latest is not None:
-            step, state = self.ckpt.restore(state, latest)
+            step, state = restore(state, latest)
             if on_restore:
                 state = on_restore(state)
         while step < n_steps:
@@ -84,7 +94,7 @@ class Supervisor:
                 if restarts > self.max_restarts:
                     raise
                 restore_step = self.ckpt.latest_step()
-                step, state = self.ckpt.restore(state, restore_step)
+                step, state = restore(state, restore_step)
                 if on_restore:
                     state = on_restore(state)
                 # drop losses recorded past the checkpoint (they are replayed)

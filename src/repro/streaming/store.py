@@ -99,26 +99,40 @@ class OverlayView:
         the overlay or after :meth:`StreamingStore.compact` — the invariant
         the hash-keyed frozen-sampling refresh relies on."""
         rows = np.asarray(rows, np.int64)
-        nbrs: List[np.ndarray] = []
-        eids: List[np.ndarray] = []
-        for r in rows:
-            lo, hi = int(self.indptr[r]), int(self.indptr[r + 1])
-            keep = ~self.dead[lo:hi]
-            bn, be = self.indices[lo:hi][keep], self.eids[lo:hi][keep]
-            olo, ohi = int(self.ov_indptr[r]), int(self.ov_indptr[r + 1])
-            nbr = np.concatenate([bn, self.ov_nbr[olo:ohi]])
-            eid = np.concatenate([be, self.ov_eids[olo:ohi]])
-            order = np.argsort(nbr, kind="stable")
-            nbrs.append(nbr[order].astype(np.int32))
-            eids.append(eid[order].astype(np.int64))
-        d_max = max([len(x) for x in nbrs] + [1])
+        # one flat pass instead of a python loop per row: gather every base
+        # slot of every row (repeat/cumsum position trick), drop tombstones,
+        # append the overlay slots, and lexsort by (row, neighbor).  The sort
+        # is stable and base slots precede overlay slots in the flat layout,
+        # so equal-neighbor ties keep the exact order the old per-row
+        # ``argsort(kind="stable")`` produced (base CSR order, then overlay
+        # arrival order) — the frozen-sampling hash keys depend on it.
+        lo = self.indptr[rows]
+        deg = self.indptr[rows + 1] - lo
+        total = int(deg.sum())
+        pos = (np.repeat(lo, deg)
+               + np.arange(total) - np.repeat(np.cumsum(deg) - deg, deg))
+        rid_b = np.repeat(np.arange(len(rows)), deg)
+        keep = ~self.dead[pos]
+        olo = self.ov_indptr[rows]
+        odeg = self.ov_indptr[rows + 1] - olo
+        ototal = int(odeg.sum())
+        opos = (np.repeat(olo, odeg)
+                + np.arange(ototal) - np.repeat(np.cumsum(odeg) - odeg, odeg))
+        rid = np.concatenate([rid_b[keep], np.repeat(np.arange(len(rows)), odeg)])
+        nbr = np.concatenate([self.indices[pos[keep]], self.ov_nbr[opos]])
+        eid = np.concatenate([self.eids[pos[keep]], self.ov_eids[opos]])
+        order = np.lexsort((nbr, rid))
+        rid, nbr, eid = rid[order], nbr[order], eid[order]
+        counts = np.bincount(rid, minlength=len(rows))
+        d_max = max(int(counts.max()) if len(counts) else 0, 1)
+        col = np.arange(len(rid)) - np.repeat(np.cumsum(counts) - counts,
+                                              counts)
         cand = np.zeros((len(rows), d_max), np.int32)
         ceid = np.zeros((len(rows), d_max), np.int64)
         cmask = np.zeros((len(rows), d_max), bool)
-        for i, (nbr, eid) in enumerate(zip(nbrs, eids)):
-            cand[i, :len(nbr)] = nbr
-            ceid[i, :len(nbr)] = eid
-            cmask[i, :len(nbr)] = True
+        cand[rid, col] = nbr
+        ceid[rid, col] = eid
+        cmask[rid, col] = True
         return cand, cmask, ceid
 
     def all_neighbors(self, rows: np.ndarray) -> np.ndarray:

@@ -1,0 +1,264 @@
+"""Distributed execution subsystem (paper §3.1/§3.2 distributed storage +
+data-parallel training): ShardedStore, mesh step, FT restart, reshard.
+
+Equality contracts under test (documented in README "Distributed
+execution"):
+
+  * STORAGE is byte-equal: a ShardedStore presents bit-identical signature
+    views to the unsharded store, so the full GQL→GNNTrainer path produces
+    byte-identical loss curves on it (asserted for edge_cut AND metis).
+  * COMPUTE is distribution-equal: the D-device shard_map step reassociates
+    the gradient mean across devices (and quantises when compress=True), so
+    it is compared to the host reference with allclose, not ==.
+  * RESTART is byte-identical: batches are a pure function of (store, seed,
+    step), so checkpoint-restart replays the uninterrupted trajectory
+    exactly — including with int8 EF compression on (EF buffers are part of
+    the checkpointed state).
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.gnn import GNNTrainer, make_gnn
+from repro.core.graph import filtered_adjacency, synthetic_ahg
+from repro.core.partition import PARTITIONERS
+from repro.core.storage import build_store
+from repro.distributed import ShardedStore, build_sharded_store
+
+
+@pytest.fixture(scope="module")
+def tiny_graph():
+    return synthetic_ahg(500, avg_degree=5, seed=11)
+
+
+@pytest.fixture(scope="module")
+def spec(tiny_graph):
+    return make_gnn("graphsage", d_in=tiny_graph.vertex_attr_table.shape[1],
+                    d_hidden=16, d_out=16, fanouts=(4, 3))
+
+
+# ---------------------------------------------------------------------------
+# ShardedStore: slices, assembled views, cross-shard gathers
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", sorted(PARTITIONERS))
+def test_slices_partition_the_edge_set(method, small_graph):
+    st = build_sharded_store(small_graph, 4, partition_method=method)
+    eids = np.concatenate([sl.eids for sl in st.slices])
+    assert len(eids) == small_graph.m
+    assert len(np.unique(eids)) == small_graph.m   # each edge exactly once
+    for sl in st.slices:
+        assert np.array_equal(sl.eids, np.sort(sl.eids))  # CSR order kept
+
+
+@pytest.mark.parametrize("method", sorted(PARTITIONERS))
+@pytest.mark.parametrize("direction", ["out", "in"])
+def test_assembled_views_byte_equal(method, direction, small_graph):
+    st = build_sharded_store(small_graph, 4, partition_method=method)
+    for vt, et in ((None, None), (1, None), (None, 1), (0, 2)):
+        ref = filtered_adjacency(small_graph, direction, vt, et,
+                                 return_edge_ids=True)
+        got = st.signature_view(direction, vt, et)
+        assert not got.patched
+        assert np.array_equal(ref[0], got.indptr)
+        assert np.array_equal(ref[1], got.indices)
+        assert np.array_equal(ref[2], got.eids)
+
+
+@pytest.mark.parametrize("method", sorted(PARTITIONERS))
+def test_gather_rows_matches_global(method, tiny_graph):
+    g = tiny_graph
+    st = build_sharded_store(g, 4, partition_method=method)
+    vs = np.random.default_rng(0).integers(0, g.n, 64)
+    cand, cmask, ceid = st.gather_rows(vs)
+    for i, v in enumerate(vs):
+        assert np.array_equal(cand[i][cmask[i]], g.neighbors(int(v)))
+        assert np.array_equal(ceid[i][cmask[i]],
+                              np.arange(g.indptr[v], g.indptr[v + 1]))
+
+
+def test_two_d_rows_span_shards(tiny_graph):
+    """two_d assigns by (row(u), col(v)) so most rows split across shards —
+    the case that forces real cross-shard merges (and the 2-D bound: a row
+    touches at most pc shards)."""
+    st = build_sharded_store(tiny_graph, 4, partition_method="two_d")
+    assert st.row_complete.mean() < 0.5
+    assert st.row_shard_spread.max() > 1
+    assert st.row_shard_spread.max() <= 2          # pc = 2 for n_parts = 4
+    st.reset_stats()
+    st.gather_rows(np.arange(100))
+    assert st.gather_stats.cross_rows > 0
+
+
+@pytest.mark.parametrize("method", sorted(PARTITIONERS))
+def test_scalar_access_path(method, tiny_graph):
+    g = tiny_graph
+    st = build_sharded_store(g, 3, partition_method=method)
+    rng = np.random.default_rng(1)
+    for v in rng.integers(0, g.n, 32):
+        for sh in st.shards:
+            assert np.array_equal(sh.neighbors(int(v), st),
+                                  g.neighbors(int(v)))
+    stats = st.stats()
+    assert stats.local_reads > 0 and stats.total == 32 * st.n_shards
+
+
+def test_boundary_vertices(tiny_graph):
+    st = build_sharded_store(tiny_graph, 3, partition_method="metis")
+    p = st.partition
+    src, dst = tiny_graph.edge_list()
+    cut = p.vertex_home[src] != p.vertex_home[dst]
+    assert set(st.boundary) == set(np.concatenate([src[cut], dst[cut]]))
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: sharded GQL→trainer path byte-equal for >= 2 partitioners
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["edge_cut", "metis"])
+def test_trainer_byte_equal_on_sharded_store(method, tiny_graph, spec):
+    plain = build_store(tiny_graph, 3, partition_method=method)
+    sharded = ShardedStore.from_store(plain)
+    l_plain = GNNTrainer(plain, spec, seed=5).train(4, batch_size=16)
+    l_shard = GNNTrainer(sharded, spec, seed=5).train(4, batch_size=16)
+    assert l_plain == l_shard    # byte-equal, not allclose
+
+
+# ---------------------------------------------------------------------------
+# Mesh step (1 device here — tests must not force XLA device splitting; the
+# 4-device path runs in test_multi_device_smoke via a subprocess)
+# ---------------------------------------------------------------------------
+
+def test_mesh_step_matches_host_reference(tiny_graph, spec):
+    from repro.distributed import DistGNNTrainer
+    store = build_sharded_store(tiny_graph, 3, partition_method="metis")
+    tr = DistGNNTrainer(store, spec, n_devices=1, seed=3, compress=False)
+    ref = tr.host_reference(4, batch_size=16)
+    got = tr.train(4, batch_size=16)
+    assert np.allclose(got, ref, rtol=1e-5, atol=1e-6)
+
+
+def test_compressed_step_stays_close(tiny_graph, spec):
+    from repro.distributed import DistGNNTrainer
+    store = build_sharded_store(tiny_graph, 3, partition_method="metis")
+    a = DistGNNTrainer(store, spec, n_devices=1, seed=3, compress=False)
+    b = DistGNNTrainer(store, spec, n_devices=1, seed=3, compress=True)
+    la = a.train(6, batch_size=16)
+    lb = b.train(6, batch_size=16)
+    # int8+EF quantisation: same trajectory within quantisation noise
+    assert np.allclose(la, lb, rtol=5e-3, atol=5e-3)
+
+
+def test_deterministic_batches(tiny_graph, spec):
+    """The restart contract's foundation: step-t plans depend only on
+    (store, seed, t)."""
+    from repro.distributed import DistGNNTrainer
+    store = build_sharded_store(tiny_graph, 3, partition_method="edge_cut")
+    tr = DistGNNTrainer(store, spec, n_devices=1, seed=9)
+    import jax
+    a = tr.plans_for_step(7, 16)
+    tr.train(2, batch_size=16)            # consume RNG in between
+    b = tr.plans_for_step(7, 16)
+    for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# Fault tolerance: injected failure -> byte-identical trajectory (satellite)
+# ---------------------------------------------------------------------------
+
+def test_restart_byte_identical(tiny_graph, spec, tmp_path):
+    from repro.distributed import DistGNNTrainer
+    from repro.ft import FailureInjector
+    store = build_sharded_store(tiny_graph, 3, partition_method="metis")
+    a = DistGNNTrainer(store, spec, n_devices=1, seed=7, compress=True)
+    ra = a.train_supervised(12, 16, str(tmp_path / "a"), ckpt_every=5)
+    b = DistGNNTrainer(store, spec, n_devices=1, seed=7, compress=True)
+    rb = b.train_supervised(12, 16, str(tmp_path / "b"), ckpt_every=5,
+                            injector=FailureInjector(fail_at=(8,)))
+    assert rb.restarts == 1
+    assert ra.losses == rb.losses         # byte-identical incl. EF state
+    assert ra.final_step == rb.final_step == 12
+
+
+def test_auto_resume_continues(tiny_graph, spec, tmp_path):
+    from repro.distributed import DistGNNTrainer
+    store = build_sharded_store(tiny_graph, 3, partition_method="metis")
+    d = str(tmp_path / "ck")
+    a = DistGNNTrainer(store, spec, n_devices=1, seed=4)
+    a.train_supervised(6, 16, d, ckpt_every=3)
+    # new process incarnation: fresh trainer, same seed — resumes at step 6
+    b = DistGNNTrainer(store, spec, n_devices=1, seed=4)
+    rb = b.train_supervised(10, 16, d, ckpt_every=3)
+    assert rb.final_step == 10 and len(rb.losses) == 4
+
+
+# ---------------------------------------------------------------------------
+# Reshard: restore across a changed device count
+# ---------------------------------------------------------------------------
+
+def test_reshard_leading_axis_preserves_sums():
+    from repro.checkpoint.reshard import reshard_leading_axis
+    x = np.arange(24, dtype=np.float32).reshape(4, 3, 2)
+    for d_new in (1, 2, 4, 8, 3):
+        y = reshard_leading_axis(x, d_new)
+        assert y.shape == (d_new, 3, 2)
+        np.testing.assert_allclose(y.sum(0), x.sum(0))
+    with pytest.raises(ValueError):
+        reshard_leading_axis(x, 0)
+
+
+def test_restore_resharded_params_vs_ef(tmp_path):
+    from repro.checkpoint import CheckpointManager
+    from repro.checkpoint.reshard import restore_resharded
+    ckpt = CheckpointManager(str(tmp_path))
+    state = {"params": {"w": np.tile(np.arange(3.0), (2, 1))},   # 2 replicas
+             "ef": {"w": np.array([[1.0, 2, 3], [4, 5, 6]])}}
+    ckpt.save(5, state)
+    template = {"params": {"w": np.zeros((4, 3))},
+                "ef": {"w": np.zeros((4, 3))}}
+    step, got = restore_resharded(ckpt, template, additive_keys=("ef",))
+    assert step == 5
+    # params: replica 0 tiled to the new count
+    assert np.array_equal(got["params"]["w"], np.tile(np.arange(3.0), (4, 1)))
+    # ef: total residual preserved
+    np.testing.assert_allclose(got["ef"]["w"].sum(0), [5.0, 7.0, 9.0])
+    # non-leading-axis mismatch still fails loudly
+    bad = {"params": {"w": np.zeros((2, 7))}, "ef": {"w": np.zeros((2, 3))}}
+    with pytest.raises(ValueError):
+        restore_resharded(ckpt, bad)
+
+
+def test_elastic_resume_across_device_count(tiny_graph, spec, tmp_path):
+    """Train on 1 'device', resume the checkpoint on 1 after resharding the
+    saved 1-axis state through the resharding path (in-process we only have
+    one real device; the 4->2 version runs in the subprocess smoke)."""
+    from repro.distributed import DistGNNTrainer
+    store = build_sharded_store(tiny_graph, 3, partition_method="edge_cut")
+    d = str(tmp_path / "ck")
+    a = DistGNNTrainer(store, spec, n_devices=1, seed=2, compress=True)
+    a.train_supervised(6, 16, d, ckpt_every=3)
+    b = DistGNNTrainer(store, spec, n_devices=1, seed=2, compress=True)
+    rb = b.train_supervised(9, 16, d, ckpt_every=3)
+    assert rb.final_step == 9 and np.isfinite(rb.losses).all()
+
+
+# ---------------------------------------------------------------------------
+# Multi-device: real 4-way device splitting in a subprocess (conftest keeps
+# this process at 1 device on purpose)
+# ---------------------------------------------------------------------------
+
+def test_multi_device_smoke():
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               PYTHONPATH="src")
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    proc = subprocess.run(
+        [sys.executable, os.path.join(root, "benchmarks",
+                                      "bench_distributed.py"), "--smoke"],
+        cwd=root, env=env, capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "SMOKE OK" in proc.stdout, proc.stdout

@@ -55,6 +55,56 @@ def test_balance(small_graph):
         assert p.balance(small_graph) < 4.0, method
 
 
+@pytest.mark.parametrize("method", sorted(PARTITIONERS))
+def test_sharded_store_reassembles(method, small_graph):
+    """The reassembly invariant against the PHYSICAL slices: per-shard CSRs
+    partition the edge multiset, and merging them back in global-eid order
+    reproduces the input CSR byte-for-byte."""
+    from repro.distributed import build_sharded_store
+    g = small_graph
+    st = build_sharded_store(g, 4, partition_method=method)
+    eids = np.concatenate([sl.eids for sl in st.slices])
+    assert len(eids) == g.m and len(np.unique(eids)) == g.m
+    # each slice holds exactly the edges the partition assigned it
+    for sl in st.slices:
+        assert np.array_equal(sl.eids, st.partition.shard_edge_ids(sl.shard_id))
+    view = st.signature_view("out")
+    assert np.array_equal(view.indptr, g.indptr)
+    assert np.array_equal(view.indices, g.indices)
+    assert np.array_equal(view.eids, np.arange(g.m))
+
+
+@pytest.mark.parametrize("method", sorted(PARTITIONERS))
+def test_post_compact_streaming_partition_reassembles(method, small_graph):
+    """After StreamingStore.compact() rebases the partition onto the new
+    CSR, the rebased edge_assign must still partition the new edge set —
+    asserted structurally AND by building a ShardedStore from the rebased
+    (graph, partition) and byte-comparing its reassembled view."""
+    from repro.core.storage import build_store
+    from repro.distributed import ShardedStore
+    from repro.streaming import GraphDelta, StreamingStore
+
+    st = StreamingStore(build_store(small_graph, 4, partition_method=method))
+    rng = np.random.default_rng(3)
+    add = GraphDelta.add_edges(rng.integers(0, st.graph.n, 40),
+                               rng.integers(0, st.graph.n, 40))
+    src, dst = small_graph.edge_list()
+    kill = rng.choice(small_graph.m, 25, replace=False)
+    st.update(add)
+    st.update(GraphDelta.delete_edges(src[kill], dst[kill]))
+    st.compact()
+    g2, p2 = st.graph, st.partition
+    assert p2.edge_assign.shape == (g2.m,)
+    assert (p2.edge_assign >= 0).all() and (p2.edge_assign < p2.n_parts).all()
+    sharded = ShardedStore(g2, p2, st.cache_plan)
+    view = sharded.signature_view("out")
+    assert np.array_equal(view.indptr, g2.indptr)
+    assert np.array_equal(view.indices, g2.indices)
+    # shard ownership stayed consistent with vertex homes after the rebase
+    for s, shard in enumerate(sharded.shards):
+        assert np.array_equal(shard.owned_mask, p2.vertex_home == s)
+
+
 def test_plugin_registration(small_graph):
     from repro.core.partition import register_partitioner, Partition
 
