@@ -1,16 +1,25 @@
 """Fused GNN layer kernel benchmark (paper §3.4 operator hot loop).
 
-Four records, written to ``BENCH_kernels.json`` (full run):
+Seven records, written to ``BENCH_kernels.json`` (full run):
 
   * **equivalence** — interpret-mode fwd AND ``jax.grad`` max-abs error of
     the fused Pallas layer vs the jnp oracle, for every kernel-capable
-    aggregator × combiner pair (+ the GCN self-loop folding).
+    aggregator × combiner pair (+ the GCN self-loop folding and, since
+    ISSUE 7, the online-softmax attention aggregator).
   * **hlo** — the structural HBM win on this CPU-only box: bytes-accessed
     (XLA cost analysis) and peak temp memory of the fused single-pass layer
     lowering vs the unfused two-kernel split (kernel boundaries modelled
     with ``optimization_barrier``, which is exactly what two ``pallas_call``
     launches impose: the [N_h, S, D] gather and the [B, 2D] concat must
     round-trip through HBM).
+  * **bf16** — bytes-accessed of the streamed feature gather with a bf16
+    table (f32 accumulate) vs the f32 table: the ISSUE 7 acceptance bar is
+    a >= 1.5x reduction on the gather, the dominant cost above.
+  * **megakernel** — 2-hop ``gnn_apply`` lowered as per-hop launches (level
+    buffers round-trip HBM at every hop boundary, modelled with barriers)
+    vs the megakernel dataflow (level buffers stay VMEM-resident temps):
+    bytes-accessed + peak-temp deltas, plus interpret-mode fwd/grad error
+    of the REAL megakernel vs the jnp ``gnn_apply``.
   * **wallclock** — native CPU wall time of the jnp-level two-matmul layer
     rewrite vs the concat-materialising layer (the same rewrite the kernel
     performs on the MXU).
@@ -103,6 +112,168 @@ def equivalence_records(smoke: bool = False) -> dict:
                           use_kernel=False)
     out["mean+add+self_loop"] = {"fwd_err": float(jnp.abs(zk - zj).max()),
                                  "grad_err": None}
+    return out
+
+
+def attention_records(smoke: bool = False) -> dict:
+    """Interpret-mode attention layer (online softmax in VMEM) vs the jnp
+    oracle: fwd + grad max-abs error — the ISSUE 7 equivalence row."""
+    from repro.kernels import ops, ref
+
+    n, d, b, s, o = (40, 24, 8, 4, 16) if smoke else (300, 48, 32, 6, 32)
+    iv = _layer_inputs(n, d, b, s, o)
+    rng = np.random.default_rng(7)
+    att = jnp.asarray(rng.standard_normal(d) * 0.3, jnp.float32)
+
+    def fused(f, a, w1, w2, bb):
+        return ops.attention_gnn_layer(f, iv["sidx"], iv["cidx"], iv["msk"],
+                                       a, w1, w2, bb, activation="relu",
+                                       interpret=True)
+
+    def oracle(f, a, w1, w2, bb):
+        return ref.attention_layer_ref(f, iv["sidx"], iv["cidx"], iv["msk"],
+                                       a, w1, w2, bb, activation="relu")
+
+    args = (iv["f"], att, iv["w1"], iv["w2"], iv["b"])
+    fwd_err = float(jnp.abs(fused(*args) - oracle(*args)).max())
+
+    def loss(fn):
+        return lambda *a: (fn(*a) * iv["probe"]).sum()
+
+    gk = jax.grad(loss(fused), argnums=(0, 1, 2, 3, 4))(*args)
+    gr = jax.grad(loss(oracle), argnums=(0, 1, 2, 3, 4))(*args)
+    grad_err = max(float(jnp.abs(a - b).max()) for a, b in zip(gk, gr))
+    return {"fwd_err": fwd_err, "grad_err": grad_err}
+
+
+def bf16_records(smoke: bool = False) -> dict:
+    """Bytes-accessed of the streamed neighbor-feature gather (the dominant
+    BENCH_kernels cost) with a bf16 feature table + f32 accumulators vs the
+    f32 table — the acceptance bar is a >= 1.5x reduction."""
+    from repro.launch.hlo_cost import xla_cost_dict
+
+    n, d, b, s = (512, 64, 64, 5) if smoke else (8192, 128, 512, 10)
+    iv = _layer_inputs(n, d, b, s, d)
+
+    def gather_agg(h):
+        # the kernel's gather dataflow: rows stream slot-by-slot into a f32
+        # accumulator; with a bf16 table each streamed row is half the bytes
+        m = iv["msk"]
+        acc = jnp.zeros((iv["cidx"].shape[0], d), jnp.float32)
+        for slot in range(iv["cidx"].shape[1]):
+            row = h[iv["cidx"][:, slot]].astype(jnp.float32)
+            acc = acc + row * m[:, slot][:, None]
+        return acc / jnp.maximum(m.sum(1, keepdims=True), 1.0)
+
+    out = {"shape": {"n": n, "d": d, "b": b, "s": s}}
+    for name, table in (("f32", iv["f"]),
+                        ("bf16", iv["f"].astype(jnp.bfloat16))):
+        compiled = jax.jit(gather_agg).lower(table).compile()
+        cost = xla_cost_dict(compiled)
+        out[name] = {"bytes_accessed": int(cost.get("bytes accessed", 0))}
+    fb = out["f32"]["bytes_accessed"]
+    hb = out["bf16"]["bytes_accessed"]
+    out["bytes_ratio"] = round(fb / max(hb, 1), 2)
+    # tolerance contract alongside the traffic win
+    err = float(jnp.abs(gather_agg(iv["f"])
+                        - gather_agg(iv["f"].astype(jnp.bfloat16))).max())
+    out["bf16_vs_f32_max_err"] = err
+    return out
+
+
+def _launch_io_bytes(spec, plan) -> dict:
+    """HBM bytes crossing the pallas_call launch boundary for (a) the
+    per-hop dispatch — every hop launch reads its gathered feature rows and
+    writes its [n_h, d] level output to HBM, which the NEXT hop's launch
+    reads back — vs (b) the megakernel, where hop-0 rows stream in once and
+    the inter-hop level buffers never leave VMEM.  Computed from the actual
+    padded block shapes both paths launch with (``_padded_shapes``)."""
+    from repro.kernels import megakernel as mk
+
+    k_max = len(plan["child_idx"])
+    n_pad, d_pad = mk._padded_shapes(spec, plan)
+    bf0 = 2 if spec.feature_dtype == "bfloat16" else 4
+    per_hop = interhop = 0
+    operand_common = 0     # idx/weight operands: identical on both paths
+    for hop in range(k_max):
+        h_lvl = k_max - 1 - hop
+        k = hop + 1
+        n = n_pad[h_lvl]
+        s = int(plan["child_idx"][h_lvl].shape[1]) + int(spec.gcn_self_loop)
+        di, do = d_pad[k - 1], d_pad[k]
+        bf = bf0 if k == 1 else 4          # hop >1 reads f32 intermediates
+        operand_common += n * s * 8 + n * 4 + 2 * di * do * 4 + do * 4
+        per_hop += (n * s + n) * di * bf   # gathered neighbor + self rows
+        per_hop += n * do * 4              # level output -> HBM
+        if k < k_max:                      # ...re-read by the next launch
+            interhop += n * do * 4 + (n_pad[h_lvl - 1]
+                                      * (int(plan["child_idx"][h_lvl - 1]
+                                             .shape[1])
+                                         + int(spec.gcn_self_loop) + 1)
+                                      * do * 4)
+    n0 = int(plan["levels"][k_max].shape[0])
+    mega = n0 * d_pad[0] * bf0 + n_pad[0] * d_pad[-1] * 4
+    return {
+        "per_hop": {"launch_io_bytes": int(per_hop + operand_common),
+                    "interhop_hbm_bytes": int(interhop)},
+        "fused": {"launch_io_bytes": int(mega + operand_common),
+                  "interhop_hbm_bytes": 0},
+    }
+
+
+def megakernel_records(smoke: bool = False) -> dict:
+    """Two views of the megakernel win on one real plan.
+
+    Launch-I/O proxy (``_launch_io_bytes``): HBM bytes crossing kernel
+    launch boundaries, per-hop dispatch vs single launch — the megakernel
+    row shows ZERO inter-hop HBM round-trip (level buffers stay
+    VMEM-resident).
+
+    Equivalence: interpret-mode fwd + grad error of the REAL megakernel
+    (``GNNSpec(megakernel=True)``) vs the jnp ``gnn_apply``.
+    """
+    import dataclasses as _dc
+
+    from repro.core.gnn import GNNSpec, gnn_apply, init_gnn_params
+    from repro.core.operators import build_plan, plan_to_device
+    from repro.core.sampling import NeighborhoodSampler
+    from repro.core.graph import synthetic_ahg
+    from repro.core.storage import build_store
+    from repro.kernels import megakernel as mk
+
+    n, b, fan, dh = ((400, 8, (4, 3), 16) if smoke
+                     else (8000, 64, (10, 5), 128))
+    g = synthetic_ahg(n, avg_degree=8, seed=2)
+    store = build_store(g, 2)
+    din = g.vertex_attr_table.shape[1]
+    spec = GNNSpec(k_max=2, dims=(din, dh, dh), fanouts=fan,
+                   use_kernel=True, megakernel=True)
+    params = init_gnn_params(spec, seed=0)
+    fts = jnp.asarray(store.dense_features())
+    plan = plan_to_device(build_plan(NeighborhoodSampler(store, seed=0),
+                                     np.arange(b, dtype=np.int32), fan))
+    assert mk.megakernel_engages(spec, plan)
+
+    out = {"shape": {"b": b, "fanouts": list(fan), "d": dh}}
+    out.update(_launch_io_bytes(spec, plan))
+    pb = out["per_hop"]["launch_io_bytes"]
+    fb = out["fused"]["launch_io_bytes"]
+    out["bytes_ratio"] = round(pb / max(fb, 1), 2)
+    out["vmem_estimate_bytes"] = int(mk.vmem_estimate(spec, plan))
+
+    spec_j = _dc.replace(spec, use_kernel=False, megakernel=False)
+    zm = gnn_apply(spec, params, plan, fts)
+    zj = gnn_apply(spec_j, params, plan, fts)
+    out["fwd_err"] = float(jnp.abs(zm - zj).max())
+
+    def loss(sp):
+        return lambda p: (gnn_apply(sp, p, plan, fts) ** 2).sum()
+
+    gm = jax.grad(loss(spec))(params)
+    gj = jax.grad(loss(spec_j))(params)
+    out["grad_err"] = max(
+        float(jnp.abs(a - bb).max()) for a, bb in zip(
+            jax.tree_util.tree_leaves(gm), jax.tree_util.tree_leaves(gj)))
     return out
 
 
@@ -233,6 +404,12 @@ def run(smoke: bool = False) -> dict:
          f"pairs={len(record['equivalence'])};max_fwd_err={worst_fwd:.1e};"
          f"max_grad_err={worst_grad:.1e} (interpret mode)")
 
+    record["equivalence"]["attention"] = attention_records(smoke)
+    att = record["equivalence"]["attention"]
+    emit("attention_layer_equivalence", 0.0,
+         f"fwd_err={att['fwd_err']:.1e};grad_err={att['grad_err']:.1e} "
+         f"(interpret mode)")
+
     record["hlo"] = hlo_records(smoke)
     emit("fused_layer_bytes_accessed", 0.0,
          f"fused={record['hlo']['fused']['bytes_accessed']};"
@@ -242,6 +419,25 @@ def run(smoke: bool = False) -> dict:
          f"fused={record['hlo']['fused']['peak_temp_bytes']};"
          f"unfused={record['hlo']['unfused']['peak_temp_bytes']};"
          f"ratio={record['hlo']['peak_temp_ratio']}x")
+
+    record["bf16"] = bf16_records(smoke)
+    emit("bf16_gather_bytes_accessed", 0.0,
+         f"f32={record['bf16']['f32']['bytes_accessed']};"
+         f"bf16={record['bf16']['bf16']['bytes_accessed']};"
+         f"ratio={record['bf16']['bytes_ratio']}x;"
+         f"max_err={record['bf16']['bf16_vs_f32_max_err']:.1e}")
+
+    record["megakernel"] = megakernel_records(smoke)
+    emit("megakernel_launch_io_bytes", 0.0,
+         f"fused={record['megakernel']['fused']['launch_io_bytes']};"
+         f"per_hop={record['megakernel']['per_hop']['launch_io_bytes']};"
+         f"ratio={record['megakernel']['bytes_ratio']}x;"
+         f"interhop_fused="
+         f"{record['megakernel']['fused']['interhop_hbm_bytes']};"
+         f"interhop_per_hop="
+         f"{record['megakernel']['per_hop']['interhop_hbm_bytes']};"
+         f"fwd_err={record['megakernel']['fwd_err']:.1e};"
+         f"grad_err={record['megakernel']['grad_err']:.1e}")
 
     record["wallclock"] = wallclock_records(smoke)
     emit("combine_two_matmul", record["wallclock"]["two_matmul_us"],

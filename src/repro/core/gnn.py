@@ -49,11 +49,17 @@ class GNNSpec:
     normalize: bool = True
     gcn_self_loop: bool = False            # GCN folds self into the mean
     use_kernel: bool = False               # Pallas fused-layer fast path
+    feature_dtype: str = "float32"         # "bfloat16" = bf16 row streaming
+    megakernel: bool = False               # whole-forward single-launch path
     name: str = "graphsage"
 
     def __post_init__(self):
         assert len(self.dims) == self.k_max + 1
         assert len(self.fanouts) == self.k_max
+        if self.feature_dtype not in ("float32", "bfloat16"):
+            raise ValueError(
+                f"feature_dtype must be 'float32' or 'bfloat16', got "
+                f"{self.feature_dtype!r}")
         if self.use_kernel:
             # validate the kernel pairing HERE, not as a bare ValueError deep
             # inside a pallas wrapper three layers down mid-training
@@ -64,6 +70,16 @@ class GNNSpec:
                     f"supports aggregators {sorted(ops.KERNEL_AGGREGATORS)} "
                     f"× combiners {sorted(ops.KERNEL_COMBINERS)}; set "
                     f"use_kernel=False for the jnp operator path.")
+        if self.megakernel:
+            if not self.use_kernel:
+                raise ValueError("megakernel=True requires use_kernel=True")
+            from repro.kernels import megakernel as mk  # lazy
+            ok, why = mk.megakernel_compat(self.aggregator, self.combiner)
+            if not ok:
+                raise ValueError(
+                    f"megakernel=True: {why}.  The multi-hop megakernel "
+                    f"covers the linear reductions (mean/sum) × linear "
+                    f"combiners (concat/add); other configs run per-hop.")
 
 
 def init_gnn_params(spec: GNNSpec, seed: int = 0) -> Dict:
@@ -86,6 +102,14 @@ def gnn_apply(spec: GNNSpec, params: Dict, plan: Dict, features: Array) -> Array
     typically a view of the sharded embedding table).
     """
     k_max = len(plan["child_idx"])
+    # whole-forward single-launch fast path: every hop in ONE pallas_call,
+    # level buffers resident in VMEM — engages when the spec opts in AND the
+    # plan's level shapes fit the VMEM budget, else falls through to the
+    # per-hop dispatch below (see kernels/megakernel.py for the rules)
+    if spec.megakernel:
+        from repro.kernels import megakernel as mk  # lazy
+        if mk.megakernel_engages(spec, plan):
+            return mk.gnn_apply_mega(spec, params, plan, features)
     # hop-0: raw features of the deepest level  (h_v^(0) <- x_v)
     h = features[plan["levels"][k_max]]
     for h_lvl in range(k_max - 1, -1, -1):
@@ -102,7 +126,8 @@ def gnn_apply(spec: GNNSpec, params: Dict, plan: Dict, features: Array) -> Array
                             combiner=spec.combiner,
                             act=(k < k_max),   # final hop linear (see ops)
                             self_loop=spec.gcn_self_loop,
-                            use_kernel=spec.use_kernel)
+                            use_kernel=spec.use_kernel,
+                            feature_dtype=spec.feature_dtype)
         if spec.normalize:
             h = h / jnp.maximum(jnp.linalg.norm(h, axis=-1, keepdims=True), 1e-9)
     return h

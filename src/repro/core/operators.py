@@ -188,11 +188,13 @@ def combine(name: str, params, h_self: Array, h_agg: Array,
 # ``apply_layer`` is the one entry the GNN forward uses per hop.  When the
 # spec opts in (``use_kernel=True``) AND the (aggregator, combiner) pair has
 # a kernel lowering, the whole hop runs as ONE Pallas kernel
-# (``repro.kernels.ops.fused_gnn_layer``): neighbor rows stream HBM→VMEM
-# once and feed the MXU directly — no [N_h, S, D] gathered intermediate, no
-# [B, 2D] concat.  Anything else (attention/gru aggregators, gru combiner,
-# runtime-registered plugins without a kernel entry) falls back to the jnp
-# operator registries above, cleanly and silently.
+# (``repro.kernels.ops.fused_gnn_layer`` for the linear reductions,
+# ``attention_gnn_layer`` for softmax attention): neighbor rows stream
+# HBM→VMEM once and feed the MXU directly — no [N_h, S, D] gathered
+# intermediate, no [B, S] score tensor, no [B, 2D] concat.  Anything else
+# (the gru aggregator, gru combiner, runtime-registered plugins without a
+# kernel entry) falls back to the jnp operator registries above, cleanly
+# and silently.
 #
 # Mode selection: ``native`` on TPU, ``interpret`` elsewhere (validation
 # grade — bit-equivalent math at Python-loop speed), or an explicit override
@@ -200,9 +202,13 @@ def combine(name: str, params, h_self: Array, h_agg: Array,
 # (``native`` | ``interpret`` | ``oracle``; ``oracle`` forces the jnp path
 # even for kernel-capable specs).
 
-# kernel-capable AGGREGATE plugins: name -> pallas reduction
+# kernel-capable AGGREGATE plugins: name -> pallas reduction.  "attention"
+# lowers to the online-softmax fused layer (kernels/attention_agg.py) and
+# routes the learned scoring vector (layer_params["agg"]["att"]) into the
+# kernel; the linear reductions lower to kernels/fused_layer.py.
 KERNEL_AGGREGATORS: Dict[str, str] = {"mean": "mean", "sum": "sum",
-                                      "max": "max"}
+                                      "max": "max",
+                                      "attention": "attention"}
 
 # kernel-capable COMBINE plugins: name -> fn(comb_params, d_in) -> (W1, W2, b)
 # where the fused layer computes act(h_self @ W1 + h_agg @ W2 + b)
@@ -216,8 +222,9 @@ KERNEL_COMBINERS: Dict[str, Callable] = {
 
 def register_kernel_aggregator(name: str, reduction: str) -> None:
     """Declare that aggregator ``name`` lowers to the fused kernel's
-    ``reduction`` (one of sum/mean/max)."""
-    if reduction not in ("sum", "mean", "max"):
+    ``reduction`` (one of sum/mean/max/attention).  ``attention`` entries
+    must carry the [D] scoring vector as ``layer_params["agg"]["att"]``."""
+    if reduction not in ("sum", "mean", "max", "attention"):
         raise ValueError(f"no kernel reduction named {reduction!r}")
     KERNEL_AGGREGATORS[name] = reduction
 
@@ -287,10 +294,18 @@ def _fold_self_loop(self_idx: Array, child_idx: Array,
 def apply_layer(layer_params: Dict, h: Array, self_idx: Array,
                 child_idx: Array, child_msk: Array, *, aggregator: str,
                 combiner: str, act: bool = True, self_loop: bool = False,
-                use_kernel: bool = False) -> Array:
+                use_kernel: bool = False,
+                feature_dtype: str = "float32") -> Array:
     """One Algorithm-1 hop: AGGREGATE sampled neighbors, COMBINE with the
     anchor's previous-hop embedding.  Dispatches to the fused Pallas layer
-    when enabled+supported, else the jnp plugin registries."""
+    when enabled+supported, else the jnp plugin registries.
+
+    ``feature_dtype="bfloat16"`` engages bf16 feature streaming on the
+    kernel path: the hop's input rows are cast to bf16 before the kernel,
+    halving the dominant HBM→VMEM gather bytes, while the aggregate, the
+    MXU partials and the emitted activations stay f32 end-to-end (fwd and
+    bwd scatter-add) — an fp32-tolerance contract, not a bit-exact one.
+    The jnp fallback path ignores the knob."""
     child, msk = child_idx, child_msk
     if self_loop:
         child, msk = _fold_self_loop(self_idx, child_idx, child_msk)
@@ -300,11 +315,20 @@ def apply_layer(layer_params: Dict, h: Array, self_idx: Array,
             from repro.kernels import ops as kops  # lazy: optional dependency
             w1, w2, b = KERNEL_COMBINERS[combiner](layer_params["comb"],
                                                    h.shape[-1])
+            hk = h
+            if feature_dtype == "bfloat16":
+                hk = h.astype(jnp.bfloat16)
+            red = KERNEL_AGGREGATORS[aggregator]
+            if red == "attention":
+                return kops.attention_gnn_layer(
+                    hk, self_idx, child, msk, layer_params["agg"]["att"],
+                    w1, w2, b, activation="relu" if act else "none",
+                    interpret=(mode == "interpret"), out_dtype=h.dtype)
             return kops.fused_gnn_layer(
-                h, self_idx, child, msk, w1, w2, b,
-                reduction=KERNEL_AGGREGATORS[aggregator],
+                hk, self_idx, child, msk, w1, w2, b,
+                reduction=red,
                 activation="relu" if act else "none",
-                interpret=(mode == "interpret"))
+                interpret=(mode == "interpret"), out_dtype=h.dtype)
     h_self = h[self_idx]
     neigh = h[child]                         # [N_h, fanout(+self), D]
     h_agg = aggregate(aggregator, neigh, msk, layer_params.get("agg"))

@@ -276,11 +276,52 @@ class NeighborhoodSampler:
         exactly as the scalar path does (the cached/remote paths return the
         same rows — the replicated cache is a copy of the owner's row), then
         the gather itself is the shared ``_gather_uniform`` pass over the
-        store's adjacency view (delta-merged on a streaming store).
+        store's adjacency view (delta-merged on a streaming store).  On a
+        physically sharded store the row DATA is instead routed through
+        ``_routed_gather``'s batched cross-shard RPC.
         """
         vs64 = vs.astype(np.int64)
         _account_shard_reads(shard, self._cached_mask, vs64)
+        routed = self._routed_gather(view, vs64, fanout, shard)
+        if routed is not None:
+            return routed
         return _gather_uniform(self.rng, view, vs64, fanout)
+
+    def _routed_gather(self, view, vs64: np.ndarray, fanout: int, shard
+                       ) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+        """Frontier expansion against a physically sharded store (a store
+        exposing ``gather_rows`` + ``row_complete``): rows fully resident on
+        the routing shard's slice — or replicated into its neighbor cache —
+        are read locally, and everything else in the bucket is materialised
+        by ONE batched ``gather_rows`` call (deduplicated), the modeled
+        cross-shard RPC whose per-remote-shard segment traffic lands in
+        ``GatherStats``.  Position draws go through ``_uniform_sel``, and
+        ``gather_rows`` returns rows in global CSR order (byte-equal to the
+        assembled view), so the sampled batches are bit-identical to the
+        assembled-view fast path — the pinned ShardedStore/plain-store
+        trainer equality survives the rerouting.  Returns ``None`` when the
+        store is not sharded (or a delta overlay is present), falling back
+        to the assembled-view gather."""
+        gather = getattr(self.store, "gather_rows", None)
+        complete = getattr(self.store, "row_complete", None)
+        if gather is None or complete is None \
+                or getattr(view, "patched", False):
+            return None
+        lo = view.indptr[vs64]
+        deg = view.indptr[vs64 + 1] - lo
+        sel, mask = _uniform_sel(self.rng, deg, fanout)
+        out = np.zeros((len(vs64), fanout), np.int32)
+        local = (deg > 0) & ((shard.owned_mask[vs64] & complete[vs64])
+                             | self._cached_mask[vs64])
+        rows = np.nonzero(local)[0]
+        if len(rows):
+            out[rows] = view.indices[lo[rows][:, None] + sel[rows]]
+        rem = np.nonzero((deg > 0) & ~local)[0]
+        if len(rem):
+            uniq, inv = np.unique(vs64[rem], return_inverse=True)
+            cand, _, _ = gather(uniq)
+            out[rem] = np.take_along_axis(cand[inv], sel[rem], axis=1)
+        return out, mask
 
     def sample(self, seeds: np.ndarray, fanouts: Sequence[int],
                *, edge_type: Optional[int] = None,
@@ -374,6 +415,33 @@ def _account_reads(store: DistributedGraphStore, cached_mask: np.ndarray,
                              vs64[via == s])
 
 
+def _uniform_sel(rng: np.random.Generator, deg: np.ndarray, fanout: int
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+    """The position draws of a uniform row gather (GraphSAGE convention:
+    with replacement iff fanout exceeds the row degree): [R, fanout] int64
+    in-row slot positions plus the float mask.  RNG consumption depends only
+    on ``(deg, fanout)`` — NOT on where the rows' slots physically live — so
+    a gather can swap its data source (global CSR, shard slice, cross-shard
+    RPC result) without perturbing the sample stream."""
+    deg = np.asarray(deg, np.int64)
+    sel = np.zeros((len(deg), fanout), np.int64)
+    mask = np.zeros((len(deg), fanout), np.float32)
+    nz = deg > 0
+    if not nz.any():
+        return sel, mask
+    mask[nz] = 1.0
+    repl = np.nonzero(nz & (deg < fanout))[0]
+    if len(repl):
+        sel[repl] = (rng.random((len(repl), fanout))
+                     * deg[repl][:, None]).astype(np.int64)
+    worepl = np.nonzero(nz & (deg >= fanout))[0]
+    for d in np.unique(deg[worepl]):
+        rows = worepl[deg[worepl] == d]
+        keys = rng.random((len(rows), int(d)))
+        sel[rows] = np.argsort(keys, axis=1)[:, :fanout]
+    return sel, mask
+
+
 def _uniform_rows(rng: np.random.Generator, indptr: np.ndarray,
                   indices: np.ndarray, vs: np.ndarray, fanout: int
                   ) -> Tuple[np.ndarray, np.ndarray]:
@@ -382,23 +450,11 @@ def _uniform_rows(rng: np.random.Generator, indptr: np.ndarray,
     vs64 = np.asarray(vs, np.int64)
     lo = indptr[vs64]
     deg = indptr[vs64 + 1] - lo
+    sel, mask = _uniform_sel(rng, deg, fanout)
     out = np.zeros((len(vs64), fanout), np.int32)
-    mask = np.zeros((len(vs64), fanout), np.float32)
-    nz = deg > 0
-    if not nz.any():
-        return out, mask
-    mask[nz] = 1.0
-    repl = np.nonzero(nz & (deg < fanout))[0]
-    if len(repl):
-        idx = (rng.random((len(repl), fanout))
-               * deg[repl][:, None]).astype(np.int64)
-        out[repl] = indices[lo[repl][:, None] + idx]
-    worepl = np.nonzero(nz & (deg >= fanout))[0]
-    for d in np.unique(deg[worepl]):
-        rows = worepl[deg[worepl] == d]
-        keys = rng.random((len(rows), int(d)))
-        sel = np.argsort(keys, axis=1)[:, :fanout]
-        out[rows] = indices[lo[rows][:, None] + sel]
+    rows = np.nonzero(deg > 0)[0]
+    if len(rows):
+        out[rows] = indices[lo[rows][:, None] + sel[rows]]
     return out, mask
 
 

@@ -6,10 +6,11 @@ shard_map step with compressed all-reduce, and checkpoint-restart
 supervision (`ft.Supervisor` + `checkpoint.CheckpointManager`) wired so a
 mid-run failure replays to a byte-identical loss trajectory.
 
-Determinism contract.  The executor is **reseeded per step** with a mix of
-``(seed, step)``, so the step-``t`` minibatch stack is a pure function of
-``(store, seed, t)`` — independent of how many steps ran before, on which
-incarnation of the process.  Restart therefore needs no sampler-state
+Determinism contract.  Each device's executor is **reseeded per step** with
+a mix of ``(seed, step, device)``, so the step-``t`` minibatch stack is a
+pure function of ``(store, seed, t)`` — independent of how many steps ran
+before, on which incarnation of the process, and of how the thread pool
+that overlaps the D host-sampling passes happens to schedule them.  Restart therefore needs no sampler-state
 checkpointing: `Supervisor` restores ``{params, ef}``, the loop re-derives
 batch ``t`` bit-for-bit, and the replayed trajectory equals the
 uninterrupted one.  (The single-host ``GNNTrainer`` instead *continues* one
@@ -30,6 +31,7 @@ Equivalence to the single-store path (the acceptance contract):
 from __future__ import annotations
 
 import dataclasses
+from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -85,6 +87,8 @@ class DistGNNTrainer:
         self.features = jnp.asarray(store.dense_features())
         self._steps: Dict[int, Any] = {}     # batch_per_device -> step fn
         self._queries: Dict[int, Any] = {}   # batch_per_device -> TraversalPlan
+        self._dev_executors: Dict[int, Any] = {}   # dev -> QueryExecutor
+        self._sample_pool: Optional[ThreadPoolExecutor] = None
 
     # ----------------------------------------------------------- state pytree
     def state(self) -> Dict:
@@ -108,20 +112,53 @@ class DistGNNTrainer:
             self._queries[batch_per_device] = q
         return q
 
+    def _device_executor(self, dev: int):
+        """Device ``dev``'s private executor (own samplers, own RNG streams)
+        over the SHARED store — what lets the D host-sampling passes run
+        concurrently without sharing mutable sampler state.  Device 0 is the
+        trainer's own executor."""
+        if dev == 0:
+            return self.executor
+        ex = self._dev_executors.get(dev)
+        if ex is None:
+            from repro.api import QueryExecutor
+            ex = QueryExecutor(self.store, strategy=self._strategy,
+                               seed=self.seed)
+            self._dev_executors[dev] = ex
+        return ex
+
     def plans_for_step(self, step: int, batch_size: int) -> Dict:
         """The [D, ...] plan stack for global step ``step`` — a pure function
-        of (store, seed, step): the executor is reseeded, then each device's
-        sub-batch is drawn in device order from the fresh stream."""
+        of (store, seed, step): device ``dev`` draws its sub-batch from a
+        private executor reseeded with ``mix(mix(seed, step), dev)``, so the
+        per-device streams are independent and the D host-sampling passes
+        overlap in a thread pool (numpy gathers over the shared read-only
+        store release no determinism: each stream is fixed by its seed, not
+        by scheduling).  Previously the D draws came sequentially off one
+        stream — the visible serial cost at D=4 in BENCH_distributed."""
         from repro.api import execute
         d = self.n_devices
         if batch_size % d:
             raise ValueError(f"batch_size {batch_size} not divisible by "
                              f"{d} devices")
         bpd = batch_size // d
-        self.executor.reseed(_mix_seed(self.seed, step))
         plan = self._query(bpd)
-        plans = [execute(plan, self.executor, pad=None, to_device=False)
-                 .plans["joint"] for _ in range(d)]
+        base = _mix_seed(self.seed, step)
+
+        def draw(dev: int):
+            ex = self._device_executor(dev)
+            ex.reseed(_mix_seed(base, dev))
+            return execute(plan, ex, pad=None, to_device=False).plans["joint"]
+
+        if d == 1:
+            plans = [draw(0)]
+        else:
+            for dev in range(d):        # build executors outside the pool
+                self._device_executor(dev)
+            if self._sample_pool is None:
+                self._sample_pool = ThreadPoolExecutor(
+                    max_workers=d, thread_name_prefix="dist-sample")
+            plans = list(self._sample_pool.map(draw, range(d)))
         return stack_device_plans(plans)
 
     def _mesh_step(self, batch_per_device: int):

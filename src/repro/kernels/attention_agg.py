@@ -1,0 +1,143 @@
+"""Pallas TPU kernel: fused GNN layer with ATTENTION aggregation.
+
+Extends the single-pass fused layer (``fused_layer.py``) to the softmax
+aggregator used by the attention-based in-house models (GATNE's a_c
+coefficients, AS-GCN):
+
+    logit_s = h[child_idx[i, s]] · att                      (masked)
+    a       = softmax(logit over valid s)
+    out[i]  = act( h[self_idx[i]] @ W1 + (Σ_s a_s h[child_idx[i,s]]) @ W2
+                   + b )
+
+The softmax is computed **online** inside the VMEM aggregate scratch —
+flash-attention style running (max, denominator) over the S grid axis — so
+the ``[B, S]`` score tensor never exists in HBM and every neighbor row still
+streams HBM→VMEM exactly once.  Per S-step, for the running state
+``(m, l, acc)``:
+
+    m' = max(m, logit)          (valid slots only)
+    c  = exp(m - m')            (rescale factor)
+    p  = exp(logit - m')        (0 for masked slots)
+    l' = l·c + p ;  acc' = acc·c + p·row
+
+and the aggregate emitted at the last step is ``acc / max(l, 1e-9)`` —
+masked slots carry exactly zero weight and all-masked anchors aggregate to
+zero, matching the jnp oracle ``operators._agg_attention`` (whose masked
+``-1e9`` logits underflow to exactly-zero softmax weights).
+
+Scalar state (m, l) lives in SMEM; the weighted-sum accumulator is the same
+(1, D) f32 VMEM scratch as the linear reductions.  Conventions (scalar
+prefetch for data-dependent row addressing, grid = (anchors, O-blocks, S)
+with S innermost, the aggregate emitted as the VJP residual) are identical
+to ``fused_layer.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_BIG = -1e30
+
+
+def _kernel(sidx_ref, cidx_ref, mask_ref, self_ref, nbr_ref, att_ref, w1_ref,
+            w2_ref, b_ref, out_ref, agg_ref, acc_ref, m_ref, l_ref, *,
+            n_neighbors: int, activation: str):
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[0, 0] = NEG_BIG
+        l_ref[0, 0] = 0.0
+
+    valid = mask_ref[0, s] > 0
+    row = nbr_ref[...].astype(jnp.float32)               # (1, d_pad)
+    logit = jnp.sum(row * att_ref[...].astype(jnp.float32))
+    m_prev = m_ref[0, 0]
+    m_new = jnp.where(valid, jnp.maximum(m_prev, logit), m_prev)
+    scale = jnp.exp(m_prev - m_new)
+    p = jnp.where(valid, jnp.exp(logit - m_new), 0.0)
+    m_ref[0, 0] = m_new
+    l_ref[0, 0] = l_ref[0, 0] * scale + p
+    acc_ref[...] = acc_ref[...] * scale + row * p
+
+    @pl.when(s == n_neighbors - 1)
+    def _combine():
+        agg = acc_ref[...] / jnp.maximum(l_ref[0, 0], 1e-9)
+        agg_ref[...] = agg                                # residual for the VJP
+        hs = self_ref[...].astype(jnp.float32)
+        pre = jnp.dot(hs, w1_ref[...].astype(jnp.float32),
+                      preferred_element_type=jnp.float32)
+        pre += jnp.dot(agg, w2_ref[...].astype(jnp.float32),
+                       preferred_element_type=jnp.float32)
+        pre += b_ref[...].astype(jnp.float32)
+        if activation == "relu":
+            pre = jnp.maximum(pre, 0.0)
+        elif activation == "tanh":
+            pre = jnp.tanh(pre)
+        out_ref[...] = pre.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "block_o",
+                                             "interpret", "out_dtype"))
+def attention_layer(features: jax.Array, self_idx: jax.Array,
+                    child_idx: jax.Array, mask: jax.Array, att: jax.Array,
+                    w1: jax.Array, w2: jax.Array, bias: jax.Array, *,
+                    activation: str = "relu", block_o: int = 128,
+                    interpret: bool = False, out_dtype=None):
+    """features [N, D], self_idx [B], child_idx [B, S], mask [B, S],
+    att [1, D], w1/w2 [D, O], bias [O] -> (out [B, O], h_agg [B, D] f32).
+
+    D % 128 == O % block_o == 0 (the ops.py wrapper pads).  The softmax
+    state, the aggregate and both matmuls accumulate in f32 regardless of
+    the feature dtype (bf16 rows stream at half the HBM bytes).
+    """
+    if activation not in ("relu", "tanh", "none"):
+        raise ValueError(activation)
+    n, d = features.shape
+    b, s = child_idx.shape
+    o = w1.shape[1]
+    assert self_idx.shape == (b,) and mask.shape == (b, s)
+    assert att.shape == (1, d)
+    assert w1.shape == (d, o) and w2.shape == (d, o)
+    assert d % 128 == 0 and o % block_o == 0, (d, o, block_o)
+    if out_dtype is None:
+        out_dtype = features.dtype
+
+    grid = (b, o // block_o, s)
+    kernel = functools.partial(_kernel, n_neighbors=s, activation=activation)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, s), lambda i, j, k, sidx, cidx: (i, 0)),
+                pl.BlockSpec((1, d), lambda i, j, k, sidx, cidx: (sidx[i], 0)),
+                pl.BlockSpec((1, d), lambda i, j, k, sidx, cidx: (cidx[i, k], 0)),
+                pl.BlockSpec((1, d), lambda i, j, k, sidx, cidx: (0, 0)),
+                pl.BlockSpec((d, block_o), lambda i, j, k, sidx, cidx: (0, j)),
+                pl.BlockSpec((d, block_o), lambda i, j, k, sidx, cidx: (0, j)),
+                pl.BlockSpec((1, block_o), lambda i, j, k, sidx, cidx: (0, j)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, block_o), lambda i, j, k, sidx, cidx: (i, j)),
+                pl.BlockSpec((1, d), lambda i, j, k, sidx, cidx: (i, 0)),
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((1, d), jnp.float32),
+                pltpu.SMEM((1, 1), jnp.float32),
+                pltpu.SMEM((1, 1), jnp.float32),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((b, o), out_dtype),
+            jax.ShapeDtypeStruct((b, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(self_idx, child_idx, mask, features, features, att, w1, w2,
+      bias.reshape(1, -1))

@@ -141,6 +141,79 @@ scatter_add_weighted = jax.jit(_scatter_add_weighted,
                                                "block_d", "interpret"))
 
 
+def _attention_probs_kernel(cidx_ref, mask_ref, nbr_ref, att_ref, g_ref,
+                            a_ref, t_ref, log_scr, t_scr, *,
+                            n_neighbors: int, s_pad: int):
+    s = pl.program_id(1)
+
+    @pl.when(s == 0)
+    def _init():
+        log_scr[...] = jnp.full_like(log_scr, -1e30)
+        t_scr[...] = jnp.zeros_like(t_scr)
+
+    row = nbr_ref[...].astype(jnp.float32)                # (1, d)
+    logit = jnp.sum(row * att_ref[...].astype(jnp.float32))
+    tval = jnp.sum(row * g_ref[...].astype(jnp.float32))
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, s_pad), 1)
+    slot = lane == s
+    log_scr[...] = jnp.where(slot, logit, log_scr[...])
+    t_scr[...] = jnp.where(slot, tval, t_scr[...])
+
+    @pl.when(s == n_neighbors - 1)
+    def _finish():
+        valid = mask_ref[...] > 0                         # (1, s_pad)
+        logits = jnp.where(valid, log_scr[...], -1e30)
+        m = jnp.max(logits)
+        p = jnp.where(valid, jnp.exp(logits - m), 0.0)
+        a_ref[...] = p / jnp.maximum(jnp.sum(p), 1e-9)
+        t_ref[...] = jnp.where(valid, t_scr[...], 0.0)
+
+
+def _attention_probs(child, mask, features, att, g, *, interpret):
+    """Recompute the attention weights for the VJP by STREAMING the neighbor
+    rows again (scalar-prefetch addressing, one row per grid step) — the
+    [B, S, D] gathered tensor is never materialised, mirroring the forward.
+    child [B, S] int32, mask [B, S_pad] f32 (slot-padded), features [N, D],
+    att/g rows -> (a [B, S_pad] normalised softmax weights, t [B, S_pad]
+    per-slot row·g[i] dot products)."""
+    b, s = child.shape
+    n, d = features.shape
+    s_pad = mask.shape[1]
+    assert g.shape == (b, d) and att.shape == (1, d)
+    grid = (b, s)
+    kernel = functools.partial(_attention_probs_kernel, n_neighbors=s,
+                               s_pad=s_pad)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, s_pad), lambda i, k, cidx: (i, 0)),
+                pl.BlockSpec((1, d), lambda i, k, cidx: (cidx[i, k], 0)),
+                pl.BlockSpec((1, d), lambda i, k, cidx: (0, 0)),
+                pl.BlockSpec((1, d), lambda i, k, cidx: (i, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, s_pad), lambda i, k, cidx: (i, 0)),
+                pl.BlockSpec((1, s_pad), lambda i, k, cidx: (i, 0)),
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((1, s_pad), jnp.float32),
+                pltpu.VMEM((1, s_pad), jnp.float32),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s_pad), jnp.float32),
+            jax.ShapeDtypeStruct((b, s_pad), jnp.float32),
+        ],
+        interpret=interpret,
+    )(child, mask, features, att, g)
+
+
+attention_probs = jax.jit(_attention_probs, static_argnames=("interpret",))
+
+
 def _matmul_kernel(a_ref, b_ref, out_ref, acc_ref, *, n_k: int):
     k = pl.program_id(2)
 

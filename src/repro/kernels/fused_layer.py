@@ -80,17 +80,20 @@ def _kernel(sidx_ref, cidx_ref, mask_ref, self_ref, nbr_ref, w1_ref, w2_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("reduction", "activation",
-                                             "block_o", "interpret"))
+                                             "block_o", "interpret",
+                                             "out_dtype"))
 def fused_layer(features: jax.Array, self_idx: jax.Array,
                 child_idx: jax.Array, mask: jax.Array, w1: jax.Array,
                 w2: jax.Array, bias: jax.Array, *, reduction: str = "mean",
                 activation: str = "relu", block_o: int = 128,
-                interpret: bool = False):
+                interpret: bool = False, out_dtype=None):
     """features [N, D], self_idx [B], child_idx [B, S], mask [B, S],
     w1/w2 [D, O], bias [O] -> (out [B, O], h_agg [B, D] f32).
 
     D % 128 == O % block_o == 0 (the ops.py wrapper pads); the aggregate and
-    both matmuls accumulate in f32 regardless of input dtype.
+    both matmuls accumulate in f32 regardless of input dtype — with bf16
+    features the rows stream at half the HBM bytes while ``out_dtype``
+    (default: the feature dtype) keeps the emitted activations f32.
     """
     if reduction not in ("sum", "mean", "max"):
         raise ValueError(reduction)
@@ -102,6 +105,8 @@ def fused_layer(features: jax.Array, self_idx: jax.Array,
     assert self_idx.shape == (b,) and mask.shape == (b, s)
     assert w1.shape == (d, o) and w2.shape == (d, o)
     assert d % 128 == 0 and o % block_o == 0, (d, o, block_o)
+    if out_dtype is None:
+        out_dtype = features.dtype
 
     grid = (b, o // block_o, s)
     kernel = functools.partial(_kernel, reduction=reduction, n_neighbors=s,
@@ -129,7 +134,7 @@ def fused_layer(features: jax.Array, self_idx: jax.Array,
             scratch_shapes=[pltpu.VMEM((1, d), jnp.float32)],
         ),
         out_shape=[
-            jax.ShapeDtypeStruct((b, o), features.dtype),
+            jax.ShapeDtypeStruct((b, o), out_dtype),
             jax.ShapeDtypeStruct((b, d), jnp.float32),
         ],
         interpret=interpret,

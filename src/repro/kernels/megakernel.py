@@ -1,0 +1,300 @@
+"""Pallas TPU megakernel: the WHOLE multi-hop GNN forward in one launch.
+
+The per-hop fused layer still round-trips every hop's [N_h, D] output
+through HBM between ``pallas_call``s.  For the common linear configs —
+{mean, sum} aggregation × {concat, add} combine — this kernel runs the
+entire ``gnn_apply`` in a single launch: the hop-0 feature rows stream
+HBM→VMEM once (scalar-prefetch addressing, one row per grid step), then
+every hop reads and writes two ping-ponged VMEM level buffers, and only the
+final [B, d_out] embeddings ever leave for HBM.
+
+In-kernel gathers cannot use data-dependent addressing (the rows live in a
+VMEM scratch, not HBM blocks), so each hop's AGGREGATE and h_self gather
+are expressed as chunked one-hot MXU contractions — the same deterministic
+assignment-matrix idiom as the backward scatter kernels, transposed:
+
+    agg[i]    = Σ_c ( Σ_s msk[i,s]·1[cidx[i,s] ∈ chunk c] ) @ h[chunk c]
+    h_self[i] = Σ_c 1[sidx[i] ∈ chunk c] @ h[chunk c]
+
+Engagement rules (``megakernel_engages``): the spec opts in
+(``megakernel=True``), the (aggregator, combiner) pair is linear, the
+kernel mode is not ``oracle``, and the padded level buffers + per-hop
+operands fit the VMEM budget (``VMEM_BUDGET_BYTES``) — otherwise
+``gnn_apply`` silently falls back to the per-hop dispatch.
+
+Training: the forward is this kernel; the backward (``jax.custom_vjp``)
+rematerialises the per-hop path and pulls cotangents through the existing
+training-grade per-hop kernel VJPs (scatter-add + matmul kernels).  The
+two forwards differ only by fp reassociation, so gradients agree with the
+jnp oracle to the same tolerance as the per-hop path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["megakernel_compat", "megakernel_engages", "vmem_estimate",
+           "gnn_apply_mega", "VMEM_BUDGET_BYTES"]
+
+# conservative half of a TPU core's ~16 MiB VMEM; tests shrink it to force
+# the per-hop fallback
+VMEM_BUDGET_BYTES = 8 * 2**20
+
+_CHUNK = 128            # one-hot contraction chunk over source-level rows
+
+
+def _round_up(x: int, to: int) -> int:
+    return ((x + to - 1) // to) * to
+
+
+def megakernel_compat(aggregator: str, combiner: str) -> Tuple[bool, str]:
+    """(supported, reason-if-not) for the single-launch multi-hop path."""
+    if aggregator not in ("mean", "sum"):
+        return False, (f"aggregator {aggregator!r} has no megakernel "
+                       f"lowering (linear reductions mean/sum only)")
+    if combiner not in ("concat", "add"):
+        return False, (f"combiner {combiner!r} has no megakernel lowering "
+                       f"(linear combiners concat/add only)")
+    return True, ""
+
+
+def _padded_shapes(spec, plan):
+    """Static padded geometry: (level row counts, per-hop dims, d_max)."""
+    k_max = len(plan["child_idx"])
+    n_pad = [_round_up(int(plan["child_idx"][h].shape[0]), _CHUNK)
+             for h in range(k_max)]
+    n_pad.append(_round_up(int(plan["levels"][k_max].shape[0]), _CHUNK))
+    d_pad = [_round_up(int(d), 128) for d in spec.dims]
+    return n_pad, d_pad
+
+
+def vmem_estimate(spec, plan) -> int:
+    """Bytes the kernel keeps resident in VMEM: two ping-pong level buffers
+    + per-hop index/weight operands + the chunked contraction temporaries."""
+    k_max = len(plan["child_idx"])
+    n_pad, d_pad = _padded_shapes(spec, plan)
+    n_max, d_max = max(n_pad), max(d_pad)
+    total = 2 * n_max * d_max * 4                       # ping-pong buffers
+    for h_lvl in range(k_max):
+        n = n_pad[h_lvl]
+        s = int(plan["child_idx"][h_lvl].shape[1]) + int(spec.gcn_self_loop)
+        k = k_max - h_lvl
+        di, do = d_pad[k - 1], d_pad[k]
+        total += n * s * 4 * 2 + n * 4                  # cidx, msk, sidx
+        total += 2 * di * do * 4 + do * 4               # w1, w2, bias
+    total += d_pad[0] * 4                               # streamed row block
+    total += n_pad[0] * d_pad[-1] * 4                   # output block
+    total += 4 * n_max * _CHUNK * 4                     # one-hot temporaries
+    return total
+
+
+def megakernel_engages(spec, plan) -> bool:
+    """Trace-time gate: config supported, kernel mode not oracle, and the
+    plan's padded shapes fit the VMEM budget."""
+    from repro.core.operators import kernel_mode
+    if not megakernel_compat(spec.aggregator, spec.combiner)[0]:
+        return False
+    if kernel_mode() == "oracle":
+        return False
+    return vmem_estimate(spec, plan) <= VMEM_BUDGET_BYTES
+
+
+# ---------------------------------------------------------------------------
+# kernel
+# ---------------------------------------------------------------------------
+
+def _kernel(*refs, k_max: int, n0: int, reduction: str, normalize: bool,
+            n_pad, d_pad, fanouts):
+    """refs = [lvl (scalar prefetch), feat, (cidx, msk, sidx, w1, w2, b) per
+    hop, out, buf_a, buf_b]."""
+    feat_ref = refs[1]
+    hop_refs = refs[2:2 + 6 * k_max]
+    out_ref = refs[2 + 6 * k_max]
+    buf_a, buf_b = refs[-2], refs[-1]
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        # zero both buffers: padded rows/cols must multiply as exact zeros
+        # in the one-hot contractions, never as uninitialised NaNs
+        buf_a[...] = jnp.zeros_like(buf_a)
+        buf_b[...] = jnp.zeros_like(buf_b)
+
+    # stream this grid step's hop-0 feature row into the level buffer
+    row = feat_ref[...].astype(jnp.float32)              # (1, d0_pad)
+    pl.store(buf_a, (pl.dslice(i, 1), pl.dslice(0, row.shape[1])), row)
+
+    @pl.when(i == n0 - 1)
+    def _compute():
+        for hop in range(k_max):
+            cidx_ref, msk_ref, sidx_ref, w1_ref, w2_ref, b_ref = \
+                hop_refs[6 * hop:6 * hop + 6]
+            k = hop + 1                                  # layer producing h^k
+            di, do = d_pad[k - 1], d_pad[k]
+            n_cur, n_prev = n_pad[k_max - hop - 1], n_pad[k_max - hop]
+            src = buf_a if hop % 2 == 0 else buf_b
+            cidx = cidx_ref[...]                         # (n_cur, S) int32
+            msk = msk_ref[...].astype(jnp.float32)
+            sidx = jnp.reshape(sidx_ref[...], (n_cur, 1))
+            s_slots = cidx.shape[1]
+            agg = jnp.zeros((n_cur, di), jnp.float32)
+            h_self = jnp.zeros((n_cur, di), jnp.float32)
+            for c in range(0, n_prev, _CHUNK):
+                hchunk = src[c:c + _CHUNK, :di]
+                cols = jax.lax.broadcasted_iota(
+                    jnp.int32, (n_cur, _CHUNK), 1) + c
+                w = jnp.zeros((n_cur, _CHUNK), jnp.float32)
+                for s_i in range(s_slots):
+                    w += ((cidx[:, s_i][:, None] == cols)
+                          * msk[:, s_i][:, None])
+                agg += jnp.dot(w, hchunk,
+                               preferred_element_type=jnp.float32)
+                h_self += jnp.dot((sidx == cols).astype(jnp.float32), hchunk,
+                                  preferred_element_type=jnp.float32)
+            if reduction == "mean":
+                agg = agg / jnp.maximum(msk.sum(1, keepdims=True), 1.0)
+            pre = jnp.dot(h_self, w1_ref[...].astype(jnp.float32),
+                          preferred_element_type=jnp.float32)
+            pre += jnp.dot(agg, w2_ref[...].astype(jnp.float32),
+                           preferred_element_type=jnp.float32)
+            pre += b_ref[...].astype(jnp.float32)
+            if k < k_max:
+                pre = jnp.maximum(pre, 0.0)              # hidden hops: relu
+            if normalize:
+                nrm = jnp.sqrt(jnp.sum(pre * pre, axis=1, keepdims=True))
+                pre = pre / jnp.maximum(nrm, 1e-9)
+            if hop == k_max - 1:
+                out_ref[...] = pre
+            else:
+                dst = buf_b if hop % 2 == 0 else buf_a
+                pl.store(dst, (pl.dslice(0, n_cur), pl.dslice(0, do)), pre)
+
+
+def _mega_forward(spec, params, plan, features, interpret: bool):
+    from repro.core.operators import KERNEL_COMBINERS
+    k_max = len(plan["child_idx"])
+    n_pad, d_pad = _padded_shapes(spec, plan)
+    n_max, d_max = max(n_pad), max(d_pad)
+    lvl0 = plan["levels"][k_max].astype(jnp.int32)
+    n0 = int(lvl0.shape[0])
+
+    feats = features
+    if spec.feature_dtype == "bfloat16":
+        feats = feats.astype(jnp.bfloat16)
+    d0 = int(feats.shape[1])
+    if d_pad[0] != d0:
+        feats = jnp.pad(feats, ((0, 0), (0, d_pad[0] - d0)))
+
+    inputs = [feats]
+    in_specs = [pl.BlockSpec((1, d_pad[0]),
+                             lambda i, lvl: (lvl[i], 0))]
+    fanouts = []
+    for hop in range(k_max):
+        h_lvl = k_max - 1 - hop
+        k = hop + 1
+        cidx = plan["child_idx"][h_lvl].astype(jnp.int32)
+        msk = plan["child_msk"][h_lvl].astype(jnp.float32)
+        sidx = plan["self_idx"][h_lvl].astype(jnp.int32)
+        if spec.gcn_self_loop:
+            cidx = jnp.concatenate([cidx, sidx[:, None]], axis=1)
+            msk = jnp.concatenate([msk, jnp.ones_like(msk[:, :1])], axis=1)
+        n_cur = n_pad[h_lvl]
+        rows = int(cidx.shape[0])
+        cidx = jnp.pad(cidx, ((0, n_cur - rows), (0, 0)),
+                       constant_values=-1)
+        msk = jnp.pad(msk, ((0, n_cur - rows), (0, 0)))
+        sidx = jnp.pad(sidx, (0, n_cur - rows)).reshape(1, -1)
+        fanouts.append(int(cidx.shape[1]))
+        di, do = spec.dims[k - 1], spec.dims[k]
+        w1, w2, b = KERNEL_COMBINERS[spec.combiner](params[f"layer_{k}"]
+                                                    ["comb"], di)
+        w1 = jnp.pad(w1.astype(jnp.float32),
+                     ((0, d_pad[k - 1] - di), (0, d_pad[k] - do)))
+        w2 = jnp.pad(w2.astype(jnp.float32),
+                     ((0, d_pad[k - 1] - di), (0, d_pad[k] - do)))
+        b = jnp.pad(b.astype(jnp.float32), (0, d_pad[k] - do)).reshape(1, -1)
+        s_slots = int(cidx.shape[1])
+        inputs += [cidx, msk, sidx, w1, w2, b]
+        in_specs += [
+            pl.BlockSpec((n_cur, s_slots), lambda i, lvl: (0, 0)),
+            pl.BlockSpec((n_cur, s_slots), lambda i, lvl: (0, 0)),
+            pl.BlockSpec((1, n_cur), lambda i, lvl: (0, 0)),
+            pl.BlockSpec((d_pad[k - 1], d_pad[k]), lambda i, lvl: (0, 0)),
+            pl.BlockSpec((d_pad[k - 1], d_pad[k]), lambda i, lvl: (0, 0)),
+            pl.BlockSpec((1, d_pad[k]), lambda i, lvl: (0, 0)),
+        ]
+
+    n_out = n_pad[0]
+    kernel = functools.partial(_kernel, k_max=k_max, n0=n0,
+                               reduction=spec.aggregator,
+                               normalize=spec.normalize,
+                               n_pad=tuple(n_pad), d_pad=tuple(d_pad),
+                               fanouts=tuple(fanouts))
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(n0,),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((n_out, d_pad[-1]), lambda i, lvl: (0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((n_max, d_max), jnp.float32),
+                pltpu.VMEM((n_max, d_max), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((n_out, d_pad[-1]), jnp.float32),
+        interpret=interpret,
+    )(lvl0, *inputs)
+    b_real = int(plan["self_idx"][0].shape[0])
+    return out[:b_real, :spec.dims[-1]]
+
+
+# ---------------------------------------------------------------------------
+# differentiable wrapper
+# ---------------------------------------------------------------------------
+
+def _zero_cot(x):
+    if jnp.issubdtype(x.dtype, jnp.integer):
+        return np.zeros(np.shape(x), jax.dtypes.float0)
+    return jnp.zeros_like(x)
+
+
+@functools.lru_cache(maxsize=None)
+def _mega_vjp(spec, interpret: bool):
+    per_hop = dataclasses.replace(spec, megakernel=False)
+
+    @jax.custom_vjp
+    def mega(params, plan, features):
+        return _mega_forward(spec, params, plan, features, interpret)
+
+    def fwd(params, plan, features):
+        out = _mega_forward(spec, params, plan, features, interpret)
+        return out, (params, plan, features)
+
+    def bwd(res, g):
+        params, plan, features = res
+        # remat: pull the cotangent through the per-hop path, whose hop
+        # kernels carry the training-grade scatter-add/matmul VJPs
+        from repro.core.gnn import gnn_apply
+        _, pull = jax.vjp(
+            lambda p, f: gnn_apply(per_hop, p, plan, f), params, features)
+        dp, df = pull(g)
+        return dp, jax.tree.map(_zero_cot, plan), df
+
+    mega.defvjp(fwd, bwd)
+    return mega
+
+
+def gnn_apply_mega(spec, params, plan, features):
+    """Whole-forward single-launch ``gnn_apply``; call only when
+    ``megakernel_engages(spec, plan)`` is True."""
+    from repro.core.operators import kernel_mode
+    fn = _mega_vjp(spec, kernel_mode() == "interpret")
+    return fn(params, plan, features)

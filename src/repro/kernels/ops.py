@@ -21,12 +21,14 @@ import numpy as np
 
 from . import backward as bwdk
 from . import ref
+from .attention_agg import attention_layer as _attention_layer_kernel
 from .fused_combine import fused_combine as _fused_combine_kernel
 from .fused_layer import fused_layer as _fused_layer_kernel
 from .neighbor_agg import neighbor_agg as _neighbor_agg_kernel
 
 __all__ = ["neighbor_aggregate", "combine_dense", "fused_gnn_layer",
-           "scatter_add_weighted", "scatter_add_rows", "matmul_f32", "on_tpu"]
+           "attention_gnn_layer", "scatter_add_weighted", "scatter_add_rows",
+           "matmul_f32", "on_tpu"]
 
 
 def on_tpu() -> bool:
@@ -258,7 +260,8 @@ def combine_dense(h_self: jax.Array, h_agg: jax.Array, w: jax.Array,
 # ---------------------------------------------------------------------------
 
 @functools.lru_cache(maxsize=None)
-def _fused_layer_vjp(reduction: str, activation: str, interpret: bool):
+def _fused_layer_vjp(reduction: str, activation: str, interpret: bool,
+                     out_dtype: str):
     def run(features, sidx, cidx, mask, w1, w2, bias):
         n, d = features.shape
         o = w1.shape[1]
@@ -274,7 +277,8 @@ def _fused_layer_vjp(reduction: str, activation: str, interpret: bool):
         out, h_agg = _fused_layer_kernel(feats, sidx, cidx, mask, w1p, w2p,
                                          bp, reduction=reduction,
                                          activation=activation,
-                                         block_o=block_o, interpret=interpret)
+                                         block_o=block_o, interpret=interpret,
+                                         out_dtype=jnp.dtype(out_dtype))
         return out[:, :o], h_agg[:, :d]
 
     @jax.custom_vjp
@@ -316,7 +320,8 @@ def fused_gnn_layer(features: jax.Array, self_idx: jax.Array,
                     child_idx: jax.Array, mask: jax.Array, w1: jax.Array,
                     w2: jax.Array, bias: jax.Array, *,
                     reduction: str = "mean", activation: str = "relu",
-                    interpret: bool | None = None) -> jax.Array:
+                    interpret: bool | None = None,
+                    out_dtype=None) -> jax.Array:
     """One single-pass Algorithm-1 layer:
     ``act(h[self_idx] @ W1 + agg(h[child_idx], mask) @ W2 + b)``.
 
@@ -324,10 +329,132 @@ def fused_gnn_layer(features: jax.Array, self_idx: jax.Array,
     w1/w2 [D, O], bias [O] -> [B, O].  Differentiable in features, w1, w2
     and bias (the bwd is the scatter-add + transposed-matmul kernel pair);
     ``mask`` gets a zero cotangent — plan masks are sampling artifacts,
-    not parameters.  jnp oracle: ``ref.fused_layer_ref``."""
+    not parameters.  ``out_dtype`` decouples the output from the feature
+    dtype (bf16 streaming keeps f32 activations).  jnp oracle:
+    ``ref.fused_layer_ref``."""
     if interpret is None:
         interpret = not on_tpu()
-    fn = _fused_layer_vjp(reduction, activation, bool(interpret))
+    od = jnp.dtype(out_dtype) if out_dtype is not None \
+        else jnp.dtype(features.dtype)
+    fn = _fused_layer_vjp(reduction, activation, bool(interpret), od.name)
     return fn(features, self_idx.astype(jnp.int32),
               child_idx.astype(jnp.int32), mask.astype(jnp.float32),
               w1, w2, bias)
+
+
+# ---------------------------------------------------------------------------
+# attention_gnn_layer — the fused ATTENTION layer (online softmax in VMEM)
+# ---------------------------------------------------------------------------
+
+def _attention_weights(features, cidx, mask, att, g, *, interpret):
+    """(a, t) for the attention VJP via the streaming recompute kernel
+    (``backward.attention_probs``): a [B, S] normalised softmax weights,
+    t [B, S] per-slot x·g dot products — no [B, S, D] gather."""
+    n, d = features.shape
+    b, s = cidx.shape
+    d_pad = _round_up(d, 128)
+    s_pad = _round_up(s, 128)
+    feats = features
+    if d_pad != d:
+        feats = jnp.pad(features, ((0, 0), (0, d_pad - d)))
+    mp = jnp.pad(mask.astype(jnp.float32), ((0, 0), (0, s_pad - s)))
+    ap = jnp.pad(att.astype(jnp.float32), (0, d_pad - d)).reshape(1, -1)
+    gp = jnp.pad(g.astype(jnp.float32), ((0, 0), (0, d_pad - d)))
+    a, t = bwdk.attention_probs(cidx, mp, feats, ap, gp, interpret=interpret)
+    return a[:, :s], t[:, :s]
+
+
+@functools.lru_cache(maxsize=None)
+def _attention_layer_vjp(activation: str, interpret: bool, out_dtype: str):
+    def run(features, sidx, cidx, mask, att, w1, w2, bias):
+        n, d = features.shape
+        o = w1.shape[1]
+        d_pad = _round_up(d, 128)
+        block_o = min(_round_up(o, 128), 512)
+        o_pad = _round_up(o, block_o)
+        feats = features
+        if d_pad != d:
+            feats = jnp.pad(features, ((0, 0), (0, d_pad - d)))
+        ap = jnp.pad(att.astype(jnp.float32),
+                     (0, d_pad - d)).reshape(1, -1)
+        w1p = jnp.pad(w1, ((0, d_pad - d), (0, o_pad - o)))
+        w2p = jnp.pad(w2, ((0, d_pad - d), (0, o_pad - o)))
+        bp = jnp.pad(bias, (0, o_pad - o))
+        out, h_agg = _attention_layer_kernel(
+            feats, sidx, cidx, mask, ap, w1p, w2p, bp,
+            activation=activation, block_o=block_o, interpret=interpret,
+            out_dtype=jnp.dtype(out_dtype))
+        return out[:, :o], h_agg[:, :d]
+
+    @jax.custom_vjp
+    def layer(features, sidx, cidx, mask, att, w1, w2, bias):
+        return run(features, sidx, cidx, mask, att, w1, w2, bias)[0]
+
+    def fwd(features, sidx, cidx, mask, att, w1, w2, bias):
+        out, h_agg = run(features, sidx, cidx, mask, att, w1, w2, bias)
+        return out, (features, sidx, cidx, mask, att, w1, w2, bias, h_agg,
+                     out)
+
+    def bwd(res, g):
+        features, sidx, cidx, mask, att, w1, w2, bias, h_agg, out = res
+        n, d = features.shape
+        b = sidx.shape[0]
+        dpre = _act_bwd(activation, g, out)                      # [B, O]
+        h_self = features[sidx].astype(jnp.float32)
+        dw1 = matmul_f32(h_self.T, dpre, interpret=interpret)
+        dw2 = matmul_f32(h_agg.T, dpre, interpret=interpret)
+        d_self = matmul_f32(dpre, w1.astype(jnp.float32).T,
+                            interpret=interpret)
+        d_agg = matmul_f32(dpre, w2.astype(jnp.float32).T,
+                           interpret=interpret)                  # [B, D]
+        # softmax VJP: with a_s the attention weights and t_s = x_s·d_agg,
+        #   d logit_s = a_s (t_s - agg·d_agg)
+        #   d x_s     = a_s d_agg + d logit_s · att
+        #   d att     = Σ_s d logit_s · x_s
+        a, t = _attention_weights(features, cidx, mask, att, d_agg,
+                                  interpret=interpret)
+        dl = a * (t - jnp.sum(h_agg * d_agg, axis=1)[:, None])   # [B, S]
+        dh = scatter_add_rows(sidx, d_self, n, interpret=interpret)
+        dh = dh + scatter_add_weighted(cidx, a, d_agg, n,
+                                       interpret=interpret)
+        att_rows = jnp.broadcast_to(att.astype(jnp.float32)[None, :], (b, d))
+        dh = dh + scatter_add_weighted(cidx, dl, att_rows, n,
+                                       interpret=interpret)
+        # d_att = Σ_{i,s} dl[i,s] x_{child[i,s]} — fold the per-slot weights
+        # into one coefficient per vertex, then a single [1,N]x[N,D] matmul
+        cvec = jnp.zeros((n,), jnp.float32).at[cidx.reshape(-1)].add(
+            dl.reshape(-1), mode="drop")
+        d_att = matmul_f32(cvec.reshape(1, -1), features,
+                           interpret=interpret)[0]
+        return (dh.astype(features.dtype), _float0(sidx), _float0(cidx),
+                jnp.zeros_like(mask), d_att.astype(att.dtype),
+                dw1.astype(w1.dtype), dw2.astype(w2.dtype),
+                dpre.sum(0).astype(bias.dtype))
+
+    layer.defvjp(fwd, bwd)
+    return layer
+
+
+def attention_gnn_layer(features: jax.Array, self_idx: jax.Array,
+                        child_idx: jax.Array, mask: jax.Array,
+                        att: jax.Array, w1: jax.Array, w2: jax.Array,
+                        bias: jax.Array, *, activation: str = "relu",
+                        interpret: bool | None = None,
+                        out_dtype=None) -> jax.Array:
+    """One single-pass attention-aggregated layer:
+    ``act(h[self_idx] @ W1 + softmax-pool(h[child_idx], att, mask) @ W2 + b)``
+    with the softmax state accumulated online in VMEM (no [B, S] score
+    tensor in HBM).  att is the [D] scoring vector
+    (``layer_params["agg"]["att"]``).  Differentiable in features, att,
+    w1, w2 and bias; the bwd re-streams neighbor rows to rebuild the
+    softmax weights (``backward.attention_probs``) and lowers everything
+    else onto the existing scatter-add / matmul kernels.  jnp oracle:
+    ``ref.attention_layer_ref``."""
+    if interpret is None:
+        interpret = not on_tpu()
+    od = jnp.dtype(out_dtype) if out_dtype is not None \
+        else jnp.dtype(features.dtype)
+    fn = _attention_layer_vjp(activation, bool(interpret), od.name)
+    return fn(features, self_idx.astype(jnp.int32),
+              child_idx.astype(jnp.int32), mask.astype(jnp.float32),
+              att, w1, w2, bias)

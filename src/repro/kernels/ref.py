@@ -59,6 +59,41 @@ def fused_layer_ref(features: jax.Array, self_idx: jax.Array,
     return out.astype(features.dtype)
 
 
+def attention_agg_ref(features: jax.Array, indices: jax.Array,
+                      mask: jax.Array, att: jax.Array) -> jax.Array:
+    """Masked softmax-attention pooling — the exact math of
+    ``operators._agg_attention`` on a gathered [B, S, D] tensor (which the
+    Pallas kernel never materialises)."""
+    neigh = features[indices].astype(jnp.float32)        # [B, S, D]
+    m = mask.astype(jnp.float32)
+    logits = jnp.einsum("bsd,d->bs", neigh, att.astype(jnp.float32))
+    logits = jnp.where(m > 0, logits, -1e9)
+    a = jax.nn.softmax(logits, axis=-1) * (m > 0)
+    a = a / jnp.maximum(a.sum(-1, keepdims=True), 1e-9)
+    return jnp.einsum("bs,bsd->bd", a, neigh).astype(features.dtype)
+
+
+def attention_layer_ref(features: jax.Array, self_idx: jax.Array,
+                        child_idx: jax.Array, mask: jax.Array,
+                        att: jax.Array, w1: jax.Array, w2: jax.Array,
+                        bias: jax.Array, *,
+                        activation: str = "relu") -> jax.Array:
+    """Whole attention-aggregated layer in plain jnp — the allclose target
+    (fwd and grad) for the fused attention kernel."""
+    h_self = features[self_idx].astype(jnp.float32)
+    h_agg = attention_agg_ref(features, child_idx, mask,
+                              att).astype(jnp.float32)
+    out = (h_self @ w1.astype(jnp.float32) + h_agg @ w2.astype(jnp.float32)
+           + bias.astype(jnp.float32))
+    if activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif activation == "tanh":
+        out = jnp.tanh(out)
+    elif activation != "none":
+        raise ValueError(activation)
+    return out.astype(features.dtype)
+
+
 def scatter_add_rows_ref(indices: jax.Array, contrib: jax.Array,
                          n_rows: int) -> jax.Array:
     """dh[indices[j]] += contrib[j]; out-of-range indices drop (kernel

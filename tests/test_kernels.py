@@ -224,13 +224,15 @@ def test_spec_rejects_kernel_incompatible_pairs():
     combiner fails at GNNSpec construction with a clear message, not a bare
     ValueError deep inside the pallas wrapper."""
     from repro.core.gnn import GNNSpec
-    for agg, comb in (("attention", "concat"), ("gru", "concat"),
-                      ("mean", "gru")):
+    # since ISSUE 7 the attention aggregator IS kernel-capable; only the
+    # gru aggregator/combiner remain jnp-only
+    for agg, comb in (("gru", "concat"), ("mean", "gru"),
+                      ("attention", "gru")):
         with pytest.raises(ValueError, match="kernel"):
             GNNSpec(k_max=2, dims=(8, 8, 8), fanouts=(3, 2), aggregator=agg,
                     combiner=comb, use_kernel=True)
-    # all kernel-capable pairs construct fine
-    for agg in ("mean", "sum", "max"):
+    # all kernel-capable pairs construct fine (attention included)
+    for agg in ("mean", "sum", "max", "attention"):
         for comb in ("concat", "add"):
             GNNSpec(k_max=1, dims=(8, 8), fanouts=(3,), aggregator=agg,
                     combiner=comb, use_kernel=True)
@@ -327,3 +329,260 @@ def test_trainer_use_kernel_matches_jnp(small_store):
     e_k = trainers["kernel"].embed_many(np.arange(24), chunk=12)
     e_j = trainers["jnp"].embed_many(np.arange(24), chunk=12)
     np.testing.assert_allclose(e_k, e_j, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 7 tentpole (a): Pallas attention aggregator — online softmax in VMEM
+# ---------------------------------------------------------------------------
+
+def _att_case(n=60, d=40, b=10, s=4, o=24, seed=1):
+    rng = np.random.default_rng(seed)
+    return (jnp.asarray(rng.standard_normal((n, d)), jnp.float32),
+            jnp.asarray(rng.integers(0, n, b), jnp.int32),
+            jnp.asarray(rng.integers(0, n, (b, s)), jnp.int32),
+            jnp.asarray(rng.random((b, s)) > 0.3, jnp.float32),
+            jnp.asarray(rng.standard_normal(d) * 0.3, jnp.float32),
+            jnp.asarray(rng.standard_normal((d, o)) * 0.1, jnp.float32),
+            jnp.asarray(rng.standard_normal((d, o)) * 0.1, jnp.float32),
+            jnp.asarray(rng.standard_normal(o), jnp.float32))
+
+
+@pytest.mark.parametrize("activation", ["relu", "none", "tanh"])
+@pytest.mark.parametrize("shape", [dict(), dict(d=33, o=17), dict(s=1),
+                                   dict(n=257, d=128, b=16, s=8)])
+def test_attention_layer_forward(activation, shape):
+    f, sidx, cidx, msk, att, w1, w2, b = _att_case(**shape)
+    got = ops.attention_gnn_layer(f, sidx, cidx, msk, att, w1, w2, b,
+                                  activation=activation)
+    want = ref.attention_layer_ref(f, sidx, cidx, msk, att, w1, w2, b,
+                                   activation=activation)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_attention_layer_all_masked():
+    """Anchors with no valid neighbor get a zero attention aggregate — the
+    online-softmax running state must not emit NaN/-inf there."""
+    f, sidx, cidx, _, att, w1, w2, b = _att_case()
+    msk = jnp.zeros(cidx.shape, jnp.float32)
+    got = ops.attention_gnn_layer(f, sidx, cidx, msk, att, w1, w2, b,
+                                  activation="none")
+    want = ref.attention_layer_ref(f, sidx, cidx, msk, att, w1, w2, b,
+                                   activation="none")
+    assert np.isfinite(np.asarray(got)).all()
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("activation", ["relu", "none"])
+def test_attention_layer_grad(activation):
+    """ISSUE 7: training-grade custom_vjp — d(loss)/d(features, att, W1, W2,
+    b) through the attention kernel == through the jnp oracle, under
+    jit + value_and_grad (the trainer's shape)."""
+    f, sidx, cidx, msk, att, w1, w2, b = _att_case(seed=2)
+
+    def loss(fn):
+        return lambda f_, a_, w1_, w2_, b_: (fn(
+            f_, sidx, cidx, msk, a_, w1_, w2_, b_) ** 2).sum()
+
+    fused = jax.jit(jax.value_and_grad(
+        loss(lambda *a: ops.attention_gnn_layer(*a, activation=activation)),
+        argnums=(0, 1, 2, 3, 4)))
+    oracle = jax.jit(jax.value_and_grad(
+        loss(lambda *a: ref.attention_layer_ref(*a, activation=activation)),
+        argnums=(0, 1, 2, 3, 4)))
+    vk, gk = fused(f, att, w1, w2, b)
+    vr, gr = oracle(f, att, w1, w2, b)
+    np.testing.assert_allclose(float(vk), float(vr), rtol=1e-5)
+    for got, want in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_attention_trainer_use_kernel_matches_jnp(small_store):
+    """ISSUE 7 satellite: the lifted restriction trains — a 20-step
+    attention-aggregator loss curve with use_kernel=True matches the jnp
+    path, and embed_many rows agree."""
+    from repro.core.gnn import GNNSpec, GNNTrainer
+
+    g = small_store.graph
+    d_in = g.vertex_attr_table.shape[1]
+    spec_k = GNNSpec(k_max=2, dims=(d_in, 16, 16), fanouts=(3, 2),
+                     aggregator="attention", use_kernel=True)
+    spec_j = dataclasses.replace(spec_k, use_kernel=False)
+    losses, trainers = {}, {}
+    for tag, spec in (("kernel", spec_k), ("jnp", spec_j)):
+        tr = GNNTrainer(small_store, spec, n_negatives=2, lr=0.05, seed=0)
+        losses[tag] = tr.train(20, batch_size=8)
+        trainers[tag] = tr
+    np.testing.assert_allclose(losses["kernel"], losses["jnp"],
+                               rtol=1e-4, atol=1e-4)
+    e_k = trainers["kernel"].embed_many(np.arange(24), chunk=12)
+    e_j = trainers["jnp"].embed_many(np.arange(24), chunk=12)
+    np.testing.assert_allclose(e_k, e_j, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 7 tentpole (b): bf16 feature-table streaming, f32 accumulate
+# ---------------------------------------------------------------------------
+
+def test_feature_dtype_bf16_tolerance(small_store):
+    """The fp32-tolerance contract: feature_dtype='bfloat16' halves the
+    streamed gather bytes but keeps f32 accumulators/outputs — results stay
+    within bf16 mantissa noise of the f32 kernel path, which itself stays
+    allclose-tight to the jnp oracle."""
+    from repro.core.gnn import GNNSpec, gnn_apply, init_gnn_params
+    from repro.core.operators import build_plan, plan_to_device
+    from repro.core.sampling import NeighborhoodSampler
+
+    g = small_store.graph
+    d_in = g.vertex_attr_table.shape[1]
+    base = GNNSpec(k_max=2, dims=(d_in, 16, 16), fanouts=(4, 3))
+    params = init_gnn_params(base, seed=0)
+    feats = jnp.asarray(small_store.dense_features())
+    sampler = NeighborhoodSampler(small_store, seed=0)
+    plan = plan_to_device(build_plan(sampler, np.arange(12, dtype=np.int32),
+                                     (4, 3)))
+    zj = gnn_apply(base, params, plan, feats)
+    z32 = gnn_apply(dataclasses.replace(base, use_kernel=True),
+                    params, plan, feats)
+    z16 = gnn_apply(dataclasses.replace(base, use_kernel=True,
+                                        feature_dtype="bfloat16"),
+                    params, plan, feats)
+    assert z16.dtype == jnp.float32          # f32 accumulators end-to-end
+    np.testing.assert_allclose(np.asarray(z32), np.asarray(zj),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(z16), np.asarray(zj),
+                               rtol=3e-2, atol=3e-2)
+    # per-hop l2-normalised embeddings: bf16 rounding must stay an order of
+    # magnitude below the signal, not merely "allclose with a huge tol"
+    assert float(jnp.abs(z16 - zj).max()) < 0.5 * float(jnp.abs(zj).max())
+
+
+def test_feature_dtype_bf16_grads(small_store):
+    """bf16 streaming is training-grade: grads flow (f32, finite) through
+    the bwd scatter-add and stay within bf16 tolerance of the jnp path."""
+    from repro.core.gnn import GNNSpec, gnn_apply, init_gnn_params
+    from repro.core.operators import build_plan, plan_to_device
+    from repro.core.sampling import NeighborhoodSampler
+
+    g = small_store.graph
+    d_in = g.vertex_attr_table.shape[1]
+    spec16 = GNNSpec(k_max=1, dims=(d_in, 16), fanouts=(4,),
+                     use_kernel=True, feature_dtype="bfloat16")
+    spec_j = GNNSpec(k_max=1, dims=(d_in, 16), fanouts=(4,))
+    params = init_gnn_params(spec_j, seed=0)
+    feats = jnp.asarray(small_store.dense_features())
+    sampler = NeighborhoodSampler(small_store, seed=0)
+    plan = plan_to_device(build_plan(sampler, np.arange(8, dtype=np.int32),
+                                     (4,)))
+
+    def loss(spec):
+        return lambda p: (gnn_apply(spec, p, plan, feats) ** 2).sum()
+
+    g16 = jax.grad(loss(spec16))(params)
+    gj = jax.grad(loss(spec_j))(params)
+    for a, b in zip(jax.tree_util.tree_leaves(g16),
+                    jax.tree_util.tree_leaves(gj)):
+        assert a.dtype == jnp.float32
+        assert np.isfinite(np.asarray(a)).all()
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-2, atol=5e-2)
+
+
+def test_feature_dtype_validation():
+    from repro.core.gnn import GNNSpec
+    with pytest.raises(ValueError, match="feature_dtype"):
+        GNNSpec(k_max=1, dims=(8, 8), fanouts=(3,), use_kernel=True,
+                feature_dtype="float16")
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 7 tentpole (c): fused multi-hop megakernel
+# ---------------------------------------------------------------------------
+
+def _mega_fixture(small_store, aggregator, combiner, gcn_self_loop=False,
+                  normalize=True):
+    from repro.core.gnn import GNNSpec, init_gnn_params
+    from repro.core.operators import build_plan, plan_to_device
+    from repro.core.sampling import NeighborhoodSampler
+
+    g = small_store.graph
+    d_in = g.vertex_attr_table.shape[1]
+    spec = GNNSpec(k_max=2, dims=(d_in, 16, 16), fanouts=(4, 3),
+                   aggregator=aggregator, combiner=combiner,
+                   gcn_self_loop=gcn_self_loop, normalize=normalize,
+                   use_kernel=True, megakernel=True)
+    params = init_gnn_params(spec, seed=0)
+    feats = jnp.asarray(small_store.dense_features())
+    sampler = NeighborhoodSampler(small_store, seed=0)
+    plan = plan_to_device(build_plan(sampler, np.arange(10, dtype=np.int32),
+                                     (4, 3)))
+    return spec, params, plan, feats
+
+
+@pytest.mark.parametrize("aggregator", ["mean", "sum"])
+@pytest.mark.parametrize("combiner", ["concat", "add"])
+def test_megakernel_matches_jnp(small_store, aggregator, combiner):
+    """One launch for the whole gnn_apply == the per-hop jnp oracle, for
+    every megakernel-capable aggregator x combiner pair."""
+    from repro.core.gnn import gnn_apply
+    from repro.kernels import megakernel as mk
+
+    spec, params, plan, feats = _mega_fixture(small_store, aggregator,
+                                              combiner)
+    assert mk.megakernel_engages(spec, plan)
+    zm = gnn_apply(spec, params, plan, feats)
+    zj = gnn_apply(dataclasses.replace(spec, use_kernel=False,
+                                       megakernel=False),
+                   params, plan, feats)
+    np.testing.assert_allclose(np.asarray(zm), np.asarray(zj),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_megakernel_grad_matches_jnp(small_store):
+    """Training-grade: value_and_grad through the megakernel (remat backward
+    over the per-hop kernel VJPs) matches the jnp path."""
+    from repro.core.gnn import gnn_apply
+
+    spec, params, plan, feats = _mega_fixture(small_store, "mean", "concat")
+    spec_j = dataclasses.replace(spec, use_kernel=False, megakernel=False)
+
+    def loss(sp):
+        return lambda p: (gnn_apply(sp, p, plan, feats) ** 2).sum()
+
+    vm, gm = jax.jit(jax.value_and_grad(loss(spec)))(params)
+    vj, gj = jax.jit(jax.value_and_grad(loss(spec_j)))(params)
+    np.testing.assert_allclose(float(vm), float(vj), rtol=1e-5)
+    for a, b in zip(jax.tree_util.tree_leaves(gm),
+                    jax.tree_util.tree_leaves(gj)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_megakernel_vmem_fallback(small_store, monkeypatch):
+    """Shapes past the VMEM budget fall back to the per-hop fused kernels —
+    same numbers, no crash (the engagement predicate is the only gate)."""
+    from repro.core.gnn import gnn_apply
+    from repro.kernels import megakernel as mk
+
+    spec, params, plan, feats = _mega_fixture(small_store, "mean", "concat")
+    want = gnn_apply(spec, params, plan, feats)
+    monkeypatch.setattr(mk, "VMEM_BUDGET_BYTES", 1)
+    assert not mk.megakernel_engages(spec, plan)
+    got = gnn_apply(spec, params, plan, feats)    # per-hop kernel fallback
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_megakernel_spec_validation():
+    """megakernel=True is only legal on top of use_kernel=True and a
+    megakernel-capable aggregator x combiner pair."""
+    from repro.core.gnn import GNNSpec
+    with pytest.raises(ValueError, match="megakernel"):
+        GNNSpec(k_max=1, dims=(8, 8), fanouts=(3,), megakernel=True)
+    with pytest.raises(ValueError, match="megakernel"):
+        GNNSpec(k_max=1, dims=(8, 8), fanouts=(3,), aggregator="attention",
+                use_kernel=True, megakernel=True)
+    GNNSpec(k_max=1, dims=(8, 8), fanouts=(3,), aggregator="sum",
+            combiner="add", use_kernel=True, megakernel=True)

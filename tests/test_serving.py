@@ -251,6 +251,34 @@ def test_served_use_kernel_byte_identical(small_store, trainer):
     assert m["recompiles"] <= len(plan.buckets)
 
 
+def test_served_attention_kernel_matches_offline(small_store):
+    """ISSUE 7 acceptance: the lifted restriction holds end-to-end — an
+    attention-aggregator model compiles with use_kernel=True and serves rows
+    byte-identical to the same-spec offline embed_many."""
+    import dataclasses as _dc
+
+    from repro.core.gnn import GNNSpec, GNNTrainer
+
+    g = small_store.graph
+    spec = GNNSpec(k_max=2, dims=(g.vertex_attr_table.shape[1], 16, 16),
+                   fanouts=FAN, aggregator="attention", use_kernel=True)
+    tr = GNNTrainer(small_store, spec, lr=0.05, seed=0)
+    tr.train(3, batch_size=16)
+    plan = compile_server(G(small_store).V().sample(4).sample(3), tr,
+                          Traffic((3, 3, 6, 9, 14, 14)), max_buckets=2,
+                          seed=5)
+    assert plan.spec.use_kernel and plan.spec.aggregator == "attention"
+    trace = [ids[:14] for ids in _mixed_trace(g, n_req=6, seed=13)]
+    all_ids = np.unique(np.concatenate(trace))
+    offline = tr.embed_many(all_ids, chunk=8, executor=plan.executor())
+    row_of = {int(v): offline[i] for i, v in enumerate(all_ids)}
+    with EmbeddingServer(plan, cache_policy="off", cache_capacity=1) as srv:
+        outs = srv.serve_trace(trace)
+    for ids, out in zip(trace, outs):
+        want = np.stack([row_of[int(v)] for v in ids])
+        assert want.tobytes() == out.tobytes()
+
+
 def test_compile_server_use_kernel_validates_spec(small_store, trainer):
     """The use_kernel override re-validates the spec eagerly: a non-kernel
     aggregator fails at compile time, not inside a per-bucket jit trace."""
