@@ -169,6 +169,41 @@ def run(smoke: bool = False) -> dict:
     emit("serving_exact_wall_s", e["wall_s"] * 1e6,
          f"recompiles={e['recompiles']}")
 
+    # ---- saturation sweep -----------------------------------------------
+    # Offered load paced from under to past the backlogged capacity: p50
+    # holds flat until the knee, then queueing makes p99 climb without
+    # bound — single-server serving has NO shed/degrade valve.  (The fleet
+    # benchmark, bench_fleet.py, sweeps the same shape WITH the valves and
+    # records what they buy past the knee.)
+    from repro.serving import EmbeddingServer, arrival_offsets
+    capacity = record["cache"]["off"]["ids_per_s"]
+    record["saturation"] = {"capacity_ids_per_s": capacity, "levels": []}
+    sat_trace = trace[:16 if smoke else 64]
+    duration = 0.4 if smoke else 1.5
+    for m in ((0.5, 2.0) if smoke else (0.5, 1.0, 1.5, 2.0, 3.0)):
+        offered = m * capacity
+        srv = EmbeddingServer(plan, cache_policy="off", cache_capacity=1)
+        srv.serve_trace(sat_trace[:2])           # warm, then reset latency
+        srv.metrics.latencies_ms.clear()
+        reps = max(1, int(np.ceil(
+            offered * duration / sum(len(t) for t in sat_trace))))
+        paced = (sat_trace * reps)
+        at = arrival_offsets([len(t) for t in paced], offered)
+        t0 = time.perf_counter()
+        for ids, t_at in zip(paced, at):
+            if t_at > duration:
+                break
+            time.sleep(max(0.0, t0 + t_at - time.perf_counter()))
+            srv.submit(ids)
+        srv.drain()
+        m_snap = srv.metrics.snapshot()
+        srv.stop()
+        lv = {"load_multiplier": m,
+              "offered_ids_per_s": round(offered, 1),
+              "p50_ms": m_snap["p50_ms"], "p99_ms": m_snap["p99_ms"]}
+        record["saturation"]["levels"].append(lv)
+        emit(f"serving_load_{m}x_p99_ms", lv["p99_ms"], "")
+
     if not smoke:
         with open(_BENCH_JSON, "w") as f:
             json.dump({"serving": record}, f, indent=2)

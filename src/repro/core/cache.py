@@ -23,7 +23,29 @@ import numpy as np
 from .graph import AHG, k_hop_degrees
 
 __all__ = ["importance", "plan_cache", "CachePlan", "LRUCache", "CachePolicy",
-           "power_law_fit"]
+           "power_law_fit", "split_budget"]
+
+
+def split_budget(weights: Dict[str, float], total: int) -> Dict[str, int]:
+    """Split an integer budget (e.g. a fleet-wide HBM byte budget) across
+    keys proportionally to ``weights``, exactly: largest-remainder rounding,
+    so the shares sum to ``total`` and a zero-weight key gets zero."""
+    total = int(total)
+    if total < 0:
+        raise ValueError("budget must be >= 0")
+    names = list(weights)
+    w = np.asarray([float(weights[k]) for k in names], np.float64)
+    if (w < 0).any():
+        raise ValueError("weights must be >= 0")
+    mass = w.sum()
+    if not names or mass <= 0 or total == 0:
+        return {k: 0 for k in names}
+    exact = w / mass * total
+    base = np.floor(exact).astype(np.int64)
+    rem = total - int(base.sum())
+    order = np.argsort(-(exact - base), kind="stable")
+    base[order[:rem]] += 1
+    return {k: int(b) for k, b in zip(names, base)}
 
 
 def importance(g: AHG, k: int = 1) -> np.ndarray:

@@ -26,7 +26,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 Array = jax.Array
 
 __all__ = ["EmbeddingSpec", "init_embedding", "embedding_lookup",
-           "plan_hot_rows", "HotSet", "embedding_pspec"]
+           "plan_hot_rows", "HotSet", "PinnedEmbeddings", "embedding_pspec"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,6 +78,111 @@ def plan_hot_rows(in_degree: np.ndarray, n_hot: int) -> HotSet:
     """Importance-driven hot-set: paper Thm 2 says Imp is power-law, so a
     small hot set captures most accesses; in-degree is the k=1 proxy."""
     return HotSet.plan(in_degree.astype(np.float64), n_hot)
+
+
+class PinnedEmbeddings:
+    """Device-resident pinned OUTPUT embeddings — the serving analogue of
+    :class:`HotSet`: the Imp-top (Eq. 1) vertices' final embedding rows
+    live in one ``[H, d]`` device buffer instead of the host-side
+    ``CachePolicy`` dict, so a hot id is answered by a device gather with
+    zero sampling/forward work.
+
+    Host-planned, device-held: ``slot_of`` maps ids to buffer slots
+    (``-1`` = not pinned), ``valid`` tracks which slots hold a live row
+    (cleared by :meth:`invalidate` when a graph delta moves the row's
+    value, refilled lazily by :meth:`load`).  Rows must come from the SAME
+    forward path as served misses, so pinned reads keep the byte-identity
+    contract."""
+
+    def __init__(self, n_rows: int, ids: np.ndarray, dim: int):
+        ids = np.unique(np.asarray(ids, np.int32))
+        self.ids = ids
+        self.dim = int(dim)
+        self.slot_of = np.full(int(n_rows), -1, np.int32)
+        self.slot_of[ids] = np.arange(len(ids), dtype=np.int32)
+        self.valid = np.zeros(len(ids), bool)
+        self.buffer: Array = jnp.zeros((max(len(ids), 1), self.dim),
+                                       jnp.float32)
+
+    @staticmethod
+    def plan(scores: np.ndarray, capacity: int, dim: int
+             ) -> "PinnedEmbeddings":
+        """Pin the top-``capacity`` ids by ``scores`` (Imp^(k), Eq. 1)."""
+        scores = np.asarray(scores, np.float64)
+        cap = max(0, min(int(capacity), len(scores)))
+        ids = (np.argpartition(-scores, cap - 1)[:cap].astype(np.int32)
+               if cap else np.zeros(0, np.int32))
+        return PinnedEmbeddings(len(scores), ids, dim)
+
+    def __len__(self) -> int:
+        return len(self.ids)
+
+    @property
+    def nbytes(self) -> int:
+        """Device (HBM) footprint of the pinned buffer."""
+        return len(self.ids) * self.dim * 4
+
+    @property
+    def n_valid(self) -> int:
+        return int(self.valid.sum())
+
+    def slot(self, vid: int) -> int:
+        """The live buffer slot of ``vid``, or -1 (not pinned / stale)."""
+        s = int(self.slot_of[vid])
+        if s < 0 or not self.valid[s]:
+            return -1
+        return s
+
+    @staticmethod
+    def _pad_pow2(n: int) -> int:
+        # scatter/gather lengths vary per tick; padding to a power of two
+        # bounds the distinct XLA shapes at O(log) instead of one compile
+        # per count (a mid-serving compile storm stalls the tick thread)
+        return 1 << (max(int(n), 1) - 1).bit_length()
+
+    def load(self, ids: np.ndarray, rows: np.ndarray) -> int:
+        """Write computed rows into their pinned slots (device scatter);
+        non-pinned ids are ignored.  Returns how many slots were filled."""
+        ids = np.asarray(ids, np.int32).reshape(-1)
+        slots = self.slot_of[ids]
+        sel = slots >= 0
+        if not sel.any():
+            return 0
+        slots = slots[sel]
+        rows = np.asarray(rows, np.float32)[sel]
+        m = self._pad_pow2(len(slots))
+        # pad by repeating the last (slot, row) pair: same value re-written
+        pslots = np.full(m, slots[-1], np.int32)
+        pslots[:len(slots)] = slots
+        prows = np.broadcast_to(rows[-1], (m, rows.shape[1])).copy()
+        prows[:len(slots)] = rows
+        self.buffer = self.buffer.at[jnp.asarray(pslots)].set(
+            jnp.asarray(prows))
+        self.valid[slots] = True
+        return int(sel.sum())
+
+    def gather(self, slots: np.ndarray) -> np.ndarray:
+        """ONE batched device gather of pinned rows (per serving tick)."""
+        slots = np.asarray(slots, np.int32).reshape(-1)
+        if not len(slots):
+            return np.zeros((0, self.dim), np.float32)
+        pslots = np.zeros(self._pad_pow2(len(slots)), np.int32)
+        pslots[:len(slots)] = slots
+        return np.asarray(self.buffer[jnp.asarray(pslots)],
+                          np.float32)[:len(slots)]
+
+    def invalidate(self, ids: np.ndarray) -> int:
+        """Mark pinned rows stale (a delta moved their value); they are
+        served from the miss path until re-:meth:`load`-ed.  Returns how
+        many live slots were dropped."""
+        ids = np.asarray(ids, np.int32).reshape(-1)
+        if not len(ids):
+            return 0
+        slots = self.slot_of[ids]
+        slots = slots[slots >= 0]
+        dropped = int(self.valid[slots].sum())
+        self.valid[slots] = False
+        return dropped
 
 
 def embedding_lookup(params: dict, ids: Array, *,

@@ -33,7 +33,7 @@ from .storage import DistributedGraphStore
 __all__ = [
     "SampleBatch", "HopSpec", "TraverseSampler", "NeighborhoodSampler",
     "MetapathSampler", "WalkSampler", "NegativeSampler", "skipgram_pairs",
-    "filtered_adjacency", "SAMPLERS", "register_sampler",
+    "filtered_adjacency", "store_view", "SAMPLERS", "register_sampler",
 ]
 
 
@@ -87,6 +87,22 @@ class HopSpec:
         return (self.direction == "out" and self.vtype is None
                 and self.etype is None and self.strategy is None)
 
+    @property
+    def signature(self) -> Tuple[str, Optional[int], Optional[int]]:
+        """The (direction, vtype, etype) key of the filtered adjacency view
+        this hop gathers from (``_store_view`` / ``store.signature_view``)."""
+        return (self.direction, self.vtype, self.etype)
+
+    @property
+    def freeze_key(self) -> Tuple[str, Optional[int], Optional[int],
+                                  Optional[str], int]:
+        """The full frozen-table key of the serving layer: signature +
+        normalised strategy + fanout.  ``"uniform"`` and ``None`` are the
+        same draw, so they share one table."""
+        strat = None if self.strategy in (None, "uniform") else self.strategy
+        return (self.direction, self.vtype, self.etype, strat,
+                int(self.fanout))
+
 
 def _store_view(store, direction: str = "out", vtype: Optional[int] = None,
                 etype: Optional[int] = None):
@@ -101,6 +117,10 @@ def _store_view(store, direction: str = "out", vtype: Optional[int] = None,
     from .storage import StaticSignatureView
     return StaticSignatureView(*filtered_adjacency(
         store.graph, direction, vtype, etype, return_edge_ids=True))
+
+
+# public alias: the serving layer freezes per-signature views through this
+store_view = _store_view
 
 
 def _initial_logits(store) -> np.ndarray:

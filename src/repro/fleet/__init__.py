@@ -1,0 +1,16 @@
+"""Multi-tenant model fleet: routing, quotas, fair scheduling, degradation.
+
+AliGraph serves many GNN models from one platform; this package is that
+tier over the compile-once serving layer (``repro.serving``): a
+:class:`ModelFleet` hosts several :class:`~repro.serving.plan.ServerPlan`
+tenants — different models, query shapes (plain or typed/metapath hops)
+and kernels — behind ONE shared admission queue with per-tenant
+:class:`TokenBucket` quotas, :class:`DeficitRoundRobin` fair scheduling,
+a fleet-wide device-residency (HBM) budget split across tenants, and
+explicit overload degradation (fanout reduction + stale-while-refresh).
+"""
+from .fleet import ModelFleet, TenantSpec
+from .quota import TokenBucket
+from .scheduler import DeficitRoundRobin
+
+__all__ = ["ModelFleet", "TenantSpec", "TokenBucket", "DeficitRoundRobin"]

@@ -1,0 +1,559 @@
+"""ModelFleet: many ServerPlans behind ONE admission queue.
+
+AliGraph's deployment serves many GNN models (recommendation, personalised
+search, ...) from one platform; ``ModelFleet`` is that tier over the
+compile-once serving layer:
+
+  * **Routing** — every tenant (a :class:`~repro.serving.plan.ServerPlan`:
+    its own model, query shape — plain or typed/metapath hops — kernels and
+    store) is addressed by name through one ``submit(tenant, ids)`` surface.
+  * **Quotas** — per-tenant token buckets admit by id count; an over-quota
+    request is SHED at submit (completed immediately, ``shed=True``, never
+    queued), so one tenant's burst cannot queue-starve the others.
+  * **Fair scheduling** — each device tick serves ONE tenant's micro-batch
+    (different models cannot share a batch); deficit round-robin picks the
+    tenant and bounds how many ids it may pack, so served throughput tracks
+    the configured weights under overload.
+  * **Device residency** — a fleet-wide HBM byte budget is split across
+    tenants (∝ weight); each share pins the tenant's Imp-top (Eq. 1)
+    vertices' embedding rows in a device buffer
+    (:class:`~repro.core.embedding.PinnedEmbeddings`) — hot ids are answered
+    by one batched device gather per tick, no sampling, no forward, and the
+    host-side ``CachePolicy`` only backs the warm middle of the curve.
+  * **Degradation** — two explicit, observable degrade paths instead of
+    implicit latency collapse: fanout reduction (a tick whose tenant queue
+    exceeds ``degrade_depth`` serves misses through the halved-fanout
+    template — column slices of the same frozen tables, deterministic and
+    flagged per request/tenant), and stale-while-refresh (``apply_delta``
+    stages the expensive refreeze OFF the tick path while serving continues
+    from pre-delta state, flagged ``stale``; the prepared tables install at
+    the next tick boundary as cheap in-place writes).
+
+Every served row — cache hit, pinned-buffer hit, degraded or not — is
+byte-identical to the owning tenant's offline oracle
+(``ServerPlan.embed_offline`` / ``GNNTrainer.embed_many`` over the same
+frozen executor): frozen sampling makes each tenant's rows a pure function
+of (plan, params), independent of fleet packing and scheduling.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.api.engine import execute
+from repro.core.cache import CachePolicy, split_budget
+from repro.core.embedding import PinnedEmbeddings
+from repro.serving.plan import DeltaRefresh, ServerPlan, StagedDelta
+from repro.serving.server import ServeRequest, ServerMetrics, TenantMetrics
+
+from .quota import TokenBucket
+from .scheduler import DeficitRoundRobin
+
+__all__ = ["TenantSpec", "ModelFleet"]
+
+
+@dataclasses.dataclass
+class TenantSpec:
+    """One tenant's serving contract: a compiled plan plus SLO knobs.
+
+    ``weight`` sets both the DRR throughput share and the slice of the
+    fleet HBM budget; ``rate``/``burst`` the admission token bucket (ids per
+    second, default unlimited); ``degrade_depth`` the pending-id queue depth
+    above which ticks switch to the halved-fanout template (None = never
+    degrade)."""
+
+    name: str
+    plan: ServerPlan
+    weight: float = 1.0
+    rate: float = float("inf")
+    burst: Optional[float] = None
+    cache_policy: str = "importance"
+    cache_capacity: int = 4096
+    cache_seed: int = 0
+    degrade_depth: Optional[int] = None
+
+
+class _Tenant:
+    """Runtime state behind one TenantSpec (fleet-internal)."""
+
+    def __init__(self, spec: TenantSpec, tm: TenantMetrics,
+                 clock: Callable[[], float]):
+        self.spec = spec
+        self.plan = spec.plan
+        self.executor = spec.plan.executor()
+        self.queue: Deque[Tuple[ServeRequest, int]] = collections.deque()
+        g = spec.plan.store.graph
+        self.cache = CachePolicy(spec.cache_capacity, spec.cache_policy,
+                                 scores=spec.plan.importance, n_keys=g.n,
+                                 seed=spec.cache_seed)
+        self.bucket = TokenBucket(spec.rate, spec.burst, clock=clock)
+        self.pinned: Optional[PinnedEmbeddings] = None
+        self.tm = tm
+        self.seen_shapes: set = set()
+        # runtime copy of the degrade threshold: warmup() lifts it while
+        # serving the warm trace so the cache fills with full-fidelity rows
+        # (degraded rows are never cached)
+        self.degrade_depth = spec.degrade_depth
+        self.staged: Optional[StagedDelta] = None
+        self.refreshing = False
+        self.last_refresh: Optional[DeltaRefresh] = None
+
+
+class ModelFleet:
+    """The multi-tenant serving runtime (see module docstring).
+
+    ``hbm_budget_bytes`` enables device residency: split across tenants ∝
+    weight, each share pinning ``share // (d_out × 4)`` Imp-top rows, warmed
+    eagerly through each plan's own forward (so pinned reads keep the
+    byte-identity contract).  ``clock`` is injected into every token bucket
+    (tests pin shedding deterministically).
+
+    Start/stop like :class:`~repro.serving.server.EmbeddingServer` (context
+    manager, one worker thread); or build with ``start=False`` and drive
+    ticks synchronously with :meth:`step` — the deterministic mode the
+    fairness tests use.
+    """
+
+    def __init__(self, tenants: Sequence[TenantSpec], *,
+                 hbm_budget_bytes: int = 0, quantum: int = 32,
+                 clock: Callable[[], float] = time.monotonic,
+                 start: bool = True):
+        if not tenants:
+            raise ValueError("a fleet needs at least one tenant")
+        names = [t.name for t in tenants]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate tenant names: {names}")
+        self.metrics = ServerMetrics()
+        # Weighted fairness requires each DRR visit's top-up (quantum ×
+        # weight) to fit in one device batch: a tick can pack at most the
+        # largest pad bucket's unique misses, so any surplus would bank
+        # forever and the bucket cap would level every tenant down to the
+        # same per-tick service regardless of weight.
+        min_cap = min(t.plan.buckets[-1] for t in tenants)
+        max_w = max(t.weight for t in tenants)
+        quantum = max(1, min(int(quantum), int(min_cap / max_w)))
+        self._drr = DeficitRoundRobin(quantum)
+        self._tenants: Dict[str, _Tenant] = {}
+        for spec in tenants:
+            self._drr.register(spec.name, spec.weight)
+            self._tenants[spec.name] = _Tenant(
+                spec, self.metrics.tenant(spec.name), clock)
+        if hbm_budget_bytes:
+            shares = split_budget({t.name: t.weight for t in tenants},
+                                  hbm_budget_bytes)
+            for name, share in shares.items():
+                t = self._tenants[name]
+                cap = share // (t.plan.d_out * 4)
+                if cap <= 0:
+                    continue
+                pinned = PinnedEmbeddings.plan(t.plan.importance, cap,
+                                               t.plan.d_out)
+                if len(pinned):
+                    pinned.load(pinned.ids,
+                                t.plan.embed_offline(pinned.ids))
+                t.pinned = pinned
+        self._lock = threading.Lock()
+        self._work = threading.Condition(self._lock)
+        self._idle = threading.Condition(self._lock)
+        self._delta_lock = threading.Lock()
+        self._next_rid = 0
+        self._stopping = False
+        self._inflight = False
+        self._worker: Optional[threading.Thread] = None
+        if start:
+            self.start()
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self) -> None:
+        if self._worker is not None and self._worker.is_alive():
+            return
+        with self._work:
+            self._stopping = False
+        self._worker = threading.Thread(target=self._loop, daemon=True)
+        self._worker.start()
+
+    def stop(self) -> None:
+        with self._work:
+            self._stopping = True
+            self._work.notify_all()
+        if self._worker is not None:
+            self._worker.join()
+            self._worker = None
+
+    def __enter__(self) -> "ModelFleet":
+        self.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    @property
+    def tenant_names(self) -> List[str]:
+        return list(self._tenants)
+
+    def tenant_metrics(self, name: str) -> TenantMetrics:
+        return self._tenants[name].tm
+
+    def pinned_rows(self, name: str) -> int:
+        t = self._tenants[name]
+        return len(t.pinned) if t.pinned is not None else 0
+
+    # ------------------------------------------------------------ submit
+    def submit(self, tenant: str, ids: np.ndarray) -> ServeRequest:
+        """Route one embedding request to ``tenant``.  Admission is decided
+        HERE: an over-quota request is shed (completed immediately with
+        ``shed=True`` and zero rows) and never queued."""
+        t = self._tenants.get(tenant)
+        if t is None:
+            raise ValueError(f"unknown tenant {tenant!r} "
+                             f"(fleet: {list(self._tenants)})")
+        ids = np.asarray(ids, np.int32).reshape(-1)
+        if len(ids) == 0:
+            raise ValueError("empty request")
+        g = t.plan.store.graph
+        if ids.min() < 0 or ids.max() >= g.n:
+            raise ValueError(f"request ids out of range [0, {g.n})")
+        req = ServeRequest(
+            rid=-1, ids=ids,
+            out=np.zeros((len(ids), t.plan.d_out), np.float32),
+            t_submit=time.perf_counter(), tenant=tenant,
+            _remaining=len(ids))
+        with self._work:
+            req.rid = self._next_rid
+            self._next_rid += 1
+            self.metrics.requests += 1
+            t.tm.requests += 1
+            if not t.bucket.try_take(len(ids)):
+                req.shed = True
+                req.t_done = time.perf_counter()
+                t.tm.sheds += 1
+                t.tm.shed_ids += len(ids)
+                req._event.set()
+                return req
+            t.queue.extend((req, i) for i in range(len(ids)))
+            t.tm.gauge_queue(len(t.queue))
+            self._work.notify()
+        return req
+
+    def drain(self, timeout: Optional[float] = None) -> None:
+        """Block until every queued request is served and every staged
+        delta refresh is committed."""
+        self.start()
+        deadline = None if timeout is None else time.perf_counter() + timeout
+        with self._idle:
+            while self._has_work_locked() or self._inflight:
+                rest = (None if deadline is None
+                        else deadline - time.perf_counter())
+                if rest is not None and rest <= 0:
+                    raise TimeoutError("fleet did not drain in time")
+                self._idle.wait(timeout=rest)
+
+    # ------------------------------------------------------------ the loop
+    def _has_work_locked(self) -> bool:
+        return any(t.queue or t.staged is not None
+                   for t in self._tenants.values())
+
+    def _loop(self) -> None:
+        while True:
+            with self._work:
+                while not self._has_work_locked() and not self._stopping:
+                    self._work.wait()
+                if self._stopping and not self._has_work_locked():
+                    return
+            self._tick()
+
+    def step(self, n: int = 1) -> int:
+        """Drive up to ``n`` ticks synchronously on the caller thread (the
+        deterministic mode for tests/benchmarks; the fleet must not have a
+        running worker).  Returns how many ticks did work."""
+        if self._worker is not None and self._worker.is_alive():
+            raise RuntimeError("step() drives a stopped fleet; the worker "
+                               "thread is running — use drain() instead")
+        did = 0
+        for _ in range(n):
+            if not self._tick():
+                break
+            did += 1
+        return did
+
+    def _tick(self) -> bool:
+        """One scheduling round: DRR picks a tenant, its micro-batch is
+        packed under the lock, served outside it, written back under the
+        lock; staged delta refreshes commit at the END of the tick (work in
+        flight during the refresh was served stale, by design)."""
+        t = pack = None
+        with self._lock:
+            backlog = {name: len(tt.queue)
+                       for name, tt in self._tenants.items()}
+            name = self._drr.select(backlog)
+            if name is not None:
+                t = self._tenants[name]
+                pack = self._pack_locked(t)
+                self._inflight = True
+        try:
+            if pack is not None:
+                self._serve(t, pack)
+        finally:
+            with self._idle:
+                self._inflight = False
+                committed = self._commit_staged_locked()
+                self._idle.notify_all()
+        return pack is not None or committed
+
+    def _pack_locked(self, t: _Tenant) -> Dict:
+        """Pop the tenant's pending slots up to its DRR allowance (and the
+        largest-bucket unique-miss cap).  Pinned-buffer and host-cache hits
+        are resolved without device sampling; whether this tick degrades is
+        decided here, from the queue depth BEFORE packing."""
+        name = t.spec.name
+        depth = len(t.queue)
+        degraded = (t.degrade_depth is not None
+                    and depth > t.degrade_depth)
+        allowance = self._drr.allowance(name)
+        cap = t.plan.buckets[-1]
+        miss_slots: Dict[int, List[Tuple[ServeRequest, int]]] = {}
+        hit_rows: List[Tuple[ServeRequest, int, np.ndarray]] = []
+        pin_slots: List[Tuple[ServeRequest, int, int]] = []
+        packed = 0
+        while t.queue and packed < allowance and len(miss_slots) < cap:
+            req, pos = t.queue.popleft()
+            vid = int(req.ids[pos])
+            packed += 1
+            if vid in miss_slots:          # same miss already in this pack
+                miss_slots[vid].append((req, pos))
+                t.tm.note_miss()
+                self.metrics.note_miss()
+                continue
+            if t.pinned is not None:
+                s = t.pinned.slot(vid)
+                if s >= 0:
+                    pin_slots.append((req, pos, s))
+                    t.tm.note_hit(device=True)
+                    self.metrics.note_hit()
+                    continue
+            row = t.cache.get(vid)
+            if row is not None:
+                t.tm.note_hit()
+                self.metrics.note_hit()
+                hit_rows.append((req, pos, row))
+            else:
+                t.tm.note_miss()
+                self.metrics.note_miss()
+                miss_slots[vid] = [(req, pos)]
+        self._drr.charge(name, packed)
+        if not t.queue:
+            self._drr.reset(name)
+        t.tm.gauge_queue(len(t.queue))
+        stale = t.staged is not None or t.refreshing
+        return {"miss_slots": miss_slots, "hit_rows": hit_rows,
+                "pin_slots": pin_slots, "degraded": degraded,
+                "stale": stale}
+
+    def _serve(self, t: _Tenant, pack: Dict) -> None:
+        plan = t.plan
+        degraded = pack["degraded"]
+        rows_by_id: Dict[int, np.ndarray] = {}
+        shape = None
+        miss_ids = np.fromiter(pack["miss_slots"].keys(), np.int32,
+                               count=len(pack["miss_slots"]))
+        if len(miss_ids):
+            mb = execute(plan.request_plan(miss_ids, degraded=degraded),
+                         t.executor)
+            z = np.asarray(plan.forward(mb.device["seeds"]))[:len(miss_ids)]
+            shape = plan.shape_key(mb.device["seeds"])
+            rows_by_id = {int(v): z[i].copy()
+                          for i, v in enumerate(miss_ids)}
+        if pack["pin_slots"]:
+            # ONE batched device gather answers every pinned hit of the tick
+            pin_rows = t.pinned.gather([s for _, _, s in pack["pin_slots"]])
+        with self._lock:
+            tm = t.tm
+            served = 0
+            touched: Dict[int, ServeRequest] = {}
+            if len(miss_ids):
+                self.metrics.ticks += 1
+                tm.ticks += 1
+                self.metrics.bucket_steps[shape[0]] += 1
+                key = (degraded, shape)
+                if key not in t.seen_shapes:
+                    t.seen_shapes.add(key)
+                    self.metrics.recompiles += 1
+                    tm.recompiles += 1
+                if degraded:
+                    tm.degraded_ticks += 1
+                if not degraded:
+                    # full-fidelity rows refresh the host cache AND any
+                    # (possibly invalidated) pinned slots — degraded rows
+                    # must never enter either
+                    for vid, row in rows_by_id.items():
+                        t.cache.put(vid, row)
+                    if t.pinned is not None:
+                        t.pinned.load(
+                            miss_ids,
+                            np.stack([rows_by_id[int(v)]
+                                      for v in miss_ids]))
+            for vid, row in rows_by_id.items():
+                for req, pos in pack["miss_slots"][vid]:
+                    req.out[pos] = row
+                    req._remaining -= 1
+                    if degraded:
+                        req.degraded = True
+                        tm.degraded_ids += 1
+                    touched[req.rid] = req
+                    served += 1
+            for req, pos, row in pack["hit_rows"]:
+                req.out[pos] = row
+                req._remaining -= 1
+                touched[req.rid] = req
+                served += 1
+            for i, (req, pos, _) in enumerate(pack["pin_slots"]):
+                req.out[pos] = pin_rows[i]
+                req._remaining -= 1
+                touched[req.rid] = req
+                served += 1
+            self.metrics.ids_served += served
+            tm.ids_served += served
+            if pack["stale"]:
+                tm.stale_served += served
+                for req in touched.values():
+                    req.stale = True
+            now = time.perf_counter()
+            for req in touched.values():
+                if req._remaining == 0 and not req.done:
+                    req.t_done = now
+                    self.metrics.completed += 1
+                    tm.completed += 1
+                    self.metrics.latencies_ms.append(req.latency_ms)
+                    tm.latencies_ms.append(req.latency_ms)
+                    req._event.set()
+
+    def _commit_staged_locked(self) -> bool:
+        """Install every staged delta refresh (cheap in-place writes): the
+        tick-boundary half of stale-while-refresh.  Drops exactly the
+        hop-radius invalidated rows from the tenant's host cache and pinned
+        device buffer."""
+        committed = False
+        for t in self._tenants.values():
+            if t.staged is None:
+                continue
+            refresh = t.plan.commit_delta(t.staged)
+            dropped = t.cache.invalidate(refresh.invalidated)
+            t.cache.rescore(t.plan.importance)
+            if t.pinned is not None:
+                t.pinned.invalidate(refresh.invalidated)
+            t.staged = None
+            t.refreshing = False
+            t.last_refresh = refresh
+            t.tm.deltas_applied += 1
+            self.metrics.roll_delta_epoch(refresh, dropped)
+            committed = True
+        return committed
+
+    # ------------------------------------------------------------ streaming
+    def apply_delta(self, tenant: str, delta, *,
+                    wait: bool = True) -> Optional[DeltaRefresh]:
+        """Stream a graph mutation into ``tenant``'s LIVE plan without a
+        serving gap: the expensive refreeze is STAGED off the tick path
+        (serving continues from pre-delta state, flagged ``stale`` per
+        request and counted per tenant), then installed at the next tick
+        boundary as cheap in-place writes.
+
+        ``wait=True`` blocks until the commit lands (driving ticks inline
+        when the fleet has no worker thread) and returns the
+        :class:`~repro.serving.plan.DeltaRefresh` receipt."""
+        t = self._tenants.get(tenant)
+        if t is None:
+            raise ValueError(f"unknown tenant {tenant!r}")
+        with self._delta_lock:      # one store mutation staged at a time
+            with self._lock:
+                t.refreshing = True
+            try:
+                staged = t.plan.stage_delta(delta)
+            except BaseException:
+                with self._lock:
+                    t.refreshing = False
+                raise
+            with self._work:
+                t.staged = staged
+                self._work.notify_all()
+        if not wait:
+            return None
+        if self._worker is None or not self._worker.is_alive():
+            while True:
+                with self._lock:
+                    if t.staged is None:
+                        return t.last_refresh
+                self._tick()
+        with self._idle:
+            while t.staged is not None:
+                self._idle.wait()
+            return t.last_refresh
+
+    def precompile(self) -> int:
+        """Compile every (bucket, degraded) forward template for every
+        tenant and return how many shapes were new.  A live trace only
+        exercises the shapes its miss counts happen to hit — a shape first
+        seen mid-serving stalls the tick thread for the jit compile (and
+        the backlog that builds behind it can trip the degrade valve), so
+        production fleets pay all of them up front."""
+        work = []
+        with self._lock:
+            for t in self._tenants.values():
+                for b in t.plan.buckets:
+                    for degraded in (False, True):
+                        work.append((t, int(b), degraded))
+        n_new = 0
+        for t, b, degraded in work:
+            ids = np.arange(min(b, t.plan.store.graph.n), dtype=np.int32)
+            mb = execute(t.plan.request_plan(ids, degraded=degraded),
+                         t.executor)
+            t.plan.forward(mb.device["seeds"])
+            key = (degraded, t.plan.shape_key(mb.device["seeds"]))
+            with self._lock:
+                if key not in t.seen_shapes:
+                    t.seen_shapes.add(key)
+                    n_new += 1
+        return n_new
+
+    def warmup(self, trace: Sequence[Tuple[str, np.ndarray]]) -> None:
+        """Precompile every template, serve ``trace`` at FULL fidelity,
+        then wipe the footprint from the books: per-tenant metrics reset,
+        quota buckets refilled.
+
+        Degrade and quota are lifted for the duration — a backlogged warm
+        trace would otherwise serve degraded (and degraded rows are never
+        cached, so the cache would stay cold) or shed.  What remains is the
+        WARM state — compiled bucket shapes, host caches, pinned rows — so
+        a measurement that follows sees steady-state serving without
+        first-compile/cold-cache transients."""
+        self.precompile()
+        with self._lock:
+            saved = [(t, t.degrade_depth, t.bucket.rate)
+                     for t in self._tenants.values()]
+            for t, _, _ in saved:
+                t.degrade_depth = None
+                t.bucket.rate = float("inf")
+        try:
+            self.serve_trace(trace)
+        finally:
+            with self._lock:
+                for t, depth, rate in saved:
+                    t.degrade_depth = depth
+                    t.bucket.rate = rate
+                    t.bucket.refill()
+                    t.tm.reset()
+
+    # ------------------------------------------------------------ sync API
+    def serve_trace(self, trace: Sequence[Tuple[str, np.ndarray]]
+                    ) -> List[ServeRequest]:
+        """Submit a whole (tenant, ids) trace, drain, and return the
+        completed requests (benchmark/CI convenience; shed requests come
+        back flagged, not raised)."""
+        reqs = [self.submit(name, ids) for name, ids in trace]
+        self.drain()
+        return reqs

@@ -1,0 +1,64 @@
+"""Per-tenant admission quotas: the token bucket.
+
+The fleet's admission control is per-ID (an embedding request for ``k``
+vertices costs ``k`` tokens — device work scales with ids, not requests).
+A tenant whose bucket is empty is SHED at submit time: the request completes
+immediately with zero rows and ``shed=True``, it never enters the queue and
+never competes with in-quota tenants for device ticks.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+__all__ = ["TokenBucket"]
+
+
+class TokenBucket:
+    """Classic token bucket: ``rate`` tokens/sec refill, capped at
+    ``burst``.  ``rate=inf`` (the default) admits everything — quota off.
+
+    ``clock`` is injectable (tests pin a fake monotonic clock, so shedding
+    is deterministic); the default is ``time.monotonic``.
+    """
+
+    def __init__(self, rate: float = float("inf"),
+                 burst: Optional[float] = None, *,
+                 clock: Callable[[], float] = time.monotonic):
+        if rate < 0:
+            raise ValueError("rate must be >= 0")
+        self.rate = float(rate)
+        self.burst = float(rate if burst is None else burst)
+        if self.burst < 0:
+            raise ValueError("burst must be >= 0")
+        self._clock = clock
+        self._tokens = self.burst
+        self._t_last = clock()
+
+    def _refill(self) -> None:
+        now = self._clock()
+        dt = max(0.0, now - self._t_last)
+        self._t_last = now
+        if self.rate > 0:
+            self._tokens = min(self.burst, self._tokens + dt * self.rate)
+
+    @property
+    def tokens(self) -> float:
+        self._refill()
+        return self._tokens
+
+    def refill(self) -> None:
+        """Reset to a full bucket (measurement warmups: the warmup's token
+        spend should not shed the measured traffic)."""
+        self._tokens = self.burst
+        self._t_last = self._clock()
+
+    def try_take(self, n: float = 1.0) -> bool:
+        """Take ``n`` tokens if available; False (no partial take) if not."""
+        if self.rate == float("inf"):
+            return True
+        self._refill()
+        if self._tokens >= n:
+            self._tokens -= n
+            return True
+        return False

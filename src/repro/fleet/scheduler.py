@@ -1,0 +1,83 @@
+"""Deficit round-robin (DRR) fair scheduling across tenants.
+
+One fleet tick serves exactly one tenant's micro-batch (different models
+cannot share a device batch), so fairness is decided by WHICH tenant each
+tick picks and HOW MANY ids it may pack.  Classic DRR: visiting a tenant
+tops its deficit up by ``quantum × weight``; the tick then packs at most
+``floor(deficit)`` ids and is charged what it actually served.  Over any
+backlogged interval each tenant's served ids converge to its weight share,
+regardless of request sizes — the no-starvation guarantee the fleet tests
+pin (within 10% of the DRR share under 2x overload).
+"""
+from __future__ import annotations
+
+from typing import Dict, Mapping, Optional
+
+__all__ = ["DeficitRoundRobin"]
+
+
+class DeficitRoundRobin:
+    """Deficit round-robin over registered tenants.  Not thread-safe on its
+    own — the fleet calls it under its scheduler lock."""
+
+    def __init__(self, quantum: int = 32):
+        if quantum < 1:
+            raise ValueError("quantum must be >= 1")
+        self.quantum = int(quantum)
+        self._weights: Dict[str, float] = {}
+        self._deficit: Dict[str, float] = {}
+        self._order: list = []
+        self._cursor = 0
+
+    def register(self, name: str, weight: float = 1.0) -> None:
+        if weight <= 0:
+            raise ValueError(f"tenant {name!r} weight must be > 0")
+        if name in self._weights:
+            raise ValueError(f"tenant {name!r} already registered")
+        self._weights[name] = float(weight)
+        self._deficit[name] = 0.0
+        self._order.append(name)
+
+    @property
+    def weights(self) -> Mapping[str, float]:
+        return dict(self._weights)
+
+    def share(self, name: str) -> float:
+        """The tenant's fair throughput share (weight / total weight)."""
+        tot = sum(self._weights.values())
+        return self._weights[name] / tot if tot else 0.0
+
+    def select(self, backlog: Mapping[str, int]) -> Optional[str]:
+        """Pick the next tenant to serve among those with ``backlog > 0``;
+        tops its deficit up on the visit.  Returns None when nothing is
+        backlogged.  A visited tenant whose deficit is still below one id
+        keeps it banked and the rotation moves on — small weights accumulate
+        service over rounds instead of being starved or busy-looping."""
+        active = [n for n in self._order if backlog.get(n, 0) > 0]
+        if not active:
+            return None
+        # bounded by construction: each full rotation adds quantum*weight
+        # >= quantum * min_weight > 0 to every active deficit
+        for _ in range(16384):
+            name = self._order[self._cursor % len(self._order)]
+            self._cursor += 1
+            if backlog.get(name, 0) <= 0:
+                continue
+            self._deficit[name] += self.quantum * self._weights[name]
+            if self._deficit[name] >= 1.0:
+                return name
+        raise RuntimeError("DRR failed to accumulate one id of deficit "
+                           "(weights too small?)")
+
+    def allowance(self, name: str) -> int:
+        """How many ids the picked tenant may pack this tick."""
+        return int(self._deficit[name])
+
+    def charge(self, name: str, served: int) -> None:
+        """Debit what the tick actually packed."""
+        self._deficit[name] -= int(served)
+
+    def reset(self, name: str) -> None:
+        """Zero the deficit when the tenant's queue empties (classic DRR:
+        banked deficit must not accumulate across idle periods)."""
+        self._deficit[name] = 0.0

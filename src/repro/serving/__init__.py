@@ -27,12 +27,14 @@ Quickstart::
         print(srv.metrics.snapshot())
 """
 from .plan import (DeltaRefresh, FrozenNeighborSampler, ServerPlan,  # noqa: F401
-                   compile_server)
-from .server import EmbeddingServer, ServeRequest, ServerMetrics  # noqa: F401
-from .traffic import Traffic, choose_buckets  # noqa: F401
+                   StagedDelta, compile_server)
+from .server import (EmbeddingServer, ServeRequest, ServerMetrics,  # noqa: F401
+                     TenantMetrics)
+from .traffic import Traffic, arrival_offsets, choose_buckets  # noqa: F401
 
 __all__ = [
-    "Traffic", "choose_buckets", "FrozenNeighborSampler", "ServerPlan",
-    "DeltaRefresh", "compile_server", "EmbeddingServer", "ServeRequest",
-    "ServerMetrics",
+    "Traffic", "arrival_offsets", "choose_buckets",
+    "FrozenNeighborSampler", "ServerPlan",
+    "DeltaRefresh", "StagedDelta", "compile_server", "EmbeddingServer",
+    "ServeRequest", "ServerMetrics", "TenantMetrics",
 ]

@@ -36,14 +36,14 @@ import numpy as np
 from repro.api import QueryExecutor, QueryValidationError
 from repro.api import plan as qplan
 from repro.core import cache as cache_mod
-from repro.core.sampling import (SampleBatch, _account_reads,
+from repro.core.sampling import (HopSpec, SampleBatch, _account_reads,
                                  _cached_vertex_mask, _store_view)
 from repro.core.gnn import GNNSpec, gnn_apply
 
 from .traffic import Traffic, choose_buckets
 
 __all__ = ["FrozenNeighborSampler", "ServerPlan", "DeltaRefresh",
-           "compile_server"]
+           "StagedDelta", "compile_server"]
 
 
 # -- counter-based per-row uniforms ------------------------------------------
@@ -58,11 +58,43 @@ __all__ = ["FrozenNeighborSampler", "ServerPlan", "DeltaRefresh",
 
 _MASK64 = (1 << 64) - 1
 
+# frozen-table key: (direction, vtype, etype, strategy, fanout) — the full
+# hop signature.  A plain uniform ``.sample(f)`` hop is
+# ("out", None, None, None, f); typed/metapath hops carry their filtered-CSR
+# signature, so each signature freezes its own per-vertex table.
+FreezeKey = Tuple[str, Optional[int], Optional[int], Optional[str], int]
+
+
+def _freeze_key(hop) -> FreezeKey:
+    """Promote an int fanout (legacy plain hop) or a HopSpec to a FreezeKey."""
+    if isinstance(hop, HopSpec):
+        return hop.freeze_key
+    return ("out", None, None, None, int(hop))
+
+
+def _freeze_salt(key: FreezeKey) -> int:
+    """The per-key salt of the keyed hash stream.  Plain uniform hops keep
+    the original fanout salt (PR 3-7 tables stay byte-identical); every
+    other signature mixes its components so two signatures at the same
+    fanout draw independent streams."""
+    direction, vtype, etype, strategy, fanout = key
+    if direction == "out" and vtype is None and etype is None \
+            and strategy is None:
+        return fanout
+    x = fanout
+    for c in (2 if direction == "in" else 1,
+              0 if vtype is None else 2 + int(vtype),
+              0 if etype is None else 2 + int(etype),
+              1 if strategy == "importance" else 0):
+        x = (x * 0x9E3779B97F4A7C15 + c * 0xBF58476D1CE4E5B9
+             + 0x94D049BB133111EB) & _MASK64
+    return x
+
 
 def _hash_u01(seed: int, fanout: int, rows: np.ndarray, n_cols: int
               ) -> np.ndarray:
     """[len(rows), n_cols] float64 in [0,1): splitmix64-finalised hash of
-    (seed, fanout, row, col)."""
+    (seed, fanout-or-salt, row, col)."""
     salt = np.uint64((seed * 0x94D049BB133111EB
                       + fanout * 0xD6E8FEB86659FD93) & _MASK64)
     r = np.asarray(rows, np.uint64)[:, None]
@@ -77,10 +109,30 @@ def _hash_u01(seed: int, fanout: int, rows: np.ndarray, n_cols: int
     return (x >> np.uint64(11)).astype(np.float64) * (2.0 ** -53)
 
 
-def _freeze_rows(view, fanout: int, seed: int, rows: np.ndarray
+def _keyed_gumbel(seed: int, salt: int, vs: np.ndarray, n_cols: int
+                  ) -> np.ndarray:
+    """Standard-Gumbel noise from the keyed hash stream: g = -log(-log(u))."""
+    u = np.clip(_hash_u01(seed, salt, vs, n_cols), 1e-12, 1.0 - 1e-16)
+    return -np.log(-np.log(u))
+
+
+def _freeze_rows(view, key: FreezeKey, seed: int, rows: np.ndarray,
+                 imp: Optional[np.ndarray] = None
                  ) -> Tuple[np.ndarray, np.ndarray]:
-    """Draw the frozen table rows for ``rows`` (GraphSAGE replacement
-    convention: with replacement iff fanout exceeds the live degree)."""
+    """Draw the frozen table rows for ``rows`` over one signature view.
+
+    ``strategy None/"uniform"`` follows the GraphSAGE replacement convention
+    (with replacement iff fanout exceeds the live signature degree);
+    ``"importance"`` follows ``_importance_rows`` (keep-all padded when the
+    degree fits, else Gumbel-top-k without replacement with p ∝ imp) with
+    the Gumbel noise drawn from the keyed hash stream — so refreezing only
+    touched rows stays byte-identical to a cold compile."""
+    _, _, _, strategy, fanout = key
+    salt = _freeze_salt(key)
+    if strategy == "importance" and imp is None:
+        raise QueryValidationError(
+            "freezing an importance-strategy hop needs per-vertex importance "
+            "weights (compile_server computes them; pass importance=)")
     rows = np.asarray(rows, np.int64)
     out = np.zeros((len(rows), fanout), np.int32)
     msk = np.zeros((len(rows), fanout), np.float32)
@@ -93,48 +145,125 @@ def _freeze_rows(view, fanout: int, seed: int, rows: np.ndarray
         vs = rows[u_idx]
         lo = view.indptr[vs]
         deg = view.indptr[vs + 1] - lo
-        repl = np.nonzero((deg > 0) & (deg < fanout))[0]
-        if len(repl):
-            u = _hash_u01(seed, fanout, vs[repl], fanout)
-            idx = np.minimum((u * deg[repl][:, None]).astype(np.int64),
-                             deg[repl][:, None] - 1)
-            out[u_idx[repl]] = view.indices[lo[repl][:, None] + idx]
-            msk[u_idx[repl]] = 1.0
-        worepl = np.nonzero(deg >= fanout)[0]
-        for d in np.unique(deg[worepl]):
-            sel_rows = worepl[deg[worepl] == d]
-            keys = _hash_u01(seed, fanout, vs[sel_rows], int(d))
-            sel = np.argsort(keys, axis=1, kind="stable")[:, :fanout]
-            out[u_idx[sel_rows]] = view.indices[
-                lo[sel_rows][:, None] + sel]
-            msk[u_idx[sel_rows]] = 1.0
+        if strategy == "importance":
+            # keep-all (padded, CSR order) when the degree fits the fanout
+            small = np.nonzero((deg > 0) & (deg <= fanout))[0]
+            if len(small):
+                col = np.arange(fanout, dtype=np.int64)
+                take = lo[small][:, None] + np.minimum(
+                    col[None, :], deg[small][:, None] - 1)
+                valid = col[None, :] < deg[small][:, None]
+                out[u_idx[small]] = np.where(valid, view.indices[take], 0)
+                msk[u_idx[small]] = valid.astype(np.float32)
+            big = np.nonzero(deg > fanout)[0]
+            for d in np.unique(deg[big]):
+                sel_rows = big[deg[big] == d]
+                cand = view.indices[lo[sel_rows][:, None]
+                                    + np.arange(int(d), dtype=np.int64)]
+                keys = (np.log(np.maximum(imp[cand], 1e-300))
+                        + _keyed_gumbel(seed, salt, vs[sel_rows], int(d)))
+                sel = np.argsort(-keys, axis=1, kind="stable")[:, :fanout]
+                out[u_idx[sel_rows]] = np.take_along_axis(cand, sel, axis=1)
+                msk[u_idx[sel_rows]] = 1.0
+        else:
+            repl = np.nonzero((deg > 0) & (deg < fanout))[0]
+            if len(repl):
+                u = _hash_u01(seed, salt, vs[repl], fanout)
+                idx = np.minimum((u * deg[repl][:, None]).astype(np.int64),
+                                 deg[repl][:, None] - 1)
+                out[u_idx[repl]] = view.indices[lo[repl][:, None] + idx]
+                msk[u_idx[repl]] = 1.0
+            worepl = np.nonzero(deg >= fanout)[0]
+            for d in np.unique(deg[worepl]):
+                sel_rows = worepl[deg[worepl] == d]
+                keys = _hash_u01(seed, salt, vs[sel_rows], int(d))
+                sel = np.argsort(keys, axis=1, kind="stable")[:, :fanout]
+                out[u_idx[sel_rows]] = view.indices[
+                    lo[sel_rows][:, None] + sel]
+                msk[u_idx[sel_rows]] = 1.0
 
     t_idx = np.nonzero(touched)[0]
     if len(t_idx):
         vs = rows[t_idx]
         cand, cmask, _ = view.candidates(vs)
-        deg = cmask.sum(1).astype(np.int64)
-        repl = np.nonzero((deg > 0) & (deg < fanout))[0]
-        if len(repl):
-            u = _hash_u01(seed, fanout, vs[repl], fanout)
-            idx = np.minimum((u * deg[repl][:, None]).astype(np.int64),
-                             deg[repl][:, None] - 1)
-            out[t_idx[repl]] = np.take_along_axis(cand[repl], idx, axis=1)
-            msk[t_idx[repl]] = 1.0
-        worepl = np.nonzero(deg >= fanout)[0]
-        if len(worepl):
-            keys = _hash_u01(seed, fanout, vs[worepl], cand.shape[1])
-            keys[~cmask[worepl]] = 2.0       # hash values live in [0,1)
-            sel = np.argsort(keys, axis=1, kind="stable")[:, :fanout]
-            out[t_idx[worepl]] = np.take_along_axis(cand[worepl], sel,
-                                                    axis=1)
-            msk[t_idx[worepl]] = 1.0
+        cbool = cmask.astype(bool)
+        deg = cbool.sum(1).astype(np.int64)
+        if strategy == "importance":
+            small = np.nonzero((deg > 0) & (deg <= fanout))[0]
+            if len(small):
+                col = np.arange(fanout, dtype=np.int64)
+                take = np.minimum(col[None, :], deg[small][:, None] - 1)
+                valid = col[None, :] < deg[small][:, None]
+                out[t_idx[small]] = np.where(
+                    valid, np.take_along_axis(cand[small], take, axis=1), 0)
+                msk[t_idx[small]] = valid.astype(np.float32)
+            big = np.nonzero(deg > fanout)[0]
+            if len(big):
+                keys = (np.log(np.maximum(imp[cand[big]], 1e-300))
+                        + _keyed_gumbel(seed, salt, vs[big], cand.shape[1]))
+                keys[~cbool[big]] = -np.inf
+                sel = np.argsort(-keys, axis=1, kind="stable")[:, :fanout]
+                out[t_idx[big]] = np.take_along_axis(cand[big], sel, axis=1)
+                msk[t_idx[big]] = 1.0
+        else:
+            repl = np.nonzero((deg > 0) & (deg < fanout))[0]
+            if len(repl):
+                u = _hash_u01(seed, salt, vs[repl], fanout)
+                idx = np.minimum((u * deg[repl][:, None]).astype(np.int64),
+                                 deg[repl][:, None] - 1)
+                out[t_idx[repl]] = np.take_along_axis(cand[repl], idx,
+                                                      axis=1)
+                msk[t_idx[repl]] = 1.0
+            worepl = np.nonzero(deg >= fanout)[0]
+            if len(worepl):
+                keys = _hash_u01(seed, salt, vs[worepl], cand.shape[1])
+                keys[~cbool[worepl]] = 2.0   # hash values live in [0,1)
+                sel = np.argsort(keys, axis=1, kind="stable")[:, :fanout]
+                out[t_idx[worepl]] = np.take_along_axis(cand[worepl], sel,
+                                                        axis=1)
+                msk[t_idx[worepl]] = 1.0
     return out, msk
 
 
+def _forward_neighbors(store, vertices: np.ndarray) -> np.ndarray:
+    """Unique out-neighbors of ``vertices`` on the live (overlay-merged)
+    plain out view — the rows whose IN-direction candidate sets contain one
+    of ``vertices``."""
+    view = _store_view(store)
+    vertices = np.asarray(vertices, np.int64)
+    parts: List[np.ndarray] = []
+    touched = (view.touched[vertices] if getattr(view, "patched", False)
+               else np.zeros(len(vertices), bool))
+    plain = vertices[~touched]
+    if len(plain):
+        lo, hi = view.indptr[plain], view.indptr[plain + 1]
+        parts.extend(view.indices[l:h] for l, h in zip(lo, hi))
+    tv = vertices[touched]
+    if len(tv):
+        cand, cmask, _ = view.candidates(tv)
+        parts.append(cand[cmask.astype(bool)])
+    if not parts:
+        return np.zeros(0, np.int64)
+    return np.unique(np.concatenate(parts)).astype(np.int64)
+
+
+def _reverse_neighbors(store, vertices: np.ndarray) -> np.ndarray:
+    """Vertices with a live out-edge INTO ``vertices`` (depth-1 reverse
+    frontier) — the rows whose OUT-direction candidate sets contain one of
+    ``vertices``.  Needs a streaming store (``reverse_frontier``)."""
+    rev = getattr(store, "reverse_frontier", None)
+    if rev is None:
+        raise QueryValidationError(
+            "importance-strategy refreeze needs a mutable store — compile "
+            "the server over repro.streaming.StreamingStore(store)")
+    return np.asarray(rev(np.asarray(vertices, np.int64), depth=1), np.int64)
+
+
 class FrozenNeighborSampler:
-    """Sampling decisions fixed at compile time: per fanout, ONE presampled
-    neighbor set per vertex (``[n, fanout]`` tables + masks).
+    """Sampling decisions fixed at compile time: per hop signature
+    (direction, vtype, etype, strategy, fanout), ONE presampled neighbor set
+    per vertex (``[n, fanout]`` tables + masks) drawn over that signature's
+    filtered CSR — so typed/metapath hops freeze exactly like plain ones.
 
     Drop-in for ``NeighborhoodSampler`` in ``operators.build_plan``: the
     same aligned ``SampleBatch`` layout, the same request-flow read
@@ -148,34 +277,104 @@ class FrozenNeighborSampler:
     live-refresh contract of ``ServerPlan.apply_delta``.
     """
 
-    def __init__(self, store, fanouts: Sequence[int], *, seed: int = 0):
+    def __init__(self, store, hops: Sequence, *, seed: int = 0,
+                 importance: Optional[np.ndarray] = None):
         self.store = store
         self.seed = seed
+        self.importance = (None if importance is None
+                           else np.asarray(importance, np.float64))
         g = store.graph
         all_v = np.arange(g.n, dtype=np.int64)
-        self.tables: Dict[int, np.ndarray] = {}
-        self.masks: Dict[int, np.ndarray] = {}
-        view = _store_view(store)
-        for f in sorted(set(int(f) for f in fanouts)):
-            nbrs, msk = _freeze_rows(view, f, seed, all_v)
-            self.tables[f] = nbrs
-            self.masks[f] = msk
+        self.tables: Dict[FreezeKey, np.ndarray] = {}
+        self.masks: Dict[FreezeKey, np.ndarray] = {}
+        for key in dict.fromkeys(_freeze_key(h) for h in hops):
+            if key[3] == "edge_weight":
+                raise QueryValidationError(
+                    "edge_weight hops cannot be frozen: the dynamic per-edge "
+                    "sampler weights move under training, so a frozen table "
+                    "would silently diverge — serve uniform or importance "
+                    "hops")
+            view = _store_view(store, key[0], key[1], key[2])
+            nbrs, msk = _freeze_rows(view, key, seed, all_v,
+                                     imp=self.importance)
+            self.tables[key] = nbrs
+            self.masks[key] = msk
         self._cached_mask = _cached_vertex_mask(store)
 
+    def _resolve(self, key: FreezeKey
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+        """Exact-key table, or — for a reduced fanout over a frozen
+        signature — a column slice of the smallest covering table (the
+        overload degrade path: the first ``f'`` columns of a frozen
+        ``f``-table are themselves a deterministic ``f'``-fanout draw)."""
+        tbl = self.tables.get(key)
+        if tbl is not None:
+            return tbl, self.masks[key]
+        sig, f = key[:4], key[4]
+        covers = [k for k in self.tables if k[:4] == sig and k[4] > f]
+        if covers:
+            src = min(covers, key=lambda k: k[4])
+            return self.tables[src][:, :f], self.masks[src][:, :f]
+        raise QueryValidationError(
+            f"hop {key} was not compiled into this server plan "
+            f"(frozen keys: {list(self.tables)})")
+
+    def stage_refresh(self, touched_out: np.ndarray,
+                      touched_in: Optional[np.ndarray] = None, *,
+                      imp_moved: Optional[np.ndarray] = None,
+                      importance: Optional[np.ndarray] = None) -> Dict:
+        """Re-draw (but do NOT install) the frozen rows a delta touched,
+        from the store's CURRENT adjacency: out-direction tables refresh
+        ``touched_out`` rows, in-direction tables ``touched_in``.
+
+        Importance-strategy tables additionally refresh every row whose
+        candidate set contains an ``imp_moved`` vertex (its draw reads that
+        vertex's Eq. 1 weight), keeping the refreeze byte-identical to a
+        cold compile on the mutated store.  ``importance`` overrides the
+        weights the redraw reads (the POST-delta scores).
+
+        Returns the staged ``{key: (rows, table, mask)}`` dict — serving can
+        keep reading the installed (stale) tables until
+        :meth:`commit_refresh`, which is a cheap in-place write."""
+        touched_out = np.asarray(touched_out, np.int64)
+        touched_in = (touched_out if touched_in is None
+                      else np.asarray(touched_in, np.int64))
+        imp = self.importance if importance is None else importance
+        staged: Dict = {}
+        for key in self.tables:
+            rows = touched_out if key[0] == "out" else touched_in
+            if key[3] == "importance" and imp_moved is not None \
+                    and len(imp_moved):
+                deps = (_reverse_neighbors(self.store, imp_moved)
+                        if key[0] == "out"
+                        else _forward_neighbors(self.store, imp_moved))
+                rows = np.union1d(rows, deps)
+            if not len(rows):
+                continue
+            view = _store_view(self.store, key[0], key[1], key[2])
+            tbl, msk = _freeze_rows(view, key, self.seed, rows, imp=imp)
+            staged[key] = (rows, tbl, msk)
+        return staged
+
+    def commit_refresh(self, staged: Dict) -> int:
+        """Install a :meth:`stage_refresh` result in place; returns the
+        number of table rows refreshed (the sparse-delta acceptance
+        counter)."""
+        n = 0
+        for key, (rows, tbl, msk) in staged.items():
+            self.tables[key][rows] = tbl
+            self.masks[key][rows] = msk
+            n += len(rows)
+        return n
+
     def refreeze(self, rows: np.ndarray) -> int:
-        """Re-draw the frozen rows of ``rows`` from the store's CURRENT
-        (delta-merged) adjacency; returns the number of table entries
-        refreshed — ``len(rows) × n_fanouts``, the counter the sparse-delta
-        acceptance bound checks against the full table size."""
+        """Re-draw the frozen rows of ``rows`` (all directions) from the
+        store's CURRENT (delta-merged) adjacency; returns the number of
+        table entries refreshed."""
         rows = np.asarray(rows, np.int64)
         if not len(rows):
             return 0
-        view = _store_view(self.store)
-        for f in self.tables:
-            tbl, msk = _freeze_rows(view, f, self.seed, rows)
-            self.tables[f][rows] = tbl
-            self.masks[f][rows] = msk
-        return len(rows) * len(self.tables)
+        return self.commit_refresh(self.stage_refresh(rows, rows))
 
     def sample(self, seeds: np.ndarray, fanouts: Sequence,
                *, via: Optional[np.ndarray] = None) -> SampleBatch:
@@ -187,15 +386,12 @@ class FrozenNeighborSampler:
         masks: List[np.ndarray] = []
         fs: List[int] = []
         for hop in fanouts:
-            f = int(hop.fanout) if hasattr(hop, "fanout") else int(hop)
-            table = self.tables.get(f)
-            if table is None:
-                raise QueryValidationError(
-                    f"fanout {f} was not compiled into this server plan "
-                    f"(frozen fanouts: {sorted(self.tables)})")
+            key = _freeze_key(hop)
+            f = key[4]
+            table, mask = self._resolve(key)
             _account_reads(self.store, self._cached_mask, frontier, fvia)
             nxt = table[frontier]
-            msk = self.masks[f][frontier]
+            msk = mask[frontier]
             hops.append(nxt.reshape(-1))
             masks.append(msk.reshape(-1).astype(np.float32))
             frontier = nxt.reshape(-1)
@@ -213,6 +409,27 @@ class DeltaRefresh:
     refreshed_vertices: int        # frozen rows re-drawn (touched out-rows)
     refreshed_entries: int         # rows × distinct fanout tables
     invalidated: np.ndarray        # vertex ids within the plan's hop radius
+    n_structural: int
+    n_weight_updates: int
+
+
+@dataclasses.dataclass
+class StagedDelta:
+    """A delta already committed to the STORE with the plan's refreshed
+    state prepared but NOT yet installed — the stale-while-refresh handoff.
+
+    Between :meth:`ServerPlan.stage_delta` and
+    :meth:`ServerPlan.commit_delta` the serving path keeps reading the old
+    frozen tables and importance scores (stale but internally consistent —
+    rows stay byte-identical to the pre-delta compile), while the expensive
+    redraw work has already happened off the tick path.  ``commit`` is a
+    cheap in-place write at a tick boundary."""
+
+    staged_rows: Dict                  # FreezeKey -> (rows, table, mask)
+    imp_idx: np.ndarray                # endpoints whose Eq. 1 score moved
+    imp_val: np.ndarray
+    invalidated: np.ndarray            # hop-radius cache invalidation set
+    refreshed_vertices: int
     n_structural: int
     n_weight_updates: int
 
@@ -266,12 +483,13 @@ class ServerPlan:
     def d_out(self) -> int:
         return self.spec.dims[-1]
 
-    def levels_for(self, bucket: int) -> List[int]:
+    def levels_for(self, bucket: int,
+                   fanouts: Optional[Sequence[int]] = None) -> List[int]:
         """Worst-case (no dedup overlap) level sizes for one seed bucket —
         a pure function of the bucket, so shapes never depend on batch
         content."""
         sizes = [int(bucket)]
-        for f in self.fanouts:
+        for f in (self.fanouts if fanouts is None else fanouts):
             sizes.append(sizes[-1] * (1 + int(f)))
         return sizes
 
@@ -283,27 +501,77 @@ class ServerPlan:
         raise ValueError(f"micro-batch of {n} ids exceeds the largest "
                          f"bucket {self.buckets[-1]}")
 
+    def _ladders(self, fanouts: Sequence[int]
+                 ) -> Tuple[Tuple[int, ...], ...]:
+        per_bucket = [self.levels_for(b, fanouts) for b in self.buckets]
+        return tuple(tuple(lv[h] for lv in per_bucket)
+                     for h in range(len(fanouts) + 1))
+
     @property
     def pad_ladders(self) -> Tuple[Tuple[int, ...], ...]:
         """The bucket set as a ``.pad()`` policy: level ``h``'s ladder is
         ``levels_for(bucket)[h]`` across buckets (coupled variants — one
         ladder index per executed batch = one jit shape per bucket)."""
-        per_bucket = [self.levels_for(b) for b in self.buckets]
-        return tuple(tuple(lv[h] for lv in per_bucket)
-                     for h in range(len(self.fanouts) + 1))
+        return self._ladders(self.fanouts)
+
+    # -- overload degradation ----------------------------------------------
+    @property
+    def degraded_fanouts(self) -> Tuple[int, ...]:
+        """The fanout-reduction fallback: each hop halved (floor, min 1)."""
+        return tuple(max(1, int(f) // 2) for f in self.fanouts)
+
+    @functools.cached_property
+    def degraded_template(self) -> qplan.TraversalPlan:
+        """The overload template: same hops at halved fanouts, served from
+        column SLICES of the same frozen tables (``FrozenNeighborSampler.
+        _resolve``), with its own bucket-coupled pad ladders — so degraded
+        ticks add at most ``len(buckets)`` extra jit shapes and stay fully
+        deterministic (byte-identical to ``embed_offline(degraded=True)``)."""
+        dfan = self.degraded_fanouts
+        if dfan == self.fanouts:
+            return self.template
+        hops = tuple(dataclasses.replace(h, fanout=max(1, int(h.fanout) // 2))
+                     for h in self.template.hops)
+        return dataclasses.replace(self.template, hops=hops,
+                                   pad_buckets=self._ladders(dfan))
 
     def executor(self) -> QueryExecutor:
-        """A query executor whose NEIGHBORHOOD stage is the frozen sampler —
-        the same object the offline ``GNNTrainer.embed_many(executor=...)``
-        byte-identity check injects."""
+        """A query executor whose NEIGHBORHOOD **and** METAPATH stages are
+        the frozen sampler — the same object the offline
+        ``GNNTrainer.embed_many(executor=...)`` /
+        :meth:`embed_offline` byte-identity checks inject."""
         ex = QueryExecutor(self.store, strategy=self.template.strategy,
-                           seed=self.seed)
+                           seed=self.seed, importance=self.importance)
         ex.neighborhood = self.frozen
+        ex.metapath = self.frozen
         return ex
 
-    def request_plan(self, ids: np.ndarray) -> qplan.TraversalPlan:
+    def request_plan(self, ids: np.ndarray, *,
+                     degraded: bool = False) -> qplan.TraversalPlan:
+        tmpl = self.degraded_template if degraded else self.template
         return dataclasses.replace(
-            self.template, ids=np.asarray(ids, np.int32), batch_size=None)
+            tmpl, ids=np.asarray(ids, np.int32), batch_size=None)
+
+    def embed_offline(self, ids: np.ndarray, *, chunk: int = 64,
+                      degraded: bool = False) -> np.ndarray:
+        """The standalone offline oracle: embed ``ids`` through a FRESH
+        frozen executor with exact (unpadded) shapes — no request packing,
+        no cache, no buckets.  The served path must be byte-identical to
+        this (works for typed templates too, which the trainer's plain
+        ``embed_many`` query cannot express)."""
+        from repro.api.engine import execute as _execute
+        ex = self.executor()
+        tmpl = self.degraded_template if degraded else self.template
+        ids = np.asarray(ids, np.int32).reshape(-1)
+        outs: List[np.ndarray] = []
+        for i in range(0, len(ids), chunk):
+            sub = ids[i:i + chunk]
+            p = dataclasses.replace(tmpl, ids=sub, batch_size=None,
+                                    pad_buckets=None)
+            mb = _execute(p, ex, pad=None)
+            outs.append(np.asarray(self.forward(mb.device["seeds"]))
+                        [:len(sub)])
+        return np.concatenate(outs, axis=0)
 
     # -- the jitted device step (one trace per bucket shape) ---------------
     @functools.cached_property
@@ -343,29 +611,77 @@ class ServerPlan:
             rows whose value may have moved.
 
         The plan's store must be a ``repro.streaming.StreamingStore``.
+
+        ``apply_delta`` = :meth:`stage_delta` + :meth:`commit_delta`; a live
+        fleet splits the two so serving keeps answering (stale) while the
+        redraw work happens off the tick path.
         """
+        return self.commit_delta(self.stage_delta(delta))
+
+    def stage_delta(self, delta) -> StagedDelta:
+        """Commit ``delta`` to the store and PREPARE the plan refresh
+        without installing it (see :class:`StagedDelta`).  Safe to run
+        concurrently with serving: ticks read only the installed frozen
+        tables, the feature table, and the old importance scores — all
+        untouched until :meth:`commit_delta`."""
         store = self.store
         if not callable(getattr(store, "update", None)):
             raise QueryValidationError(
                 "ServerPlan.apply_delta needs a mutable store — compile "
                 "the server over repro.streaming.StreamingStore(store)")
         applied = store.update(delta)
-        touched = applied.touched_out
-        refreshed = self.frozen.refreeze(touched)
-        if len(applied.endpoints):
-            self.importance[applied.endpoints] = store.importance_k1(
-                applied.endpoints)
-        if len(touched):
-            invalidated = store.reverse_frontier(
-                touched, depth=len(self.fanouts) - 1)
-        else:
-            invalidated = np.zeros(0, np.int32)
-        return DeltaRefresh(
-            refreshed_vertices=int(len(touched)),
-            refreshed_entries=int(refreshed),
+        endpoints = np.asarray(applied.endpoints, np.int64)
+        imp_val = (store.importance_k1(endpoints) if len(endpoints)
+                   else np.zeros(0, np.float64))
+        # importance-strategy redraws must read the POST-delta Eq. 1 scores
+        # (what a cold compile on the mutated store would read)
+        needs_imp = any(k[3] == "importance" for k in self.frozen.tables)
+        imp_new = self.importance
+        if needs_imp and len(endpoints):
+            imp_new = self.importance.copy()
+            imp_new[endpoints] = imp_val
+        staged_rows = self.frozen.stage_refresh(
+            applied.touched_out, applied.touched_in,
+            imp_moved=(endpoints if needs_imp else None),
+            importance=imp_new)
+        touched_out = np.asarray(applied.touched_out, np.int64)
+        touched_in = np.asarray(applied.touched_in, np.int64)
+        depth = len(self.fanouts) - 1
+        inval: List[np.ndarray] = []
+        if len(touched_out):
+            inval.append(np.asarray(
+                store.reverse_frontier(touched_out, depth=depth), np.int64))
+        if any(k[0] == "in" for k in self.frozen.tables) and len(touched_in):
+            # in-direction hops read frozen IN-rows: affected seeds are the
+            # vertices reachable FORWARD from a touched in-row
+            cur = touched_in
+            acc = touched_in
+            for _ in range(depth):
+                cur = _forward_neighbors(store, cur)
+                acc = np.union1d(acc, cur)
+            inval.append(acc)
+        invalidated = (np.unique(np.concatenate(inval)).astype(np.int32)
+                       if inval else np.zeros(0, np.int32))
+        return StagedDelta(
+            staged_rows=staged_rows,
+            imp_idx=endpoints, imp_val=np.asarray(imp_val, np.float64),
             invalidated=invalidated,
+            refreshed_vertices=int(len(touched_out)),
             n_structural=applied.n_structural,
             n_weight_updates=applied.n_weight_updates)
+
+    def commit_delta(self, staged: StagedDelta) -> DeltaRefresh:
+        """Install a :meth:`stage_delta` result: cheap in-place table and
+        importance writes (the tick-boundary half of stale-while-refresh)."""
+        refreshed = self.frozen.commit_refresh(staged.staged_rows)
+        if len(staged.imp_idx):
+            self.importance[staged.imp_idx] = staged.imp_val
+        return DeltaRefresh(
+            refreshed_vertices=staged.refreshed_vertices,
+            refreshed_entries=int(refreshed),
+            invalidated=staged.invalidated,
+            n_structural=staged.n_structural,
+            n_weight_updates=staged.n_weight_updates)
 
 
 def compile_server(query, model, traffic, *, max_buckets: int = 4,
@@ -375,9 +691,12 @@ def compile_server(query, model, traffic, *, max_buckets: int = 4,
     :class:`ServerPlan` (see module docstring).
 
     ``query`` must be a reusable vertex template: ``G(store).V()`` followed
-    only by plain ``.sample()`` hops — no ``.batch()/.V(ids=...)`` (requests
-    supply the ids), and no negatives/walks/typed hops (typed hops in the
-    server path are a ROADMAP follow-up).  ``traffic`` is a
+    only by hop steps — plain ``.sample()`` or typed/metapath
+    ``.out_vertices()/.in_vertices()`` hops with the ``uniform`` or
+    ``importance`` strategy (each hop signature's filtered CSR is frozen
+    into its own per-vertex table; ``edge_weight`` hops are rejected — their
+    dynamic sampler weights cannot be frozen).  No ``.batch()/.V(ids=...)``
+    (requests supply the ids) and no negatives/walks.  ``traffic`` is a
     :class:`~repro.serving.traffic.Traffic` trace or a sequence of observed
     request sizes.
 
@@ -416,10 +735,13 @@ def compile_server(query, model, traffic, *, max_buckets: int = 4,
         raise QueryValidationError(
             "serving query needs at least one .sample() hop (a 0-hop lookup "
             "is a feature-table read, not a GNN forward)")
-    if tplan.typed or tplan.strategy != "uniform":
+    if tplan.strategy == "edge_weight" or any(
+            h.strategy == "edge_weight" for h in tplan.hops):
         raise QueryValidationError(
-            "typed/weighted hops in the server path are not supported yet "
-            "(ROADMAP: serving follow-ups) — use plain .sample(fanout) hops")
+            "edge_weight hops cannot be compiled into a server plan: the "
+            "dynamic per-edge sampler weights move under training, so a "
+            "frozen table would silently diverge from the live sampler — "
+            "serve uniform or importance hops")
 
     spec, params, features = _model_parts(model)
     if use_kernel is not None and use_kernel != spec.use_kernel:
@@ -433,12 +755,14 @@ def compile_server(query, model, traffic, *, max_buckets: int = 4,
 
     store = query.store
     buckets = choose_buckets(traffic.sizes, max_buckets)
-    frozen = FrozenNeighborSampler(store, tplan.fanouts, seed=seed)
     # Eq. 1 from the live degree counters on a streaming store (identical
-    # to the from-graph recompute; stays refreshable via apply_delta)
+    # to the from-graph recompute; stays refreshable via apply_delta) —
+    # computed BEFORE freezing: importance-strategy hops draw from it
     imp_fn = getattr(store, "importance_k1", None)
     imp = (imp_fn() if imp_fn is not None
            else cache_mod.importance(store.graph, k=1))
+    frozen = FrozenNeighborSampler(store, tplan.hops, seed=seed,
+                                   importance=imp)
     template = dataclasses.replace(tplan, batch_size=None)
     plan = ServerPlan(store=store, template=template, spec=spec,
                       params=params, features=features, buckets=buckets,

@@ -39,20 +39,30 @@ from repro.core.cache import CachePolicy
 
 from .plan import ServerPlan
 
-__all__ = ["EmbeddingServer", "ServeRequest", "ServerMetrics"]
+__all__ = ["EmbeddingServer", "ServeRequest", "ServerMetrics",
+           "TenantMetrics"]
 
 
 @dataclasses.dataclass
 class ServeRequest:
     """One submitted vertex-id batch; ``result()`` blocks until every id's
     embedding row has been filled in (cache hits may complete it without a
-    device step)."""
+    device step).
+
+    The multi-tenant fleet stamps the degradation flags: ``shed`` marks a
+    quota-rejected request (completed immediately with zero rows),
+    ``degraded`` marks rows produced under fanout reduction, ``stale`` marks
+    rows served from pre-delta state while a refresh was staged."""
 
     rid: int
     ids: np.ndarray                     # [k] int32
     out: np.ndarray                     # [k, d] float32, filled as slots land
     t_submit: float
     t_done: Optional[float] = None
+    tenant: Optional[str] = None
+    shed: bool = False
+    degraded: bool = False
+    stale: bool = False
     _remaining: int = 0
     _event: threading.Event = dataclasses.field(
         default_factory=threading.Event)
@@ -72,6 +82,100 @@ class ServeRequest:
             raise TimeoutError(f"request {self.rid} not served within "
                                f"{timeout}s")
         return self.out
+
+
+class TenantMetrics:
+    """Per-tenant serving counters — the fleet-level SLO surface.  Same
+    bounded-window pattern as :class:`ServerMetrics` latencies, one window
+    per tenant, so a many-tenant fleet stays bounded too.
+
+    ``device_hits`` counts ids answered from the tenant's device-resident
+    pinned buffer (the HBM Imp-top residency), separately from host
+    ``cache_hits``; ``sheds``/``degraded_*``/``stale_served`` record the
+    explicit degrade paths so overload behavior is observable per tenant."""
+
+    LATENCY_WINDOW = 1024
+
+    def __init__(self, name: str):
+        self.name = name
+        self.requests = 0
+        self.completed = 0
+        self.ids_served = 0
+        self.cache_hits = 0              # host CachePolicy hits
+        self.device_hits = 0             # pinned HBM-buffer hits
+        self.cache_misses = 0
+        self.ticks = 0
+        self.recompiles = 0
+        self.sheds = 0                   # quota-rejected requests
+        self.shed_ids = 0
+        self.degraded_ticks = 0          # ticks run under fanout reduction
+        self.degraded_ids = 0            # miss ids served degraded
+        self.stale_served = 0            # ids served while a delta was staged
+        self.deltas_applied = 0
+        self.queue_depth = 0             # gauge: pending slots right now
+        self.queue_depth_peak = 0
+        self.latencies_ms: "collections.deque[float]" = collections.deque(
+            maxlen=self.LATENCY_WINDOW)
+
+    def reset(self) -> None:
+        """Zero every counter and the latency window (keeps the name):
+        measurement warmups call this so steady state starts clean."""
+        self.__init__(self.name)
+
+    def note_hit(self, *, device: bool = False) -> None:
+        if device:
+            self.device_hits += 1
+        else:
+            self.cache_hits += 1
+
+    def note_miss(self) -> None:
+        self.cache_misses += 1
+
+    def gauge_queue(self, depth: int) -> None:
+        self.queue_depth = int(depth)
+        self.queue_depth_peak = max(self.queue_depth_peak, self.queue_depth)
+
+    @property
+    def hit_rate(self) -> float:
+        hits = self.cache_hits + self.device_hits
+        tot = hits + self.cache_misses
+        return hits / tot if tot else 0.0
+
+    def _pct(self, q: float) -> float:
+        if not self.latencies_ms:
+            return 0.0
+        return float(np.percentile(np.asarray(list(self.latencies_ms)), q))
+
+    @property
+    def p50_ms(self) -> float:
+        return self._pct(50)
+
+    @property
+    def p99_ms(self) -> float:
+        return self._pct(99)
+
+    def snapshot(self) -> Dict:
+        return {
+            "requests": self.requests,
+            "completed": self.completed,
+            "ids_served": self.ids_served,
+            "cache_hits": self.cache_hits,
+            "device_hits": self.device_hits,
+            "cache_misses": self.cache_misses,
+            "hit_rate": round(self.hit_rate, 4),
+            "ticks": self.ticks,
+            "recompiles": self.recompiles,
+            "sheds": self.sheds,
+            "shed_ids": self.shed_ids,
+            "degraded_ticks": self.degraded_ticks,
+            "degraded_ids": self.degraded_ids,
+            "stale_served": self.stale_served,
+            "deltas_applied": self.deltas_applied,
+            "queue_depth": self.queue_depth,
+            "queue_depth_peak": self.queue_depth_peak,
+            "p50_ms": round(self.p50_ms, 3),
+            "p99_ms": round(self.p99_ms, 3),
+        }
 
 
 class ServerMetrics:
@@ -108,6 +212,16 @@ class ServerMetrics:
         self.epoch_misses = 0
         self.delta_epochs: "collections.deque[Dict]" = collections.deque(
             maxlen=self.DELTA_WINDOW)
+        # per-tenant counters (multi-tenant fleet; empty for a single-plan
+        # EmbeddingServer)
+        self.tenants: Dict[str, TenantMetrics] = {}
+
+    def tenant(self, name: str) -> TenantMetrics:
+        """The (created-on-first-use) per-tenant counter block."""
+        tm = self.tenants.get(name)
+        if tm is None:
+            tm = self.tenants[name] = TenantMetrics(name)
+        return tm
 
     def note_hit(self) -> None:
         self.cache_hits += 1
@@ -176,6 +290,8 @@ class ServerMetrics:
             "cache_dropped": self.cache_dropped,
             "epoch_hit_rate": round(self.epoch_hit_rate, 4),
             "delta_epochs": list(self.delta_epochs),
+            "tenants": {name: tm.snapshot()
+                        for name, tm in self.tenants.items()},
         }
 
 

@@ -19,7 +19,27 @@ from typing import Dict, Sequence, Tuple
 
 import numpy as np
 
-__all__ = ["Traffic", "choose_buckets"]
+__all__ = ["Traffic", "arrival_offsets", "choose_buckets"]
+
+
+def arrival_offsets(sizes: Sequence[int],
+                    offered_ids_per_s: float) -> np.ndarray:
+    """Submit-time offsets (seconds from the first arrival) that pace a
+    request trace at a constant offered load of ``offered_ids_per_s``.
+
+    Request ``i`` arrives once the ids of requests ``0..i-1`` have been
+    offered: ``t_i = sum(sizes[:i]) / rate``.  An absolute schedule (sleep
+    until ``t0 + t_i``) holds the offered rate exactly even when submit
+    overhead varies — the saturation benchmarks drive their load sweeps
+    with this."""
+    if offered_ids_per_s <= 0:
+        raise ValueError("offered_ids_per_s must be > 0")
+    s = np.asarray(list(sizes), np.float64)
+    if not len(s):
+        return np.zeros(0, np.float64)
+    if s.min() < 1:
+        raise ValueError("request sizes must be >= 1")
+    return np.concatenate([[0.0], np.cumsum(s)[:-1]]) / offered_ids_per_s
 
 
 def choose_buckets(sizes: Sequence[int], max_buckets: int = 4

@@ -1,0 +1,393 @@
+"""Multi-tenant fleet: routing byte-identity (plain + typed tenants, cache
+on/off, pinned device residency), DRR fairness under overload, token-bucket
+quota sheds, fanout-reduction degrade determinism, stale-while-refresh."""
+import numpy as np
+import pytest
+
+from repro.api import G
+from repro.core import build_store, make_gnn, synthetic_ahg
+from repro.core.cache import split_budget
+from repro.core.gnn import GNNTrainer
+from repro.fleet import (DeficitRoundRobin, ModelFleet, TokenBucket,
+                         TenantSpec)
+from repro.serving import Traffic, compile_server
+from repro.streaming import GraphDelta, StreamingStore
+
+FAN = (4, 3)
+TRAFFIC = (4, 4, 9, 17, 30, 6, 12, 25)
+
+
+@pytest.fixture(scope="module")
+def trainer(small_store):
+    g = small_store.graph
+    spec = make_gnn("graphsage", d_in=g.vertex_attr_table.shape[1],
+                    d_hidden=16, d_out=16, fanouts=FAN)
+    tr = GNNTrainer(small_store, spec, lr=0.05, seed=0)
+    tr.train(2, batch_size=16)
+    return tr
+
+
+@pytest.fixture(scope="module")
+def plain_plan(small_store, trainer):
+    return compile_server(G(small_store).V().sample(4).sample(3), trainer,
+                          Traffic(TRAFFIC), max_buckets=3, seed=5)
+
+
+@pytest.fixture(scope="module")
+def typed_plan(small_store, trainer):
+    # a typed/metapath-hop tenant: PR 8 lifts the plain-hop restriction
+    return compile_server(G(small_store).V().out_vertices(1, 4).sample(3),
+                          trainer, Traffic(TRAFFIC), max_buckets=3, seed=9)
+
+
+def _trace(g, n_req=12, seed=3, lo=2, hi=20):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, g.n, size=int(s)).astype(np.int32)
+            for s in rng.integers(lo, hi, size=n_req)]
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+# ---------------------------------------------------------------------------
+# Units: token bucket, DRR, budget split
+# ---------------------------------------------------------------------------
+
+def test_token_bucket():
+    clk = FakeClock()
+    b = TokenBucket(rate=10.0, burst=5.0, clock=clk)
+    assert b.try_take(5) and not b.try_take(1)      # burst drained, no partial
+    clk.t += 0.25                                   # +2.5 tokens
+    assert b.try_take(2) and not b.try_take(1)
+    clk.t += 100.0
+    assert b.tokens == 5.0                          # capped at burst
+    assert b.try_take(5) and not b.try_take(1)
+    b.refill()
+    assert b.tokens == 5.0                          # warmup reset
+    assert TokenBucket().try_take(1e9)              # rate=inf admits all
+    z = TokenBucket(rate=0.0, burst=3.0, clock=clk)
+    assert z.try_take(3) and not z.try_take(1)      # never refills
+    with pytest.raises(ValueError):
+        TokenBucket(rate=-1.0)
+
+
+def test_drr_banked_deficit_no_starvation():
+    drr = DeficitRoundRobin(quantum=4)
+    drr.register("big", 1.0)
+    drr.register("tiny", 0.05)                      # 0.2 deficit per visit
+    backlog = {"big": 100, "tiny": 100}
+    served = {"big": 0, "tiny": 0}
+    for _ in range(200):
+        name = drr.select(backlog)
+        take = drr.allowance(name)
+        assert take >= 1
+        drr.charge(name, take)
+        served[name] += take
+    assert served["tiny"] > 0                       # banked, not starved
+    share = served["tiny"] / sum(served.values())
+    assert abs(share - 0.05 / 1.05) < 0.02
+    with pytest.raises(ValueError):
+        drr.register("big", 1.0)                    # duplicate
+    with pytest.raises(ValueError):
+        drr.register("neg", 0.0)
+    assert drr.select({"big": 0, "tiny": 0}) is None
+
+
+def test_split_budget():
+    shares = split_budget({"a": 2.0, "b": 1.0, "c": 0.0}, 100)
+    assert sum(shares.values()) == 100 and shares["c"] == 0
+    assert shares["a"] == 67 and shares["b"] == 33   # largest remainder
+    assert split_budget({"a": 1.0}, 0) == {"a": 0}
+    assert split_budget({}, 10) == {}
+    rng = np.random.default_rng(0)
+    for _ in range(20):                              # exactness property
+        w = {f"t{i}": float(x)
+             for i, x in enumerate(rng.random(rng.integers(1, 6)))}
+        tot = int(rng.integers(0, 1000))
+        s = split_budget(w, tot)
+        assert sum(s.values()) == (tot if sum(w.values()) > 0 else 0)
+        assert all(v >= 0 for v in s.values())
+    with pytest.raises(ValueError):
+        split_budget({"a": -1.0}, 10)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: per-tenant byte-identity (cache on/off, typed tenant, pinned)
+# ---------------------------------------------------------------------------
+
+def test_fleet_byte_identity_multi_tenant(small_store, trainer, plain_plan,
+                                          typed_plan):
+    """Rows served through the fleet — plain AND typed tenant, host cache on,
+    device-pinned residency on — are byte-identical to each tenant's
+    standalone offline oracle (embed_offline / embed_many over its own
+    frozen executor)."""
+    g = small_store.graph
+    plans = {"plain": plain_plan, "typed": typed_plan}
+    fleet = ModelFleet(
+        [TenantSpec("plain", plain_plan, weight=2.0),
+         TenantSpec("typed", typed_plan, weight=1.0)],
+        hbm_budget_bytes=96 * 16 * 4,            # ~96 pinned rows fleet-wide
+        start=False)
+    assert fleet.pinned_rows("plain") > fleet.pinned_rows("typed") > 0
+    # hot head of the trace aligned with importance => pinned hits happen
+    order = np.argsort(-plain_plan.importance)
+    rng = np.random.default_rng(11)
+    reqs = []
+    for i, ids in enumerate(_trace(g, n_req=16, seed=4)):
+        name = "plain" if i % 2 == 0 else "typed"
+        hot = order[np.minimum(rng.zipf(1.5, size=4) - 1, g.n - 1)]
+        ids = np.concatenate([ids, hot.astype(np.int32)])
+        reqs.append((name, fleet.submit(name, ids)))
+    assert fleet.step(500) > 0
+    for name, r in reqs:
+        assert r.done and not r.shed and r.tenant == name
+        assert np.array_equal(r.out, plans[name].embed_offline(r.ids))
+    # plain tenant also matches the trainer's offline embed_many through the
+    # SAME frozen executor (the pre-fleet oracle)
+    ids = np.unique(np.concatenate([r.ids for n, r in reqs if n == "plain"]))
+    offline = trainer.embed_many(ids, chunk=16,
+                                 executor=plain_plan.executor())
+    row_of = {int(v): offline[i] for i, v in enumerate(ids)}
+    for name, r in reqs:
+        if name == "plain":
+            for j, v in enumerate(r.ids):
+                assert np.array_equal(r.out[j], row_of[int(v)])
+    for name in plans:
+        tm = fleet.tenant_metrics(name).snapshot()
+        assert tm["completed"] == tm["requests"] == 8
+        assert tm["device_hits"] > 0              # pinned buffer served rows
+        assert tm["queue_depth"] == 0
+    # cache/pinning fully OFF serves the same bytes
+    fleet2 = ModelFleet(
+        [TenantSpec("plain", plain_plan, cache_policy="off",
+                    cache_capacity=1),
+         TenantSpec("typed", typed_plan, cache_policy="off",
+                    cache_capacity=1)], start=False)
+    reqs2 = [(n, fleet2.submit(n, r.ids)) for n, r in reqs]
+    fleet2.step(500)
+    for (n1, r1), (n2, r2) in zip(reqs, reqs2):
+        assert np.array_equal(r1.out, r2.out)
+    assert fleet2.tenant_metrics("plain").snapshot()["device_hits"] == 0
+
+
+def test_fleet_threaded_worker(small_store, plain_plan):
+    g = small_store.graph
+    with ModelFleet([TenantSpec("m", plain_plan)]) as fleet:
+        reqs = [fleet.submit("m", ids) for ids in _trace(g, n_req=6, seed=6)]
+        fleet.drain(timeout=120.0)
+        for r in reqs:
+            assert r.done
+            assert np.array_equal(r.out, plain_plan.embed_offline(r.ids))
+        with pytest.raises(RuntimeError):
+            fleet.step()                          # sync mode needs no worker
+        # warmup precompiles + serves then wipes the books
+        fleet.warmup([("m", reqs[0].ids)])
+        tm = fleet.tenant_metrics("m").snapshot()
+        assert tm["requests"] == 0 and tm["p99_ms"] == 0.0
+        assert fleet.precompile() == 0       # warmup already compiled all
+
+
+def test_fleet_validation(small_store, plain_plan):
+    g = small_store.graph
+    with pytest.raises(ValueError):
+        ModelFleet([])
+    with pytest.raises(ValueError):
+        ModelFleet([TenantSpec("a", plain_plan), TenantSpec("a", plain_plan)],
+                   start=False)
+    fleet = ModelFleet([TenantSpec("a", plain_plan)], start=False)
+    with pytest.raises(ValueError):
+        fleet.submit("nope", np.arange(3, dtype=np.int32))
+    with pytest.raises(ValueError):
+        fleet.submit("a", np.zeros(0, np.int32))
+    with pytest.raises(ValueError):
+        fleet.submit("a", np.asarray([g.n], np.int32))
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: DRR fairness under 2x aggregate overload
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("weights", [(1.0, 1.0), (2.0, 1.0)])
+def test_fleet_fairness_under_overload(small_store, plain_plan, weights):
+    """Keep both tenants backlogged well past per-measurement capacity
+    (>= 2x what the measured ticks can serve); each tenant's served ids
+    land within 10% of its DRR share."""
+    g = small_store.graph
+    wa, wb = weights
+    fleet = ModelFleet(
+        [TenantSpec("a", plain_plan, weight=wa, cache_policy="off",
+                    cache_capacity=1),
+         TenantSpec("b", plain_plan, weight=wb, cache_policy="off",
+                    cache_capacity=1)], start=False)
+    rng = np.random.default_rng(0)
+    n_ticks = 12
+    # 2x overload: queue twice what n_ticks can possibly serve
+    per_tenant = 2 * n_ticks * plain_plan.buckets[-1]
+    for name in ("a", "b"):
+        queued = 0
+        while queued < per_tenant:
+            ids = rng.integers(0, g.n, size=20, dtype=np.int32)
+            assert not fleet.submit(name, ids).shed
+            queued += len(ids)
+    assert fleet.step(n_ticks) == n_ticks
+    served = {n: fleet.tenant_metrics(n).ids_served for n in ("a", "b")}
+    total = sum(served.values())
+    assert total > 0
+    for name, w in (("a", wa), ("b", wb)):
+        share = w / (wa + wb)
+        assert abs(served[name] / total - share) <= 0.1 * share, (
+            f"{name}: served {served[name]}/{total}, want share {share}")
+        # both queues stayed backlogged the whole time (true overload)
+        assert fleet.tenant_metrics(name).queue_depth > 0
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: quota sheds are per-tenant and observable
+# ---------------------------------------------------------------------------
+
+def test_fleet_quota_sheds(small_store, plain_plan):
+    g = small_store.graph
+    clk = FakeClock()
+    fleet = ModelFleet(
+        [TenantSpec("limited", plain_plan, rate=0.0, burst=30.0),
+         TenantSpec("open", plain_plan)],
+        clock=clk, start=False)
+    rng = np.random.default_rng(2)
+    admitted, shed = [], []
+    for _ in range(6):                   # 6 x 10 ids vs a 30-token burst
+        ids = rng.integers(0, g.n, size=10, dtype=np.int32)
+        r = fleet.submit("limited", ids)
+        (shed if r.shed else admitted).append(r)
+    open_req = fleet.submit("open", rng.integers(0, g.n, size=8,
+                                                 dtype=np.int32))
+    assert len(admitted) == 3 and len(shed) == 3
+    for r in shed:                       # shed at submit: done, zero rows
+        assert r.done and not np.any(r.out)
+    fleet.step(100)
+    for r in admitted:                   # in-quota work still exact
+        assert np.array_equal(r.out, plain_plan.embed_offline(r.ids))
+    assert not open_req.shed and open_req.done   # other tenant unaffected
+    tm = fleet.tenant_metrics("limited").snapshot()
+    assert tm["sheds"] == 3 and tm["shed_ids"] == 30
+    assert tm["requests"] == 6 and tm["completed"] == 3
+    assert fleet.tenant_metrics("open").snapshot()["sheds"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: fanout-reduction degrade is deterministic and flagged
+# ---------------------------------------------------------------------------
+
+def test_fleet_degrade_under_backlog(small_store, plain_plan, typed_plan):
+    g = small_store.graph
+    for plan in (plain_plan, typed_plan):
+        fleet = ModelFleet(
+            [TenantSpec("m", plan, cache_policy="off", cache_capacity=1,
+                        degrade_depth=0)],       # any backlog => degrade
+            start=False)
+        reqs = [fleet.submit("m", ids)
+                for ids in _trace(g, n_req=6, seed=8)]
+        fleet.step(100)
+        for r in reqs:                           # halved-fanout template,
+            assert r.done and r.degraded         # flagged, deterministic
+            assert np.array_equal(
+                r.out, plan.embed_offline(r.ids, degraded=True))
+        tm = fleet.tenant_metrics("m").snapshot()
+        assert tm["degraded_ticks"] == tm["ticks"] > 0
+        assert tm["degraded_ids"] == sum(len(r.ids) for r in reqs)
+        assert tm["recompiles"] <= 2 * len(plan.buckets)
+
+
+def test_fleet_degraded_rows_never_cached(small_store, plain_plan):
+    """A degraded tick must not poison the cache/pinned buffer: re-serving
+    the same ids un-degraded yields full-fidelity bytes."""
+    g = small_store.graph
+    fleet = ModelFleet(
+        [TenantSpec("m", plain_plan, cache_capacity=2048, degrade_depth=0)],
+        hbm_budget_bytes=64 * 16 * 4, start=False)
+    ids = np.arange(24, dtype=np.int32)
+    r1 = fleet.submit("m", ids)
+    fleet.step(50)
+    assert r1.degraded
+    # a fleet whose degrade threshold is never crossed serves the same ids
+    # at full fidelity
+    fleet2 = ModelFleet(
+        [TenantSpec("m", plain_plan, cache_capacity=2048, degrade_depth=50)],
+        start=False)
+    r2 = fleet2.submit("m", ids)
+    fleet2.step(50)
+    assert not r2.degraded
+    assert np.array_equal(r2.out, plain_plan.embed_offline(ids))
+    # and the degraded fleet's cache holds nothing full-fidelity-stale
+    r3 = fleet.submit("m", ids[:4])
+    fleet.step(50)
+    assert np.array_equal(r3.out,
+                          plain_plan.embed_offline(ids[:4], degraded=True))
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: stale-while-refresh during apply_delta
+# ---------------------------------------------------------------------------
+
+def test_fleet_stale_while_refresh():
+    g = synthetic_ahg(700, avg_degree=6, seed=13)
+    sstore = StreamingStore(build_store(g, 3))
+    spec = make_gnn("graphsage", d_in=g.vertex_attr_table.shape[1],
+                    d_hidden=16, d_out=16, fanouts=FAN)
+    tr = GNNTrainer(sstore, spec, lr=0.05, seed=0)
+    tr.train(2, batch_size=16)
+    plan = compile_server(G(sstore).V().sample(4).sample(3), tr,
+                          Traffic(TRAFFIC), max_buckets=3, seed=5)
+    fleet = ModelFleet([TenantSpec("m", plan, cache_capacity=1024)],
+                       hbm_budget_bytes=48 * 16 * 4, start=False)
+    rng = np.random.default_rng(5)
+    ids = rng.integers(0, g.n, size=20, dtype=np.int32)
+    ref_pre = plan.embed_offline(ids)
+
+    warm = fleet.submit("m", ids)
+    fleet.step(50)
+    assert np.array_equal(warm.out, ref_pre)
+
+    # queue work, then stage a delta: the in-flight tick serves STALE
+    # (pre-delta bytes, flagged), the refresh commits at the tick boundary
+    stale_req = fleet.submit("m", ids)
+    src, dst = g.edge_list()
+    pairs = np.unique(np.stack([src, dst], 1), axis=0)
+    sel = rng.choice(len(pairs), size=25, replace=False)
+    delta = (GraphDelta.delete_edges(pairs[sel, 0], pairs[sel, 1])
+             + GraphDelta.add_edges(rng.integers(0, g.n, 30),
+                                    rng.integers(0, g.n, 30)))
+    assert fleet.apply_delta("m", delta, wait=False) is None
+    fleet.step(1)
+    assert stale_req.done and stale_req.stale
+    assert np.array_equal(stale_req.out, ref_pre)     # pre-delta bytes
+    tm = fleet.tenant_metrics("m").snapshot()
+    assert tm["stale_served"] >= len(ids) and tm["deltas_applied"] == 1
+
+    # after the commit: fresh bytes == post-delta offline == a cold compile
+    # over the SAME mutated store
+    fresh = fleet.submit("m", ids)
+    fleet.step(50)
+    assert fresh.done and not fresh.stale
+    ref_post = plan.embed_offline(ids)
+    assert np.array_equal(fresh.out, ref_post)
+    assert not np.array_equal(ref_post, ref_pre)      # the delta moved rows
+    tr2 = GNNTrainer(sstore, tr.spec, lr=0.05, seed=0)
+    tr2.params, tr2.features = tr.params, tr.features
+    plan_cold = compile_server(G(sstore).V().sample(4).sample(3), tr2,
+                               Traffic(TRAFFIC), max_buckets=3, seed=5)
+    assert np.array_equal(fresh.out, plan_cold.embed_offline(ids))
+
+    # wait=True on a sync fleet drives the commit inline
+    d2 = GraphDelta.add_edges(rng.integers(0, g.n, 5),
+                              rng.integers(0, g.n, 5))
+    refresh = fleet.apply_delta("m", d2, wait=True)
+    assert refresh is not None and refresh.refreshed_vertices > 0
+    assert fleet.tenant_metrics("m").deltas_applied == 2
+    again = fleet.submit("m", ids)
+    fleet.step(50)
+    assert np.array_equal(again.out, plan.embed_offline(ids))

@@ -67,6 +67,52 @@ def test_choose_buckets_covers_and_minimises():
     assert t.waste(buckets) <= t.waste(heur)
 
 
+def test_choose_buckets_matches_brute_force():
+    """Property check of the DP against exhaustive search: over random small
+    histograms the DP's waste equals the best of EVERY candidate bucket set
+    (subsets of observed sizes containing the max, |S| <= k)."""
+    import itertools
+
+    def brute(sizes, k):
+        uniq = sorted(set(int(s) for s in sizes))
+        best = None
+        for r in range(1, min(k, len(uniq)) + 1):
+            for sub in itertools.combinations(uniq, r):
+                if sub[-1] != uniq[-1]:
+                    continue                    # must cover the max
+                waste = sum(min(b for b in sub if b >= s) - s
+                            for s in sizes)
+                if best is None or waste < best:
+                    best = waste
+        return best
+
+    rng = np.random.default_rng(42)
+    t = 0
+    for _ in range(25):
+        sizes = rng.integers(1, 40, size=int(rng.integers(3, 30))).tolist()
+        k = int(rng.integers(1, 5))
+        got = choose_buckets(sizes, k)
+        assert max(got) == max(sizes) and len(got) <= k
+        waste = sum(min(b for b in got if b >= s) - s for s in sizes)
+        assert waste == brute(sizes, k)
+        t += waste
+    assert t > 0                                # the sweep exercised padding
+    # one bucket must be exactly the max observed size
+    assert choose_buckets([5, 7, 9], 1) == (9,)
+
+
+def test_arrival_offsets():
+    from repro.serving import arrival_offsets
+    # request i arrives once ids of 0..i-1 have been offered at the rate
+    assert np.allclose(arrival_offsets([10, 20, 10], 10.0),
+                       [0.0, 1.0, 3.0])
+    assert len(arrival_offsets([], 5.0)) == 0
+    with pytest.raises(ValueError):
+        arrival_offsets([4], 0.0)
+    with pytest.raises(ValueError):
+        arrival_offsets([0], 10.0)
+
+
 def test_traffic_validation():
     with pytest.raises(ValueError):
         Traffic(())
@@ -89,8 +135,10 @@ def test_compile_server_rejects_non_templates(small_store, trainer):
         G(small_store).V(),                                  # no hops
         G(small_store).V().sample(4).sample(3).negative(2),  # negatives
         G(small_store).V().walk(4),                          # walk
-        G(small_store).V().out_vertices(0, 4).sample(3),     # typed hop
+        # edge_weight cannot freeze: plain-shaped AND typed spellings
         G(small_store).V().sample(4, strategy="edge_weight").sample(3),
+        G(small_store).V().out_vertices(0, 4, strategy="edge_weight")
+                          .sample(3),
         G(small_store).V().sample(4).sample(3).pad(buckets=[8]),  # own pad
     ]
     for i, q in enumerate(cases):
