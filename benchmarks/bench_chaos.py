@@ -1,0 +1,219 @@
+"""Chaos/resilience benchmark: availability and recovery under seeded faults.
+
+Two measurement surfaces, both driven by deterministic
+:class:`~repro.chaos.FaultPlan`s (every fault replays byte-identically):
+
+  * **store reads** — a 4-shard ShardedStore under a 10% transient-fault
+    plan with 2 replicas: the resilient read path must stay BYTE-EQUAL to
+    the fault-free path (retries/failovers invisible), and the retry
+    overhead (attempts per logical call) is the price paid;
+  * **serving scenarios** — an EmbeddingServer under the chaos tick channel
+    across a ladder of fault shapes (clean baseline, 10% transients, a
+    mid-trace permanent replica kill with failover, latency spikes against
+    a deadline, full blackout): per scenario, availability, p50/p99,
+    deadline sheds, errors, recovery time — and the hard invariant that NO
+    request ever hangs.
+
+The smoke run enforces the ISSUE 9 acceptance gates in-process (raises on
+violation, failing the CI step): zero hung requests everywhere,
+availability ≥ 0.99 under 10% transient faults, byte-equal store reads.
+
+Writes ``BENCH_chaos.json`` (full run); ``--smoke`` runs a tiny ladder and
+skips the JSON so CI can exercise the gates in seconds.
+
+Run:  PYTHONPATH=src python benchmarks/bench_chaos.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+_BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
+                           "BENCH_chaos.json")
+
+AVAILABILITY_GATE = 0.99
+TRANSIENT_RATE = 0.10
+STORE_SHARDS = 4
+
+
+def _build(n: int, train_steps: int):
+    from repro.api import G
+    from repro.core import build_store, make_gnn, synthetic_ahg
+    from repro.core.gnn import GNNTrainer
+    from repro.serving import Traffic, compile_server
+
+    g = synthetic_ahg(n, avg_degree=6, seed=0)
+    store = build_store(g, n_parts=3)
+    spec = make_gnn("graphsage", d_in=g.vertex_attr_table.shape[1],
+                    d_hidden=32, d_out=32, fanouts=(4, 3))
+    tr = GNNTrainer(store, spec, lr=0.05, seed=0)
+    tr.train(train_steps, batch_size=64)
+    traffic = Traffic.synthetic(128, mean_size=8.0, max_size=24, seed=1)
+    plan = compile_server(G(store).V().sample(4).sample(3), tr, traffic,
+                          max_buckets=3, seed=5)
+    return g, plan
+
+
+def _trace(g, n_req: int, seed: int):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, g.n, int(s)).astype(np.int32)
+            for s in rng.integers(4, 16, size=n_req)]
+
+
+def _store_reads(n: int, n_reads: int) -> dict:
+    """4-shard resilient reads at the acceptance fault rate: byte-equality
+    + retry overhead."""
+    from repro.chaos import FaultPlan, FaultyChannel
+    from repro.core import build_store, synthetic_ahg
+    from repro.distributed import ShardedStore
+
+    g = synthetic_ahg(n, avg_degree=6, seed=3)
+    plain = build_store(g, STORE_SHARDS, partition_method="two_d")
+    rng = np.random.default_rng(0)
+    batches = [rng.integers(0, g.n, 48) for _ in range(n_reads)]
+    ref_store = ShardedStore.from_store(plain)
+    refs = [ref_store.gather_rows(vs) for vs in batches]
+
+    faulty = ShardedStore.from_store(plain)
+    ch = FaultyChannel(
+        FaultPlan.uniform(seed=11, transient_rate=TRANSIENT_RATE),
+        replicas=2, max_retries=4, time_scale=0.0)
+    faulty.attach_channel(ch)
+    byte_equal = True
+    for vs, ref in zip(batches, refs):
+        got = faulty.gather_rows(vs)
+        byte_equal &= all(np.array_equal(a, b) for a, b in zip(ref, got))
+    s = ch.stats
+    return {
+        "shards": STORE_SHARDS,
+        "transient_rate": TRANSIENT_RATE,
+        "reads": n_reads,
+        "byte_equal": bool(byte_equal),
+        "lost_rows": int(faulty.gather_stats.lost_rows),
+        "calls": s.calls,
+        "attempts_per_call": round(s.attempts / max(1, s.calls), 4),
+        "retries": s.retries,
+        "failovers": s.failovers,
+    }
+
+
+def _scenarios(plan, g, smoke: bool):
+    from repro.chaos import FaultPlan, Scenario
+    from repro.serving import EmbeddingServer
+
+    n_req = 16 if smoke else 64
+    kill_at = n_req // 3
+    # ms of injected latency per spike; deadline sized so a backlog of
+    # spiked ticks pushes late requests past it (the shed-not-queue story)
+    spike_ms = 2.0 if smoke else 10.0
+    deadline_ms = 30_000.0            # generous: sheds come from blackout
+    ladder = [
+        Scenario("baseline", FaultPlan(seed=0), deadline_ms=deadline_ms,
+                 channel_kw=dict(replicas=2, time_scale=0.0)),
+        Scenario("transient_10pct",
+                 FaultPlan.uniform(seed=7, transient_rate=TRANSIENT_RATE),
+                 deadline_ms=deadline_ms,
+                 channel_kw=dict(replicas=2, max_retries=4,
+                                 time_scale=0.0)),
+        Scenario("replica_kill_failover",
+                 FaultPlan.uniform(seed=9, dead_replicas=(0,),
+                                   dead_from_call=kill_at),
+                 deadline_ms=deadline_ms,
+                 channel_kw=dict(replicas=2, time_scale=0.0)),
+        Scenario("latency_spikes",
+                 FaultPlan.uniform(seed=13, latency_rate=0.3,
+                                   latency_ms=spike_ms),
+                 deadline_ms=deadline_ms,
+                 channel_kw=dict(replicas=2, time_scale=1.0)),
+        Scenario("blackout",
+                 FaultPlan.uniform(seed=17, dead_replicas=(0, 1)),
+                 deadline_ms=deadline_ms, drain_timeout_s=30.0,
+                 channel_kw=dict(replicas=2, max_retries=2,
+                                 time_scale=0.0)),
+    ]
+    results = []
+    for sc in ladder:
+        trace = _trace(g, n_req, seed=5)
+        srv = EmbeddingServer(plan, cache_policy="off", chaos=sc.channel())
+        try:
+            res = sc.run(srv, trace,
+                         kill_at=(kill_at
+                                  if sc.name == "replica_kill_failover"
+                                  else None))
+        finally:
+            srv.stop()
+        results.append(res)
+    return results
+
+
+def _gates(store_rec: dict, results) -> dict:
+    by_name = {r.name: r for r in results}
+    gates = {
+        "zero_hung": all(r.hung == 0 for r in results),
+        "store_byte_equal": store_rec["byte_equal"]
+        and store_rec["lost_rows"] == 0,
+        "transient_availability": (
+            by_name["transient_10pct"].availability >= AVAILABILITY_GATE),
+        "failover_availability": (
+            by_name["replica_kill_failover"].availability
+            >= AVAILABILITY_GATE),
+        "failover_used": (
+            (by_name["replica_kill_failover"].channel or {})
+            .get("failovers", 0) > 0),
+        "blackout_fails_fast": (by_name["blackout"].hung == 0
+                                and by_name["blackout"].errors > 0),
+    }
+    gates["all"] = all(gates.values())
+    return gates
+
+
+def run(smoke: bool = False) -> dict:
+    try:
+        from .common import emit
+    except ImportError:               # script mode: benchmarks/ is sys.path[0]
+        from common import emit
+
+    n = 1_500 if smoke else 10_000
+    g, plan = _build(n, train_steps=2 if smoke else 8)
+
+    store_rec = _store_reads(n, n_reads=8 if smoke else 32)
+    emit("chaos_store_attempts_per_call", store_rec["attempts_per_call"],
+         f"byte_equal={store_rec['byte_equal']}")
+
+    results = _scenarios(plan, g, smoke)
+    record: dict = {"n": n, "store_reads": store_rec, "scenarios": []}
+    for r in results:
+        record["scenarios"].append(r.to_dict())
+        emit(f"chaos_{r.name}_p99_ms", r.p99_ms,
+             f"avail={r.availability:.4f},hung={r.hung},"
+             f"shed={r.deadline_shed},errors={r.errors}")
+
+    record["gates"] = _gates(store_rec, results)
+    emit("chaos_gates_pass", float(record["gates"]["all"]),
+         ",".join(k for k, v in record["gates"].items() if not v) or "ok")
+    if not record["gates"]["all"]:
+        failing = [k for k, v in record["gates"].items()
+                   if k != "all" and not v]
+        raise RuntimeError(f"chaos acceptance gates failed: {failing}")
+
+    if not smoke:
+        with open(_BENCH_JSON, "w") as f:
+            json.dump({"chaos": record}, f, indent=2)
+            f.write("\n")
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny ladder, gates enforced, no JSON artifact (CI)")
+    args = ap.parse_args()
+    record = run(smoke=args.smoke)
+    print(json.dumps({"chaos": record}, indent=2))
+
+
+if __name__ == "__main__":
+    main()

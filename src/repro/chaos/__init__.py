@@ -1,0 +1,11 @@
+"""Deterministic chaos injection (ISSUE 9): seeded fault plans, the
+resilient FaultyChannel every simulated cross-shard/cross-tick call routes
+through, and replayable availability scenarios.
+
+Faults are a pure function of ``(seed, call_index, shard, replica)``, so
+every scenario replays byte-identically; replicas are deterministic copies,
+so retry/failover reads stay byte-equal to the fault-free path."""
+from .plan import FaultDecision, FaultPlan, ShardFaults  # noqa: F401
+from .channel import (ChannelStats, FaultyChannel,  # noqa: F401
+                      ReplicaHealth, ShardUnavailable)
+from .scenario import Scenario, ScenarioResult  # noqa: F401

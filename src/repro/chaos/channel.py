@@ -1,0 +1,231 @@
+"""FaultyChannel — the resilient RPC layer every simulated cross-shard (or
+cross-tick) call routes through.
+
+The channel wraps a zero-argument callable (the "RPC body": a slice read in
+``ShardedStore.gather_rows``, the device step of a serving tick) and runs
+the paper's §3.1 resilience recipe in front of it:
+
+  * **k replicas** per target — replicas are deterministic copies of the
+    same slice, so a failover read returns byte-identical data; the replica
+    dimension only exists in the fault/health bookkeeping;
+  * **bounded retries** with exponential backoff and deterministic jitter
+    (both drawn from the :class:`~repro.chaos.plan.FaultPlan`'s keyed hash
+    stream — NEVER from the sampling RNG, so retries cannot perturb a
+    sample stream: the same factoring trick as the sampler's
+    ``_uniform_sel`` position draws);
+  * a **per-call timeout**: injected latency past ``timeout_ms`` counts as
+    a retryable timeout fault;
+  * **per-(shard, replica) health** — EWMA error rate and latency — feeding
+    a **circuit breaker**: a replica whose error EWMA crosses the threshold
+    is routed around for ``cooldown_calls`` attempts, then probed half-open;
+  * when every replica of a target is exhausted the channel raises
+    :class:`ShardUnavailable` — the caller's cue to degrade (the sharded
+    store falls back to local-frontier-only sampling and accounts the
+    coverage loss; a serving tick fails just its own requests).
+
+All sleeps are scaled by ``time_scale`` (0 disables them — the byte-equality
+tests run wall-clock-free; benches use 1.0 to measure availability under
+latency).  Every counter in :class:`ChannelStats` is deterministic given the
+plan and the call sequence.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, TypeVar
+
+from .plan import FaultDecision, FaultPlan
+
+__all__ = ["ShardUnavailable", "ChannelStats", "ReplicaHealth",
+           "FaultyChannel"]
+
+T = TypeVar("T")
+
+
+class ShardUnavailable(RuntimeError):
+    """Every replica of a shard failed within the channel's retry budget."""
+
+    def __init__(self, shard: int, attempts: int, detail: str = ""):
+        self.shard = int(shard)
+        self.attempts = int(attempts)
+        super().__init__(
+            f"shard {shard} unavailable after {attempts} attempts"
+            + (f" ({detail})" if detail else ""))
+
+
+@dataclasses.dataclass
+class ChannelStats:
+    """Channel-level resilience accounting (deterministic; snapshot-diffed
+    by the serving layer into per-tenant metrics)."""
+
+    calls: int = 0                 # logical channel calls
+    attempts: int = 0              # physical attempts (>= calls)
+    faults: int = 0                # injected transient/dead/timeout hits
+    retries: int = 0               # same-replica re-attempts
+    failovers: int = 0             # replica switches after exhaustion/death
+    timeouts: int = 0              # latency > timeout_ms
+    breaker_open: int = 0          # closed -> open transitions
+    breaker_skips: int = 0         # attempts short-circuited by an open breaker
+    unavailable: int = 0           # calls that exhausted every replica
+    injected_delay_ms: float = 0.0
+
+    def reset(self) -> None:
+        self.__init__()
+
+    def snapshot(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class ReplicaHealth:
+    """EWMA health of one (shard, replica) endpoint + its breaker state."""
+
+    alpha: float = 0.2
+    err_threshold: float = 0.5
+    min_calls: int = 4
+    cooldown_calls: int = 16
+    ewma_err: float = 0.0
+    ewma_latency_ms: float = 0.0
+    observations: int = 0
+    open: bool = False
+    _cooldown_left: int = 0
+
+    def record(self, ok: bool, latency_ms: float = 0.0) -> bool:
+        """Fold one attempt in; returns True when this observation OPENS the
+        breaker (a closed->open transition)."""
+        self.observations += 1
+        self.ewma_err += self.alpha * ((0.0 if ok else 1.0) - self.ewma_err)
+        self.ewma_latency_ms += self.alpha * (latency_ms
+                                              - self.ewma_latency_ms)
+        if ok:
+            self.open = False
+            return False
+        if (not self.open and self.observations >= self.min_calls
+                and self.ewma_err > self.err_threshold):
+            self.open = True
+            self._cooldown_left = self.cooldown_calls
+            return True
+        return False
+
+    def routable(self) -> bool:
+        """False while the breaker is open and cooling down; after the
+        cooldown one half-open probe is allowed (the next record() decides
+        whether it closes or re-opens)."""
+        if not self.open:
+            return True
+        if self._cooldown_left > 0:
+            self._cooldown_left -= 1
+            return False
+        return True                # half-open probe
+
+
+class FaultyChannel:
+    """The resilient call wrapper (see module docstring).
+
+    ``replicas`` is k of the k-replication story; ``max_retries`` bounds the
+    per-replica attempt count, so one logical call costs at most
+    ``replicas * max_retries`` attempts before :class:`ShardUnavailable`.
+    """
+
+    def __init__(self, plan: FaultPlan, *, replicas: int = 2,
+                 max_retries: int = 3, backoff_base_ms: float = 0.2,
+                 backoff_factor: float = 2.0, timeout_ms: float = float("inf"),
+                 time_scale: float = 1.0,
+                 err_threshold: float = 0.5, ewma_alpha: float = 0.2,
+                 breaker_min_calls: int = 4, breaker_cooldown_calls: int = 16,
+                 sleep_fn: Callable[[float], None] = time.sleep):
+        if replicas < 1:
+            raise ValueError("need at least one replica")
+        if max_retries < 1:
+            raise ValueError("need at least one attempt per replica")
+        self.plan = plan
+        self.replicas = int(replicas)
+        self.max_retries = int(max_retries)
+        self.backoff_base_ms = float(backoff_base_ms)
+        self.backoff_factor = float(backoff_factor)
+        self.timeout_ms = float(timeout_ms)
+        self.time_scale = float(time_scale)
+        self.sleep_fn = sleep_fn
+        self.stats = ChannelStats()
+        self._health_kw = dict(alpha=ewma_alpha, err_threshold=err_threshold,
+                               min_calls=breaker_min_calls,
+                               cooldown_calls=breaker_cooldown_calls)
+        self._health: Dict[int, List[ReplicaHealth]] = {}
+        self._call_index: Dict[int, int] = {}
+
+    # ------------------------------------------------------------- plumbing
+    def health(self, shard: int) -> List[ReplicaHealth]:
+        h = self._health.get(shard)
+        if h is None:
+            h = self._health[shard] = [ReplicaHealth(**self._health_kw)
+                                       for _ in range(self.replicas)]
+        return h
+
+    def _next_index(self, shard: int) -> int:
+        ci = self._call_index.get(shard, 0)
+        self._call_index[shard] = ci + 1
+        return ci
+
+    def _sleep_ms(self, ms: float) -> None:
+        self.stats.injected_delay_ms += ms
+        if ms > 0.0 and self.time_scale > 0.0:
+            self.sleep_fn(ms * 1e-3 * self.time_scale)
+
+    def open_shards(self) -> List[int]:
+        """Shards whose every replica breaker is currently open (the
+        all-replicas-down targets callers should expect to degrade on)."""
+        return [s for s, hs in self._health.items()
+                if all(h.open for h in hs)]
+
+    # ------------------------------------------------------------- the call
+    def call(self, shard: int, fn: Callable[[], T]) -> T:
+        """Run ``fn`` under the fault plan: retry transient faults with
+        backoff, fail over across replicas, route around open breakers.
+        Raises :class:`ShardUnavailable` when the budget is exhausted."""
+        shard = int(shard)
+        self.stats.calls += 1
+        health = self.health(shard)
+        attempts = 0
+        skipped: List[int] = []
+        last_kind = ""
+        for replica in range(self.replicas):
+            h = health[replica]
+            if not h.routable():
+                self.stats.breaker_skips += 1
+                skipped.append(replica)
+                continue
+            if attempts:           # a previous replica was exhausted
+                self.stats.failovers += 1
+            for attempt in range(self.max_retries):
+                ci = self._next_index(shard)
+                d = self.plan.decide(ci, shard, replica)
+                attempts += 1
+                self.stats.attempts += 1
+                if d.ok and d.delay_ms <= self.timeout_ms:
+                    self._sleep_ms(d.delay_ms)
+                    h.record(True, d.delay_ms)
+                    return fn()
+                # fault: transient, dead, or timeout
+                self.stats.faults += 1
+                kind = d.kind
+                if d.ok:           # latency past the per-call timeout
+                    kind = "timeout"
+                    self.stats.timeouts += 1
+                    self._sleep_ms(self.timeout_ms)
+                last_kind = kind
+                if h.record(False, min(d.delay_ms, self.timeout_ms)):
+                    self.stats.breaker_open += 1
+                if kind == "dead":
+                    break          # permanent: no point retrying this replica
+                if attempt < self.max_retries - 1:
+                    self.stats.retries += 1
+                    back = (self.backoff_base_ms
+                            * self.backoff_factor ** attempt
+                            * self.plan.jitter(ci, shard, attempt))
+                    self._sleep_ms(back)
+        self.stats.unavailable += 1
+        raise ShardUnavailable(
+            shard, attempts,
+            detail=(f"last_fault={last_kind or 'breaker'}, "
+                    f"breaker_skipped={skipped}" if skipped or last_kind
+                    else ""))

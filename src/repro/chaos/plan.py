@@ -1,0 +1,133 @@
+"""Deterministic fault plans — the chaos subsystem's source of truth.
+
+A :class:`FaultPlan` decides, for every channel attempt, whether the
+simulated RPC succeeds, fails transiently, or hits a permanently dead
+replica — and how much injected latency it pays.  Every decision is a PURE
+function of ``(seed, call_index, shard, replica)`` through the same
+splitmix64-style keyed hash the serving layer's frozen tables use
+(``serving.plan._hash_u01``): no process RNG, no wall clock, no ordering
+sensitivity beyond the call sequence itself.  Replaying the same workload
+against the same plan therefore reproduces every fault, every retry, and
+every failover byte-identically — the property the resilience tests pin.
+
+The per-shard knobs mirror the failure modes AliGraph's storage layer is
+built around (§3.1 replicated shards, slow-partition stragglers):
+
+  * ``transient_rate``  — per-attempt probability of a retryable failure;
+  * ``latency_rate``/``latency_ms`` — probability/magnitude of a latency
+    spike on an otherwise-successful attempt;
+  * ``slow_ms``         — constant added latency (a straggler shard);
+  * ``dead_replicas``   — replicas that fail EVERY attempt from call index
+    ``dead_from_call`` on (a permanent kill; failover reads route around
+    it, and because replicas are deterministic copies the failover path
+    stays byte-equal to the fault-free one).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+__all__ = ["ShardFaults", "FaultDecision", "FaultPlan"]
+
+_MASK64 = (1 << 64) - 1
+
+
+def _mix(*xs: int) -> int:
+    """splitmix64-style finaliser over a tuple of ints (order-sensitive)."""
+    x = 0x9E3779B97F4A7C15
+    for v in xs:
+        x = (x ^ (int(v) & _MASK64)) * 0xBF58476D1CE4E5B9 & _MASK64
+        x ^= x >> 27
+        x = x * 0x94D049BB133111EB & _MASK64
+        x ^= x >> 31
+    return x
+
+
+def hash_u01(*xs: int) -> float:
+    """Deterministic uniform in [0, 1) keyed by the int tuple."""
+    return (_mix(*xs) >> 11) * (2.0 ** -53)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardFaults:
+    """One shard's fault profile (see module docstring for semantics)."""
+
+    transient_rate: float = 0.0
+    latency_rate: float = 0.0
+    latency_ms: float = 0.0
+    slow_ms: float = 0.0
+    dead_replicas: Tuple[int, ...] = ()
+    dead_from_call: int = 0
+
+    def __post_init__(self):
+        for name in ("transient_rate", "latency_rate"):
+            v = getattr(self, name)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{name} must be in [0, 1], got {v}")
+        if self.latency_ms < 0 or self.slow_ms < 0:
+            raise ValueError("latencies must be >= 0")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultDecision:
+    """What one channel attempt experiences.  ``kind`` is ``"ok"``,
+    ``"transient"`` (retryable) or ``"dead"`` (permanent — failover, don't
+    retry this replica).  ``delay_ms`` is the injected latency an ``"ok"``
+    attempt pays (the channel turns a delay past its per-call timeout into
+    a retryable timeout fault)."""
+
+    kind: str
+    delay_ms: float = 0.0
+
+    @property
+    def ok(self) -> bool:
+        return self.kind == "ok"
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Seeded, replayable fault schedule: ``default`` applies to every
+    shard, ``overrides`` replaces it per shard id."""
+
+    seed: int = 0
+    default: ShardFaults = ShardFaults()
+    overrides: Dict[int, ShardFaults] = dataclasses.field(
+        default_factory=dict)
+
+    # distinct hash domains so the transient/latency draws of one attempt
+    # are independent
+    _D_TRANSIENT = 1
+    _D_LATENCY = 2
+    _D_JITTER = 3
+
+    @classmethod
+    def uniform(cls, seed: int = 0, **faults) -> "FaultPlan":
+        """Same :class:`ShardFaults` profile on every shard."""
+        return cls(seed=seed, default=ShardFaults(**faults))
+
+    def faults_for(self, shard: int) -> ShardFaults:
+        return self.overrides.get(int(shard), self.default)
+
+    def decide(self, call_index: int, shard: int,
+               replica: int = 0) -> FaultDecision:
+        """The attempt's fate — pure in ``(seed, call_index, shard,
+        replica)``; the channel advances ``call_index`` once per attempt."""
+        sf = self.faults_for(shard)
+        if replica in sf.dead_replicas and call_index >= sf.dead_from_call:
+            return FaultDecision("dead")
+        if sf.transient_rate > 0.0 and hash_u01(
+                self.seed, self._D_TRANSIENT, call_index, shard,
+                replica) < sf.transient_rate:
+            return FaultDecision("transient")
+        delay = sf.slow_ms
+        if sf.latency_rate > 0.0 and hash_u01(
+                self.seed, self._D_LATENCY, call_index, shard,
+                replica) < sf.latency_rate:
+            delay += sf.latency_ms
+        return FaultDecision("ok", delay_ms=delay)
+
+    def jitter(self, call_index: int, shard: int, attempt: int) -> float:
+        """Deterministic backoff jitter in [0.5, 1.5) — keyed off the same
+        stream, so retry timing replays exactly too."""
+        return 0.5 + hash_u01(self.seed, self._D_JITTER, call_index, shard,
+                              attempt)

@@ -1,0 +1,133 @@
+"""Replayable chaos scenarios: a FaultPlan + a deadline-bounded workload.
+
+``Scenario`` drives a serving surface (:class:`~repro.serving.server.
+EmbeddingServer` or a :class:`~repro.fleet.ModelFleet` tenant) through a
+request trace with per-request deadlines while the attached
+:class:`~repro.chaos.channel.FaultyChannel` injects the scenario's faults,
+and measures the availability story the resilience layer promises:
+
+  * **availability** — the fraction of requests served (no shed, no error)
+    within their deadline;
+  * **zero hung requests** — every submitted request completes (served,
+    deadline-shed, or failed with a captured error): nothing blocks forever;
+  * **recovery** — after a mid-trace permanent kill (``kill_at``), how long
+    until service is healthy again (first post-kill request served within
+    deadline).
+
+The result carries the channel's deterministic counters, so a BENCH run can
+attribute availability loss to retries/failovers/breaker state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from .channel import FaultyChannel
+from .plan import FaultPlan
+
+__all__ = ["Scenario", "ScenarioResult"]
+
+
+@dataclasses.dataclass
+class ScenarioResult:
+    name: str
+    requests: int
+    served: int                    # completed, unshedded, error-free
+    within_deadline: int
+    deadline_shed: int
+    errors: int
+    hung: int                      # still incomplete after the drain budget
+    availability: float            # within_deadline / requests
+    p50_ms: float
+    p99_ms: float
+    recovery_ms: Optional[float] = None
+    channel: Optional[Dict] = None
+
+    def to_dict(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d["availability"] = round(self.availability, 4)
+        d["p50_ms"] = round(self.p50_ms, 3)
+        d["p99_ms"] = round(self.p99_ms, 3)
+        if self.recovery_ms is not None:
+            d["recovery_ms"] = round(self.recovery_ms, 3)
+        return d
+
+
+@dataclasses.dataclass
+class Scenario:
+    """One named fault scenario.  ``channel_kw`` forwards to
+    :class:`FaultyChannel` (replicas, retry budget, timeout, time_scale)."""
+
+    name: str
+    plan: FaultPlan
+    deadline_ms: Optional[float] = None
+    drain_timeout_s: float = 60.0
+    channel_kw: Dict = dataclasses.field(default_factory=dict)
+
+    def channel(self) -> FaultyChannel:
+        return FaultyChannel(self.plan, **self.channel_kw)
+
+    def run(self, server, trace: Sequence[np.ndarray], *,
+            tenant: Optional[str] = None,
+            kill_at: Optional[int] = None) -> ScenarioResult:
+        """Submit ``trace`` with this scenario's deadline and measure.
+
+        ``server`` is an EmbeddingServer (or a ModelFleet when ``tenant`` is
+        given).  ``kill_at`` marks the request index at which a permanent
+        fault in the plan activates (used only for the recovery metric — the
+        kill itself lives in the FaultPlan's ``dead_from_call``)."""
+        reqs = []
+        for ids in trace:
+            if tenant is None:
+                reqs.append(server.submit(ids, deadline_ms=self.deadline_ms))
+            else:
+                reqs.append(server.submit(tenant, ids,
+                                          deadline_ms=self.deadline_ms))
+        hung = 0
+        try:
+            server.drain(timeout=self.drain_timeout_s)
+        except TimeoutError:
+            hung = sum(1 for r in reqs if not r.done)
+        ok: List[bool] = []
+        lat: List[float] = []
+        within = 0
+        shed = errors = 0
+        for r in reqs:
+            if not r.done:
+                ok.append(False)
+                continue
+            if r.deadline_shed:
+                shed += 1
+                ok.append(False)
+                continue
+            if r.error is not None:
+                errors += 1
+                ok.append(False)
+                continue
+            lat.append(r.latency_ms)
+            good = (self.deadline_ms is None
+                    or r.latency_ms <= self.deadline_ms)
+            within += int(good)
+            ok.append(True)
+        recovery = None
+        if kill_at is not None and kill_at < len(reqs):
+            t_kill = reqs[kill_at].t_submit
+            done_after = [r for i, r in enumerate(reqs)
+                          if i >= kill_at and ok[i] and r.t_done is not None]
+            if done_after:
+                recovery = (min(r.t_done for r in done_after)
+                            - t_kill) * 1e3
+        arr = np.asarray(lat) if lat else np.zeros(1)
+        ch = getattr(server, "chaos", None)
+        return ScenarioResult(
+            name=self.name, requests=len(reqs), served=sum(ok),
+            within_deadline=within, deadline_shed=shed, errors=errors,
+            hung=hung,
+            availability=(within / len(reqs)) if reqs else 1.0,
+            p50_ms=float(np.percentile(arr, 50)),
+            p99_ms=float(np.percentile(arr, 99)),
+            recovery_ms=recovery,
+            channel=(ch.stats.snapshot() if ch is not None else None))

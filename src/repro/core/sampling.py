@@ -51,6 +51,11 @@ class SampleBatch:
     masks: List[np.ndarray]                 # per hop, float32 0/1
     fanouts: Tuple[int, ...]
     negatives: Optional[np.ndarray] = None  # [B, Q] int32
+    # chaos degrade flag: True when a cross-shard gather lost coverage
+    # (every replica of a shard down) and the affected rows were sampled
+    # local-frontier-only — the batch is usable but not byte-equal to the
+    # fault-free draw, and the loss is accounted in GatherStats
+    coverage_loss: bool = False
 
     def hop_shape(self, h: int) -> Tuple[int, ...]:
         b = len(self.seeds)
@@ -339,8 +344,33 @@ class NeighborhoodSampler:
         rem = np.nonzero((deg > 0) & ~local)[0]
         if len(rem):
             uniq, inv = np.unique(vs64[rem], return_inverse=True)
-            cand, _, _ = gather(uniq)
-            out[rem] = np.take_along_axis(cand[inv], sel[rem], axis=1)
+            cand, cmask, _ = gather(uniq)
+            avail = cmask.sum(1).astype(np.int64)[inv]
+            full = avail >= deg[rem]
+            ok = rem[full]
+            if len(ok):
+                # fault-free (or fully failed-over) rows: the candidate row
+                # is the complete global-CSR row, positions apply verbatim —
+                # byte-equal to the plain-store draw
+                out[ok] = np.take_along_axis(cand[inv[full]], sel[ok],
+                                             axis=1)
+            if not full.all():
+                # coverage loss (all replicas of a holding shard down):
+                # degrade to the surviving local frontier — remap the
+                # position draws onto the live slots (deterministic, no
+                # extra RNG) and zero rows with nothing left.  GatherStats
+                # carries the loss; sample() flags the batch.
+                dgr, d_inv, d_avail = rem[~full], inv[~full], avail[~full]
+                some = d_avail > 0
+                if some.any():
+                    rows = dgr[some]
+                    out[rows] = np.take_along_axis(
+                        cand[d_inv[some]],
+                        sel[rows] % d_avail[some][:, None], axis=1)
+                if (~some).any():
+                    rows = dgr[~some]
+                    out[rows] = 0
+                    mask[rows] = 0.0
         return out, mask
 
     def sample(self, seeds: np.ndarray, fanouts: Sequence[int],
@@ -359,6 +389,8 @@ class NeighborhoodSampler:
         view = _store_view(self.store)
         if self.weighted:
             self.edge_logits = _synced_logits(self.store, self.edge_logits)
+        gs = getattr(self.store, "gather_stats", None)
+        lost0 = gs.lost_rows if gs is not None else 0
         if via is None:
             via = self.store.partition.vertex_home[seeds]
         frontier, fvia = seeds, np.asarray(via, np.int32)
@@ -396,7 +428,9 @@ class NeighborhoodSampler:
             frontier = nxt.reshape(-1)
             fvia = np.repeat(fvia, fanout)   # expansion stays on the seed's server
         return SampleBatch(seeds=seeds, neighbors=hops, masks=masks,
-                           fanouts=tuple(fanouts))
+                           fanouts=tuple(fanouts),
+                           coverage_loss=bool(
+                               gs is not None and gs.lost_rows > lost0))
 
 
 # ---------------------------------------------------------------------------

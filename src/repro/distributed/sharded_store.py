@@ -31,6 +31,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.chaos import ShardUnavailable
 from repro.core.cache import CachePlan, plan_cache
 from repro.core.graph import AHG
 from repro.core.partition import Partition, partition_graph
@@ -68,14 +69,23 @@ class ShardSlice:
 class GatherStats:
     """Cross-shard gather accounting (the §3.2 cost the 4 partitioners trade
     off): how many requested rows were whole on one shard vs. merged from
-    several, and how many remote row-segments moved."""
+    several, and how many remote row-segments moved.
+
+    ``lost_rows``/``lost_segments`` are the chaos-injection coverage ledger:
+    rows/segments a gather could NOT serve because every replica of a shard
+    holding them was unavailable — the degrade valve's accounting (samplers
+    fall back to local-frontier-only draws for those rows and flag the
+    batch)."""
 
     local_rows: int = 0        # served entirely by the vertex's home slice
     cross_rows: int = 0        # merged from >= 2 shards' segments
     remote_segments: int = 0   # segments fetched from non-home shards
+    lost_rows: int = 0         # rows with >= 1 unreachable segment
+    lost_segments: int = 0     # segments dropped (all replicas down)
 
     def reset(self) -> None:
         self.local_rows = self.cross_rows = self.remote_segments = 0
+        self.lost_rows = self.lost_segments = 0
 
 
 class ShardedGraphShard(GraphShard):
@@ -137,6 +147,27 @@ class ShardedStore(DistributedGraphStore):
         self.boundary = partition.boundary_vertices(g)
         self.gather_stats = GatherStats()
         self._assembled_cache: Dict[str, Tuple] = {}
+        # optional chaos injection: every cross-shard slice read routes
+        # through the channel (retries/failover/breaker); None = direct
+        self.channel = None
+
+    # --------------------------------------------------------------- chaos
+    def attach_channel(self, channel) -> None:
+        """Route every cross-shard slice read through a
+        :class:`repro.chaos.FaultyChannel`.  Replicas are deterministic
+        copies of the slice, so retried/failed-over reads return
+        byte-identical data; when the channel exhausts every replica the
+        affected segments are dropped and accounted as coverage loss
+        (``GatherStats.lost_rows``/``lost_segments``)."""
+        self.channel = channel
+
+    def _slice_read(self, shard_id: int, fn):
+        """One simulated RPC to ``shard_id``: direct when no channel is
+        attached, resilient (retry + failover) otherwise.  Raises
+        ``repro.chaos.ShardUnavailable`` only when every replica is down."""
+        if self.channel is None:
+            return fn()
+        return self.channel.call(shard_id, fn)
 
     # ------------------------------------------------------------- builders
     @classmethod
@@ -148,9 +179,24 @@ class ShardedStore(DistributedGraphStore):
     # ------------------------------------------------------ cross-shard path
     def remote_neighbors(self, v: int) -> np.ndarray:
         """The 'RPC': merge the row's segments from every shard holding one
-        (global-eid order — identical to the unsharded row)."""
-        segs = [(sl.shard_id,) + sl.row(v) for sl in self.slices
-                if sl.indptr[v + 1] > sl.indptr[v]]
+        (global-eid order — identical to the unsharded row).  Under an
+        attached chaos channel, a shard whose every replica is down drops
+        its segment (accounted as coverage loss) instead of raising."""
+        segs = []
+        lost = 0
+        for sl in self.slices:
+            if sl.indptr[v + 1] <= sl.indptr[v]:
+                continue
+            try:
+                nbr, eid = self._slice_read(sl.shard_id,
+                                            lambda sl=sl: sl.row(v))
+            except ShardUnavailable:
+                lost += 1
+                continue
+            segs.append((sl.shard_id, nbr, eid))
+        if lost:
+            self.gather_stats.lost_rows += 1
+            self.gather_stats.lost_segments += lost
         home = int(self.partition.vertex_home[v])
         self.gather_stats.remote_segments += sum(
             1 for sid, _, _ in segs if sid != home)
@@ -175,19 +221,34 @@ class ShardedStore(DistributedGraphStore):
         nbr_l: List[np.ndarray] = []
         eid_l: List[np.ndarray] = []
         seg_shard: List[np.ndarray] = []
+        lost_mask = np.zeros(len(vs), bool)
         for sl in self.slices:
             lo = sl.indptr[vs]
             deg = sl.indptr[vs + 1] - lo
             total = int(deg.sum())
             if not total:
                 continue
-            pos = (np.repeat(lo, deg)
-                   + np.arange(total) - np.repeat(np.cumsum(deg) - deg, deg))
-            rid = np.repeat(np.arange(len(vs)), deg)
+
+            def read(sl=sl, lo=lo, deg=deg, total=total):
+                pos = (np.repeat(lo, deg) + np.arange(total)
+                       - np.repeat(np.cumsum(deg) - deg, deg))
+                rid = np.repeat(np.arange(len(vs)), deg)
+                return rid, sl.indices[pos], sl.eids[pos]
+
+            try:
+                rid, nbr, eid = self._slice_read(sl.shard_id, read)
+            except ShardUnavailable:
+                # every replica down: drop this shard's segments and let the
+                # caller degrade (the ledger tells it which rows lost data)
+                held = deg > 0
+                lost_mask |= held
+                self.gather_stats.lost_segments += int(held.sum())
+                continue
             rows_l.append(rid)
-            nbr_l.append(sl.indices[pos])
-            eid_l.append(sl.eids[pos])
+            nbr_l.append(nbr)
+            eid_l.append(eid)
             seg_shard.append(np.full(total, sl.shard_id, np.int32))
+        self.gather_stats.lost_rows += int(lost_mask.sum())
         if not rows_l:
             cand = np.zeros((len(vs), 1), np.int32)
             return cand, np.zeros((len(vs), 1), bool), np.zeros((len(vs), 1), np.int64)

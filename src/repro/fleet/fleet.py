@@ -122,13 +122,18 @@ class ModelFleet:
     def __init__(self, tenants: Sequence[TenantSpec], *,
                  hbm_budget_bytes: int = 0, quantum: int = 32,
                  clock: Callable[[], float] = time.monotonic,
-                 start: bool = True):
+                 chaos=None, start: bool = True):
         if not tenants:
             raise ValueError("a fleet needs at least one tenant")
         names = [t.name for t in tenants]
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate tenant names: {names}")
         self.metrics = ServerMetrics()
+        # optional chaos FaultyChannel: each tenant's device step routes
+        # through it keyed by tenant index, so a FaultPlan's per-shard
+        # overrides map to per-tenant fault domains.
+        self.chaos = chaos
+        self._tenant_index = {name: i for i, name in enumerate(names)}
         # Weighted fairness requires each DRR visit's top-up (quantum ×
         # weight) to fit in one device batch: a tick can pack at most the
         # largest pad bucket's unique misses, so any surplus would bank
@@ -164,6 +169,7 @@ class ModelFleet:
         self._next_rid = 0
         self._stopping = False
         self._inflight = False
+        self._inflight_rids: set = set()   # rids packed into the live tick
         self._worker: Optional[threading.Thread] = None
         if start:
             self.start()
@@ -204,10 +210,13 @@ class ModelFleet:
         return len(t.pinned) if t.pinned is not None else 0
 
     # ------------------------------------------------------------ submit
-    def submit(self, tenant: str, ids: np.ndarray) -> ServeRequest:
+    def submit(self, tenant: str, ids: np.ndarray,
+               deadline_ms: Optional[float] = None) -> ServeRequest:
         """Route one embedding request to ``tenant``.  Admission is decided
         HERE: an over-quota request is shed (completed immediately with
-        ``shed=True`` and zero rows) and never queued."""
+        ``shed=True`` and zero rows) and never queued.  A request still
+        queued ``deadline_ms`` after submit is deadline-shed before packing
+        (never costs a tick)."""
         t = self._tenants.get(tenant)
         if t is None:
             raise ValueError(f"unknown tenant {tenant!r} "
@@ -215,6 +224,8 @@ class ModelFleet:
         ids = np.asarray(ids, np.int32).reshape(-1)
         if len(ids) == 0:
             raise ValueError("empty request")
+        if deadline_ms is not None and deadline_ms <= 0:
+            raise ValueError("deadline_ms must be positive")
         g = t.plan.store.graph
         if ids.min() < 0 or ids.max() >= g.n:
             raise ValueError(f"request ids out of range [0, {g.n})")
@@ -222,7 +233,7 @@ class ModelFleet:
             rid=-1, ids=ids,
             out=np.zeros((len(ids), t.plan.d_out), np.float32),
             t_submit=time.perf_counter(), tenant=tenant,
-            _remaining=len(ids))
+            deadline_ms=deadline_ms, _remaining=len(ids))
         with self._work:
             req.rid = self._next_rid
             self._next_rid += 1
@@ -250,7 +261,17 @@ class ModelFleet:
                 rest = (None if deadline is None
                         else deadline - time.perf_counter())
                 if rest is not None and rest <= 0:
-                    raise TimeoutError("fleet did not drain in time")
+                    depth = sum(len(t.queue)
+                                for t in self._tenants.values())
+                    pend = sorted({r.rid for t in self._tenants.values()
+                                   for r, _ in t.queue})
+                    staged = [n for n, t in self._tenants.items()
+                              if t.staged is not None]
+                    raise TimeoutError(
+                        f"fleet did not drain in time: "
+                        f"queue_depth={depth}, pending_rids={pend}, "
+                        f"inflight_rids={sorted(self._inflight_rids)}, "
+                        f"staged_deltas={staged}")
                 self._idle.wait(timeout=rest)
 
     # ------------------------------------------------------------ the loop
@@ -295,12 +316,22 @@ class ModelFleet:
                 t = self._tenants[name]
                 pack = self._pack_locked(t)
                 self._inflight = True
+                self._inflight_rids = {
+                    req.rid
+                    for slots in pack["miss_slots"].values()
+                    for req, _ in slots
+                } | {req.rid for req, _, _ in pack["hit_rows"]} \
+                  | {req.rid for req, _, _ in pack["pin_slots"]}
         try:
             if pack is not None:
-                self._serve(t, pack)
+                try:
+                    self._serve(t, pack)
+                except BaseException as exc:   # isolate: keep the loop alive
+                    self._fail_pack(t, pack, exc)
         finally:
             with self._idle:
                 self._inflight = False
+                self._inflight_rids = set()
                 committed = self._commit_staged_locked()
                 self._idle.notify_all()
         return pack is not None or committed
@@ -320,8 +351,22 @@ class ModelFleet:
         hit_rows: List[Tuple[ServeRequest, int, np.ndarray]] = []
         pin_slots: List[Tuple[ServeRequest, int, int]] = []
         packed = 0
+        now = time.perf_counter()
         while t.queue and packed < allowance and len(miss_slots) < cap:
             req, pos = t.queue.popleft()
+            if req.deadline_shed or req.error is not None:
+                continue               # later slot of an already-dead request
+            if req.expired(now) and not req.done:
+                # shed BEFORE packing: a late request never costs a tick
+                # (and never charges the DRR allowance)
+                req.deadline_shed = True
+                req.t_done = now
+                t.tm.deadline_shed += 1
+                t.tm.deadline_shed_ids += req._remaining
+                self.metrics.deadline_shed += 1
+                self.metrics.deadline_shed_ids += req._remaining
+                req._event.set()
+                continue
             vid = int(req.ids[pos])
             packed += 1
             if vid in miss_slots:          # same miss already in this pack
@@ -354,6 +399,57 @@ class ModelFleet:
                 "pin_slots": pin_slots, "degraded": degraded,
                 "stale": stale}
 
+    def _fail_pack(self, t: _Tenant, pack: Dict,
+                   exc: BaseException) -> None:
+        """Per-tick exception isolation: fail exactly the requests the dead
+        tick packed (the error re-raises from their ``result()``); other
+        tenants — and this tenant's next tick — keep serving."""
+        with self._lock:
+            self.metrics.tick_errors += 1
+            t.tm.tick_errors += 1
+            now = time.perf_counter()
+            failed: Dict[int, ServeRequest] = {}
+            for slots in pack["miss_slots"].values():
+                for req, _ in slots:
+                    failed[req.rid] = req
+            for req, _, _ in pack["hit_rows"]:
+                failed[req.rid] = req
+            for req, _, _ in pack["pin_slots"]:
+                failed[req.rid] = req
+            for req in failed.values():
+                if req.done:
+                    continue
+                req.error = exc
+                req.t_done = now
+                self.metrics.failed_requests += 1
+                req._event.set()
+
+    def _device_step(self, t: _Tenant, miss_ids: np.ndarray,
+                     degraded: bool):
+        """One chaos-wrapped device step for ``t`` (channel target = tenant
+        index).  Idempotent under channel retries — the plan froze every
+        sampling decision — and the channel's counters are diffed into both
+        the fleet and the tenant metrics."""
+        plan = t.plan
+
+        def step():
+            mb = execute(plan.request_plan(miss_ids, degraded=degraded),
+                         t.executor)
+            z = np.asarray(plan.forward(mb.device["seeds"]))[:len(miss_ids)]
+            return z, plan.shape_key(mb.device["seeds"])
+
+        if self.chaos is None:
+            return step()
+        st = self.chaos.stats
+        before = (st.retries, st.failovers, st.breaker_open)
+        try:
+            return self.chaos.call(self._tenant_index[t.spec.name], step)
+        finally:
+            for tm in (self.metrics, t.tm):
+                tm.retries += st.retries - before[0]
+                tm.failovers += st.failovers - before[1]
+                tm.breaker_open += st.breaker_open - before[2]
+
     def _serve(self, t: _Tenant, pack: Dict) -> None:
         plan = t.plan
         degraded = pack["degraded"]
@@ -362,10 +458,7 @@ class ModelFleet:
         miss_ids = np.fromiter(pack["miss_slots"].keys(), np.int32,
                                count=len(pack["miss_slots"]))
         if len(miss_ids):
-            mb = execute(plan.request_plan(miss_ids, degraded=degraded),
-                         t.executor)
-            z = np.asarray(plan.forward(mb.device["seeds"]))[:len(miss_ids)]
-            shape = plan.shape_key(mb.device["seeds"])
+            z, shape = self._device_step(t, miss_ids, degraded)
             rows_by_id = {int(v): z[i].copy()
                           for i, v in enumerate(miss_ids)}
         if pack["pin_slots"]:

@@ -1,1 +1,2 @@
-from .supervisor import FailureInjector, Supervisor, TrainResult  # noqa: F401
+from .supervisor import (CrashLoopError, FailureInjector,  # noqa: F401
+                         Supervisor, TrainResult, WorkerFailure)

@@ -29,15 +29,33 @@ class WorkerFailure(RuntimeError):
     """A node died / was preempted."""
 
 
+class CrashLoopError(RuntimeError):
+    """The worker keeps dying at the same step without making progress —
+    restarting again would burn the budget on a deterministic crash (bad
+    input batch, poisoned checkpoint), so the supervisor gives up early
+    instead of looping to ``max_restarts``."""
+
+    def __init__(self, step: int, crashes: int):
+        self.step = int(step)
+        self.crashes = int(crashes)
+        super().__init__(
+            f"crash loop: {crashes} consecutive failures at step {step} "
+            f"with no progress between restarts")
+
+
 @dataclasses.dataclass
 class FailureInjector:
-    """Deterministic failure schedule for tests: fail at given steps once."""
+    """Deterministic failure schedule for tests: fail at given steps once —
+    or on EVERY visit when ``repeat=True`` (the deterministic-crash shape
+    the crash-loop detector exists for)."""
 
     fail_at: Tuple[int, ...] = ()
+    repeat: bool = False
     _fired: set = dataclasses.field(default_factory=set)
 
     def check(self, step: int) -> None:
-        if step in self.fail_at and step not in self._fired:
+        if step in self.fail_at and (self.repeat
+                                     or step not in self._fired):
             self._fired.add(step)
             raise WorkerFailure(f"injected failure at step {step}")
 
@@ -48,14 +66,40 @@ class TrainResult:
     restarts: int
     final_step: int
     final_state: Optional[PyTree] = None
+    backoff_s: float = 0.0        # total restart backoff the run slept
 
 
 class Supervisor:
+    """Checkpoint-restart supervision with a restart budget (ISSUE 9):
+
+    * ``max_restarts`` bounds total restarts over the run (as before);
+    * ``restart_backoff`` sleeps before each restart, growing by
+      ``backoff_factor`` per consecutive no-progress failure (capped at
+      ``max_backoff``) — a flapping node does not hot-loop the restore path;
+      the default 0.0 keeps the historical behaviour and test runtimes;
+    * ``crash_loop_threshold`` raises :class:`CrashLoopError` after that
+      many consecutive failures at the same step with no progress in
+      between — a deterministic crash is surfaced instead of burning the
+      whole restart budget replaying it (None disables the detector).
+
+    ``sleep_fn`` is injectable so tests pin the backoff schedule without
+    wall-clock sleeps."""
+
     def __init__(self, ckpt: CheckpointManager, *, ckpt_every: int = 10,
-                 max_restarts: int = 3):
+                 max_restarts: int = 3, restart_backoff: float = 0.0,
+                 backoff_factor: float = 2.0, max_backoff: float = 60.0,
+                 crash_loop_threshold: Optional[int] = None,
+                 sleep_fn: Callable[[float], None] = time.sleep):
+        if crash_loop_threshold is not None and crash_loop_threshold < 1:
+            raise ValueError("crash_loop_threshold must be >= 1")
         self.ckpt = ckpt
         self.ckpt_every = ckpt_every
         self.max_restarts = max_restarts
+        self.restart_backoff = float(restart_backoff)
+        self.backoff_factor = float(backoff_factor)
+        self.max_backoff = float(max_backoff)
+        self.crash_loop_threshold = crash_loop_threshold
+        self.sleep_fn = sleep_fn
 
     def run(self, *, state: PyTree, step_fn: Callable[[PyTree, int], Tuple[PyTree, float]],
             n_steps: int, injector: Optional[FailureInjector] = None,
@@ -73,6 +117,9 @@ class Supervisor:
         restore = restore_fn or self.ckpt.restore
         losses: List[float] = []
         restarts = 0
+        backoff_total = 0.0
+        last_fail_step: Optional[int] = None
+        stalls = 0                 # consecutive failures with no progress
         step = 0
         # resume if a checkpoint exists (auto-resume contract)
         latest = self.ckpt.latest_step()
@@ -93,6 +140,20 @@ class Supervisor:
                 restarts += 1
                 if restarts > self.max_restarts:
                     raise
+                if step == last_fail_step:
+                    stalls += 1
+                else:
+                    last_fail_step = step
+                    stalls = 1
+                if (self.crash_loop_threshold is not None
+                        and stalls >= self.crash_loop_threshold):
+                    raise CrashLoopError(step, stalls)
+                if self.restart_backoff > 0.0:
+                    back = min(self.restart_backoff
+                               * self.backoff_factor ** (stalls - 1),
+                               self.max_backoff)
+                    backoff_total += back
+                    self.sleep_fn(back)
                 restore_step = self.ckpt.latest_step()
                 step, state = restore(state, restore_step)
                 if on_restore:
@@ -101,4 +162,4 @@ class Supervisor:
                 losses = losses[:step]
         self.ckpt.save(step, state)
         return TrainResult(losses=losses, restarts=restarts, final_step=step,
-                           final_state=state)
+                           final_state=state, backoff_s=backoff_total)

@@ -52,7 +52,14 @@ class ServeRequest:
     The multi-tenant fleet stamps the degradation flags: ``shed`` marks a
     quota-rejected request (completed immediately with zero rows),
     ``degraded`` marks rows produced under fanout reduction, ``stale`` marks
-    rows served from pre-delta state while a refresh was staged."""
+    rows served from pre-delta state while a refresh was staged.
+
+    Resilience fields (ISSUE 9): ``deadline_ms`` bounds how long the request
+    may wait — an expired request is shed BEFORE packing (``deadline_shed``
+    set, completed with zero rows) so a dead tick never wastes device time on
+    it; ``error`` carries a tick-thread exception that failed this request —
+    :meth:`result` re-raises it, so a poisoned batch can never leave its
+    waiters blocked forever."""
 
     rid: int
     ids: np.ndarray                     # [k] int32
@@ -63,6 +70,9 @@ class ServeRequest:
     shed: bool = False
     degraded: bool = False
     stale: bool = False
+    deadline_ms: Optional[float] = None
+    deadline_shed: bool = False
+    error: Optional[BaseException] = None
     _remaining: int = 0
     _event: threading.Event = dataclasses.field(
         default_factory=threading.Event)
@@ -77,10 +87,16 @@ class ServeRequest:
             return None
         return (self.t_done - self.t_submit) * 1e3
 
+    def expired(self, now: float) -> bool:
+        return (self.deadline_ms is not None
+                and (now - self.t_submit) * 1e3 > self.deadline_ms)
+
     def result(self, timeout: Optional[float] = None) -> np.ndarray:
         if not self._event.wait(timeout):
             raise TimeoutError(f"request {self.rid} not served within "
                                f"{timeout}s")
+        if self.error is not None:
+            raise self.error
         return self.out
 
 
@@ -112,6 +128,14 @@ class TenantMetrics:
         self.degraded_ids = 0            # miss ids served degraded
         self.stale_served = 0            # ids served while a delta was staged
         self.deltas_applied = 0
+        # resilience counters (ISSUE 9)
+        self.deadline_shed = 0           # requests shed past their deadline
+        self.deadline_shed_ids = 0
+        self.tick_errors = 0             # device ticks that raised
+        self.failed_requests = 0         # requests failed by a tick error
+        self.retries = 0                 # chaos-channel same-replica retries
+        self.failovers = 0               # chaos-channel replica switches
+        self.breaker_open = 0            # circuit-breaker open transitions
         self.queue_depth = 0             # gauge: pending slots right now
         self.queue_depth_peak = 0
         self.latencies_ms: "collections.deque[float]" = collections.deque(
@@ -171,6 +195,13 @@ class TenantMetrics:
             "degraded_ids": self.degraded_ids,
             "stale_served": self.stale_served,
             "deltas_applied": self.deltas_applied,
+            "deadline_shed": self.deadline_shed,
+            "deadline_shed_ids": self.deadline_shed_ids,
+            "tick_errors": self.tick_errors,
+            "failed_requests": self.failed_requests,
+            "retries": self.retries,
+            "failovers": self.failovers,
+            "breaker_open": self.breaker_open,
             "queue_depth": self.queue_depth,
             "queue_depth_peak": self.queue_depth_peak,
             "p50_ms": round(self.p50_ms, 3),
@@ -203,6 +234,14 @@ class ServerMetrics:
         self.bucket_steps: Dict[int, int] = collections.Counter()
         self.latencies_ms: "collections.deque[float]" = collections.deque(
             maxlen=self.LATENCY_WINDOW)
+        # resilience accounting (ISSUE 9)
+        self.deadline_shed = 0           # requests shed past their deadline
+        self.deadline_shed_ids = 0       # slots those requests still owed
+        self.tick_errors = 0             # device ticks that raised
+        self.failed_requests = 0         # requests failed by a tick error
+        self.retries = 0                 # chaos-channel same-replica retries
+        self.failovers = 0               # chaos-channel replica switches
+        self.breaker_open = 0            # circuit-breaker open transitions
         # streaming-update accounting
         self.deltas_applied = 0
         self.refreshed_vertices = 0      # frozen rows re-drawn, cumulative
@@ -284,6 +323,13 @@ class ServerMetrics:
             "bucket_steps": dict(self.bucket_steps),
             "p50_ms": round(self.p50_ms, 3),
             "p99_ms": round(self.p99_ms, 3),
+            "deadline_shed": self.deadline_shed,
+            "deadline_shed_ids": self.deadline_shed_ids,
+            "tick_errors": self.tick_errors,
+            "failed_requests": self.failed_requests,
+            "retries": self.retries,
+            "failovers": self.failovers,
+            "breaker_open": self.breaker_open,
             "deltas_applied": self.deltas_applied,
             "refreshed_vertices": self.refreshed_vertices,
             "invalidated_rows": self.invalidated_rows,
@@ -307,9 +353,14 @@ class EmbeddingServer:
 
     def __init__(self, plan: ServerPlan, *, cache_policy: str = "importance",
                  cache_capacity: int = 4096, cache_seed: int = 0,
-                 start: bool = True):
+                 chaos=None, start: bool = True):
         self.plan = plan
         self.executor = plan.executor()
+        # optional chaos FaultyChannel: the device step of every tick routes
+        # through it (target 0), so transient tick faults are absorbed by the
+        # channel's retry budget and exhaustion fails just that tick's
+        # requests — the sampling path is frozen, so a re-run is idempotent.
+        self.chaos = chaos
         g = plan.store.graph
         self.cache = CachePolicy(cache_capacity, cache_policy,
                                  scores=plan.importance, n_keys=g.n,
@@ -323,6 +374,7 @@ class EmbeddingServer:
         self._next_rid = 0
         self._stopping = False
         self._inflight = False
+        self._inflight_rids: set = set()   # rids packed into the live tick
         self._seen_shapes: set = set()
         self._worker: Optional[threading.Thread] = None
         if start:
@@ -354,18 +406,24 @@ class EmbeddingServer:
         self.stop()
 
     # ------------------------------------------------------------ submit
-    def submit(self, ids: np.ndarray) -> ServeRequest:
-        """Enqueue one embedding request; returns immediately."""
+    def submit(self, ids: np.ndarray,
+               deadline_ms: Optional[float] = None) -> ServeRequest:
+        """Enqueue one embedding request; returns immediately.  A request
+        still queued ``deadline_ms`` after submit is shed before packing
+        (``deadline_shed`` set, zero rows) instead of occupying a tick."""
         ids = np.asarray(ids, np.int32).reshape(-1)
         if len(ids) == 0:
             raise ValueError("empty request")
+        if deadline_ms is not None and deadline_ms <= 0:
+            raise ValueError("deadline_ms must be positive")
         g = self.plan.store.graph
         if ids.min() < 0 or ids.max() >= g.n:
             raise ValueError(f"request ids out of range [0, {g.n})")
         req = ServeRequest(
             rid=-1, ids=ids,
             out=np.zeros((len(ids), self.plan.d_out), np.float32),
-            t_submit=time.perf_counter(), _remaining=len(ids))
+            t_submit=time.perf_counter(), deadline_ms=deadline_ms,
+            _remaining=len(ids))
         with self._work:
             req.rid = self._next_rid
             self._next_rid += 1
@@ -375,7 +433,10 @@ class EmbeddingServer:
         return req
 
     def drain(self, timeout: Optional[float] = None) -> None:
-        """Block until every submitted request has completed."""
+        """Block until every submitted request has completed (served, shed,
+        or failed).  A TimeoutError names what is stuck — the queue depth
+        plus the pending and in-flight rids — so a hung drain is diagnosable
+        instead of a bare timeout."""
         self.start()                      # a stopped server would never drain
         deadline = None if timeout is None else time.perf_counter() + timeout
         with self._idle:
@@ -383,7 +444,12 @@ class EmbeddingServer:
                 rest = (None if deadline is None
                         else deadline - time.perf_counter())
                 if rest is not None and rest <= 0:
-                    raise TimeoutError("server did not drain in time")
+                    pend = sorted({r.rid for r, _ in self._pending})
+                    raise TimeoutError(
+                        f"server did not drain in time: "
+                        f"queue_depth={len(self._pending)}, "
+                        f"pending_rids={pend}, "
+                        f"inflight_rids={sorted(self._inflight_rids)}")
                 self._idle.wait(timeout=rest)
 
     # ------------------------------------------------------------ the loop
@@ -396,11 +462,19 @@ class EmbeddingServer:
                     return
                 batch = self._pack_locked()
                 self._inflight = True
+                self._inflight_rids = {
+                    req.rid
+                    for slots in batch["miss_slots"].values()
+                    for req, _ in slots
+                } | {req.rid for req, _, _ in batch["hit_rows"]}
             try:
                 self._serve(batch)
+            except BaseException as exc:   # isolate: never kill the loop
+                self._fail_batch(batch, exc)
             finally:
                 with self._idle:
                     self._inflight = False
+                    self._inflight_rids = set()
                     self._idle.notify_all()
 
     def _pack_locked(self) -> Dict:
@@ -410,8 +484,19 @@ class EmbeddingServer:
         cap = self.plan.buckets[-1]
         miss_slots: Dict[int, List[Tuple[ServeRequest, int]]] = {}
         hit_rows: List[Tuple[ServeRequest, int, np.ndarray]] = []
+        now = time.perf_counter()
         while self._pending and len(miss_slots) < cap:
             req, pos = self._pending.popleft()
+            if req.deadline_shed or req.error is not None:
+                continue               # later slot of an already-dead request
+            if req.expired(now) and not req.done:
+                # shed BEFORE packing: a late request never costs a tick
+                req.deadline_shed = True
+                req.t_done = now
+                self.metrics.deadline_shed += 1
+                self.metrics.deadline_shed_ids += req._remaining
+                req._event.set()
+                continue
             vid = int(req.ids[pos])
             if vid in miss_slots:          # same miss already in this pack
                 miss_slots[vid].append((req, pos))
@@ -426,6 +511,50 @@ class EmbeddingServer:
                 miss_slots[vid] = [(req, pos)]
         return {"miss_slots": miss_slots, "hit_rows": hit_rows}
 
+    def _fail_batch(self, batch: Dict, exc: BaseException) -> None:
+        """Per-tick exception isolation: fail exactly the requests the dead
+        tick touched (the error re-raises from their ``result()``), leave
+        everything else serving.  The worker loop stays alive."""
+        with self._work:
+            self.metrics.tick_errors += 1
+            now = time.perf_counter()
+            failed: Dict[int, ServeRequest] = {}
+            for slots in batch["miss_slots"].values():
+                for req, _ in slots:
+                    failed[req.rid] = req
+            for req, _, _ in batch["hit_rows"]:
+                failed[req.rid] = req
+            for req in failed.values():
+                if req.done:
+                    continue
+                req.error = exc
+                req.t_done = now
+                self.metrics.failed_requests += 1
+                req._event.set()
+
+    def _device_step(self, miss_ids: np.ndarray):
+        """One chaos-wrapped device step: execute the frozen plan + the
+        bucket forward.  Re-running it on a channel retry is idempotent (the
+        plan froze every sampling decision), and chaos counters are diffed
+        into the server metrics so resilience cost is observable."""
+        plan = self.plan
+
+        def step():
+            mb = execute(plan.request_plan(miss_ids), self.executor)
+            z = np.asarray(plan.forward(mb.device["seeds"]))[:len(miss_ids)]
+            return z, plan.shape_key(mb.device["seeds"])
+
+        if self.chaos is None:
+            return step()
+        st = self.chaos.stats
+        before = (st.retries, st.failovers, st.breaker_open)
+        try:
+            return self.chaos.call(0, step)
+        finally:
+            self.metrics.retries += st.retries - before[0]
+            self.metrics.failovers += st.failovers - before[1]
+            self.metrics.breaker_open += st.breaker_open - before[2]
+
     def _serve(self, batch: Dict) -> None:
         plan = self.plan
         touched: Dict[int, ServeRequest] = {}
@@ -433,9 +562,7 @@ class EmbeddingServer:
         miss_ids = np.fromiter(batch["miss_slots"].keys(), np.int32,
                                count=len(batch["miss_slots"]))
         if len(miss_ids):
-            mb = execute(plan.request_plan(miss_ids), self.executor)
-            z = np.asarray(plan.forward(mb.device["seeds"]))[:len(miss_ids)]
-            shape = plan.shape_key(mb.device["seeds"])
+            z, shape = self._device_step(miss_ids)
             # .copy(): a plain z[i] view would pin the whole padded [bucket,
             # d] buffer in the cache for as long as the row lives
             rows_by_id = {int(v): z[i].copy() for i, v in enumerate(miss_ids)}
