@@ -1,0 +1,216 @@
+"""Observability overhead benchmark: the telemetry layer must be free when
+off and cheap when on.
+
+Three measurement surfaces over a bench_serving-style mixed-size trace:
+
+  * **disabled overhead** — with the default ``NULL_TRACER`` every
+    instrumentation site costs one ``get_tracer()`` lookup + one
+    ``.enabled`` check (and a no-op null span where a with-block is
+    unavoidable).  Measured directly as the null-site micro-cost times a
+    generous per-request site count, expressed as a fraction of the
+    per-request disabled wall.  Gate: ≤ 1%.
+  * **enabled overhead** — the same trace served under a live
+    :class:`~repro.obs.Tracer` (median of 3 fresh servers each way).
+    Gate: enabled_wall / disabled_wall − 1 ≤ 10%.
+  * **byte equality** — the embeddings served with tracing on are
+    bit-identical to the tracing-off run (telemetry never touches RNG or
+    numerics).  Gate: hard equality.
+
+The enabled run's span buffer also feeds the per-tick stage breakdown
+table (``serve.pack`` / ``serve.gather`` / ``serve.forward`` /
+``serve.scatter`` …) printed at the end — the profiling artifact the
+tracer exists for.
+
+Writes ``BENCH_obs.json`` (full run); ``--smoke`` runs a tiny trace and
+skips the JSON so CI can exercise the gates in seconds.
+
+Run:  PYTHONPATH=src python benchmarks/bench_obs.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+_BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
+                           "BENCH_obs.json")
+
+DISABLED_GATE = 0.01          # ≤ 1% when tracing is off
+ENABLED_GATE = 0.10           # ≤ 10% with a live tracer
+# instrumentation sites a request can cross end-to-end.  Guard sites do
+# ``get_tracer()`` + ``.enabled`` and bail (submit, queue stamp, pack
+# windows, device windows, respond, close...); span sites pay a full null
+# with-span (tick, gather, forward, query, gather_rows...).  Span sites
+# run once per TICK, but we charge them per request anyway — pessimistic.
+GUARD_SITES = 12
+SPAN_SITES = 6
+
+
+def _build(n: int, fanouts, train_steps: int):
+    from repro.api import G
+    from repro.core import build_store, make_gnn, synthetic_ahg
+    from repro.core.gnn import GNNTrainer
+    from repro.serving import Traffic, compile_server
+
+    g = synthetic_ahg(n, avg_degree=6, seed=0)
+    store = build_store(g, n_parts=3)
+    spec = make_gnn("graphsage", d_in=g.vertex_attr_table.shape[1],
+                    d_hidden=32, d_out=32, fanouts=fanouts)
+    tr = GNNTrainer(store, spec, lr=0.05, seed=0)
+    tr.train(train_steps, batch_size=64)
+    traffic = Traffic.synthetic(128, mean_size=8.0, max_size=24, seed=1)
+    plan = compile_server(G(store).V().sample(fanouts[0])
+                          .sample(fanouts[1]), tr, traffic,
+                          max_buckets=3, seed=5)
+    return g, plan
+
+
+def _trace(g, n_req: int, seed: int):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, g.n, int(s)).astype(np.int32)
+            for s in rng.integers(4, 16, size=n_req)]
+
+
+def _null_site_cost_us() -> tuple:
+    """Micro-cost of the two disabled site shapes: (guard_us, span_us).
+    A guard site is ``get_tracer()`` + ``.enabled`` and bail; a span site
+    additionally enters/exits the shared null with-span."""
+    from repro.obs import get_tracer
+
+    n = 50_000
+    t0 = time.perf_counter()
+    for _ in range(n):
+        tr = get_tracer()
+        if tr.enabled:                # pragma: no cover - tracer is null
+            pass
+    guard_us = (time.perf_counter() - t0) / n * 1e6
+    t0 = time.perf_counter()
+    for _ in range(n):
+        with get_tracer().span("bench.noop"):
+            pass
+    span_us = (time.perf_counter() - t0) / n * 1e6
+    return guard_us, span_us
+
+
+def _serve_wall(plan, trace, tracer) -> float:
+    """Serve the trace on a FRESH server under ``tracer``; returns wall
+    seconds (warmup request excluded, so jit compiles are not counted)."""
+    from repro.obs import use_tracer
+    from repro.serving import EmbeddingServer
+
+    with use_tracer(tracer):
+        with EmbeddingServer(plan, cache_policy="off") as srv:
+            srv.serve_trace(trace[:1])               # warm the hot bucket
+            t0 = time.perf_counter()
+            rows = srv.serve_trace(trace)
+            dt = time.perf_counter() - t0
+    return dt, rows
+
+
+def run(smoke: bool = False) -> dict:
+    from repro.obs import (NULL_TRACER, Tracer, format_stage_table,
+                           stage_table)
+
+    try:
+        from .common import emit
+    except ImportError:           # script mode: benchmarks/ is sys.path[0]
+        from common import emit
+
+    n = 1_500 if smoke else 12_000
+    n_req = 24 if smoke else 160
+    fanouts = (4, 3)
+    reps = 3
+    g, plan = _build(n, fanouts, train_steps=2 if smoke else 8)
+    trace = _trace(g, n_req, seed=2)
+
+    # ---- disabled overhead ----------------------------------------------
+    guard_us, span_us = _null_site_cost_us()
+    base_runs = sorted(_serve_wall(plan, trace, NULL_TRACER)
+                       for _ in range(reps))
+    disabled_wall, rows_off = base_runs[len(base_runs) // 2]
+    per_req_us = disabled_wall / len(trace) * 1e6
+    site_budget_us = guard_us * GUARD_SITES + span_us * SPAN_SITES
+    disabled_frac = site_budget_us / per_req_us
+    emit("obs_disabled_site_ns", span_us * 1e3,
+         f"guard={guard_us * 1e3:.0f}ns,"
+         f"{GUARD_SITES}+{SPAN_SITES} sites = "
+         f"{disabled_frac * 100:.3f}% of a request")
+
+    # ---- enabled overhead + stage table ---------------------------------
+    on_runs = []
+    for i in range(reps):
+        tr = Tracer()
+        wall, rows_on = _serve_wall(plan, trace, tr)
+        on_runs.append((wall, rows_on, tr))
+    on_runs.sort(key=lambda r: r[0])
+    enabled_wall, rows_on, tracer = on_runs[len(on_runs) // 2]
+    enabled_frac = enabled_wall / disabled_wall - 1.0
+    emit("obs_enabled_overhead_pct", enabled_frac * 100,
+         f"disabled={disabled_wall * 1e3:.1f}ms,"
+         f"enabled={enabled_wall * 1e3:.1f}ms")
+
+    byte_equal = (len(rows_off) == len(rows_on)
+                  and all(a.tobytes() == b.tobytes()
+                          for a, b in zip(rows_off, rows_on)))
+
+    spans = tracer.spans()
+    stages = stage_table(spans, prefix="serve.")
+    table = format_stage_table(stages)
+    print(table)
+
+    record: dict = {
+        "n": n, "n_requests": n_req,
+        "disabled": {
+            "guard_site_ns": round(guard_us * 1e3, 1),
+            "span_site_ns": round(span_us * 1e3, 1),
+            "guard_sites": GUARD_SITES,
+            "span_sites": SPAN_SITES,
+            "per_request_us": round(per_req_us, 1),
+            "overhead_frac": round(disabled_frac, 6),
+            "gate": DISABLED_GATE,
+        },
+        "enabled": {
+            "disabled_wall_s": round(disabled_wall, 4),
+            "enabled_wall_s": round(enabled_wall, 4),
+            "overhead_frac": round(enabled_frac, 4),
+            "gate": ENABLED_GATE,
+            "spans": len(spans),
+        },
+        "byte_equal": bool(byte_equal),
+        "stage_table": {k: {kk: round(vv, 4) for kk, vv in v.items()}
+                        for k, v in stages.items()},
+    }
+    gates = {
+        "disabled_overhead": disabled_frac <= DISABLED_GATE,
+        "enabled_overhead": enabled_frac <= ENABLED_GATE,
+        "byte_equal": byte_equal,
+    }
+    gates["all"] = all(gates.values())
+    record["gates"] = gates
+    emit("obs_gates_pass", float(gates["all"]),
+         ",".join(k for k, v in gates.items() if not v) or "ok")
+    if not gates["all"]:
+        failing = [k for k, v in gates.items() if k != "all" and not v]
+        raise RuntimeError(f"observability gates failed: {failing}")
+
+    if not smoke:
+        with open(_BENCH_JSON, "w") as f:
+            json.dump({"obs": record}, f, indent=2)
+            f.write("\n")
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny trace, gates enforced, no JSON artifact (CI)")
+    args = ap.parse_args()
+    record = run(smoke=args.smoke)
+    print(json.dumps({"obs": record}, indent=2))
+
+
+if __name__ == "__main__":
+    main()

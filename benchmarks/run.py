@@ -8,12 +8,13 @@ def main() -> None:
     print("name,us_per_call,derived")
     from . import (bench_algorithms, bench_cache, bench_chaos,
                    bench_distributed, bench_fleet, bench_graph_build,
-                   bench_kernels, bench_operators, bench_sampling,
-                   bench_serving, bench_streaming, bench_walks)
+                   bench_kernels, bench_obs, bench_operators,
+                   bench_sampling, bench_serving, bench_streaming,
+                   bench_walks)
     for mod in (bench_graph_build, bench_cache, bench_sampling,
                 bench_walks, bench_operators, bench_kernels, bench_serving,
                 bench_fleet, bench_streaming, bench_distributed,
-                bench_chaos, bench_algorithms):
+                bench_chaos, bench_obs, bench_algorithms):
         try:
             mod.run()
         except Exception:

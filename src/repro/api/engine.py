@@ -21,6 +21,7 @@ import numpy as np
 from repro.core import operators as ops
 from repro.core.operators import MinibatchPlan, build_plan, plan_to_device
 from repro.core.sampling import SAMPLERS, skipgram_pairs
+from repro.obs import get_tracer
 
 from .plan import QueryValidationError, TraversalPlan
 
@@ -207,7 +208,24 @@ def _pad_for_role(pad: PadSpec, role: str, n_negatives: int
 def execute(plan: TraversalPlan, executor: QueryExecutor, *,
             dedup: bool = True, pad: PadSpec = "auto",
             to_device: bool = True) -> Minibatch:
-    """Run one compiled query: UPDATE → TRAVERSE → NEGATIVE → build_plan."""
+    """Run one compiled query: UPDATE → TRAVERSE → NEGATIVE → build_plan.
+
+    With a tracer installed the whole run is a ``query.execute`` span
+    (args: source kind, batch size), inside whichever serving/training span
+    made the call — store gathers and channel attempts nest under it."""
+    tracer = get_tracer()
+    if not tracer.enabled:
+        return _execute(plan, executor, dedup=dedup, pad=pad,
+                        to_device=to_device)
+    with tracer.span("query.execute", source=plan.source,
+                     batch=int(plan.batch_size or 0)):
+        return _execute(plan, executor, dedup=dedup, pad=pad,
+                        to_device=to_device)
+
+
+def _execute(plan: TraversalPlan, executor: QueryExecutor, *,
+             dedup: bool = True, pad: PadSpec = "auto",
+             to_device: bool = True) -> Minibatch:
     executor.check_compatible(plan)
     if plan.chunked:
         raise QueryValidationError(

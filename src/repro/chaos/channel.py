@@ -31,8 +31,11 @@ plan and the call sequence.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Callable, Dict, List, Optional, TypeVar
+
+from repro.obs import get_tracer
 
 from .plan import FaultDecision, FaultPlan
 
@@ -56,7 +59,12 @@ class ShardUnavailable(RuntimeError):
 @dataclasses.dataclass
 class ChannelStats:
     """Channel-level resilience accounting (deterministic; snapshot-diffed
-    by the serving layer into per-tenant metrics)."""
+    by the serving layer into per-tenant metrics).
+
+    Writers go through :meth:`bump` and readers through :meth:`snapshot`,
+    both under one internal lock, so a monitoring thread snapshotting a
+    channel under load sees a consistent copy (never a half-applied
+    multi-field update) — the ISSUE 10 snapshot-safety contract."""
 
     calls: int = 0                 # logical channel calls
     attempts: int = 0              # physical attempts (>= calls)
@@ -69,11 +77,27 @@ class ChannelStats:
     unavailable: int = 0           # calls that exhausted every replica
     injected_delay_ms: float = 0.0
 
+    def __post_init__(self) -> None:
+        # survives reset() re-running __init__ while a reader holds it
+        if not hasattr(self, "_lock"):
+            self._lock = threading.Lock()
+
+    def bump(self, **deltas) -> None:
+        """Atomically add ``field=amount`` pairs (one locked update)."""
+        with self._lock:
+            for k, v in deltas.items():
+                setattr(self, k, getattr(self, k) + v)
+
     def reset(self) -> None:
-        self.__init__()
+        with self._lock:
+            self.calls = self.attempts = self.faults = 0
+            self.retries = self.failovers = self.timeouts = 0
+            self.breaker_open = self.breaker_skips = self.unavailable = 0
+            self.injected_delay_ms = 0.0
 
     def snapshot(self) -> Dict:
-        return dataclasses.asdict(self)
+        with self._lock:
+            return dataclasses.asdict(self)
 
 
 @dataclasses.dataclass
@@ -167,7 +191,7 @@ class FaultyChannel:
         return ci
 
     def _sleep_ms(self, ms: float) -> None:
-        self.stats.injected_delay_ms += ms
+        self.stats.bump(injected_delay_ms=ms)
         if ms > 0.0 and self.time_scale > 0.0:
             self.sleep_fn(ms * 1e-3 * self.time_scale)
 
@@ -181,9 +205,25 @@ class FaultyChannel:
     def call(self, shard: int, fn: Callable[[], T]) -> T:
         """Run ``fn`` under the fault plan: retry transient faults with
         backoff, fail over across replicas, route around open breakers.
-        Raises :class:`ShardUnavailable` when the budget is exhausted."""
+        Raises :class:`ShardUnavailable` when the budget is exhausted.
+
+        With a tracer installed, the logical call is a ``channel.call``
+        span and every physical attempt a ``channel.attempt`` child (args:
+        replica, ok, fault kind), so retries and failovers show up as
+        nested spans inside whatever gather/tick span made the call."""
+        tracer = get_tracer()
+        if not tracer.enabled:
+            return self._call(shard, fn, None)
+        with tracer.span("channel.call", shard=int(shard)) as sp:
+            try:
+                return self._call(shard, fn, tracer)
+            except ShardUnavailable:
+                sp.set(unavailable=True)
+                raise
+
+    def _call(self, shard: int, fn: Callable[[], T], tracer) -> T:
         shard = int(shard)
-        self.stats.calls += 1
+        self.stats.bump(calls=1)
         health = self.health(shard)
         attempts = 0
         skipped: List[int] = []
@@ -191,39 +231,55 @@ class FaultyChannel:
         for replica in range(self.replicas):
             h = health[replica]
             if not h.routable():
-                self.stats.breaker_skips += 1
+                self.stats.bump(breaker_skips=1)
                 skipped.append(replica)
                 continue
             if attempts:           # a previous replica was exhausted
-                self.stats.failovers += 1
+                self.stats.bump(failovers=1)
+                if tracer is not None:
+                    t = tracer.clock()
+                    tracer.record("channel.failover", t, t,
+                                  parent=tracer.current(),
+                                  shard=shard, to_replica=replica)
             for attempt in range(self.max_retries):
+                t0 = tracer.clock() if tracer is not None else 0.0
                 ci = self._next_index(shard)
                 d = self.plan.decide(ci, shard, replica)
                 attempts += 1
-                self.stats.attempts += 1
+                self.stats.bump(attempts=1)
                 if d.ok and d.delay_ms <= self.timeout_ms:
                     self._sleep_ms(d.delay_ms)
                     h.record(True, d.delay_ms)
+                    if tracer is not None:
+                        tracer.record("channel.attempt", t0, tracer.clock(),
+                                      parent=tracer.current(), shard=shard,
+                                      replica=replica, ok=True)
                     return fn()
                 # fault: transient, dead, or timeout
-                self.stats.faults += 1
+                self.stats.bump(faults=1)
                 kind = d.kind
                 if d.ok:           # latency past the per-call timeout
                     kind = "timeout"
-                    self.stats.timeouts += 1
+                    self.stats.bump(timeouts=1)
                     self._sleep_ms(self.timeout_ms)
                 last_kind = kind
                 if h.record(False, min(d.delay_ms, self.timeout_ms)):
-                    self.stats.breaker_open += 1
-                if kind == "dead":
-                    break          # permanent: no point retrying this replica
-                if attempt < self.max_retries - 1:
-                    self.stats.retries += 1
+                    self.stats.bump(breaker_open=1)
+                retrying = kind != "dead" and attempt < self.max_retries - 1
+                if retrying:
+                    self.stats.bump(retries=1)
                     back = (self.backoff_base_ms
                             * self.backoff_factor ** attempt
                             * self.plan.jitter(ci, shard, attempt))
                     self._sleep_ms(back)
-        self.stats.unavailable += 1
+                if tracer is not None:
+                    tracer.record("channel.attempt", t0, tracer.clock(),
+                                  parent=tracer.current(), shard=shard,
+                                  replica=replica, ok=False, kind=kind,
+                                  retry=retrying)
+                if kind == "dead":
+                    break          # permanent: no point retrying this replica
+        self.stats.bump(unavailable=1)
         raise ShardUnavailable(
             shard, attempts,
             detail=(f"last_fault={last_kind or 'breaker'}, "

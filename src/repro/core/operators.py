@@ -306,6 +306,7 @@ def apply_layer(layer_params: Dict, h: Array, self_idx: Array,
     MXU partials and the emitted activations stay f32 end-to-end (fwd and
     bwd scatter-add) — an fp32-tolerance contract, not a bit-exact one.
     The jnp fallback path ignores the knob."""
+    from repro.obs.profile import note_kernel_launch
     child, msk = child_idx, child_msk
     if self_loop:
         child, msk = _fold_self_loop(self_idx, child_idx, child_msk)
@@ -313,6 +314,7 @@ def apply_layer(layer_params: Dict, h: Array, self_idx: Array,
         mode = kernel_mode()
         if mode != "oracle":
             from repro.kernels import ops as kops  # lazy: optional dependency
+            note_kernel_launch(aggregator, combiner, mode, engaged=True)
             w1, w2, b = KERNEL_COMBINERS[combiner](layer_params["comb"],
                                                    h.shape[-1])
             hk = h
@@ -329,6 +331,8 @@ def apply_layer(layer_params: Dict, h: Array, self_idx: Array,
                 reduction=red,
                 activation="relu" if act else "none",
                 interpret=(mode == "interpret"), out_dtype=h.dtype)
+    note_kernel_launch(aggregator, combiner,
+                       kernel_mode() if use_kernel else "jnp", engaged=False)
     h_self = h[self_idx]
     neigh = h[child]                         # [N_h, fanout(+self), D]
     h_agg = aggregate(aggregator, neigh, msk, layer_params.get("agg"))

@@ -65,6 +65,14 @@ class AccessStats:
     def remote_fraction(self) -> float:
         return self.remote_reads / self.total if self.total else 0.0
 
+    def snapshot(self) -> Dict:
+        """Uniform collector surface (``obs.MetricsRegistry``)."""
+        return {"local_reads": self.local_reads,
+                "cache_reads": self.cache_reads,
+                "remote_reads": self.remote_reads,
+                "total": self.total,
+                "remote_fraction": round(self.remote_fraction, 4)}
+
 
 class GraphShard:
     """One worker's slice of the graph (adjacency of owned vertices) plus the

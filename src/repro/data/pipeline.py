@@ -32,6 +32,15 @@ class StragglerStats:
     def hedge_rate(self) -> float:
         return self.hedged / self.tasks if self.tasks else 0.0
 
+    def reset(self) -> None:
+        self.tasks = self.hedged = self.hedge_wins = 0
+
+    def snapshot(self) -> Dict:
+        """Uniform collector surface (``obs.MetricsRegistry``)."""
+        return {"tasks": self.tasks, "hedged": self.hedged,
+                "hedge_wins": self.hedge_wins,
+                "hedge_rate": round(self.hedge_rate, 4)}
+
 
 class PrefetchIterator:
     """Background-thread prefetch of an arbitrary producer, with hedging.

@@ -33,6 +33,7 @@ import numpy as np
 
 from repro.chaos import ShardUnavailable
 from repro.core.cache import CachePlan, plan_cache
+from repro.obs import get_tracer
 from repro.core.graph import AHG
 from repro.core.partition import Partition, partition_graph
 from repro.core.storage import (DistributedGraphStore, GraphShard,
@@ -86,6 +87,10 @@ class GatherStats:
     def reset(self) -> None:
         self.local_rows = self.cross_rows = self.remote_segments = 0
         self.lost_rows = self.lost_segments = 0
+
+    def snapshot(self) -> Dict:
+        """Uniform collector surface (``obs.MetricsRegistry``)."""
+        return dataclasses.asdict(self)
 
 
 class ShardedGraphShard(GraphShard):
@@ -215,6 +220,17 @@ class ShardedStore(DistributedGraphStore):
         ``(cand, cmask, ceids)`` each ``[R, Dmax]``, slots in global CSR
         order — the executor-side primitive for boundary-vertex frontiers.
         """
+        tracer = get_tracer()
+        if not tracer.enabled:
+            return self._gather_rows(vs)
+        with tracer.span("store.gather_rows", rows=len(vs)) as sp:
+            out = self._gather_rows(vs)
+            sp.set(lost_rows=self.gather_stats.lost_rows,
+                   lost_segments=self.gather_stats.lost_segments)
+            return out
+
+    def _gather_rows(self, vs: np.ndarray
+                     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         vs = np.asarray(vs, np.int64)
         home = self.partition.vertex_home[vs]
         rows_l: List[np.ndarray] = []

@@ -38,6 +38,7 @@ import numpy as np
 
 from repro.core.gnn import GNNSpec, GNN_VARIANTS, init_gnn_params
 from repro.core.storage import DistributedGraphStore
+from repro.obs import get_tracer
 
 from .mesh_step import data_mesh, ef_init, make_mesh_step, stack_device_plans
 
@@ -145,10 +146,21 @@ class DistGNNTrainer:
         plan = self._query(bpd)
         base = _mix_seed(self.seed, step)
 
+        tracer = get_tracer()
+        # capture the caller's span BEFORE dispatching to the pool: the
+        # worker threads have empty span stacks, so per-device sample spans
+        # join the step's trace via an explicit parent handle
+        ctx = tracer.current() if tracer.enabled else None
+
         def draw(dev: int):
             ex = self._device_executor(dev)
             ex.reseed(_mix_seed(base, dev))
-            return execute(plan, ex, pad=None, to_device=False).plans["joint"]
+            if not tracer.enabled:
+                return execute(plan, ex, pad=None,
+                               to_device=False).plans["joint"]
+            with tracer.span("train.sample_dev", parent=ctx, dev=dev):
+                return execute(plan, ex, pad=None,
+                               to_device=False).plans["joint"]
 
         if d == 1:
             plans = [draw(0)]
@@ -176,11 +188,27 @@ class DistGNNTrainer:
               start_step: int = 0) -> List[float]:
         losses = []
         step_fn = self._mesh_step(batch_size // self.n_devices)
+        tracer = get_tracer()
         for t in range(start_step, start_step + steps):
-            stack = self.plans_for_step(t, batch_size)
-            self.params, self.ef, loss = step_fn(
-                self.params, self.ef, self.features, stack)
-            losses.append(float(loss[0]))
+            if not tracer.enabled:
+                stack = self.plans_for_step(t, batch_size)
+                self.params, self.ef, loss = step_fn(
+                    self.params, self.ef, self.features, stack)
+                losses.append(float(loss[0]))
+                continue
+            with tracer.span("train.step", step=t):
+                with tracer.span("train.sample", step=t,
+                                 devices=self.n_devices):
+                    stack = self.plans_for_step(t, batch_size)
+                # the fused shard_map step: forward + grads + compressed
+                # all-reduce + apply land in ONE jitted call, so the mesh
+                # span is the whole device side of the step (the physical
+                # grads/allreduce/apply split is visible in host_reference,
+                # where the phases run separately)
+                with tracer.span("train.mesh_step", step=t):
+                    self.params, self.ef, loss = step_fn(
+                        self.params, self.ef, self.features, stack)
+                    losses.append(float(loss[0]))
         return losses
 
     def train_supervised(self, steps: int, batch_size: int, ckpt_dir: str, *,
@@ -239,16 +267,23 @@ class DistGNNTrainer:
 
         params = jax.tree.map(lambda x: x[0], self.params)
         losses = []
+        tracer = get_tracer()
         for t in range(start_step, start_step + steps):
-            stack = self.plans_for_step(t, batch_size)
-            loss_sum, grad_sum = 0.0, None
-            for dev in range(d):
-                plan = jax.tree.map(lambda x: x[dev], stack)
-                loss, grads = device_grads(params, plan)
-                loss_sum += float(loss)
-                grad_sum = grads if grad_sum is None else jax.tree.map(
-                    jnp.add, grad_sum, grads)
-            grads = jax.tree.map(lambda g: g / d, grad_sum)
-            params = jax.tree.map(lambda p, g: p - self.lr * g, params, grads)
-            losses.append(loss_sum / d)
+            with tracer.span("train.step", step=t, reference=True):
+                with tracer.span("train.sample", step=t, devices=d):
+                    stack = self.plans_for_step(t, batch_size)
+                loss_sum, grad_sum = 0.0, None
+                with tracer.span("train.grads", step=t):
+                    for dev in range(d):
+                        plan = jax.tree.map(lambda x: x[dev], stack)
+                        loss, grads = device_grads(params, plan)
+                        loss_sum += float(loss)
+                        grad_sum = grads if grad_sum is None else jax.tree.map(
+                            jnp.add, grad_sum, grads)
+                with tracer.span("train.allreduce", step=t):
+                    grads = jax.tree.map(lambda g: g / d, grad_sum)
+                with tracer.span("train.apply", step=t):
+                    params = jax.tree.map(lambda p, g: p - self.lr * g,
+                                          params, grads)
+                losses.append(loss_sum / d)
         return losses

@@ -48,8 +48,10 @@ import numpy as np
 from repro.api.engine import execute
 from repro.core.cache import CachePolicy, split_budget
 from repro.core.embedding import PinnedEmbeddings
+from repro.obs import get_tracer
 from repro.serving.plan import DeltaRefresh, ServerPlan, StagedDelta
-from repro.serving.server import ServeRequest, ServerMetrics, TenantMetrics
+from repro.serving.server import (ServeRequest, ServerMetrics, TenantMetrics,
+                                  _finish_request_trace)
 
 from .quota import TokenBucket
 from .scheduler import DeficitRoundRobin
@@ -234,6 +236,11 @@ class ModelFleet:
             out=np.zeros((len(ids), t.plan.d_out), np.float32),
             t_submit=time.perf_counter(), tenant=tenant,
             deadline_ms=deadline_ms, _remaining=len(ids))
+        tracer = get_tracer()
+        if tracer.enabled:
+            # pre-allocate the request's root span; the tick thread parents
+            # phase spans onto it and _finish_request_trace closes it
+            req._trace = tracer.open()
         with self._work:
             req.rid = self._next_rid
             self._next_rid += 1
@@ -244,11 +251,19 @@ class ModelFleet:
                 req.t_done = time.perf_counter()
                 t.tm.sheds += 1
                 t.tm.shed_ids += len(ids)
+                if req._trace is not None:
+                    tracer.close(req._trace, "fleet.request", req.t_submit,
+                                 req.t_done, rid=req.rid, tenant=tenant,
+                                 shed=True)
                 req._event.set()
                 return req
             t.queue.extend((req, i) for i in range(len(ids)))
             t.tm.gauge_queue(len(t.queue))
             self._work.notify()
+        if tracer.enabled:
+            tracer.record("fleet.submit", req.t_submit, time.perf_counter(),
+                          parent=req._trace, rid=req.rid, tenant=tenant,
+                          n_ids=int(len(ids)))
         return req
 
     def drain(self, timeout: Optional[float] = None) -> None:
@@ -307,6 +322,7 @@ class ModelFleet:
         packed under the lock, served outside it, written back under the
         lock; staged delta refreshes commit at the END of the tick (work in
         flight during the refresh was served stale, by design)."""
+        tracer = get_tracer()
         t = pack = None
         with self._lock:
             backlog = {name: len(tt.queue)
@@ -314,7 +330,10 @@ class ModelFleet:
             name = self._drr.select(backlog)
             if name is not None:
                 t = self._tenants[name]
+                t_pack0 = time.perf_counter() if tracer.enabled else 0.0
                 pack = self._pack_locked(t)
+                if tracer.enabled:
+                    pack["t_pack"] = (t_pack0, time.perf_counter())
                 self._inflight = True
                 self._inflight_rids = {
                     req.rid
@@ -325,7 +344,21 @@ class ModelFleet:
         try:
             if pack is not None:
                 try:
-                    self._serve(t, pack)
+                    if tracer.enabled:
+                        # the DRR visit: which tenant won, at what allowance,
+                        # and whether this tick ran degraded
+                        with tracer.span("fleet.tick", tenant=name,
+                                         allowance=pack["allowance"],
+                                         degraded=pack["degraded"],
+                                         miss=len(pack["miss_slots"]),
+                                         hits=len(pack["hit_rows"]),
+                                         pinned=len(pack["pin_slots"])
+                                         ) as tick:
+                            tracer.record("fleet.pack", *pack["t_pack"],
+                                          parent=tick.ctx)
+                            self._serve(t, pack)
+                    else:
+                        self._serve(t, pack)
                 except BaseException as exc:   # isolate: keep the loop alive
                     self._fail_pack(t, pack, exc)
         finally:
@@ -365,8 +398,14 @@ class ModelFleet:
                 t.tm.deadline_shed_ids += req._remaining
                 self.metrics.deadline_shed += 1
                 self.metrics.deadline_shed_ids += req._remaining
+                if req._trace is not None:
+                    get_tracer().close(req._trace, "fleet.request",
+                                       req.t_submit, now, rid=req.rid,
+                                       tenant=name, deadline_shed=True)
                 req._event.set()
                 continue
+            if req._t_pack is None:
+                req._t_pack = now
             vid = int(req.ids[pos])
             packed += 1
             if vid in miss_slots:          # same miss already in this pack
@@ -397,7 +436,7 @@ class ModelFleet:
         stale = t.staged is not None or t.refreshing
         return {"miss_slots": miss_slots, "hit_rows": hit_rows,
                 "pin_slots": pin_slots, "degraded": degraded,
-                "stale": stale}
+                "stale": stale, "allowance": int(allowance)}
 
     def _fail_pack(self, t: _Tenant, pack: Dict,
                    exc: BaseException) -> None:
@@ -422,6 +461,11 @@ class ModelFleet:
                 req.error = exc
                 req.t_done = now
                 self.metrics.failed_requests += 1
+                if req._trace is not None:
+                    get_tracer().close(req._trace, "fleet.request",
+                                       req.t_submit, now, rid=req.rid,
+                                       tenant=t.spec.name,
+                                       error=type(exc).__name__)
                 req._event.set()
 
     def _device_step(self, t: _Tenant, miss_ids: np.ndarray,
@@ -433,10 +477,17 @@ class ModelFleet:
         plan = t.plan
 
         def step():
-            mb = execute(plan.request_plan(miss_ids, degraded=degraded),
-                         t.executor)
-            z = np.asarray(plan.forward(mb.device["seeds"]))[:len(miss_ids)]
-            return z, plan.shape_key(mb.device["seeds"])
+            tracer = get_tracer()
+            with tracer.span("fleet.gather", tenant=t.spec.name,
+                             miss=int(len(miss_ids)), degraded=degraded):
+                mb = execute(plan.request_plan(miss_ids, degraded=degraded),
+                             t.executor)
+            seeds = mb.device["seeds"]
+            shape = plan.shape_key(seeds)
+            with tracer.span("fleet.forward", tenant=t.spec.name,
+                             bucket=int(shape[0])):
+                z = np.asarray(plan.forward(seeds))[:len(miss_ids)]
+            return z, shape
 
         if self.chaos is None:
             return step()
@@ -452,18 +503,26 @@ class ModelFleet:
 
     def _serve(self, t: _Tenant, pack: Dict) -> None:
         plan = t.plan
+        tracer = get_tracer()
         degraded = pack["degraded"]
         rows_by_id: Dict[int, np.ndarray] = {}
         shape = None
         miss_ids = np.fromiter(pack["miss_slots"].keys(), np.int32,
                                count=len(pack["miss_slots"]))
         if len(miss_ids):
-            z, shape = self._device_step(t, miss_ids, degraded)
+            if tracer.enabled:
+                t_dev0 = time.perf_counter()
+                z, shape = self._device_step(t, miss_ids, degraded)
+                pack["t_device"] = (t_dev0, time.perf_counter())
+            else:
+                z, shape = self._device_step(t, miss_ids, degraded)
             rows_by_id = {int(v): z[i].copy()
                           for i, v in enumerate(miss_ids)}
         if pack["pin_slots"]:
             # ONE batched device gather answers every pinned hit of the tick
             pin_rows = t.pinned.gather([s for _, _, s in pack["pin_slots"]])
+        if tracer.enabled:
+            pack["t_scatter"] = time.perf_counter()
         with self._lock:
             tm = t.tm
             served = 0
@@ -471,7 +530,7 @@ class ModelFleet:
             if len(miss_ids):
                 self.metrics.ticks += 1
                 tm.ticks += 1
-                self.metrics.bucket_steps[shape[0]] += 1
+                self.metrics.note_bucket(shape[0])
                 key = (degraded, shape)
                 if key not in t.seen_shapes:
                     t.seen_shapes.add(key)
@@ -521,9 +580,16 @@ class ModelFleet:
                     req.t_done = now
                     self.metrics.completed += 1
                     tm.completed += 1
-                    self.metrics.latencies_ms.append(req.latency_ms)
-                    tm.latencies_ms.append(req.latency_ms)
+                    self.metrics.note_latency(req.latency_ms)
+                    tm.note_latency(req.latency_ms)
+                    if tracer.enabled and req._trace is not None:
+                        _finish_request_trace(tracer, req, pack, now,
+                                              prefix="fleet")
                     req._event.set()
+        if tracer.enabled:
+            tracer.record("fleet.scatter", pack["t_scatter"],
+                          time.perf_counter(), tenant=t.spec.name,
+                          rows=len(rows_by_id) + len(pack["pin_slots"]))
 
     def _commit_staged_locked(self) -> bool:
         """Install every staged delta refresh (cheap in-place writes): the
@@ -531,9 +597,11 @@ class ModelFleet:
         hop-radius invalidated rows from the tenant's host cache and pinned
         device buffer."""
         committed = False
+        tracer = get_tracer()
         for t in self._tenants.values():
             if t.staged is None:
                 continue
+            c0 = time.perf_counter() if tracer.enabled else 0.0
             refresh = t.plan.commit_delta(t.staged)
             dropped = t.cache.invalidate(refresh.invalidated)
             t.cache.rescore(t.plan.importance)
@@ -544,6 +612,10 @@ class ModelFleet:
             t.last_refresh = refresh
             t.tm.deltas_applied += 1
             self.metrics.roll_delta_epoch(refresh, dropped)
+            if tracer.enabled:
+                tracer.record("fleet.commit_delta", c0, time.perf_counter(),
+                              tenant=t.spec.name, cache_dropped=dropped,
+                              invalidated=int(len(refresh.invalidated)))
             committed = True
         return committed
 

@@ -1,0 +1,40 @@
+"""Unified telemetry for the train/serve stack (ISSUE 10).
+
+  * :mod:`~repro.obs.trace` — span tracer (nested spans, trace-id
+    propagation across the serving queue and trainer thread pool, bounded
+    ring buffer, no-op default);
+  * :mod:`~repro.obs.metrics` — typed Counter/Gauge/Histogram registry +
+    the six legacy stats classes adopted as collectors with uniform
+    ``snapshot()``/``reset()``;
+  * :mod:`~repro.obs.export` — JSON-lines metric snapshots, Prometheus
+    text, Chrome trace-event (perfetto) span dumps;
+  * :mod:`~repro.obs.profile` — per-tick / per-step stage breakdown tables
+    and the ``apply_layer`` kernel-launch census.
+
+Instrumentation contract: zero cost when disabled (the default tracer is a
+no-op and hot paths gate clock reads on ``tracer.enabled``), and no RNG or
+numeric contact — every byte-equality pin in the repo holds with tracing
+on.
+"""
+from .trace import (NULL_TRACER, NullTracer, Span, SpanContext, Tracer,
+                    get_tracer, set_tracer, use_tracer)
+from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                      get_registry, set_registry)
+from .export import (chrome_trace, metrics_jsonl, prometheus_text,
+                     read_chrome_trace, read_jsonl, write_chrome_trace,
+                     write_jsonl)
+from .profile import (format_stage_table, kernel_accounting,
+                      kernel_launch_counts, note_kernel_launch,
+                      reset_kernel_counts, stage_table, trace_summary)
+
+__all__ = [
+    "Span", "SpanContext", "Tracer", "NullTracer", "NULL_TRACER",
+    "get_tracer", "set_tracer", "use_tracer",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "get_registry", "set_registry",
+    "metrics_jsonl", "write_jsonl", "read_jsonl", "prometheus_text",
+    "chrome_trace", "write_chrome_trace", "read_chrome_trace",
+    "stage_table", "format_stage_table", "trace_summary",
+    "kernel_accounting", "note_kernel_launch", "kernel_launch_counts",
+    "reset_kernel_counts",
+]

@@ -1,0 +1,227 @@
+"""Exporters: registry snapshots → JSON-lines / Prometheus text, span
+buffers → Chrome trace-event JSON (loadable in ``ui.perfetto.dev`` or
+``chrome://tracing``).
+
+All three formats are plain text produced from the plain-dict snapshots, so
+exporting never blocks the hot paths beyond the snapshot copy itself.  The
+JSONL and Chrome formats round-trip (:func:`read_jsonl`,
+:func:`read_chrome_trace`) — pinned by tests so a dump taken today stays
+machine-readable.
+"""
+from __future__ import annotations
+
+import json
+import threading
+from typing import Any, Dict, IO, Iterable, List, Optional, Union
+
+from .trace import Span
+
+__all__ = ["metrics_jsonl", "write_jsonl", "read_jsonl",
+           "prometheus_text", "chrome_trace", "write_chrome_trace",
+           "read_chrome_trace"]
+
+
+# ---------------------------------------------------------------------------
+# JSON-lines metric snapshots
+# ---------------------------------------------------------------------------
+
+def metrics_jsonl(snapshot: Dict, *, ts: Optional[float] = None
+                  ) -> List[str]:
+    """Flatten one ``MetricsRegistry.snapshot()`` into JSONL records: one
+    line per (metric, label set) sample plus one line per collector.  The
+    optional ``ts`` stamps every line (callers pass wall time; the library
+    never reads a clock the caller didn't choose)."""
+    lines: List[str] = []
+    base: Dict[str, Any] = {} if ts is None else {"ts": ts}
+    for name, inst in snapshot.get("metrics", {}).items():
+        for series in inst["values"]:
+            lines.append(json.dumps(
+                {**base, "record": "metric", "name": name,
+                 "kind": inst["kind"], "labels": series["labels"],
+                 "value": series["value"]},
+                sort_keys=True, default=float))
+    for name, data in snapshot.get("collectors", {}).items():
+        lines.append(json.dumps(
+            {**base, "record": "collector", "name": name, "data": data},
+            sort_keys=True, default=float))
+    return lines
+
+
+def write_jsonl(path_or_file: Union[str, IO[str]], snapshot: Dict, *,
+                ts: Optional[float] = None) -> int:
+    """Write the flattened snapshot; returns the line count."""
+    lines = metrics_jsonl(snapshot, ts=ts)
+    if hasattr(path_or_file, "write"):
+        for ln in lines:
+            path_or_file.write(ln + "\n")
+    else:
+        with open(path_or_file, "w") as f:
+            for ln in lines:
+                f.write(ln + "\n")
+    return len(lines)
+
+
+def read_jsonl(path_or_file: Union[str, IO[str]]) -> Dict:
+    """Parse a JSONL dump back into ``{"metrics": {name: [sample...]},
+    "collectors": {name: data}}`` — the round-trip surface tests pin."""
+    if hasattr(path_or_file, "read"):
+        text = path_or_file.read()
+    else:
+        with open(path_or_file) as f:
+            text = f.read()
+    out: Dict[str, Dict] = {"metrics": {}, "collectors": {}}
+    for ln in text.splitlines():
+        ln = ln.strip()
+        if not ln:
+            continue
+        rec = json.loads(ln)
+        if rec.get("record") == "metric":
+            out["metrics"].setdefault(rec["name"], []).append(
+                {"kind": rec["kind"], "labels": rec["labels"],
+                 "value": rec["value"]})
+        elif rec.get("record") == "collector":
+            out["collectors"][rec["name"]] = rec["data"]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Prometheus-style text exposition
+# ---------------------------------------------------------------------------
+
+def _prom_escape(v: Any) -> str:
+    return (str(v).replace("\\", "\\\\").replace('"', '\\"')
+            .replace("\n", "\\n"))
+
+
+def _prom_labels(labels: Dict[str, str]) -> str:
+    if not labels:
+        return ""
+    inner = ",".join(f'{k}="{_prom_escape(v)}"'
+                     for k, v in sorted(labels.items()))
+    return "{" + inner + "}"
+
+
+def prometheus_text(snapshot: Dict) -> str:
+    """Render a registry snapshot in the Prometheus exposition format
+    (``# HELP`` / ``# TYPE`` headers + one sample line per label set;
+    histograms expand to ``_bucket``/``_sum``/``_count``).  Collectors are
+    flattened as untyped gauges under their registered name, numeric leaf
+    fields only."""
+    out: List[str] = []
+    for name, inst in sorted(snapshot.get("metrics", {}).items()):
+        if inst["help"]:
+            out.append(f"# HELP {name} {inst['help']}")
+        kind = inst["kind"]
+        out.append(f"# TYPE {name} {kind}")
+        for series in inst["values"]:
+            lab = series["labels"]
+            if kind == "histogram":
+                v = series["value"]
+                for le, c in sorted(v["buckets"].items(),
+                                    key=lambda kv: float(kv[0])):
+                    out.append(f"{name}_bucket"
+                               f"{_prom_labels({**lab, 'le': le})} {c}")
+                out.append(f"{name}_bucket"
+                           f"{_prom_labels({**lab, 'le': '+Inf'})} "
+                           f"{v['count']}")
+                out.append(f"{name}_sum{_prom_labels(lab)} {v['sum']}")
+                out.append(f"{name}_count{_prom_labels(lab)} {v['count']}")
+            else:
+                out.append(f"{name}{_prom_labels(lab)} {series['value']}")
+    for cname, data in sorted(snapshot.get("collectors", {}).items()):
+        base = cname.replace(".", "_").replace("-", "_")
+        for key, val in _numeric_leaves(data):
+            out.append(f"{base}_{key} {val}")
+    return "\n".join(out) + "\n"
+
+
+def _numeric_leaves(data: Any, prefix: str = "") -> List:
+    """(flat_key, number) pairs of a nested collector snapshot — nested
+    dicts join with ``_``; non-numeric leaves (lists, strings) are
+    skipped, Prometheus has no representation for them."""
+    out = []
+    if isinstance(data, dict):
+        for k, v in data.items():
+            key = f"{prefix}_{k}" if prefix else str(k)
+            key = str(key).replace(".", "_").replace("-", "_")
+            out.extend(_numeric_leaves(v, key))
+    elif isinstance(data, bool):
+        out.append((prefix, int(data)))
+    elif isinstance(data, (int, float)):
+        out.append((prefix, data))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Chrome trace events (perfetto-loadable)
+# ---------------------------------------------------------------------------
+
+_TID_LOCK = threading.Lock()
+
+
+def _thread_ids(spans: Iterable[Span]) -> Dict[str, int]:
+    names = sorted({s.thread for s in spans})
+    return {n: i + 1 for i, n in enumerate(names)}
+
+
+def chrome_trace(spans: Iterable[Span], *, pid: int = 1) -> Dict:
+    """Spans → the Chrome trace-event JSON object (``ph:"X"`` complete
+    events, microsecond timestamps).  Thread names map to stable small
+    tids with ``thread_name`` metadata records, and every event carries
+    ``trace_id``/``span_id``/``parent_id`` in ``args`` so a request's
+    end-to-end path can be filtered out of the dump."""
+    spans = list(spans)
+    tids = _thread_ids(spans)
+    events: List[Dict] = []
+    for name, tid in tids.items():
+        events.append({"ph": "M", "pid": pid, "tid": tid,
+                       "name": "thread_name", "args": {"name": name}})
+    for s in spans:
+        events.append({
+            "ph": "X", "pid": pid, "tid": tids[s.thread],
+            "name": s.name, "cat": s.name.split(".", 1)[0],
+            "ts": s.t0 * 1e6, "dur": max(s.dur, 0.0) * 1e6,
+            "args": {"trace_id": s.trace_id, "span_id": s.span_id,
+                     "parent_id": s.parent_id, **s.args}})
+    return {"traceEvents": events, "displayTimeUnit": "ms"}
+
+
+def write_chrome_trace(path_or_file: Union[str, IO[str]],
+                       spans: Iterable[Span], *, pid: int = 1) -> int:
+    """Dump spans as a perfetto-loadable trace file; returns the event
+    count (metadata included)."""
+    doc = chrome_trace(spans, pid=pid)
+    if hasattr(path_or_file, "write"):
+        json.dump(doc, path_or_file)
+    else:
+        with open(path_or_file, "w") as f:
+            json.dump(doc, f)
+    return len(doc["traceEvents"])
+
+
+def read_chrome_trace(path_or_file: Union[str, IO[str]]) -> List[Span]:
+    """Parse a Chrome trace dump back into :class:`Span` objects (the
+    round-trip surface: ``(name, trace_id, span_id, parent_id, t0, dur)``
+    survive; extra args come back in ``Span.args``)."""
+    if hasattr(path_or_file, "read"):
+        doc = json.load(path_or_file)
+    else:
+        with open(path_or_file) as f:
+            doc = json.load(f)
+    thread_names = {}
+    for ev in doc["traceEvents"]:
+        if ev.get("ph") == "M" and ev.get("name") == "thread_name":
+            thread_names[ev["tid"]] = ev["args"]["name"]
+    out: List[Span] = []
+    for ev in doc["traceEvents"]:
+        if ev.get("ph") != "X":
+            continue
+        args = dict(ev.get("args", {}))
+        trace_id = args.pop("trace_id", 0)
+        span_id = args.pop("span_id", 0)
+        parent_id = args.pop("parent_id", None)
+        t0 = ev["ts"] * 1e-6
+        out.append(Span(ev["name"], trace_id, span_id, parent_id,
+                        t0, t0 + ev.get("dur", 0.0) * 1e-6,
+                        thread_names.get(ev["tid"], str(ev["tid"])), args))
+    return out

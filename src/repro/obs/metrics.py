@@ -1,0 +1,276 @@
+"""MetricsRegistry — the one place every counter in the stack hangs off.
+
+Two kinds of citizens:
+
+  * **Typed instruments** — :class:`Counter` / :class:`Gauge` /
+    :class:`Histogram`, created through the registry
+    (``registry.counter("serve_ids_total", labels=("tenant",))``) and
+    addressed by label sets (tenant, shard, bucket, kernel mode, ...).
+    Metric names follow the repo scheme ``<layer>_<what>_<unit>``
+    (``serve_tick_wall_ms``, ``store_gather_rows_total``, ...); label keys
+    are plain identifiers.
+  * **Collectors** — the pre-existing stats objects
+    (:class:`~repro.serving.server.ServerMetrics`,
+    :class:`~repro.serving.server.TenantMetrics`,
+    :class:`~repro.chaos.channel.ChannelStats`,
+    :class:`~repro.distributed.sharded_store.GatherStats`,
+    :class:`~repro.core.storage.AccessStats`,
+    :class:`~repro.data.pipeline.StragglerStats`) adopted as-is via
+    :meth:`MetricsRegistry.register_collector`.  Each now exposes the
+    uniform ``snapshot() -> dict`` / ``reset()`` pair (ISSUE 10), so the
+    registry can pull a whole-stack snapshot without knowing any of their
+    shapes.
+
+``snapshot()`` returns plain nested dicts (JSON-ready for the exporters);
+``reset()`` zeroes instruments and every collector that supports it.  All
+registry operations are thread-safe; instrument updates take one lock per
+call — cheap enough for the per-tick/per-request paths they sit on, and
+nothing here ever runs inside a jitted function.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry",
+           "get_registry", "set_registry"]
+
+LabelKey = Tuple[Tuple[str, str], ...]
+
+
+def _label_key(labelnames: Sequence[str], labels: Dict[str, Any]) -> LabelKey:
+    if set(labels) != set(labelnames):
+        raise ValueError(f"expected labels {tuple(labelnames)}, "
+                         f"got {tuple(labels)}")
+    return tuple((k, str(labels[k])) for k in labelnames)
+
+
+class _Instrument:
+    """Shared label-set plumbing of the three instrument types."""
+
+    kind = ""
+
+    def __init__(self, name: str, help: str = "",
+                 labels: Sequence[str] = ()):
+        self.name = name
+        self.help = help
+        self.labelnames = tuple(labels)
+        self._lock = threading.Lock()
+        self._values: Dict[LabelKey, Any] = {}
+
+    def _series(self) -> List[Dict]:
+        out = []
+        for key, v in self._values.items():
+            out.append({"labels": dict(key), "value": v})
+        return out
+
+    def snapshot(self) -> Dict:
+        with self._lock:
+            return {"kind": self.kind, "help": self.help,
+                    "values": self._series()}
+
+    def reset(self) -> None:
+        with self._lock:
+            self._values.clear()
+
+
+class Counter(_Instrument):
+    """Monotonically increasing count (per label set)."""
+
+    kind = "counter"
+
+    def inc(self, amount: float = 1.0, **labels) -> None:
+        if amount < 0:
+            raise ValueError("counters only go up; use a Gauge")
+        key = _label_key(self.labelnames, labels)
+        with self._lock:
+            self._values[key] = self._values.get(key, 0) + amount
+
+    def value(self, **labels) -> float:
+        key = _label_key(self.labelnames, labels)
+        with self._lock:
+            return self._values.get(key, 0)
+
+
+class Gauge(_Instrument):
+    """Point-in-time level (queue depth, staleness, buffer occupancy)."""
+
+    kind = "gauge"
+
+    def set(self, value: float, **labels) -> None:
+        key = _label_key(self.labelnames, labels)
+        with self._lock:
+            self._values[key] = value
+
+    def inc(self, amount: float = 1.0, **labels) -> None:
+        key = _label_key(self.labelnames, labels)
+        with self._lock:
+            self._values[key] = self._values.get(key, 0) + amount
+
+    def dec(self, amount: float = 1.0, **labels) -> None:
+        self.inc(-amount, **labels)
+
+    def value(self, **labels) -> float:
+        key = _label_key(self.labelnames, labels)
+        with self._lock:
+            return self._values.get(key, 0)
+
+
+# default bucket ladder: latency-ish, ms-domain friendly
+_DEFAULT_BUCKETS = (0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 25.0, 50.0,
+                    100.0, 250.0, 500.0, 1000.0, 2500.0)
+
+
+class Histogram(_Instrument):
+    """Cumulative-bucket histogram + a bounded sample window for
+    percentiles (the same sliding-window idea as ``ServerMetrics``
+    latencies, so a long-lived process stays bounded)."""
+
+    kind = "histogram"
+    WINDOW = 2048
+
+    def __init__(self, name: str, help: str = "",
+                 labels: Sequence[str] = (),
+                 buckets: Sequence[float] = _DEFAULT_BUCKETS):
+        super().__init__(name, help, labels)
+        self.buckets = tuple(sorted(float(b) for b in buckets))
+
+    def _cell(self, key: LabelKey) -> Dict:
+        cell = self._values.get(key)
+        if cell is None:
+            cell = self._values[key] = {
+                "count": 0, "sum": 0.0,
+                "bucket_counts": [0] * (len(self.buckets) + 1),
+                "window": collections.deque(maxlen=self.WINDOW)}
+        return cell
+
+    def observe(self, value: float, **labels) -> None:
+        key = _label_key(self.labelnames, labels)
+        value = float(value)
+        with self._lock:
+            cell = self._cell(key)
+            cell["count"] += 1
+            cell["sum"] += value
+            cell["window"].append(value)
+            i = int(np.searchsorted(self.buckets, value, side="left"))
+            cell["bucket_counts"][i] += 1
+
+    @staticmethod
+    def _pcts(window: Iterable[float]) -> Dict[str, float]:
+        arr = np.asarray(list(window), np.float64)
+        if not len(arr):
+            return {"p50": 0.0, "p99": 0.0}
+        return {"p50": float(np.percentile(arr, 50)),
+                "p99": float(np.percentile(arr, 99))}
+
+    def _series(self) -> List[Dict]:
+        out = []
+        for key, cell in self._values.items():
+            cum, cumulative = 0, []
+            for c in cell["bucket_counts"][:-1]:
+                cum += c
+                cumulative.append(cum)
+            out.append({"labels": dict(key),
+                        "value": {"count": cell["count"],
+                                  "sum": cell["sum"],
+                                  "buckets": dict(zip(self.buckets,
+                                                      cumulative)),
+                                  **self._pcts(cell["window"])}})
+        return out
+
+
+class MetricsRegistry:
+    """Name → instrument map + adopted legacy collectors (module
+    docstring)."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._instruments: Dict[str, _Instrument] = {}
+        self._collectors: Dict[str, Any] = {}
+
+    # ------------------------------------------------------------ creation
+    def _get_or_make(self, cls, name: str, help: str,
+                     labels: Sequence[str], **kw) -> _Instrument:
+        with self._lock:
+            inst = self._instruments.get(name)
+            if inst is None:
+                inst = self._instruments[name] = cls(name, help, labels, **kw)
+                return inst
+        if not isinstance(inst, cls):
+            raise ValueError(f"metric {name!r} already registered as "
+                             f"{inst.kind}")
+        if inst.labelnames != tuple(labels):
+            raise ValueError(f"metric {name!r} already registered with "
+                             f"labels {inst.labelnames}")
+        return inst
+
+    def counter(self, name: str, help: str = "",
+                labels: Sequence[str] = ()) -> Counter:
+        return self._get_or_make(Counter, name, help, labels)
+
+    def gauge(self, name: str, help: str = "",
+              labels: Sequence[str] = ()) -> Gauge:
+        return self._get_or_make(Gauge, name, help, labels)
+
+    def histogram(self, name: str, help: str = "",
+                  labels: Sequence[str] = (),
+                  buckets: Sequence[float] = _DEFAULT_BUCKETS) -> Histogram:
+        return self._get_or_make(Histogram, name, help, labels,
+                                 buckets=buckets)
+
+    # ---------------------------------------------------------- collectors
+    def register_collector(self, name: str, obj: Any) -> Any:
+        """Adopt a legacy stats object: anything with ``snapshot() ->
+        dict`` (and optionally ``reset()``).  Re-registering a name
+        replaces the collector (servers restart; their metrics objects
+        move)."""
+        if not callable(getattr(obj, "snapshot", None)):
+            raise TypeError(f"collector {name!r} has no snapshot() "
+                            f"({type(obj).__name__})")
+        with self._lock:
+            self._collectors[name] = obj
+        return obj
+
+    def unregister_collector(self, name: str) -> None:
+        with self._lock:
+            self._collectors.pop(name, None)
+
+    # ------------------------------------------------------------ querying
+    def snapshot(self) -> Dict:
+        """One JSON-ready dict for the whole stack: every instrument's
+        label series + every collector's own snapshot."""
+        with self._lock:
+            instruments = dict(self._instruments)
+            collectors = dict(self._collectors)
+        return {"metrics": {n: i.snapshot() for n, i in instruments.items()},
+                "collectors": {n: c.snapshot()
+                               for n, c in collectors.items()}}
+
+    def reset(self) -> None:
+        with self._lock:
+            instruments = list(self._instruments.values())
+            collectors = list(self._collectors.values())
+        for i in instruments:
+            i.reset()
+        for c in collectors:
+            reset = getattr(c, "reset", None)
+            if callable(reset):
+                reset()
+
+
+_REGISTRY = MetricsRegistry()
+
+
+def get_registry() -> MetricsRegistry:
+    """The process-default registry (examples/benches use it; anything can
+    build private ones)."""
+    return _REGISTRY
+
+
+def set_registry(reg: MetricsRegistry) -> MetricsRegistry:
+    global _REGISTRY
+    prev, _REGISTRY = _REGISTRY, reg
+    return prev

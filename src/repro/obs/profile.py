@@ -1,0 +1,144 @@
+"""Profiling hooks: per-stage wall breakdowns from the span buffer +
+kernel-launch accounting wired through ``core.operators.apply_layer``.
+
+**Stage breakdowns** are pure post-processing over :meth:`Tracer.spans` —
+the instrumentation layer already names serving-tick phases
+(``serve.pack`` / ``serve.gather`` / ``serve.forward`` / ``serve.scatter``,
+``fleet.*`` for the multi-tenant runtime) and trainer phases
+(``train.sample`` / ``train.mesh_step``; the host reference splits further
+into ``train.grads`` / ``train.allreduce`` / ``train.apply`` where the
+phases physically exist outside the fused jit).  :func:`stage_table`
+aggregates whatever subset is present, so the same function renders the
+serving per-tick table and the trainer per-step table.
+
+**Kernel-launch accounting** counts ``apply_layer``'s dispatch decisions per
+(aggregator, combiner, mode, engaged) key.  ``apply_layer`` runs at jit
+TRACE time, so each count is one kernel launch *embedded in a compiled
+executable* — the per-compilation lowering census (how many hops went
+Pallas vs jnp fallback, and in which mode), not a per-step runtime count.
+Disabled by default: the hook is a single module-bool check, nothing else,
+so the jit-trace cost is unmeasurable and the compiled artifact is
+untouched either way.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Iterable, List, Optional, Sequence
+
+import numpy as np
+
+from .trace import Span, Tracer
+
+__all__ = ["stage_table", "format_stage_table", "trace_summary",
+           "kernel_accounting", "note_kernel_launch",
+           "kernel_launch_counts", "reset_kernel_counts"]
+
+
+# ---------------------------------------------------------------------------
+# Stage breakdown tables
+# ---------------------------------------------------------------------------
+
+def stage_table(spans: Iterable[Span], *,
+                stages: Optional[Sequence[str]] = None,
+                prefix: Optional[str] = None) -> Dict[str, Dict]:
+    """Aggregate spans by name into ``{stage: {count, total_ms, mean_ms,
+    p50_ms, max_ms, frac}}``.  ``frac`` is each stage's share of the summed
+    wall across the selected stages — the attribution column ("is a slow
+    tick pack or gather or forward?").  Select by exact ``stages`` list or
+    by name ``prefix`` (default: everything)."""
+    groups: Dict[str, List[float]] = {}
+    for s in spans:
+        if stages is not None and s.name not in stages:
+            continue
+        if prefix is not None and not s.name.startswith(prefix):
+            continue
+        groups.setdefault(s.name, []).append(s.dur_ms)
+    total = sum(sum(v) for v in groups.values())
+    out: Dict[str, Dict] = {}
+    for name in sorted(groups):
+        durs = np.asarray(groups[name], np.float64)
+        out[name] = {
+            "count": int(len(durs)),
+            "total_ms": round(float(durs.sum()), 3),
+            "mean_ms": round(float(durs.mean()), 4),
+            "p50_ms": round(float(np.percentile(durs, 50)), 4),
+            "max_ms": round(float(durs.max()), 4),
+            "frac": round(float(durs.sum() / total), 4) if total else 0.0,
+        }
+    return out
+
+
+def format_stage_table(table: Dict[str, Dict]) -> str:
+    """Fixed-width text rendering (benches/examples print this)."""
+    hdr = (f"{'stage':<24} {'count':>7} {'total_ms':>10} {'mean_ms':>9} "
+           f"{'p50_ms':>9} {'max_ms':>9} {'frac':>6}")
+    lines = [hdr, "-" * len(hdr)]
+    for name, row in table.items():
+        lines.append(f"{name:<24} {row['count']:>7} {row['total_ms']:>10} "
+                     f"{row['mean_ms']:>9} {row['p50_ms']:>9} "
+                     f"{row['max_ms']:>9} {row['frac']:>6}")
+    return "\n".join(lines)
+
+
+def trace_summary(tracer: Tracer, trace_id: int) -> List[Dict]:
+    """One trace's spans as ordered plain dicts (depth-first by parent
+    links, ties by start time) — the shape tests and demos assert against
+    for the end-to-end request story."""
+    spans = sorted(tracer.trace(trace_id), key=lambda s: (s.t0, s.span_id))
+    by_parent: Dict[Optional[int], List[Span]] = {}
+    for s in spans:
+        by_parent.setdefault(s.parent_id, []).append(s)
+    out: List[Dict] = []
+
+    def walk(parent: Optional[int], depth: int) -> None:
+        for s in by_parent.get(parent, []):
+            out.append({"name": s.name, "depth": depth, "t0": s.t0,
+                        "dur_ms": round(s.dur_ms, 4), "args": s.args})
+            walk(s.span_id, depth + 1)
+
+    walk(None, 0)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Kernel-launch accounting (wired through core.operators.apply_layer)
+# ---------------------------------------------------------------------------
+
+_KERNEL_ENABLED = False
+_KERNEL_LOCK = threading.Lock()
+_KERNEL_COUNTS: Dict[tuple, int] = {}
+
+
+def kernel_accounting(on: bool = True) -> bool:
+    """Enable/disable the ``apply_layer`` dispatch census; returns the
+    previous state so callers can scope it."""
+    global _KERNEL_ENABLED
+    prev, _KERNEL_ENABLED = _KERNEL_ENABLED, bool(on)
+    return prev
+
+
+def note_kernel_launch(aggregator: str, combiner: str, mode: str,
+                       engaged: bool) -> None:
+    """Called by ``apply_layer`` per dispatched hop (trace time).  No-op
+    unless :func:`kernel_accounting` turned the census on."""
+    if not _KERNEL_ENABLED:
+        return
+    key = (aggregator, combiner, mode, bool(engaged))
+    with _KERNEL_LOCK:
+        _KERNEL_COUNTS[key] = _KERNEL_COUNTS.get(key, 0) + 1
+
+
+def kernel_launch_counts() -> List[Dict]:
+    """The census as label dicts: ``[{aggregator, combiner, mode,
+    kernel_engaged, launches}]`` — ready for a registry counter or a JSONL
+    line."""
+    with _KERNEL_LOCK:
+        items = sorted(_KERNEL_COUNTS.items())
+    return [{"aggregator": a, "combiner": c, "mode": m,
+             "kernel_engaged": e, "launches": n}
+            for (a, c, m, e), n in items]
+
+
+def reset_kernel_counts() -> None:
+    with _KERNEL_LOCK:
+        _KERNEL_COUNTS.clear()

@@ -1,0 +1,307 @@
+"""Span-based tracer — the cross-layer timing backbone (ISSUE 10).
+
+One :class:`Tracer` collects **spans**: named, timed intervals with a
+``trace_id`` that groups everything one logical operation touched (a serving
+request from submit to respond, a training step from sampling to the mesh
+step) and a ``parent_id`` that nests them.  Three properties the rest of the
+stack depends on:
+
+  * **Zero cost when disabled.**  The module-level default is
+    :data:`NULL_TRACER`: ``span()`` hands back one shared no-op context
+    manager, ``record()`` returns immediately, and ``enabled`` is False so
+    hot paths can skip even their clock reads.  Instrumented code never
+    branches on "is tracing configured" — it just talks to whatever
+    :func:`get_tracer` returns.
+  * **No RNG, no numerics.**  The tracer reads a clock and appends to a
+    bounded deque.  Trace and span ids come from a plain counter — never
+    from a random source — so enabling tracing cannot perturb a sampler
+    stream.  Every byte-equality contract in the repo holds with tracing on
+    (pinned in ``tests/test_obs.py``).
+  * **Deterministic under test.**  ``Tracer(clock=...)`` injects the time
+    source; tests drive a fake clock and assert exact span timings.
+
+Cross-thread propagation: nesting is tracked per-thread (a thread-local
+span stack), and a worker thread joins a caller's trace by passing
+``parent=ctx`` where ``ctx`` is a :class:`SpanContext` captured on the
+submitting thread (``tracer.current()`` or an :meth:`Tracer.open` handle
+stamped on the request object).  That is how a serving request's trace id
+follows it from ``submit`` through the queue into the tick thread.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
+
+__all__ = ["Span", "SpanContext", "Tracer", "NullTracer", "NULL_TRACER",
+           "get_tracer", "set_tracer", "use_tracer"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SpanContext:
+    """The propagatable identity of a live (or pre-allocated) span."""
+
+    trace_id: int
+    span_id: int
+
+
+@dataclasses.dataclass
+class Span:
+    """One finished span (what the ring buffer holds and exporters read).
+    Times are in the tracer clock's domain (seconds, ``perf_counter`` by
+    default)."""
+
+    name: str
+    trace_id: int
+    span_id: int
+    parent_id: Optional[int]
+    t0: float
+    t1: float
+    thread: str
+    args: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    @property
+    def dur(self) -> float:
+        return self.t1 - self.t0
+
+    @property
+    def dur_ms(self) -> float:
+        return (self.t1 - self.t0) * 1e3
+
+
+class _NullSpan:
+    """The shared no-op context manager the null tracer hands out."""
+
+    __slots__ = ()
+
+    def __enter__(self) -> "_NullSpan":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        pass
+
+    def set(self, **args) -> "_NullSpan":
+        return self
+
+    ctx = None
+
+
+_NULL_SPAN = _NullSpan()
+
+
+class NullTracer:
+    """The disabled tracer: every operation is a no-op.  ``enabled`` is
+    False so hot paths can skip clock reads and argument assembly entirely
+    (``if tracer.enabled: ...``)."""
+
+    enabled = False
+
+    def span(self, name: str, *, parent: Optional[SpanContext] = None,
+             **args) -> _NullSpan:
+        return _NULL_SPAN
+
+    def record(self, name: str, t0: float, t1: float, *,
+               parent: Optional[SpanContext] = None,
+               trace: Optional[int] = None, **args) -> None:
+        return None
+
+    def open(self, name: str = "") -> Optional[SpanContext]:
+        return None
+
+    def close(self, ctx, name: str, t0: float, t1: float, **args) -> None:
+        return None
+
+    def current(self) -> Optional[SpanContext]:
+        return None
+
+    def spans(self) -> List[Span]:
+        return []
+
+    def clear(self) -> None:
+        return None
+
+
+NULL_TRACER = NullTracer()
+
+
+class _LiveSpan:
+    """Context manager for one in-flight span on the owning thread."""
+
+    __slots__ = ("_tracer", "name", "ctx", "parent_id", "t0", "args")
+
+    def __init__(self, tracer: "Tracer", name: str,
+                 ctx: SpanContext, parent_id: Optional[int],
+                 args: Dict[str, Any]):
+        self._tracer = tracer
+        self.name = name
+        self.ctx = ctx
+        self.parent_id = parent_id
+        self.args = args
+        self.t0 = 0.0
+
+    def set(self, **args) -> "_LiveSpan":
+        """Attach/overwrite span attributes mid-flight."""
+        self.args.update(args)
+        return self
+
+    def __enter__(self) -> "_LiveSpan":
+        tr = self._tracer
+        tr._stack().append(self.ctx)
+        self.t0 = tr.clock()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        tr = self._tracer
+        t1 = tr.clock()
+        tr._stack().pop()
+        tr._emit(Span(self.name, self.ctx.trace_id, self.ctx.span_id,
+                      self.parent_id, self.t0, t1,
+                      threading.current_thread().name, self.args))
+
+
+class Tracer:
+    """The enabled tracer (see module docstring).
+
+    ``max_spans`` bounds the ring buffer — old spans fall off the back, so
+    a long-lived server traces forever in O(1) memory.  ``clock`` is the
+    injectable time source (seconds)."""
+
+    enabled = True
+
+    def __init__(self, *, clock: Callable[[], float] = time.perf_counter,
+                 max_spans: int = 65536):
+        self.clock = clock
+        self._lock = threading.Lock()
+        self._spans: "collections.deque[Span]" = collections.deque(
+            maxlen=int(max_spans))
+        self._next_trace = 0
+        self._next_span = 0
+        self._tls = threading.local()
+
+    # ------------------------------------------------------------- plumbing
+    def _stack(self) -> List[SpanContext]:
+        st = getattr(self._tls, "stack", None)
+        if st is None:
+            st = self._tls.stack = []
+        return st
+
+    def _ids(self, parent: Optional[SpanContext]
+             ) -> Tuple[SpanContext, Optional[int]]:
+        """Allocate (ctx, parent_id): inherit the parent's trace (explicit
+        parent wins over the thread-local stack); a parentless span roots a
+        fresh trace."""
+        if parent is None:
+            st = self._stack()
+            parent = st[-1] if st else None
+        with self._lock:
+            self._next_span += 1
+            sid = self._next_span
+            if parent is None:
+                self._next_trace += 1
+                return SpanContext(self._next_trace, sid), None
+        return SpanContext(parent.trace_id, sid), parent.span_id
+
+    def _emit(self, span: Span) -> None:
+        with self._lock:
+            self._spans.append(span)
+
+    def current(self) -> Optional[SpanContext]:
+        """The innermost live span on THIS thread (None outside any span)."""
+        st = self._stack()
+        return st[-1] if st else None
+
+    # ------------------------------------------------------------- spanning
+    def span(self, name: str, *, parent: Optional[SpanContext] = None,
+             **args) -> _LiveSpan:
+        """Context manager for a nested span.  Parentage: explicit
+        ``parent`` > innermost live span on this thread > new root trace."""
+        ctx, pid = self._ids(parent)
+        return _LiveSpan(self, name, ctx, pid, args)
+
+    def record(self, name: str, t0: float, t1: float, *,
+               parent: Optional[SpanContext] = None,
+               trace: Optional[int] = None, **args) -> SpanContext:
+        """Emit a span with explicit timestamps (no thread-local nesting) —
+        for spans whose window was measured elsewhere, e.g. per-request
+        phase spans reconstructed at completion time on the tick thread."""
+        if trace is not None and parent is None:
+            with self._lock:
+                self._next_span += 1
+                ctx = SpanContext(int(trace), self._next_span)
+            pid = None
+        else:
+            ctx, pid = self._ids(parent)
+        self._emit(Span(name, ctx.trace_id, ctx.span_id, pid,
+                        float(t0), float(t1),
+                        threading.current_thread().name, args))
+        return ctx
+
+    def open(self, name: str = "") -> SpanContext:
+        """Pre-allocate a span identity WITHOUT emitting anything — the
+        handle a request object carries across threads so children recorded
+        later can parent onto it.  Pair with :meth:`close`."""
+        return self._ids(None)[0]
+
+    def close(self, ctx: SpanContext, name: str, t0: float, t1: float,
+              **args) -> None:
+        """Emit the span pre-allocated by :meth:`open` (the root of a
+        request trace, closed when the request completes)."""
+        if ctx is None:
+            return
+        self._emit(Span(name, ctx.trace_id, ctx.span_id, None,
+                        float(t0), float(t1),
+                        threading.current_thread().name, args))
+
+    # ------------------------------------------------------------- querying
+    def spans(self) -> List[Span]:
+        """A consistent snapshot copy of the ring buffer."""
+        with self._lock:
+            return list(self._spans)
+
+    def trace(self, trace_id: int) -> List[Span]:
+        """All buffered spans of one trace, in emission order."""
+        return [s for s in self.spans() if s.trace_id == trace_id]
+
+    def clear(self) -> None:
+        with self._lock:
+            self._spans.clear()
+
+
+# ---------------------------------------------------------------------------
+# The process-wide tracer slot
+# ---------------------------------------------------------------------------
+
+_TRACER = NULL_TRACER
+
+
+def get_tracer():
+    """The installed tracer (the no-op :data:`NULL_TRACER` by default).
+    Instrumented components look this up at call time, so installing a
+    tracer mid-run takes effect immediately."""
+    return _TRACER
+
+
+def set_tracer(tracer) -> Any:
+    """Install ``tracer`` process-wide; returns the previous one (pass
+    ``None`` to restore the no-op default)."""
+    global _TRACER
+    prev = _TRACER
+    _TRACER = tracer if tracer is not None else NULL_TRACER
+    return prev
+
+
+class use_tracer:
+    """``with use_tracer(t): ...`` — scoped install/restore."""
+
+    def __init__(self, tracer):
+        self.tracer = tracer
+        self._prev = None
+
+    def __enter__(self):
+        self._prev = set_tracer(self.tracer)
+        return self.tracer
+
+    def __exit__(self, *exc) -> None:
+        set_tracer(self._prev)

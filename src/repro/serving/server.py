@@ -36,6 +36,7 @@ import numpy as np
 
 from repro.api.engine import execute
 from repro.core.cache import CachePolicy
+from repro.obs import get_tracer
 
 from .plan import ServerPlan
 
@@ -76,6 +77,11 @@ class ServeRequest:
     _remaining: int = 0
     _event: threading.Event = dataclasses.field(
         default_factory=threading.Event)
+    # tracing (ISSUE 10): the pre-allocated root span identity stamped at
+    # submit — the trace id that follows this request across the queue into
+    # the tick thread — and the first-packed timestamp for the queue span
+    _trace: Optional[object] = None
+    _t_pack: Optional[float] = None
 
     @property
     def done(self) -> bool:
@@ -113,6 +119,9 @@ class TenantMetrics:
     LATENCY_WINDOW = 1024
 
     def __init__(self, name: str):
+        # survives reset() re-running __init__ while a reader holds it
+        if not hasattr(self, "_mlock"):
+            self._mlock = threading.RLock()
         self.name = name
         self.requests = 0
         self.completed = 0
@@ -144,7 +153,15 @@ class TenantMetrics:
     def reset(self) -> None:
         """Zero every counter and the latency window (keeps the name):
         measurement warmups call this so steady state starts clean."""
-        self.__init__(self.name)
+        with self._mlock:
+            self.__init__(self.name)
+
+    def note_latency(self, ms: float) -> None:
+        """Locked append into the sliding latency window (the deque itself
+        is thread-safe, but snapshot() must see it consistently with the
+        completion counters)."""
+        with self._mlock:
+            self.latencies_ms.append(ms)
 
     def note_hit(self, *, device: bool = False) -> None:
         if device:
@@ -166,9 +183,11 @@ class TenantMetrics:
         return hits / tot if tot else 0.0
 
     def _pct(self, q: float) -> float:
-        if not self.latencies_ms:
-            return 0.0
-        return float(np.percentile(np.asarray(list(self.latencies_ms)), q))
+        with self._mlock:
+            if not self.latencies_ms:
+                return 0.0
+            window = np.asarray(list(self.latencies_ms))
+        return float(np.percentile(window, q))
 
     @property
     def p50_ms(self) -> float:
@@ -179,6 +198,10 @@ class TenantMetrics:
         return self._pct(99)
 
     def snapshot(self) -> Dict:
+        with self._mlock:
+            return self._snapshot_locked()
+
+    def _snapshot_locked(self) -> Dict:
         return {
             "requests": self.requests,
             "completed": self.completed,
@@ -224,6 +247,9 @@ class ServerMetrics:
     DELTA_WINDOW = 4096           # delta-epoch records kept (sliding)
 
     def __init__(self):
+        # survives reset() re-running __init__ while a reader holds it
+        if not hasattr(self, "_mlock"):
+            self._mlock = threading.RLock()
         self.requests = 0
         self.completed = 0
         self.ids_served = 0
@@ -255,12 +281,31 @@ class ServerMetrics:
         # EmbeddingServer)
         self.tenants: Dict[str, TenantMetrics] = {}
 
+    def reset(self) -> None:
+        """Zero every counter, keeping tenant blocks alive (the fleet holds
+        direct references to them) but zeroing each in place."""
+        with self._mlock:
+            tenants = self.tenants
+            self.__init__()
+            self.tenants = tenants
+            for tm in tenants.values():
+                tm.reset()
+
     def tenant(self, name: str) -> TenantMetrics:
         """The (created-on-first-use) per-tenant counter block."""
-        tm = self.tenants.get(name)
-        if tm is None:
-            tm = self.tenants[name] = TenantMetrics(name)
-        return tm
+        with self._mlock:
+            tm = self.tenants.get(name)
+            if tm is None:
+                tm = self.tenants[name] = TenantMetrics(name)
+            return tm
+
+    def note_latency(self, ms: float) -> None:
+        with self._mlock:
+            self.latencies_ms.append(ms)
+
+    def note_bucket(self, bucket: int) -> None:
+        with self._mlock:
+            self.bucket_steps[bucket] += 1
 
     def note_hit(self) -> None:
         self.cache_hits += 1
@@ -273,6 +318,10 @@ class ServerMetrics:
     def roll_delta_epoch(self, refresh, dropped: int) -> None:
         """Close the current delta epoch: record its hit rate + what the
         delta refreshed, then reset the per-epoch counters."""
+        with self._mlock:
+            self._roll_delta_epoch_locked(refresh, dropped)
+
+    def _roll_delta_epoch_locked(self, refresh, dropped: int) -> None:
         self.deltas_applied += 1
         self.refreshed_vertices += refresh.refreshed_vertices
         self.invalidated_rows += len(refresh.invalidated)
@@ -298,9 +347,11 @@ class ServerMetrics:
         return self.cache_hits / tot if tot else 0.0
 
     def _pct(self, q: float) -> float:
-        if not self.latencies_ms:
-            return 0.0
-        return float(np.percentile(np.asarray(list(self.latencies_ms)), q))
+        with self._mlock:
+            if not self.latencies_ms:
+                return 0.0
+            window = np.asarray(list(self.latencies_ms))
+        return float(np.percentile(window, q))
 
     @property
     def p50_ms(self) -> float:
@@ -311,6 +362,10 @@ class ServerMetrics:
         return self._pct(99)
 
     def snapshot(self) -> Dict:
+        with self._mlock:
+            return self._snapshot_locked()
+
+    def _snapshot_locked(self) -> Dict:
         return {
             "requests": self.requests,
             "completed": self.completed,
@@ -339,6 +394,33 @@ class ServerMetrics:
             "tenants": {name: tm.snapshot()
                         for name, tm in self.tenants.items()},
         }
+
+
+def _finish_request_trace(tracer, req: ServeRequest, batch: Dict,
+                          now: float, prefix: str = "serve") -> None:
+    """Emit the completed request's phase spans under its root context.
+
+    The windows were measured where the phases ran (queue on the submit
+    thread, pack/forward/respond on the tick thread) and stamped on the
+    request/batch; at completion they are reconstructed as children of the
+    ``tracer.open()`` root so the whole submit→queue→pack→forward→respond
+    story shares one stable trace id.  Shared by :class:`EmbeddingServer`
+    (``serve.*``) and the multi-tenant fleet (``fleet.*``)."""
+    ctx = req._trace
+    if req._t_pack is not None:
+        tracer.record(f"{prefix}.queue", req.t_submit, req._t_pack,
+                      parent=ctx)
+    t_pack = batch.get("t_pack")
+    if t_pack is not None:
+        tracer.record(f"{prefix}.pack", t_pack[0], t_pack[1], parent=ctx)
+    t_dev = batch.get("t_device")
+    if t_dev is not None:
+        tracer.record(f"{prefix}.forward", t_dev[0], t_dev[1], parent=ctx)
+    t_resp0 = batch.get("t_scatter", now)
+    tracer.record(f"{prefix}.respond", t_resp0, now, parent=ctx)
+    tracer.close(ctx, f"{prefix}.request", req.t_submit, now,
+                 rid=req.rid, n_ids=int(len(req.ids)), tenant=req.tenant,
+                 degraded=req.degraded, stale=req.stale)
 
 
 class EmbeddingServer:
@@ -424,12 +506,21 @@ class EmbeddingServer:
             out=np.zeros((len(ids), self.plan.d_out), np.float32),
             t_submit=time.perf_counter(), deadline_ms=deadline_ms,
             _remaining=len(ids))
+        tracer = get_tracer()
+        if tracer.enabled:
+            # pre-allocate the request's root span; the tick thread parents
+            # phase spans onto it and _finish_request_trace closes it
+            req._trace = tracer.open()
         with self._work:
             req.rid = self._next_rid
             self._next_rid += 1
             self.metrics.requests += 1
             self._pending.extend((req, i) for i in range(len(ids)))
             self._work.notify()
+        if tracer.enabled:
+            tracer.record("serve.submit", req.t_submit,
+                          time.perf_counter(), parent=req._trace,
+                          rid=req.rid, n_ids=int(len(ids)))
         return req
 
     def drain(self, timeout: Optional[float] = None) -> None:
@@ -455,12 +546,16 @@ class EmbeddingServer:
     # ------------------------------------------------------------ the loop
     def _loop(self) -> None:
         while True:
+            tracer = get_tracer()
             with self._work:
                 while not self._pending and not self._stopping:
                     self._work.wait()
                 if self._stopping and not self._pending:
                     return
+                t_pack0 = time.perf_counter() if tracer.enabled else 0.0
                 batch = self._pack_locked()
+                if tracer.enabled:
+                    batch["t_pack"] = (t_pack0, time.perf_counter())
                 self._inflight = True
                 self._inflight_rids = {
                     req.rid
@@ -468,7 +563,15 @@ class EmbeddingServer:
                     for req, _ in slots
                 } | {req.rid for req, _, _ in batch["hit_rows"]}
             try:
-                self._serve(batch)
+                if tracer.enabled:
+                    with tracer.span("serve.tick",
+                                     miss=len(batch["miss_slots"]),
+                                     hits=len(batch["hit_rows"])) as tick:
+                        tracer.record("serve.pack", *batch["t_pack"],
+                                      parent=tick.ctx)
+                        self._serve(batch)
+                else:
+                    self._serve(batch)
             except BaseException as exc:   # isolate: never kill the loop
                 self._fail_batch(batch, exc)
             finally:
@@ -495,8 +598,14 @@ class EmbeddingServer:
                 req.t_done = now
                 self.metrics.deadline_shed += 1
                 self.metrics.deadline_shed_ids += req._remaining
+                if req._trace is not None:
+                    get_tracer().close(req._trace, "serve.request",
+                                       req.t_submit, now, rid=req.rid,
+                                       deadline_shed=True)
                 req._event.set()
                 continue
+            if req._t_pack is None:
+                req._t_pack = now
             vid = int(req.ids[pos])
             if vid in miss_slots:          # same miss already in this pack
                 miss_slots[vid].append((req, pos))
@@ -530,6 +639,10 @@ class EmbeddingServer:
                 req.error = exc
                 req.t_done = now
                 self.metrics.failed_requests += 1
+                if req._trace is not None:
+                    get_tracer().close(req._trace, "serve.request",
+                                       req.t_submit, now, rid=req.rid,
+                                       error=type(exc).__name__)
                 req._event.set()
 
     def _device_step(self, miss_ids: np.ndarray):
@@ -540,9 +653,14 @@ class EmbeddingServer:
         plan = self.plan
 
         def step():
-            mb = execute(plan.request_plan(miss_ids), self.executor)
-            z = np.asarray(plan.forward(mb.device["seeds"]))[:len(miss_ids)]
-            return z, plan.shape_key(mb.device["seeds"])
+            tracer = get_tracer()
+            with tracer.span("serve.gather", miss=int(len(miss_ids))):
+                mb = execute(plan.request_plan(miss_ids), self.executor)
+            seeds = mb.device["seeds"]
+            shape = plan.shape_key(seeds)
+            with tracer.span("serve.forward", bucket=int(shape[0])):
+                z = np.asarray(plan.forward(seeds))[:len(miss_ids)]
+            return z, shape
 
         if self.chaos is None:
             return step()
@@ -557,19 +675,27 @@ class EmbeddingServer:
 
     def _serve(self, batch: Dict) -> None:
         plan = self.plan
+        tracer = get_tracer()
         touched: Dict[int, ServeRequest] = {}
         rows_by_id: Dict[int, np.ndarray] = {}
         miss_ids = np.fromiter(batch["miss_slots"].keys(), np.int32,
                                count=len(batch["miss_slots"]))
         if len(miss_ids):
-            z, shape = self._device_step(miss_ids)
+            if tracer.enabled:
+                t_dev0 = time.perf_counter()
+                z, shape = self._device_step(miss_ids)
+                batch["t_device"] = (t_dev0, time.perf_counter())
+            else:
+                z, shape = self._device_step(miss_ids)
             # .copy(): a plain z[i] view would pin the whole padded [bucket,
             # d] buffer in the cache for as long as the row lives
             rows_by_id = {int(v): z[i].copy() for i, v in enumerate(miss_ids)}
+        if tracer.enabled:
+            batch["t_scatter"] = time.perf_counter()
         with self._work:
             if len(miss_ids):
                 self.metrics.ticks += 1
-                self.metrics.bucket_steps[shape[0]] += 1
+                self.metrics.note_bucket(shape[0])
                 if shape not in self._seen_shapes:
                     self._seen_shapes.add(shape)
                     self.metrics.recompiles += 1
@@ -590,8 +716,13 @@ class EmbeddingServer:
                 if req._remaining == 0 and not req.done:
                     req.t_done = now
                     self.metrics.completed += 1
-                    self.metrics.latencies_ms.append(req.latency_ms)
+                    self.metrics.note_latency(req.latency_ms)
+                    if tracer.enabled and req._trace is not None:
+                        _finish_request_trace(tracer, req, batch, now)
                     req._event.set()
+        if tracer.enabled:
+            tracer.record("serve.scatter", batch["t_scatter"],
+                          time.perf_counter(), rows=len(rows_by_id))
 
     # ------------------------------------------------------------ streaming
     def apply_delta(self, delta):

@@ -1,0 +1,690 @@
+"""Unified telemetry (ISSUE 10): span tracer, metrics registry, exporters,
+profiling hooks — and the contracts the rest of the stack depends on.
+
+Pinned here:
+
+  * span nesting and cross-thread trace propagation are exact (fake clock:
+    timings, parent ids, trace grouping are asserted bit-for-bit);
+  * the disabled path is inert: NULL_TRACER emits nothing, and served rows
+    are BYTE-EQUAL with tracing on vs off (tracing never touches RNG);
+  * one serving request through the threaded ModelFleet is traced end to
+    end — submit → queue → pack → forward → respond as nested spans under
+    ONE stable trace id — and one DistGNNTrainer step as sampling →
+    per-device draws → mesh step;
+  * chaos-channel retries/failovers surface as child spans of the call;
+  * every exporter round-trips (JSONL, Chrome trace) or emits well-formed
+    text (Prometheus);
+  * the six legacy stats classes serve the uniform collector surface
+    (snapshot()/reset()) and concurrent snapshot readers see consistent
+    copies under serving load (the snapshot-safety satellite).
+"""
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro.api import G
+from repro.chaos import FaultPlan, FaultyChannel, ShardFaults
+from repro.chaos.channel import ChannelStats
+from repro.core import build_store, make_gnn, synthetic_ahg
+from repro.core.gnn import GNNTrainer
+from repro.core.storage import AccessStats
+from repro.data.pipeline import StragglerStats
+from repro.distributed.sharded_store import GatherStats, build_sharded_store
+from repro.distributed.trainer import DistGNNTrainer
+from repro.fleet import ModelFleet, TenantSpec
+from repro.obs import (NULL_TRACER, MetricsRegistry, Span, Tracer,
+                       format_stage_table, get_tracer, kernel_accounting,
+                       kernel_launch_counts, prometheus_text,
+                       read_chrome_trace, read_jsonl, reset_kernel_counts,
+                       stage_table, trace_summary, use_tracer, write_jsonl,
+                       write_chrome_trace)
+from repro.serving import EmbeddingServer, Traffic, compile_server
+from repro.serving.server import ServerMetrics, TenantMetrics
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        self.t += 1.0
+        return self.t
+
+
+# ---------------------------------------------------------------------------
+# Tracer core
+# ---------------------------------------------------------------------------
+
+def test_span_nesting_exact_with_fake_clock():
+    tr = Tracer(clock=FakeClock())
+    with tr.span("outer", who="a"):
+        with tr.span("inner"):
+            pass
+    spans = tr.spans()
+    assert [s.name for s in spans] == ["inner", "outer"]  # emit on exit
+    inner, outer = spans
+    assert inner.trace_id == outer.trace_id
+    assert inner.parent_id == outer.span_id
+    assert outer.parent_id is None
+    # fake clock ticks: outer enter=1, inner enter=2, inner exit=3, outer=4
+    assert (outer.t0, inner.t0, inner.t1, outer.t1) == (1.0, 2.0, 3.0, 4.0)
+    assert outer.args == {"who": "a"}
+    assert inner.dur == 1.0 and inner.dur_ms == 1000.0
+
+
+def test_sibling_spans_share_trace_and_roots_are_separate():
+    tr = Tracer(clock=FakeClock())
+    with tr.span("root"):
+        with tr.span("a"):
+            pass
+        with tr.span("b"):
+            pass
+    with tr.span("other_root"):
+        pass
+    by_name = {s.name: s for s in tr.spans()}
+    assert by_name["a"].trace_id == by_name["b"].trace_id \
+        == by_name["root"].trace_id
+    assert by_name["other_root"].trace_id != by_name["root"].trace_id
+    assert by_name["a"].parent_id == by_name["root"].span_id
+
+
+def test_ring_buffer_bound_keeps_latest():
+    tr = Tracer(clock=FakeClock(), max_spans=4)
+    for i in range(10):
+        tr.record(f"s{i}", 0.0, 1.0)
+    spans = tr.spans()
+    assert len(spans) == 4
+    assert [s.name for s in spans] == ["s6", "s7", "s8", "s9"]
+
+
+def test_cross_thread_parent_joins_trace():
+    tr = Tracer(clock=FakeClock())
+    ctx = tr.open()
+    seen = {}
+
+    def worker():
+        with tr.span("child", parent=ctx):
+            seen["inner"] = tr.current()
+
+    t = threading.Thread(target=worker)
+    t.start()
+    t.join()
+    tr.close(ctx, "root", 0.0, 10.0)
+    child, root = tr.spans()
+    assert child.trace_id == root.trace_id == ctx.trace_id
+    assert child.parent_id == root.span_id == ctx.span_id
+    # the worker's thread-local stack held the child while inside it
+    assert seen["inner"].span_id == child.span_id
+
+
+def test_set_allows_midflight_args():
+    tr = Tracer(clock=FakeClock())
+    with tr.span("s") as sp:
+        sp.set(rows=7)
+    assert tr.spans()[0].args == {"rows": 7}
+
+
+def test_null_tracer_is_inert_and_default():
+    assert get_tracer() is NULL_TRACER
+    assert not NULL_TRACER.enabled
+    with NULL_TRACER.span("x") as sp:
+        sp.set(a=1)
+    NULL_TRACER.record("y", 0, 1)
+    NULL_TRACER.close(NULL_TRACER.open(), "z", 0, 1)
+    assert NULL_TRACER.spans() == []
+    assert NULL_TRACER.current() is None
+
+
+def test_use_tracer_scoped_install():
+    tr = Tracer()
+    with use_tracer(tr) as installed:
+        assert installed is tr
+        assert get_tracer() is tr
+    assert get_tracer() is NULL_TRACER
+
+
+# ---------------------------------------------------------------------------
+# Metrics registry
+# ---------------------------------------------------------------------------
+
+def test_counter_gauge_histogram_basics():
+    reg = MetricsRegistry()
+    c = reg.counter("serve_requests_total", labels=("tenant",))
+    c.inc(tenant="a")
+    c.inc(2, tenant="a")
+    c.inc(tenant="b")
+    assert c.value(tenant="a") == 3.0
+    assert c.value(tenant="b") == 1.0
+    with pytest.raises(ValueError):
+        c.inc(-1, tenant="a")
+
+    g = reg.gauge("queue_depth")
+    g.set(5)
+    g.inc()
+    g.dec(2)
+    assert g.value() == 4.0
+
+    h = reg.histogram("latency_ms", buckets=(1.0, 10.0, 100.0))
+    for v in (0.5, 5.0, 50.0, 500.0):
+        h.observe(v)
+    snap = h.snapshot()["values"][0]["value"]
+    assert snap["count"] == 4
+    assert snap["sum"] == 555.5
+    assert snap["buckets"] == {1.0: 1, 10.0: 2, 100.0: 3}
+    assert snap["p50"] > 0
+
+
+def test_registry_get_or_create_and_conflicts():
+    reg = MetricsRegistry()
+    c1 = reg.counter("hits")
+    c2 = reg.counter("hits")
+    assert c1 is c2
+    with pytest.raises(ValueError):
+        reg.gauge("hits")                      # type conflict
+    with pytest.raises(ValueError):
+        reg.counter("hits", labels=("x",))     # label conflict
+
+
+def test_registry_reset_zeroes_instruments():
+    reg = MetricsRegistry()
+    c = reg.counter("n")
+    c.inc(5)
+    reg.reset()
+    assert c.value() == 0.0
+
+
+def test_all_six_stats_classes_serve_the_collector_surface():
+    reg = MetricsRegistry()
+    stats = {
+        "server": ServerMetrics(),
+        "tenant": TenantMetrics("a"),
+        "channel": ChannelStats(),
+        "gather": GatherStats(),
+        "access": AccessStats(),
+        "straggler": StragglerStats(),
+    }
+    for name, obj in stats.items():
+        reg.register_collector(name, obj)
+    stats["channel"].bump(calls=3, retries=1)
+    stats["access"].local_reads = 7
+    stats["straggler"].tasks = 4
+    snap = reg.snapshot()
+    assert set(snap["collectors"]) == set(stats)
+    assert snap["collectors"]["channel"]["calls"] == 3
+    assert snap["collectors"]["access"]["local_reads"] == 7
+    assert snap["collectors"]["straggler"]["tasks"] == 4
+    # every snapshot is a plain JSON-serialisable dict
+    json.dumps(snap)
+    # uniform reset: registry.reset() zeroes every collector that can
+    reg.reset()
+    snap2 = reg.snapshot()
+    assert snap2["collectors"]["channel"]["calls"] == 0
+    assert snap2["collectors"]["access"]["local_reads"] == 0
+    assert snap2["collectors"]["straggler"]["tasks"] == 0
+    assert snap2["collectors"]["server"]["requests"] == 0
+    assert snap2["collectors"]["tenant"]["requests"] == 0
+    assert snap2["collectors"]["gather"]["remote_segments"] == 0
+
+
+def test_register_collector_rejects_snapshotless():
+    reg = MetricsRegistry()
+    with pytest.raises(TypeError):
+        reg.register_collector("bad", object())
+
+
+# ---------------------------------------------------------------------------
+# Exporters
+# ---------------------------------------------------------------------------
+
+def _sample_snapshot():
+    reg = MetricsRegistry()
+    reg.counter("reqs", labels=("tenant",)).inc(3, tenant="a")
+    reg.gauge("depth").set(2)
+    reg.histogram("lat_ms", buckets=(1.0, 10.0)).observe(0.4)
+    reg.register_collector("channel", ChannelStats())
+    return reg.snapshot()
+
+
+def test_jsonl_roundtrip(tmp_path):
+    snap = _sample_snapshot()
+    p = tmp_path / "metrics.jsonl"
+    write_jsonl(str(p), snap, ts=123.0)
+    back = read_jsonl(str(p))
+    assert back["metrics"]["reqs"][0]["value"] == 3.0
+    assert back["metrics"]["reqs"][0]["labels"] == {"tenant": "a"}
+    assert back["metrics"]["depth"][0]["value"] == 2.0
+    assert back["collectors"]["channel"]["calls"] == 0
+    for line in p.read_text().splitlines():
+        assert json.loads(line)["ts"] == 123.0
+
+
+def test_prometheus_text_format():
+    snap = _sample_snapshot()
+    text = prometheus_text(snap)
+    assert 'reqs{tenant="a"} 3' in text
+    assert "# TYPE reqs counter" in text
+    assert "depth 2" in text
+    assert 'lat_ms_bucket{le="1.0"} 1' in text
+    assert 'lat_ms_bucket{le="+Inf"} 1' in text
+    assert "lat_ms_count 1" in text
+    assert "channel_calls 0" in text
+    # every non-comment line is "name{labels} value"
+    for line in text.splitlines():
+        if line and not line.startswith("#"):
+            assert len(line.rsplit(" ", 1)) == 2
+
+
+def test_prometheus_label_escaping():
+    reg = MetricsRegistry()
+    reg.counter("c", labels=("q",)).inc(q='say "hi"\n')
+    text = prometheus_text(reg.snapshot())
+    assert r'c{q="say \"hi\"\n"} 1' in text
+    assert "\n" not in text.split("} ")[0].split("{", 1)[1]
+
+
+def test_chrome_trace_roundtrip(tmp_path):
+    tr = Tracer(clock=FakeClock())
+    with tr.span("outer", tenant="a"):
+        with tr.span("inner"):
+            pass
+    p = tmp_path / "trace.json"
+    write_chrome_trace(str(p), tr.spans())
+    doc = json.loads(p.read_text())
+    events = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    assert all({"name", "ts", "dur", "pid", "tid"} <= set(e) for e in events)
+    assert any(e["ph"] == "M" for e in doc["traceEvents"])  # thread names
+    back = read_chrome_trace(str(p))
+    orig = tr.spans()
+    assert len(back) == len(orig)
+    for a, b in zip(sorted(back, key=lambda s: s.span_id),
+                    sorted(orig, key=lambda s: s.span_id)):
+        assert a.name == b.name
+        assert a.trace_id == b.trace_id
+        assert a.span_id == b.span_id
+        assert a.parent_id == b.parent_id
+        assert a.t0 == pytest.approx(b.t0, abs=1e-6)
+        assert a.t1 == pytest.approx(b.t1, abs=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Profiling helpers
+# ---------------------------------------------------------------------------
+
+def test_stage_table_and_format():
+    spans = [Span("serve.pack", 1, 1, None, 0.0, 0.010, "t"),
+             Span("serve.pack", 1, 2, None, 0.0, 0.020, "t"),
+             Span("serve.forward", 1, 3, None, 0.0, 0.070, "t")]
+    table = stage_table(spans, prefix="serve.")
+    assert table["serve.pack"]["count"] == 2
+    assert table["serve.pack"]["total_ms"] == pytest.approx(30.0)
+    assert table["serve.pack"]["mean_ms"] == pytest.approx(15.0)
+    assert table["serve.forward"]["frac"] == pytest.approx(0.7)
+    text = format_stage_table(table)
+    assert "serve.pack" in text and "serve.forward" in text
+
+
+def test_trace_summary_depth_first():
+    tr = Tracer(clock=FakeClock())
+    with tr.span("root"):
+        with tr.span("kid"):
+            pass
+    root_id = tr.spans()[-1].trace_id
+    rows = trace_summary(tr, root_id)
+    assert [r["name"] for r in rows] == ["root", "kid"]
+    assert [r["depth"] for r in rows] == [0, 1]
+
+
+# ---------------------------------------------------------------------------
+# Shared serving/training fixtures
+# ---------------------------------------------------------------------------
+
+FAN = (3, 2)
+
+
+@pytest.fixture(scope="module")
+def obs_plan():
+    g = synthetic_ahg(300, avg_degree=5, seed=11)
+    store = build_store(g, 2, partition_method="edge_cut")
+    spec = make_gnn("graphsage", d_in=g.vertex_attr_table.shape[1],
+                    d_hidden=8, d_out=8, fanouts=FAN)
+    tr = GNNTrainer(store, spec, lr=0.05, seed=0)
+    tr.train(2, batch_size=8)
+    traffic = Traffic((4, 4, 8, 8, 16))
+    return compile_server(G(store).V().sample(3).sample(2), tr, traffic,
+                          max_buckets=2, seed=5)
+
+
+def _reqs(n=4, size=4, lo=0, hi=300):
+    rng = np.random.default_rng(3)
+    return [rng.integers(lo, hi, size=size).astype(np.int32)
+            for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# End-to-end request tracing (the acceptance criteria)
+# ---------------------------------------------------------------------------
+
+def test_server_rows_byte_equal_tracing_on_vs_off(obs_plan):
+    reqs = _reqs()
+    with EmbeddingServer(obs_plan, cache_capacity=64) as srv:
+        off = [srv.submit(ids).result(10.0).copy() for ids in reqs]
+    with use_tracer(Tracer()):
+        with EmbeddingServer(obs_plan, cache_capacity=64) as srv:
+            on = [srv.submit(ids).result(10.0).copy() for ids in reqs]
+    for a, b in zip(off, on):
+        assert a.tobytes() == b.tobytes()
+
+
+def test_server_request_traced_end_to_end(obs_plan):
+    tr = Tracer()
+    with use_tracer(tr):
+        with EmbeddingServer(obs_plan, cache_capacity=64) as srv:
+            req = srv.submit(np.arange(4, dtype=np.int32))
+            req.result(10.0)
+            srv.drain()
+    roots = [s for s in tr.spans() if s.name == "serve.request"]
+    assert len(roots) == 1
+    root = roots[0]
+    kids = {s.name for s in tr.spans()
+            if s.trace_id == root.trace_id and s.parent_id == root.span_id}
+    assert {"serve.submit", "serve.queue", "serve.pack",
+            "serve.forward", "serve.respond"} <= kids
+    # tick-level breakdown nests under serve.tick on the worker thread
+    tick = [s for s in tr.spans() if s.name == "serve.tick"][0]
+    tick_kids = {s.name for s in tr.spans() if s.parent_id == tick.span_id}
+    assert {"serve.pack", "serve.gather", "serve.forward",
+            "serve.scatter"} <= tick_kids
+    # the sampler ran inside the tick's gather
+    gather = [s for s in tr.spans() if s.name == "serve.gather"][0]
+    execs = [s for s in tr.spans() if s.name == "query.execute"]
+    assert any(s.parent_id == gather.span_id for s in execs)
+
+
+def test_fleet_request_traced_with_stable_trace_id(obs_plan):
+    """ISSUE 10 acceptance: one request through the threaded ModelFleet is
+    traced submit → queue → pack → forward → respond under ONE trace id."""
+    tr = Tracer()
+    specs = [TenantSpec("rec", obs_plan, weight=2.0),
+             TenantSpec("search", obs_plan, weight=1.0)]
+    with use_tracer(tr):
+        with ModelFleet(specs) as fleet:
+            reqs = [fleet.submit("rec", np.arange(4, dtype=np.int32)),
+                    fleet.submit("search", np.arange(5, 9, dtype=np.int32))]
+            fleet.drain()
+            rows = [r.result(0) for r in reqs]
+    assert all(len(r) for r in rows)
+    roots = {s.args["rid"]: s for s in tr.spans()
+             if s.name == "fleet.request"}
+    assert len(roots) == 2
+    for req in reqs:
+        root = roots[req.rid]
+        trace = [s for s in tr.spans() if s.trace_id == root.trace_id]
+        names = {s.name for s in trace}
+        assert {"fleet.submit", "fleet.queue", "fleet.pack",
+                "fleet.forward", "fleet.respond", "fleet.request"} <= names
+        # every phase hangs off the ONE root — the stable trace id
+        for s in trace:
+            if s.span_id != root.span_id:
+                assert s.parent_id == root.span_id
+        assert root.args["tenant"] == req.tenant
+    # the DRR visit is observable: fleet.tick carries tenant + allowance
+    ticks = [s for s in tr.spans() if s.name == "fleet.tick"]
+    assert ticks and all({"tenant", "allowance", "degraded"} <= set(t.args)
+                         for t in ticks)
+
+
+def test_fleet_rows_byte_equal_tracing_on_vs_off(obs_plan):
+    specs = [TenantSpec("rec", obs_plan), TenantSpec("search", obs_plan)]
+    trace_in = [("rec", ids) for ids in _reqs(3)] \
+        + [("search", ids) for ids in _reqs(3)]
+    with ModelFleet(specs) as fleet:
+        off = [r.result(0).copy() for r in fleet.serve_trace(trace_in)]
+    with use_tracer(Tracer()):
+        with ModelFleet(specs) as fleet:
+            on = [r.result(0).copy() for r in fleet.serve_trace(trace_in)]
+    for a, b in zip(off, on):
+        assert a.tobytes() == b.tobytes()
+
+
+def test_quota_shed_and_export_of_fleet_trace(obs_plan, tmp_path):
+    tr = Tracer()
+    specs = [TenantSpec("rec", obs_plan, rate=1.0, burst=4.0)]
+    with use_tracer(tr):
+        fleet = ModelFleet(specs, start=False)
+        ok = fleet.submit("rec", np.arange(4, dtype=np.int32))
+        shed = fleet.submit("rec", np.arange(4, dtype=np.int32))
+        assert shed.shed
+        fleet.step(4)
+        ok.result(0)
+    sheds = [s for s in tr.spans()
+             if s.name == "fleet.request" and s.args.get("shed")]
+    assert len(sheds) == 1 and sheds[0].args["rid"] == shed.rid
+    # the whole trace loads as a Chrome trace file (perfetto-compatible)
+    p = tmp_path / "fleet_trace.json"
+    write_chrome_trace(str(p), tr.spans())
+    assert len(read_chrome_trace(str(p))) == len(tr.spans())
+
+
+# ---------------------------------------------------------------------------
+# Trainer step tracing
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def dist_setup():
+    g = synthetic_ahg(200, avg_degree=5, seed=3)
+    # cache_depth=0 forces cross-shard reads so store.gather_rows fires
+    store = build_sharded_store(g, 2, seed=0, cache_depth=0)
+    spec = make_gnn("graphsage", d_in=g.vertex_attr_table.shape[1],
+                    d_hidden=8, d_out=8, fanouts=FAN)
+    return store, spec
+
+
+def test_trainer_step_traced_and_loss_identical(dist_setup):
+    store, spec = dist_setup
+    t1 = DistGNNTrainer(store, spec, n_devices=1, seed=0, compress=False)
+    off = t1.train(2, batch_size=8)
+    tr = Tracer()
+    with use_tracer(tr):
+        t2 = DistGNNTrainer(store, spec, n_devices=1, seed=0,
+                            compress=False)
+        on = t2.train(2, batch_size=8)
+    assert off == on                      # tracing never touches the RNG
+    steps = [s for s in tr.spans() if s.name == "train.step"]
+    assert len(steps) == 2
+    s0 = steps[0]
+    kids = {s.name for s in tr.spans() if s.parent_id == s0.span_id}
+    assert kids == {"train.sample", "train.mesh_step"}
+    # per-device draws join the step's trace from the pool threads
+    sample = [s for s in tr.spans() if s.name == "train.sample"
+              and s.trace_id == s0.trace_id][0]
+    devs = [s for s in tr.spans() if s.name == "train.sample_dev"
+            and s.parent_id == sample.span_id]
+    assert len(devs) == 1
+    # sharded gathers nested inside the sample phase share the trace
+    gathers = [s for s in tr.spans() if s.name == "store.gather_rows"
+               and s.trace_id == s0.trace_id]
+    assert gathers
+
+
+def test_host_reference_phase_spans(dist_setup):
+    store, spec = dist_setup
+    tr = Tracer()
+    with use_tracer(tr):
+        t = DistGNNTrainer(store, spec, n_devices=1, seed=0, compress=False)
+        t.host_reference(1, batch_size=8)
+    step = [s for s in tr.spans() if s.name == "train.step"][0]
+    kids = {s.name for s in tr.spans() if s.parent_id == step.span_id}
+    assert {"train.sample", "train.grads", "train.allreduce",
+            "train.apply"} <= kids
+
+
+# ---------------------------------------------------------------------------
+# Chaos channel spans
+# ---------------------------------------------------------------------------
+
+def test_channel_retry_and_failover_child_spans():
+    tr = Tracer()
+    plan = FaultPlan(seed=2, overrides={0: ShardFaults(dead_replicas=(0,))})
+    ch = FaultyChannel(plan, replicas=2, time_scale=0.0)
+    with use_tracer(tr):
+        assert ch.call(0, lambda: "row") == "row"
+    call = [s for s in tr.spans() if s.name == "channel.call"][0]
+    attempts = [s for s in tr.spans() if s.name == "channel.attempt"
+                and s.trace_id == call.trace_id]
+    assert [a.args["ok"] for a in attempts] == [False, True]
+    assert attempts[0].args["kind"] == "dead"
+    fails = [s for s in tr.spans() if s.name == "channel.failover"]
+    assert len(fails) == 1 and fails[0].args["to_replica"] == 1
+    assert all(s.parent_id == call.span_id for s in attempts + fails)
+
+
+def test_channel_byte_equal_results_tracing_on_vs_off():
+    plan = FaultPlan.uniform(seed=1, transient_rate=0.3)
+    ch_off = FaultyChannel(plan, replicas=2, max_retries=4, time_scale=0.0)
+    off = [ch_off.call(0, lambda: 7) for _ in range(20)]
+    ch_on = FaultyChannel(plan, replicas=2, max_retries=4, time_scale=0.0)
+    with use_tracer(Tracer()):
+        on = [ch_on.call(0, lambda: 7) for _ in range(20)]
+    assert off == on
+    assert ch_off.stats.snapshot() == ch_on.stats.snapshot()
+
+
+# ---------------------------------------------------------------------------
+# Snapshot safety under concurrency (the satellite regression)
+# ---------------------------------------------------------------------------
+
+def test_concurrent_snapshot_readers_see_consistent_state(obs_plan):
+    """A monitoring thread snapshotting ServerMetrics/TenantMetrics/
+    ChannelStats while the fleet serves must never crash (deque mutated
+    during iteration) and must never observe completed > requests."""
+    specs = [TenantSpec("rec", obs_plan), TenantSpec("search", obs_plan)]
+    ch = FaultyChannel(FaultPlan.uniform(seed=1, transient_rate=0.2),
+                       replicas=2, max_retries=4, time_scale=0.0)
+    fleet = ModelFleet(specs, chaos=ch)
+    errors = []
+    stop = threading.Event()
+
+    def reader():
+        try:
+            while not stop.is_set():
+                snap = fleet.metrics.snapshot()
+                assert snap["completed"] <= snap["requests"]
+                for tsnap in snap["tenants"].values():
+                    assert tsnap["completed"] <= tsnap["requests"]
+                cs = ch.stats.snapshot()
+                assert cs["attempts"] >= cs["calls"] - cs["unavailable"]
+                fleet.metrics.p99_ms   # percentile over the live window
+        except BaseException as e:   # pragma: no cover - failure path
+            errors.append(e)
+
+    readers = [threading.Thread(target=reader) for _ in range(3)]
+    for t in readers:
+        t.start()
+    rng = np.random.default_rng(0)
+    reqs = []
+    try:
+        for i in range(40):
+            name = "rec" if i % 2 else "search"
+            reqs.append(
+                fleet.submit(name, rng.integers(0, 300, 4).astype(np.int32)))
+        fleet.drain()
+    finally:
+        stop.set()
+        for t in readers:
+            t.join()
+        fleet.stop()
+    assert not errors, errors
+    assert all(r.done for r in reqs)
+    assert fleet.metrics.snapshot()["completed"] == len(reqs)
+
+
+def test_channel_stats_bump_is_atomic_under_writers():
+    st = ChannelStats()
+    N = 2000
+
+    def writer():
+        for _ in range(N):
+            st.bump(calls=1, attempts=1)
+
+    ws = [threading.Thread(target=writer) for _ in range(4)]
+    for w in ws:
+        w.start()
+    snaps = [st.snapshot() for _ in range(200)]
+    for w in ws:
+        w.join()
+    for s in snaps:                      # consistent multi-field copies
+        assert s["calls"] == s["attempts"]
+    assert st.calls == st.attempts == 4 * N
+
+
+def test_tenant_metrics_reset_while_read():
+    tm = TenantMetrics("a")
+    stop = threading.Event()
+    errors = []
+
+    def churn():
+        try:
+            while not stop.is_set():
+                tm.note_latency(1.0)
+                tm.requests += 1
+                tm.reset()
+        except BaseException as e:   # pragma: no cover - failure path
+            errors.append(e)
+
+    t = threading.Thread(target=churn)
+    t.start()
+    for _ in range(300):
+        snap = tm.snapshot()
+        assert snap["requests"] >= 0
+        tm.p99_ms
+    stop.set()
+    t.join()
+    assert not errors, errors
+
+
+# ---------------------------------------------------------------------------
+# Kernel-launch accounting
+# ---------------------------------------------------------------------------
+
+def test_kernel_launch_accounting_census():
+    import jax.numpy as jnp
+    from repro.core.operators import apply_layer, set_kernel_mode
+    from repro.core.gnn import init_gnn_params
+
+    spec = make_gnn("graphsage", d_in=8, d_hidden=8, d_out=8,
+                    fanouts=(2, 2))
+    params = init_gnn_params(spec, 0)
+    h = jnp.asarray(np.random.default_rng(0)
+                    .standard_normal((10, 8)).astype(np.float32))
+    self_idx = jnp.arange(4)
+    child_idx = jnp.asarray(np.random.default_rng(1).integers(0, 10, (4, 2)))
+    child_msk = jnp.ones((4, 2), np.float32)
+    layer = params["layer_1"]
+    kw = dict(aggregator=spec.aggregator, combiner=spec.combiner)
+
+    reset_kernel_counts()
+    prev_acct = kernel_accounting(True)
+    prev_mode = set_kernel_mode("interpret")
+    try:
+        apply_layer(layer, h, self_idx, child_idx, child_msk,
+                    use_kernel=True, **kw)
+        apply_layer(layer, h, self_idx, child_idx, child_msk,
+                    use_kernel=False, **kw)
+    finally:
+        set_kernel_mode(prev_mode)
+        kernel_accounting(prev_acct)
+    counts = {(c["mode"], c["kernel_engaged"]): c["launches"]
+              for c in kernel_launch_counts()}
+    assert counts[("interpret", True)] == 1
+    assert counts[("jnp", False)] == 1
+    reset_kernel_counts()
+    assert kernel_launch_counts() == []
+
+
+def test_kernel_accounting_disabled_by_default():
+    from repro.obs.profile import note_kernel_launch
+    reset_kernel_counts()
+    note_kernel_launch("mean", "concat", "jnp", engaged=False)
+    assert kernel_launch_counts() == []
